@@ -1,0 +1,88 @@
+//! Design-space exploration with the cost model: how the DDC doubling
+//! trades area against density/efficiency across macro geometries and
+//! technology nodes — the analysis behind Table II / Fig. 2.
+//!
+//!     cargo run --release --example capacity_explorer
+
+use ddc_pim::arch::cost::CostModel;
+use ddc_pim::config::{ArchConfig, SimConfig};
+use ddc_pim::model::zoo;
+use ddc_pim::sim::simulate_network;
+use ddc_pim::util::table::{f2, Table};
+
+fn main() {
+    // ---- sweep 1: DDC on/off across nodes ----------------------------
+    let mut t = Table::new("DDC vs baseline across technology nodes").header(&[
+        "node",
+        "variant",
+        "macro mm2",
+        "WtDens Kb/mm2",
+        "WtDens @28nm",
+        "peak GOPS",
+        "AreaEff @28nm",
+    ]);
+    for node in [28.0, 22.0, 14.0, 7.0] {
+        for (label, mut cfg) in [
+            ("baseline", ArchConfig::baseline()),
+            ("DDC-PIM", ArchConfig::ddc_pim()),
+        ] {
+            cfg.node_nm = node;
+            let cost = CostModel::new(cfg.clone());
+            t.row(vec![
+                format!("{node}nm"),
+                label.into(),
+                format!("{:.4}", cost.macro_area_mm2()),
+                f2(cost.weight_density(false)),
+                f2(cost.weight_density(true)),
+                f2(cfg.peak_gops()),
+                f2(cost.area_efficiency(true)),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // ---- sweep 2: compartment count vs MobileNetV2 latency -----------
+    let net = zoo::mobilenet_v2();
+    let mut t2 = Table::new("\ncompartments per core vs MobileNetV2 latency (DDC)").header(&[
+        "compartments",
+        "array Kb",
+        "cycles",
+        "latency ms",
+        "speedup vs baseline-32",
+    ]);
+    let base32 = simulate_network(&net, &ArchConfig::baseline(), &SimConfig::baseline());
+    for cmp in [16usize, 32, 64, 128] {
+        let mut cfg = ArchConfig::ddc_pim();
+        cfg.compartments = cmp;
+        let run = simulate_network(&net, &cfg, &SimConfig::ddc_full());
+        t2.row(vec![
+            cmp.to_string(),
+            f2(cfg.macro_array_kb()),
+            run.total_cycles.to_string(),
+            format!("{:.3}", run.latency_ms()),
+            format!("{:.3}x", base32.total_cycles as f64 / run.total_cycles as f64),
+        ]);
+    }
+    println!("{}", t2.render());
+
+    // ---- sweep 3: DRAM bandwidth sensitivity (prefetch masking) ------
+    let mut t3 = Table::new("\nDRAM bytes/cycle vs exposed stalls (DDC, MobileNetV2)").header(&[
+        "bytes/cycle",
+        "total cycles",
+        "exposed DRAM cycles",
+        "stall share",
+    ]);
+    for bw in [0.5, 1.0, 2.0, 4.0, 8.0, 16.0] {
+        let mut cfg = ArchConfig::ddc_pim();
+        cfg.dram_bytes_per_cycle = bw;
+        let run = simulate_network(&net, &cfg, &SimConfig::ddc_full());
+        let stalls: u64 = run.layers.iter().map(|l| l.exposed_dram_cycles).sum();
+        t3.row(vec![
+            format!("{bw}"),
+            run.total_cycles.to_string(),
+            stalls.to_string(),
+            format!("{:.1}%", 100.0 * stalls as f64 / run.total_cycles as f64),
+        ]);
+    }
+    println!("{}", t3.render());
+}

@@ -1,0 +1,135 @@
+"""AOT lowering: jax -> HLO **text** -> ``artifacts/`` (build-time only).
+
+HLO text (NOT ``lowered.compile()`` output or ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 rust crate links) rejects (``proto.id() <= INT_MAX``).  The
+text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Also emits ``goldens.json`` — deterministic inputs/outputs for every
+artifact — which the rust integration tests replay through PJRT.
+
+Usage (from ``python/``):  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .fcc.core import fcc_quantize, decompose
+from .model import build_param_model, fcc_mvm_entry, load_or_init, pim_mac_entry
+
+# Representative layer shape for the kernel artifacts: a MobileNetV2-tiny
+# pw-conv (L = 1x1x144-ish reduction, 32 output channels = 16 stored pairs)
+KB, KL, KN = 32, 144, 32  # fcc_mvm: x [KB, KL], w_even [KL, KN/2], m [KN/2]
+PB, PL, PN = 8, 64, 32  # pim_mac: x [PB, PL], w [PL, PN]
+
+MODEL_BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to(path, fn, *example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--weights", default=None,
+                    help="trained npz from fcc.train (default: <out>/mobilenet_v2_tiny.npz)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    weights = args.weights or os.path.join(args.out, "mobilenet_v2_tiny.npz")
+
+    goldens = {}
+    rng = np.random.default_rng(42)
+
+    # ---- full model artifacts -------------------------------------------
+    # weights are lowered as PARAMETERS (xla_extension 0.5.1 executes
+    # dot-with-dense-constant text as zeros) and shipped in a sidecar:
+    # model_weights.bin (raw f32 LE) + shape manifest in goldens.json.
+    spec, params = load_or_init(weights)
+    fwd, arrays = build_param_model(spec, params)
+    wspecs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in arrays]
+    for b in MODEL_BATCHES:
+        shape = jax.ShapeDtypeStruct((b, 32, 32, 3), jnp.float32)
+        lower_to(os.path.join(args.out, f"model_b{b}.hlo.txt"), fwd, shape, *wspecs)
+    with open(os.path.join(args.out, "model_weights.bin"), "wb") as f:
+        for a in arrays:
+            f.write(np.ascontiguousarray(a, np.float32).tobytes())
+    with open(os.path.join(args.out, "model_weights.json"), "w") as f:
+        json.dump(dict(shapes=[list(a.shape) for a in arrays]), f)
+    print(f"wrote {os.path.join(args.out, 'model_weights.bin')} "
+          f"({sum(a.size for a in arrays)} f32, {len(arrays)} tensors)")
+    x_img = rng.normal(0, 1, (1, 32, 32, 3)).astype(np.float32)
+    logits = np.asarray(fwd(jnp.asarray(x_img), *[jnp.asarray(a) for a in arrays]))
+    goldens["model_b1"] = dict(
+        x=x_img.ravel().tolist(),
+        x_shape=list(x_img.shape),
+        out=logits.ravel().tolist(),
+        out_shape=list(logits.shape),
+    )
+
+    # ---- fcc_mvm kernel artifact ----------------------------------------
+    x = rng.integers(-128, 128, (KB, KL)).astype(np.int32)
+    w_raw = rng.integers(-127, 127, (KN, KL)).astype(np.int32)
+    wbc, m = fcc_quantize(jnp.asarray(w_raw, jnp.float32), 1.0)
+    wc = decompose(wbc, m)  # [KN, KL] comp filters; even rows are stored
+    w_even = np.asarray(wc)[0::2, :].T.copy()  # [KL, KN/2]
+    m_np = np.asarray(m, np.int32)
+    lower_to(
+        os.path.join(args.out, "fcc_mvm.hlo.txt"),
+        fcc_mvm_entry,
+        jax.ShapeDtypeStruct((KB, KL), jnp.int32),
+        jax.ShapeDtypeStruct((KL, KN // 2), jnp.int32),
+        jax.ShapeDtypeStruct((KN // 2,), jnp.int32),
+    )
+    out = np.asarray(fcc_mvm_entry(jnp.asarray(x), jnp.asarray(w_even), jnp.asarray(m_np)))
+    goldens["fcc_mvm"] = dict(
+        x=x.ravel().tolist(), x_shape=[KB, KL],
+        w=w_even.ravel().tolist(), w_shape=[KL, KN // 2],
+        m=m_np.ravel().tolist(), m_shape=[KN // 2],
+        out=out.ravel().tolist(), out_shape=[KB, KN],
+    )
+
+    # ---- pim_mac kernel artifact ----------------------------------------
+    xp = rng.integers(-128, 128, (PB, PL)).astype(np.int32)
+    wp = rng.integers(-128, 128, (PL, PN)).astype(np.int32)
+    lower_to(
+        os.path.join(args.out, "pim_mac.hlo.txt"),
+        pim_mac_entry,
+        jax.ShapeDtypeStruct((PB, PL), jnp.int32),
+        jax.ShapeDtypeStruct((PL, PN), jnp.int32),
+    )
+    outp = np.asarray(pim_mac_entry(jnp.asarray(xp), jnp.asarray(wp)))
+    goldens["pim_mac"] = dict(
+        x=xp.ravel().tolist(), x_shape=[PB, PL],
+        w=wp.ravel().tolist(), w_shape=[PL, PN],
+        out=outp.ravel().tolist(), out_shape=[PB, PN],
+    )
+
+    with open(os.path.join(args.out, "goldens.json"), "w") as f:
+        json.dump(goldens, f)
+    print(f"wrote {os.path.join(args.out, 'goldens.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""FCC (Filter-wise Complementary Correlation) algorithm — build-time only.
+
+Implements the paper's two-stage algorithm:
+  * Alg. 1 Symmetrization  — pair adjacent filters, mirror the weight
+    closer to the pair mean M so that  w0 - M = -(w1 - M).
+  * Alg. 2 Complementization — on INT8 symmetric filters, subtract 1 from
+    the smaller twin so that  w0 - M = ~(w1 - M)  (bitwise complement).
+  * Decomposition — biased-comp filters -> comp filters + M, where the
+    comp twins are exact bitwise complements (w0^c == ~w1^c), so only one
+    of each pair is stored/transferred (the Q-bar side of the 6T cell
+    recovers the other for free).
+
+Python runs once at build time; the rust coordinator consumes the
+decomposed weights via AOT artifacts and its own `fcc` module.
+"""
+
+from .core import (
+    pair_means,
+    symmetrize,
+    symmetrize_int,
+    complementize,
+    decompose,
+    recompose,
+    is_symmetric,
+    is_biased_complementary,
+    is_bitwise_complementary,
+    fcc_quantize,
+)
+from .quant import quantize_int8, dequantize_int8, prune_2_4
+from .qat import fcc_quant_ste
+
+__all__ = [
+    "pair_means",
+    "symmetrize",
+    "symmetrize_int",
+    "complementize",
+    "decompose",
+    "recompose",
+    "is_symmetric",
+    "is_biased_complementary",
+    "is_bitwise_complementary",
+    "fcc_quantize",
+    "quantize_int8",
+    "dequantize_int8",
+    "prune_2_4",
+    "fcc_quant_ste",
+]

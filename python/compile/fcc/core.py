@@ -1,0 +1,150 @@
+"""Core FCC transforms (Alg. 1 / Alg. 2 / decomposition) over jnp arrays.
+
+Filters are handled in flattened form ``w: [N, L]`` where ``N`` is the
+number of output channels (must be even — filters pair up as
+``(f_0,f_1), (f_2,f_3), ...``) and ``L = K*K*C`` is the per-filter length.
+All transforms are elementwise over twin-weights (same position ``i`` in
+the two filters of a pair), exactly as Alg. 1 / Alg. 2 in the paper.
+"""
+
+import jax.numpy as jnp
+
+# INT8 twin range: after complementization the smaller twin loses 1, and
+# the pairwise-symmetric clipping below keeps both M+dev and M-dev-1 in
+# the representable signed-8-bit range.
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+def _as_pairs(w):
+    """[N, L] -> (f0, f1) each [N/2, L]."""
+    n = w.shape[0]
+    if n % 2 != 0:
+        raise ValueError(f"FCC needs an even number of filters, got {n}")
+    wp = w.reshape(n // 2, 2, -1)
+    return wp[:, 0, :], wp[:, 1, :]
+
+
+def _from_pairs(f0, f1, shape):
+    return jnp.stack([f0, f1], axis=1).reshape(shape)
+
+
+def pair_means(w):
+    """Per-pair mean M_j = (sum f_j + sum f_{j+1}) / (2L).  Returns [N/2]."""
+    f0, f1 = _as_pairs(w)
+    length = f0.shape[-1]
+    return (f0.sum(-1) + f1.sum(-1)) / (2.0 * length)
+
+
+def symmetrize(w):
+    """Alg. 1 — float-domain symmetrization.
+
+    For each twin pair, the weight *closer* to the pair mean M is replaced
+    with the mirror image of the other, so that afterwards
+    ``f0^s - M = -(f1^s - M)`` holds elementwise (Eq. 1/5).
+    Returns ``(w_sym [N, L], M [N/2])``.
+    """
+    shape = w.shape
+    w2 = w.reshape(shape[0], -1)
+    f0, f1 = _as_pairs(w2)
+    m = pair_means(w2)[:, None]
+    keep0 = jnp.abs(f0 - m) >= jnp.abs(f1 - m)
+    f0s = jnp.where(keep0, f0, 2.0 * m - f1)
+    f1s = jnp.where(keep0, 2.0 * m - f0, f1)
+    return _from_pairs(f0s, f1s, shape), m[:, 0]
+
+
+def symmetrize_int(w_int):
+    """Alg. 1 over INT8 filters, with M rounded to an integer.
+
+    The deviation ``dev = f^s - M`` is clamped pairwise so that both
+    ``M + dev`` and ``M - dev - 1`` (the post-complementization smaller
+    twin) stay inside [INT8_MIN, INT8_MAX].  Clamping the *deviation*
+    (not the endpoints) preserves Eq. 1 exactly.
+    Returns ``(w_sym int32 [N, L], M int32 [N/2])``.
+    """
+    shape = w_int.shape
+    w2 = w_int.astype(jnp.int32).reshape(shape[0], -1)
+    f0, f1 = _as_pairs(w2)
+    length = f0.shape[-1]
+    m = jnp.round((f0.sum(-1) + f1.sum(-1)) / (2.0 * length)).astype(jnp.int32)[:, None]
+    keep0 = jnp.abs(f0 - m) >= jnp.abs(f1 - m)
+    f0s = jnp.where(keep0, f0, 2 * m - f1)
+    f1s = jnp.where(keep0, 2 * m - f0, f1)
+    dev = f0s - m  # = -(f1s - m)
+    # both M+dev and M-dev must fit, and the later "-1" of Alg. 2 too:
+    dmax = jnp.minimum(INT8_MAX - m, m - (INT8_MIN + 1))
+    dmax = jnp.maximum(dmax, 0)
+    dev = jnp.clip(dev, -dmax, dmax)
+    f0s = m + dev
+    f1s = m - dev
+    return _from_pairs(f0s, f1s, shape).astype(jnp.int32), m[:, 0]
+
+
+def complementize(w_sym_int):
+    """Alg. 2 — subtract 1 from the smaller twin of each symmetric pair.
+
+    Input must be integer symmetric filters; afterwards
+    ``w0^bc - M = ~(w1^bc - M)`` holds elementwise (Eq. 3), because for
+    two's-complement integers ``~x = -x - 1`` (Eq. 4).
+    """
+    shape = w_sym_int.shape
+    w2 = w_sym_int.astype(jnp.int32).reshape(shape[0], -1)
+    f0, f1 = _as_pairs(w2)
+    ge = f0 >= f1
+    f0bc = jnp.where(ge, f0, f0 - 1)
+    f1bc = jnp.where(ge, f1 - 1, f1)
+    return _from_pairs(f0bc, f1bc, shape).astype(jnp.int32)
+
+
+def decompose(w_bc_int, m):
+    """Biased-comp filters -> (comp filters, M):  f^c = f^bc - M.
+
+    After decomposition the twins are exact bitwise complements
+    (``w0^c == ~w1^c``), so storing one of each pair in the Q side of a 6T
+    cell makes the Q-bar side hold the other — this is the doubling.
+    """
+    shape = w_bc_int.shape
+    w2 = w_bc_int.astype(jnp.int32).reshape(shape[0], -1)
+    npairs = w2.shape[0] // 2
+    mm = jnp.repeat(m.astype(jnp.int32), 2).reshape(2 * npairs, 1)
+    return (w2 - mm).reshape(shape)
+
+
+def recompose(w_c_int, m):
+    """Inverse of :func:`decompose` — f^bc = f^c + M."""
+    shape = w_c_int.shape
+    w2 = w_c_int.astype(jnp.int32).reshape(shape[0], -1)
+    npairs = w2.shape[0] // 2
+    mm = jnp.repeat(m.astype(jnp.int32), 2).reshape(2 * npairs, 1)
+    return (w2 + mm).reshape(shape)
+
+
+def is_symmetric(w, m, atol=1e-5):
+    """Check Eq. 1:  (w0 - M) == -(w1 - M)."""
+    f0, f1 = _as_pairs(jnp.asarray(w, jnp.float32).reshape(w.shape[0], -1))
+    return bool(jnp.allclose(f0 - m[:, None], -(f1 - m[:, None]), atol=atol))
+
+
+def is_biased_complementary(w_bc, m):
+    """Check Eq. 3:  (w0 - M) == ~(w1 - M)  i.e. (w0-M)+(w1-M) == -1."""
+    f0, f1 = _as_pairs(jnp.asarray(w_bc, jnp.int32).reshape(w_bc.shape[0], -1))
+    s = (f0 - m[:, None]) + (f1 - m[:, None])
+    return bool(jnp.all(s == -1))
+
+
+def is_bitwise_complementary(w_c):
+    """Check Eq. 2:  w0^c == ~w1^c  elementwise (two's complement)."""
+    f0, f1 = _as_pairs(jnp.asarray(w_c, jnp.int32).reshape(w_c.shape[0], -1))
+    return bool(jnp.all(f0 == ~f1))
+
+
+def fcc_quantize(w_float, scale):
+    """FCC quantization (paper §III-B-2, steps 1-3): float weights ->
+    (biased-comp INT filters, integer M).  ``scale`` is the INT8
+    quantization scale (w_q = round(w / scale)).
+    """
+    wq = jnp.clip(jnp.round(w_float / scale), INT8_MIN, INT8_MAX).astype(jnp.int32)
+    ws, m = symmetrize_int(wq)
+    wbc = complementize(ws)
+    return wbc, m

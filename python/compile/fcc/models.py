@@ -1,0 +1,385 @@
+"""Tiny JAX variants of the paper's benchmark models (scaled substitution,
+DESIGN.md §2): MobileNetV2, EfficientNet-B0, AlexNet, VGG19, ResNet18,
+MobileViT-XS — all for 32x32x3 inputs.
+
+Each model is a flat list of layer *specs*; parameters live in a parallel
+pytree.  Conv layers carry ``fcc``-eligibility metadata (kind, out
+channels) so the training loop can apply the FCC constraint to exactly the
+scope S(i) under study.  Layer kinds:
+
+  conv    — std-conv  KxKxCxN
+  dwconv  — depthwise KxKx1 per channel (pairing pairs adjacent channels)
+  pwconv  — pointwise 1x1xCxN
+  fc      — dense [out, in]
+  pool    — 2x2 avg pool
+  gap     — global average pool
+  flatten
+  res     — residual enter/exit markers (identity skip)
+
+Activations (relu / swish / none) are part of the conv/fc spec.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------- specs
+
+
+def conv(cin, cout, k=3, stride=1, act="relu"):
+    return dict(kind="conv", cin=cin, cout=cout, k=k, stride=stride, act=act)
+
+
+def dwconv(c, k=3, stride=1, act="relu"):
+    return dict(kind="dwconv", cin=c, cout=c, k=k, stride=stride, act=act)
+
+
+def pwconv(cin, cout, act="relu"):
+    return dict(kind="pwconv", cin=cin, cout=cout, k=1, stride=1, act=act)
+
+
+def fc(fin, fout, act="none"):
+    return dict(kind="fc", cin=fin, cout=fout, act=act)
+
+
+def pool():
+    return dict(kind="pool")
+
+
+def gap():
+    return dict(kind="gap")
+
+
+def flatten():
+    return dict(kind="flatten")
+
+
+def res_enter():
+    return dict(kind="res_enter")
+
+
+def res_exit():
+    return dict(kind="res_exit")
+
+
+def inv_residual(cin, cout, t=2, stride=1, act="relu"):
+    """MobileNetV2 inverted residual: pw expand -> dw -> pw project."""
+    mid = cin * t
+    block = [
+        pwconv(cin, mid, act=act),
+        dwconv(mid, stride=stride, act=act),
+        pwconv(mid, cout, act="none"),
+    ]
+    if stride == 1 and cin == cout:
+        return [res_enter()] + block + [res_exit()]
+    return block
+
+
+def basic_block(cin, cout, stride=1):
+    """ResNet basic block (projection shortcut omitted: when shapes change
+    we drop the skip — adequate at this scale)."""
+    block = [conv(cin, cout, 3, stride), conv(cout, cout, 3, 1, act="none")]
+    if stride == 1 and cin == cout:
+        return [res_enter()] + block + [res_exit()]
+    return block
+
+
+def attention(dim, heads=2):
+    return dict(kind="attn", dim=dim, heads=heads)
+
+
+# ------------------------------------------------------------- catalogs
+
+
+def mobilenet_v2_tiny(num_classes=10):
+    spec = [conv(3, 16, 3, 1)]
+    spec += inv_residual(16, 16, t=2)
+    spec += inv_residual(16, 24, t=2, stride=2)
+    spec += inv_residual(24, 24, t=2)
+    spec += inv_residual(24, 32, t=2, stride=2)
+    spec += inv_residual(32, 32, t=2)
+    spec += [pwconv(32, 64), gap(), fc(64, num_classes)]
+    return spec
+
+
+def efficientnet_b0_tiny(num_classes=10):
+    a = "swish"
+    spec = [conv(3, 16, 3, 1, act=a)]
+    spec += inv_residual(16, 16, t=2, act=a)
+    spec += inv_residual(16, 24, t=4, stride=2, act=a)
+    spec += inv_residual(24, 24, t=4, act=a)
+    spec += inv_residual(24, 40, t=4, stride=2, act=a)
+    spec += [pwconv(40, 80, act=a), gap(), fc(80, num_classes)]
+    return spec
+
+
+def alexnet_tiny(num_classes=10):
+    return [
+        conv(3, 32, 5, 2),
+        pool(),
+        conv(32, 48, 3, 1),
+        conv(48, 48, 3, 1),
+        pool(),
+        flatten(),
+        fc(48 * 4 * 4, 256, act="relu"),
+        fc(256, num_classes),
+    ]
+
+
+def vgg19_tiny(num_classes=10):
+    return [
+        conv(3, 32, 3, 1),
+        conv(32, 32, 3, 1),
+        pool(),
+        conv(32, 64, 3, 1),
+        conv(64, 64, 3, 1),
+        pool(),
+        conv(64, 64, 3, 1),
+        pool(),
+        flatten(),
+        fc(64 * 4 * 4, 256, act="relu"),
+        fc(256, num_classes),
+    ]
+
+
+def resnet18_tiny(num_classes=10):
+    spec = [conv(3, 16, 3, 1)]
+    spec += basic_block(16, 16)
+    spec += basic_block(16, 32, stride=2)
+    spec += basic_block(32, 32)
+    spec += basic_block(32, 64, stride=2)
+    spec += [gap(), fc(64, num_classes)]
+    return spec
+
+
+def mobilevit_xs_tiny(num_classes=10):
+    spec = [conv(3, 16, 3, 2)]
+    spec += inv_residual(16, 24, t=2, stride=2, act="swish")
+    spec += [pwconv(24, 32, act="none"), attention(32), pwconv(32, 32, act="swish")]
+    spec += [gap(), fc(32, num_classes)]
+    return spec
+
+
+MODELS = {
+    "mobilenet_v2": mobilenet_v2_tiny,
+    "efficientnet_b0": efficientnet_b0_tiny,
+    "alexnet": alexnet_tiny,
+    "vgg19": vgg19_tiny,
+    "resnet18": resnet18_tiny,
+    "mobilevit_xs": mobilevit_xs_tiny,
+}
+
+
+# ----------------------------------------------------------- parameters
+
+
+def init_params(spec, seed=0):
+    """He-normal init.  Conv weights are stored flattened as [N, K*K*C]
+    (the filter-major layout FCC and the mapper operate on); dw weights as
+    [C, K*K]; fc as [out, in]."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for layer in spec:
+        kind = layer["kind"]
+        if kind in ("conv", "pwconv"):
+            k, cin, cout = layer["k"], layer["cin"], layer["cout"]
+            fan_in = k * k * cin
+            w = rng.normal(0, np.sqrt(2.0 / fan_in), (cout, k * k * cin))
+            params.append(
+                dict(w=jnp.asarray(w, jnp.float32), b=jnp.zeros((cout,), jnp.float32))
+            )
+        elif kind == "dwconv":
+            k, c = layer["k"], layer["cin"]
+            w = rng.normal(0, np.sqrt(2.0 / (k * k)), (c, k * k))
+            params.append(
+                dict(w=jnp.asarray(w, jnp.float32), b=jnp.zeros((c,), jnp.float32))
+            )
+        elif kind == "fc":
+            fin, fout = layer["cin"], layer["cout"]
+            w = rng.normal(0, np.sqrt(2.0 / fin), (fout, fin))
+            params.append(
+                dict(w=jnp.asarray(w, jnp.float32), b=jnp.zeros((fout,), jnp.float32))
+            )
+        elif kind == "attn":
+            d = layer["dim"]
+            params.append(
+                dict(
+                    wq=jnp.asarray(rng.normal(0, d**-0.5, (d, d)), jnp.float32),
+                    wk=jnp.asarray(rng.normal(0, d**-0.5, (d, d)), jnp.float32),
+                    wv=jnp.asarray(rng.normal(0, d**-0.5, (d, d)), jnp.float32),
+                    wo=jnp.asarray(rng.normal(0, d**-0.5, (d, d)), jnp.float32),
+                )
+            )
+        else:
+            params.append(dict())
+    return params
+
+
+def _act(x, name):
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "swish":
+        return jax.nn.swish(x)
+    return x
+
+
+def _conv2d(x, w4, stride):
+    return jax.lax.conv_general_dilated(
+        x,
+        w4,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+# --- patches-based convolution (export path) -------------------------
+#
+# xla_extension 0.5.1 (the version the rust `xla` crate links) executes
+# `convolution` HLO ops parsed from jax>=0.8 text as zeros, so the AOT
+# export path lowers convs as explicit patch extraction + dot — which is
+# precisely the im2col + MVM decomposition the PIM hardware performs
+# (paper §III-D), so the exported HLO mirrors the silicon dataflow.
+# Padding is symmetric (k-1)//2, windows anchored on the stride grid —
+# identical to the rust mapper's im2col.
+
+
+def extract_patches(x, k, stride):
+    """[B,H,W,C] -> [B,oh,ow,K*K*C] via pad + strided slices (no conv op)."""
+    b, h, w, c = x.shape
+    p = (k - 1) // 2
+    oh = -(-h // stride)
+    ow = -(-w // stride)
+    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+    taps = []
+    for ky in range(k):
+        for kx in range(k):
+            sl = xp[:, ky : ky + stride * (oh - 1) + 1 : stride,
+                    kx : kx + stride * (ow - 1) + 1 : stride, :]
+            taps.append(sl)
+    return jnp.concatenate(taps, axis=-1)  # [B,oh,ow,K*K*C] (tap-major)
+
+
+def conv2d_patches(x, w, k, cout, stride, wt=None):
+    """Conv as im2col+dot. ``w: [N, K*K*C]`` filter-major (tap-major per
+    filter, matching extract_patches ordering).  The dot is kept strictly
+    2-D and, when ``wt`` ([K*K*C, N], pre-transposed *outside* the traced
+    graph) is given, transpose-free: xla_extension 0.5.1 executes rank>2
+    dot_general and `transpose`-of-constant text as zeros (parser bug
+    family shared with `convolution`)."""
+    pat = extract_patches(x, k, stride)  # [B,oh,ow,K*K*C]
+    b, oh, ow, l = pat.shape
+    w2 = wt if wt is not None else w.T
+    y = pat.reshape(b * oh * ow, l) @ w2  # [B*oh*ow, N]
+    return y.reshape(b, oh, ow, cout)
+
+
+def dwconv2d_patches(x, w, k, stride):
+    """Depthwise conv via patches. ``w: [C, K*K]``."""
+    b, h, wd, c = x.shape
+    p = (k - 1) // 2
+    oh = -(-h // stride)
+    ow = -(-wd // stride)
+    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+    acc = jnp.zeros((b, oh, ow, c), x.dtype)
+    for ky in range(k):
+        for kx in range(k):
+            sl = xp[:, ky : ky + stride * (oh - 1) + 1 : stride,
+                    kx : kx + stride * (ow - 1) + 1 : stride, :]
+            acc = acc + sl * w[:, ky * k + kx][None, None, None, :]
+    return acc
+
+
+def forward(spec, params, x, weight_tf=None, conv_impl="lax"):
+    """Run the model.  ``weight_tf(layer_index, layer_spec, w) -> w`` lets
+    the training loop interpose FCC / plain fake-quant on a per-layer
+    basis; identity when None.  ``conv_impl="patches"`` selects the
+    im2col+dot lowering used for AOT export (see above)."""
+
+    def tf(i, layer, w):
+        return w if weight_tf is None else weight_tf(i, layer, w)
+
+    stack = []
+    for i, (layer, p) in enumerate(zip(spec, params)):
+        kind = layer["kind"]
+        if kind in ("conv", "pwconv"):
+            k, cin, cout = layer["k"], layer["cin"], layer["cout"]
+            w = tf(i, layer, p["w"])  # [N, K*K*C]
+            if conv_impl == "patches":
+                y = conv2d_patches(x, w, k, cout, layer["stride"],
+                                   wt=p.get("wt"))
+            else:
+                w4 = w.reshape(cout, k, k, cin).transpose(1, 2, 3, 0)  # HWIO
+                y = _conv2d(x, w4, layer["stride"])
+            x = _act(y + p["b"], layer["act"])
+        elif kind == "dwconv":
+            k, c = layer["k"], layer["cin"]
+            w = tf(i, layer, p["w"])  # [C, K*K]
+            if conv_impl == "patches":
+                y = dwconv2d_patches(x, w, k, layer["stride"])
+            else:
+                w4 = w.reshape(c, k, k, 1).transpose(1, 2, 3, 0)  # HWIO
+                y = jax.lax.conv_general_dilated(
+                    x,
+                    w4,
+                    window_strides=(layer["stride"], layer["stride"]),
+                    padding="SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                    feature_group_count=c,
+                )
+            x = _act(y + p["b"], layer["act"])
+        elif kind == "fc":
+            w = tf(i, layer, p["w"])
+            w2 = p["wt"] if "wt" in p else w.T
+            x = _act(x @ w2 + p["b"], layer["act"])
+        elif kind == "attn":
+            b, h, wdt, c = x.shape
+            seq = x.reshape(b, h * wdt, c)
+            q, k_, v = seq @ p["wq"], seq @ p["wk"], seq @ p["wv"]
+            att = jax.nn.softmax(q @ k_.transpose(0, 2, 1) / np.sqrt(c), axis=-1)
+            seq = seq + (att @ v) @ p["wo"]
+            x = seq.reshape(b, h, wdt, c)
+        elif kind == "pool":
+            x = jax.lax.reduce_window(
+                x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            ) / 4.0
+        elif kind == "gap":
+            x = x.mean(axis=(1, 2))
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif kind == "res_enter":
+            stack.append(x)
+        elif kind == "res_exit":
+            x = x + stack.pop()
+        else:
+            raise ValueError(kind)
+    return x
+
+
+def conv_layer_indices(spec):
+    """Indices of FCC-eligible conv-ish layers (even out-channel count)."""
+    return [
+        i
+        for i, l in enumerate(spec)
+        if l["kind"] in ("conv", "pwconv", "dwconv") and l["cout"] % 2 == 0
+    ]
+
+
+def fc_layer_indices(spec):
+    return [i for i, l in enumerate(spec) if l["kind"] == "fc" and l["cout"] % 2 == 0]
+
+
+def param_counts(spec):
+    """(conv_params, fc_params, total) — for the paper's FC-ratio column."""
+    conv_n = fc_n = other = 0
+    for l in spec:
+        if l["kind"] in ("conv", "pwconv"):
+            conv_n += l["k"] * l["k"] * l["cin"] * l["cout"] + l["cout"]
+        elif l["kind"] == "dwconv":
+            conv_n += l["k"] * l["k"] * l["cin"] + l["cout"]
+        elif l["kind"] == "fc":
+            fc_n += l["cin"] * l["cout"] + l["cout"]
+        elif l["kind"] == "attn":
+            other += 4 * l["dim"] * l["dim"]
+    return conv_n, fc_n, conv_n + fc_n + other

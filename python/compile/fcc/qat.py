@@ -1,0 +1,56 @@
+"""FCC-aware QAT (paper §III-B-2): quantize -> symmetrize ->
+complementize -> de-quantize, with a straight-through estimator so the
+constraint is *felt* by the optimizer while gradients still flow.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .core import fcc_quantize, decompose, recompose
+from .quant import quant_scale
+
+
+def fcc_quant_dequant(w):
+    """The forward FCC-quantization round trip (float -> float)."""
+    scale = quant_scale(w)
+    n = w.shape[0]
+    flat = w.reshape(n, -1)
+    wbc, m = fcc_quantize(flat, scale)
+    return (wbc.astype(jnp.float32) * scale).reshape(w.shape)
+
+
+def fcc_quant_ste(w):
+    """Straight-through FCC quantization: forward value is the
+    FCC-quantized/de-quantized weight, gradient is identity."""
+    return w + jax.lax.stop_gradient(fcc_quant_dequant(w) - w)
+
+
+def quant_dequant(w):
+    """Plain INT8 fake-quant round trip (baseline QAT, no FCC)."""
+    scale = quant_scale(w)
+    q = jnp.clip(jnp.round(w / scale), -128, 127)
+    return q * scale
+
+
+def quant_ste(w):
+    return w + jax.lax.stop_gradient(quant_dequant(w) - w)
+
+
+def fcc_export(w):
+    """Export a trained conv weight for deployment.
+
+    Returns ``(w_comp int32 [N, L], m int32 [N/2], scale float)`` — the
+    comp filters (only even-indexed ones need transfer: odd are their
+    bitwise complements) and per-pair means, as consumed by the mapper.
+    """
+    scale = quant_scale(w)
+    n = w.shape[0]
+    wbc, m = fcc_quantize(w.reshape(n, -1), scale)
+    wc = decompose(wbc, m)
+    return wc, m, scale
+
+
+def fcc_import(wc, m, scale, shape):
+    """Inverse of :func:`fcc_export` (for round-trip tests)."""
+    wbc = recompose(wc, m)
+    return (wbc.astype(jnp.float32) * scale).reshape(shape)

@@ -1,0 +1,52 @@
+"""Symmetric per-tensor INT8 quantization and 2:4 structured pruning."""
+
+import jax.numpy as jnp
+
+from .core import INT8_MAX, INT8_MIN
+
+
+def quant_scale(w, qmax=INT8_MAX):
+    """Symmetric per-tensor scale: max|w| / qmax (never zero)."""
+    amax = jnp.max(jnp.abs(w))
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantize_int8(w, scale=None):
+    """Quantize float tensor to INT8 codes (int32 storage).
+
+    Returns ``(codes, scale)``.
+    """
+    if scale is None:
+        scale = quant_scale(w)
+    codes = jnp.clip(jnp.round(w / scale), INT8_MIN, INT8_MAX).astype(jnp.int32)
+    return codes, scale
+
+
+def dequantize_int8(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+def prune_2_4(w):
+    """NVIDIA-style 2:4 fine-grained structured pruning mask.
+
+    In every group of 4 consecutive weights (along the last axis of the
+    flattened filter), the 2 smallest-magnitude weights are zeroed.
+    Returns the pruned tensor (same shape).  Tail elements (len % 4) are
+    kept.
+    """
+    shape = w.shape
+    flat = w.reshape(-1)
+    n4 = (flat.shape[0] // 4) * 4
+    head, tail = flat[:n4].reshape(-1, 4), flat[n4:]
+    # rank within each group of 4 by |w|; keep top-2
+    order = jnp.argsort(jnp.abs(head), axis=1)  # ascending
+    mask = jnp.ones_like(head)
+    rows = jnp.arange(head.shape[0])[:, None]
+    mask = mask.at[rows, order[:, :2]].set(0.0)
+    pruned = jnp.concatenate([(head * mask).reshape(-1), tail])
+    return pruned.reshape(shape)
+
+
+def sparsity(w, atol=0.0):
+    """Fraction of exactly-zero (or |w|<=atol) weights."""
+    return float(jnp.mean(jnp.abs(w) <= atol))

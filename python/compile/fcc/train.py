@@ -1,0 +1,365 @@
+"""FCC training experiment driver (build-time).
+
+Trains the scaled model zoo on the synthetic CIFAR-like corpus and
+measures the accuracy impact of the FCC constraint, reproducing the
+accuracy side of Table III, Table IV, Table V and Fig. 14.  Results are
+written to ``artifacts/accuracy.json`` for the rust report generators, and
+the trained MobileNetV2 weights are exported for the AOT inference model.
+
+Usage (from ``python/``):
+    python -m compile.fcc.train --out ../artifacts [--quick] [--only table3]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import core
+from .data import make_dataset
+from .models import (
+    MODELS,
+    conv_layer_indices,
+    fc_layer_indices,
+    forward,
+    init_params,
+    param_counts,
+)
+from .qat import fcc_quant_ste, quant_ste
+from .quant import prune_2_4
+
+
+# ------------------------------------------------------------ optimizer
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return dict(m=zeros, v=jax.tree_util.tree_map(jnp.zeros_like, params), t=0)
+
+
+def adam_update(params, grads, state, lr=2e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads
+    )
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new, dict(m=m, v=v, t=t)
+
+
+# ------------------------------------------------------------- training
+
+
+def scope_layers(spec, threshold):
+    """S(i): FCC-eligible conv layers with more than `threshold` filters."""
+    if threshold is None:
+        return set()
+    return {i for i in conv_layer_indices(spec) if spec[i]["cout"] > threshold}
+
+
+def make_weight_tf(fcc_set, quantize):
+    """Per-layer weight transform for QAT: FCC-STE on scoped layers, plain
+    INT8 fake-quant elsewhere (paper applies INT8 to all layers)."""
+
+    def tf(i, layer, w):
+        if i in fcc_set:
+            return fcc_quant_ste(w)
+        if quantize:
+            return quant_ste(w)
+        return w
+
+    return tf
+
+
+def symmetrize_project(params, spec, fcc_set):
+    """Projection used during FCC-aware pre-training (Alg. 1 float)."""
+    out = []
+    for i, (layer, p) in enumerate(zip(spec, params)):
+        if i in fcc_set and "w" in p:
+            ws, _ = core.symmetrize(p["w"])
+            out.append(dict(p, w=ws))
+        else:
+            out.append(p)
+    return out
+
+
+def train_model(
+    model_name,
+    fcc_conv=False,
+    fcc_fc=False,
+    scope_threshold=0,
+    prune24=False,
+    num_classes=10,
+    steps_pre=150,
+    steps_qat=80,
+    batch=64,
+    seed=0,
+    data=None,
+):
+    """Two-stage FCC training (pre-train with symmetrization projection,
+    then FCC-aware QAT).  Returns dict of accuracies + metadata."""
+    spec = MODELS[model_name](num_classes)
+    params = init_params(spec, seed=seed)
+    if data is None:
+        data = make_dataset(num_classes=num_classes, seed=seed)
+    x_tr, y_tr, x_te, y_te = data
+
+    fcc_set = scope_layers(spec, scope_threshold) if fcc_conv else set()
+    if fcc_fc:
+        fcc_set |= set(fc_layer_indices(spec))
+
+    def loss_fn(params, x, y, weight_tf):
+        logits = forward(spec, params, x, weight_tf)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+    @jax.jit
+    def pre_step(params, opt, x, y):
+        l, g = jax.value_and_grad(loss_fn)(params, x, y, None)
+        params, opt = adam_update(params, g, opt)
+        return params, opt, l
+
+    qat_tf = make_weight_tf(fcc_set, quantize=True)
+
+    @jax.jit
+    def qat_step(params, opt, x, y):
+        l, g = jax.value_and_grad(lambda p, a, b: loss_fn(p, a, b, qat_tf))(
+            params, x, y
+        )
+        params, opt = adam_update(params, g, opt, lr=5e-4)
+        return params, opt, l
+
+    @jax.jit
+    def eval_logits(params, x):
+        return forward(spec, params, x, qat_tf)
+
+    # Schedule (stability on the scaled models): dense warmup for the
+    # first half of pre-training, then the symmetrization projection
+    # every 4 steps (projecting every step thrashes Adam's moments and
+    # collapses narrow models); 2:4 pruning engages only after 2/3 of
+    # pre-training (ASP-style: prune a trained dense model, then
+    # fine-tune under the mask).
+    rng = np.random.default_rng(seed + 7)
+    opt = adam_init(params)
+    n = len(y_tr)
+    prune_start = (2 * steps_pre) // 3
+    for s in range(steps_pre):
+        idx = rng.integers(0, n, batch)
+        params, opt, _ = pre_step(params, opt, x_tr[idx], y_tr[idx])
+        if fcc_set and s >= steps_pre // 2 and (s % 4 == 3 or s == steps_pre - 1):
+            params = symmetrize_project(params, spec, fcc_set)
+        if prune24 and s >= prune_start:
+            params = [
+                dict(p, w=prune_2_4(p["w"])) if "w" in p else p for p in params
+            ]
+
+    opt = adam_init(params)
+    for s in range(steps_qat):
+        idx = rng.integers(0, n, batch)
+        params, opt, _ = qat_step(params, opt, x_tr[idx], y_tr[idx])
+        if fcc_set and (s % 4 == 3 or s == steps_qat - 1):
+            params = symmetrize_project(params, spec, fcc_set)
+        if prune24:
+            params = [
+                dict(p, w=prune_2_4(p["w"])) if "w" in p else p for p in params
+            ]
+
+    # accuracy under deployment (quantized/FCC) weights
+    preds = []
+    for i in range(0, len(y_te), 256):
+        preds.append(np.argmax(np.asarray(eval_logits(params, x_te[i : i + 256])), -1))
+    acc = float((np.concatenate(preds) == y_te).mean()) * 100.0
+
+    conv_n, fc_n, total = param_counts(spec)
+    fcc_params = sum(
+        spec[i]["k"] * spec[i]["k"] * spec[i]["cin"] * spec[i]["cout"]
+        if spec[i]["kind"] in ("conv", "pwconv")
+        else (
+            spec[i]["k"] * spec[i]["k"] * spec[i]["cin"]
+            if spec[i]["kind"] == "dwconv"
+            else spec[i]["cin"] * spec[i]["cout"]
+        )
+        for i in fcc_set
+    )
+    return dict(
+        model=model_name,
+        acc=acc,
+        fcc_conv=fcc_conv,
+        fcc_fc=fcc_fc,
+        scope_threshold=scope_threshold,
+        prune24=prune24,
+        fc_param_ratio=100.0 * fc_n / total,
+        fcc_param_ratio=100.0 * fcc_params / total,
+        params=params,
+        spec=spec,
+    )
+
+
+def strip(result):
+    r = dict(result)
+    r.pop("params")
+    r.pop("spec")
+    return r
+
+
+# ------------------------------------------------------------ experiments
+
+
+def run_table3(out, steps_pre, steps_qat, log):
+    rows = []
+    models = ["mobilenet_v2", "efficientnet_b0", "alexnet", "vgg19", "resnet18"]
+    data = make_dataset(seed=0)
+    export = None
+    for name in models:
+        base = train_model(name, fcc_conv=False, data=data,
+                           steps_pre=steps_pre, steps_qat=steps_qat)
+        conv = train_model(name, fcc_conv=True, data=data,
+                           steps_pre=steps_pre, steps_qat=steps_qat)
+        both = train_model(name, fcc_conv=True, fcc_fc=True, data=data,
+                           steps_pre=steps_pre, steps_qat=steps_qat)
+        rows.append(
+            dict(
+                model=name,
+                baseline_acc=base["acc"],
+                conv_acc=conv["acc"],
+                conv_drop=base["acc"] - conv["acc"],
+                conv_fc_acc=both["acc"],
+                conv_fc_drop=base["acc"] - both["acc"],
+                fc_param_ratio=base["fc_param_ratio"],
+            )
+        )
+        log(f"table3 {name}: base={base['acc']:.2f} conv={conv['acc']:.2f} "
+            f"conv+fc={both['acc']:.2f}")
+        if name == "mobilenet_v2":
+            export = conv
+    return rows, export
+
+
+def run_fig14(out, steps_pre, steps_qat, log):
+    # scaled thresholds: the tiny models top out at 64-80 filters, so the
+    # paper's S(112)...S(0) sweep maps to these i values.
+    thresholds = [None, 48, 32, 24, 16, 0]
+    series = {}
+    data = make_dataset(seed=0)
+    for name in ["mobilenet_v2", "efficientnet_b0"]:
+        pts = []
+        for th in thresholds:
+            r = train_model(
+                name,
+                fcc_conv=th is not None,
+                scope_threshold=th if th is not None else 0,
+                data=data,
+                steps_pre=steps_pre,
+                steps_qat=steps_qat,
+            )
+            pts.append(
+                dict(
+                    threshold=-1 if th is None else th,
+                    acc=r["acc"],
+                    fcc_param_ratio=r["fcc_param_ratio"],
+                )
+            )
+            log(f"fig14 {name} S({th}): acc={r['acc']:.2f} "
+                f"params={r['fcc_param_ratio']:.1f}%")
+        series[name] = pts
+    return series
+
+
+def run_table4(out, steps_pre, steps_qat, log):
+    data = make_dataset(num_classes=100, train_per_class=24,
+                        test_per_class=8, seed=3)
+    orig = train_model("mobilenet_v2", num_classes=100, data=data,
+                       steps_pre=steps_pre, steps_qat=steps_qat)
+    pruned = train_model("mobilenet_v2", num_classes=100, prune24=True,
+                         data=data, steps_pre=steps_pre, steps_qat=steps_qat)
+    both = train_model("mobilenet_v2", num_classes=100, prune24=True,
+                       fcc_conv=True, data=data,
+                       steps_pre=steps_pre, steps_qat=steps_qat)
+    log(f"table4: orig={orig['acc']:.2f} 2:4={pruned['acc']:.2f} "
+        f"fcc+2:4={both['acc']:.2f}")
+    return dict(
+        original_acc=orig["acc"],
+        pruned_acc=pruned["acc"],
+        fcc_pruned_acc=both["acc"],
+    )
+
+
+def run_table5(out, steps_pre, steps_qat, log):
+    data = make_dataset(seed=5)
+    orig = train_model("mobilevit_xs", data=data,
+                       steps_pre=steps_pre, steps_qat=steps_qat)
+    fcc = train_model("mobilevit_xs", fcc_conv=True, data=data,
+                      steps_pre=steps_pre, steps_qat=steps_qat)
+    log(f"table5: orig={orig['acc']:.2f} fcc={fcc['acc']:.2f}")
+    return dict(original_acc=orig["acc"], fcc_acc=fcc["acc"])
+
+
+def export_weights(result, path):
+    """Export the trained FCC MobileNetV2 for aot.py / rust goldens."""
+    arrs, meta = {}, []
+    for i, (layer, p) in enumerate(zip(result["spec"], result["params"])):
+        entry = dict(layer)
+        if "w" in p:
+            arrs[f"w{i}"] = np.asarray(p["w"], np.float32)
+            arrs[f"b{i}"] = np.asarray(p["b"], np.float32)
+        meta.append(entry)
+    arrs["meta"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+    np.savez(path, **arrs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="fast smoke configuration")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "table3", "table4", "table5", "fig14"])
+    ap.add_argument("--steps-pre", type=int, default=None)
+    ap.add_argument("--steps-qat", type=int, default=None)
+    args = ap.parse_args()
+
+    steps_pre = args.steps_pre or (20 if args.quick else 150)
+    steps_qat = args.steps_qat or (10 if args.quick else 80)
+    os.makedirs(args.out, exist_ok=True)
+
+    def log(msg):
+        print(msg, flush=True)
+
+    results = {}
+    acc_path = os.path.join(args.out, "accuracy.json")
+    if os.path.exists(acc_path):
+        with open(acc_path) as f:
+            results = json.load(f)
+
+    def save():
+        results["config"] = dict(steps_pre=steps_pre, steps_qat=steps_qat)
+        with open(acc_path, "w") as f:
+            json.dump(results, f, indent=2)
+        log(f"saved {acc_path}")
+
+    if args.only in (None, "table3"):
+        rows, export = run_table3(args.out, steps_pre, steps_qat, log)
+        results["table3"] = rows
+        if export is not None:
+            export_weights(export, os.path.join(args.out, "mobilenet_v2_tiny.npz"))
+        save()
+    if args.only in (None, "table4"):
+        results["table4"] = run_table4(args.out, steps_pre, steps_qat, log)
+        save()
+    if args.only in (None, "table5"):
+        results["table5"] = run_table5(args.out, steps_pre, steps_qat, log)
+        save()
+    if args.only in (None, "fig14"):
+        results["fig14"] = run_fig14(args.out, steps_pre, steps_qat, log)
+        save()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time; lowered into the L2 HLO)."""
+
+from .fcc_conv import fcc_mvm
+from .pim_mac import pim_mac
+
+__all__ = ["fcc_mvm", "pim_mac"]

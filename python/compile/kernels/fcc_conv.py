@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: FCC MVM with fused ARU recovery (paper Eq. 7).
+
+The DDC headline at kernel level: only the *even* comp filters are stored
+(``w_even``); the odd twins are their exact bitwise complements, which the
+6T array holds for free in Q-bar.  Algebraically ``~w = -w - 1``, so the
+odd-channel partial sum is recovered from the stored plane and the input
+row-sum without a second reduction:
+
+    psum_odd = -psum_even - sum(x)
+
+followed by the ARU epilogue ``out = psum + sum(x) * M`` for both twins.
+One stored bit-plane therefore serves two output channels — double
+capacity AND double parallelism, which is exactly the double-computing
+mode of Fig. 7(b).
+
+Grid/BlockSpec express the compartment schedule: each grid step processes
+one tile of stored filter pairs (a compartment group's worth).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fcc_mvm_kernel(x_ref, w_ref, m_ref, even_ref, odd_ref):
+    """x: [B, L] int32, w: [L, TH] int32 (stored even comp filters),
+    m: [1, TH] int32 pair means -> even/odd: [B, TH] int32."""
+    x = x_ref[...]
+    w = w_ref[...]
+    m = m_ref[...]
+    psum = jnp.dot(x, w, preferred_element_type=jnp.int32)  # adder tree
+    si = x.sum(axis=1, keepdims=True)  # (sum I), computed once per tile
+    even_ref[...] = psum + si * m  # ARU: psum + (sum I) * M
+    odd_ref[...] = si * (m - 1) - psum  # Q-bar recovery + ARU, fused
+
+
+@functools.partial(jax.jit, static_argnames=("tile_h",))
+def fcc_mvm(x, w_even, m, tile_h=16):
+    """FCC MVM: ``[B, L] x [L, N/2] (+ M [N/2]) -> [B, N]`` int32,
+    channels interleaved (even, odd, even, odd, ...)."""
+    x = x.astype(jnp.int32)
+    w_even = w_even.astype(jnp.int32)
+    b, l = x.shape
+    l2, half = w_even.shape
+    assert l == l2, (l, l2)
+    assert half % tile_h == 0, (half, tile_h)
+    m2 = m.astype(jnp.int32).reshape(1, half)
+    grid = (half // tile_h,)
+    even, odd = pl.pallas_call(
+        _fcc_mvm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, l), lambda i: (0, 0)),
+            pl.BlockSpec((l, tile_h), lambda i: (0, i)),
+            pl.BlockSpec((1, tile_h), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, tile_h), lambda i: (0, i)),
+            pl.BlockSpec((b, tile_h), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, half), jnp.int32),
+            jax.ShapeDtypeStruct((b, half), jnp.int32),
+        ],
+        interpret=True,
+    )(x, w_even, m2)
+    return jnp.stack([even, odd], axis=2).reshape(b, 2 * half)

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: bit-serial digital-PIM MAC (the macro's hot-spot).
+
+Emulates the DDC-PIM compute fabric: the pre-process unit feeds inputs
+bit-serially (8 cycles), each stored weight bit-plane is ANDed with the
+broadcast input bit across all compartments, the adder tree reduces
+spatially, and the shift-&-add unit recombines bit positions (MSBs carry
+negative two's-complement weight).
+
+HARDWARE ADAPTATION (DESIGN.md §8): the silicon expresses the
+(wordline, bit-position) schedule with row decoders; here it is a
+``(n_tile,)`` grid of BlockSpec-tiled VMEM blocks, with the AND+adder-tree
+realized as an integer matmul per (input-bit × weight-bit) plane — the
+MXU-friendly form of the same reduction.  Runs under ``interpret=True``
+(CPU); real-TPU lowering would emit a Mosaic custom-call the CPU PJRT
+plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pim_mac_kernel(x_ref, w_ref, o_ref):
+    """One output tile: bit-serial MAC over full reduction length.
+
+    x_ref: [B, L] int32 (int8-range), w_ref: [L, TN] int32,
+    o_ref: [B, TN] int32.
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    # 8 bit-serial input cycles x 8 stored weight bit-planes = the 64
+    # AND/accumulate passes the macro performs per row activation group.
+    for kx in range(8):
+        sx = -(1 << kx) if kx == 7 else (1 << kx)
+        xb = ((x & 0xFF) >> kx) & 1  # broadcast input bit (DBIS INP)
+        for kw in range(8):
+            sw = -(1 << kw) if kw == 7 else (1 << kw)
+            wb = ((w & 0xFF) >> kw) & 1  # stored weight bit (Q state)
+            # bitwise AND of a 1b input and 1b weight == 1x1 multiply;
+            # the adder tree is the reduction of the matmul.
+            acc = acc + jnp.dot(xb, wb, preferred_element_type=jnp.int32) * (
+                sx * sw
+            )
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def pim_mac(x, w, tile_n=32):
+    """Bit-serial PIM MVM: ``[B, L] x [L, N] -> [B, N]`` (int32).
+
+    ``tile_n`` is the output-channel tile per grid step (a PIM-core's
+    worth of adder-tree outputs).
+    """
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    b, l = x.shape
+    l2, n = w.shape
+    assert l == l2, (l, l2)
+    assert n % tile_n == 0, (n, tile_n)
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        _pim_mac_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, l), lambda i: (0, 0)),
+            pl.BlockSpec((l, tile_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, tile_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        interpret=True,
+    )(x, w)

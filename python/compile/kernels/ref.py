@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These define *correct* numerics; the Pallas kernels must match them
+bit-exactly (integer outputs) under pytest/hypothesis.
+"""
+
+import jax.numpy as jnp
+
+
+def mvm_int8_ref(x, w):
+    """Dense signed-INT8 matrix-vector-multiply oracle.
+
+    x: [B, L] int8-range ints, w: [L, N] int8-range ints -> [B, N] int32.
+    The PIM array's bit-serial AND + adder-tree + shift-&-add must reduce
+    to exactly this.
+    """
+    return x.astype(jnp.int32) @ w.astype(jnp.int32)
+
+
+def fcc_mvm_ref(x, w_even, m):
+    """FCC MVM oracle with ARU recovery (paper Eq. 7).
+
+    Only the even-indexed comp filters are stored (``w_even: [L, N/2]``);
+    the odd twins are their bitwise complements (``w_odd = ~w_even =
+    -w_even - 1``), held for free in the Q-bar side of the 6T array.  With
+    ``si = sum(x)`` per row:
+
+        psum_even = x @ w_even
+        psum_odd  = x @ (-w_even - 1) = -psum_even - si
+        out_even  = psum_even + si * M          (ARU recovery, Eq. 7)
+        out_odd   = psum_odd  + si * M = si * (M - 1) - psum_even
+
+    Returns [B, N] int32 with channels interleaved (even, odd, even, ...).
+    """
+    x = x.astype(jnp.int32)
+    w_even = w_even.astype(jnp.int32)
+    m = m.astype(jnp.int32)
+    psum = x @ w_even  # [B, N/2]
+    si = x.sum(axis=1, keepdims=True)  # [B, 1]
+    out_even = psum + si * m[None, :]
+    out_odd = si * (m[None, :] - 1) - psum
+    b, half = psum.shape
+    return jnp.stack([out_even, out_odd], axis=2).reshape(b, 2 * half)
+
+
+def bit_serial_ref(x, w):
+    """Bit-level reference: explicitly decompose both operands into bit
+    planes (two's complement, MSB negative) and accumulate AND products —
+    the exact dataflow of the digital PIM macro (Fig. 6/7).  Must equal
+    :func:`mvm_int8_ref`."""
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    for kx in range(8):
+        sx = -(1 << kx) if kx == 7 else (1 << kx)
+        xb = ((x & 0xFF) >> kx) & 1
+        for kw in range(8):
+            sw = -(1 << kw) if kw == 7 else (1 << kw)
+            wb = ((w & 0xFF) >> kw) & 1
+            acc = acc + (xb @ wb) * (sx * sw)
+    return acc

@@ -1,0 +1,144 @@
+"""L2 — JAX inference model (build-time; lowered to HLO for the rust
+runtime).
+
+Two artifact families are produced from here (see aot.py):
+
+* ``model_b{B}.hlo.txt`` — the full quantized-FCC MobileNetV2-tiny forward
+  pass with weights baked as constants.  Deployment numerics: every conv
+  weight goes through the FCC quantize/de-quantize round trip (the
+  biased-comp INT8 grid), every FC weight through plain INT8 fake-quant,
+  so the HLO computes exactly what the PIM array computes up to the
+  float/int epilogue.  This is the request-path artifact the coordinator
+  serves.
+* ``fcc_mvm.hlo.txt`` / ``pim_mac.hlo.txt`` — the L1 Pallas kernels
+  lowered standalone at a representative layer shape, used by the rust
+  runtime micro-bench and the golden integration tests.
+
+Python never runs at inference time; the rust binary loads the HLO text.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fcc.models import MODELS, forward, init_params
+from .fcc.qat import fcc_quant_dequant, quant_dequant
+from .kernels import fcc_mvm, pim_mac
+
+
+def load_or_init(npz_path, model_name="mobilenet_v2", num_classes=10, seed=0):
+    """Load trained weights exported by fcc.train, or fall back to a
+    deterministic random init (functional path does not require trained
+    weights; the e2e example prefers them)."""
+    spec = MODELS[model_name](num_classes)
+    params = init_params(spec, seed=seed)
+    if npz_path and os.path.exists(npz_path):
+        data = np.load(npz_path, allow_pickle=False)
+        meta = json.loads(bytes(data["meta"]).decode())
+        assert len(meta) == len(spec), "weight file does not match model spec"
+        for i in range(len(spec)):
+            if f"w{i}" in data:
+                params[i] = dict(
+                    w=jnp.asarray(data[f"w{i}"]), b=jnp.asarray(data[f"b{i}"])
+                )
+    return spec, params
+
+
+def deploy_weight_tf(i, layer, w):
+    """Deployment numerics: FCC grid for conv-ish layers (even N), plain
+    INT8 grid otherwise."""
+    if layer["kind"] in ("conv", "pwconv", "dwconv") and layer["cout"] % 2 == 0:
+        return fcc_quant_dequant(w)
+    return quant_dequant(w)
+
+
+def build_forward(spec, params):
+    """Returns ``fn(x: [B,32,32,3] f32) -> logits [B,10] f32`` with
+    deployment (FCC-quantized) weights baked in as constants."""
+
+    # Deployment weights are baked EAGERLY (numpy): the FCC/INT8 grid is
+    # applied here, and conv/fc weights are pre-transposed to [L, N] so
+    # the exported graph contains no `transpose`-of-constant nodes —
+    # xla_extension 0.5.1 executes those (like `convolution` and rank>2
+    # dot_general) as zeros.  The traced fn is pad/slice/concat/dot/
+    # add/max/reduce only.
+    frozen = freeze_deployed(spec, params)
+
+    def fn(x):
+        # patches lowering: convs become im2col + dot, matching both the
+        # PIM dataflow and what xla_extension 0.5.1 can execute.
+        return forward(spec, frozen, x, conv_impl="patches")
+
+    return fn
+
+
+def freeze_deployed(spec, params):
+    """Apply the deployment (FCC/INT8) grid eagerly and pre-transpose
+    conv/fc weights; returns numpy param dicts."""
+    frozen = []
+    for i, (layer, p) in enumerate(zip(spec, params)):
+        q = {k: jax.device_get(v) for k, v in p.items()}
+        if "w" in q:
+            w_dep = np.asarray(deploy_weight_tf(i, layer, jnp.asarray(q["w"])))
+            q["w"] = w_dep
+            if layer["kind"] in ("conv", "pwconv", "fc"):
+                q["wt"] = np.ascontiguousarray(w_dep.T)
+        frozen.append(q)
+    return frozen
+
+
+def build_param_model(spec, params):
+    """AOT export form: weights as *parameters*, not constants.
+
+    xla_extension 0.5.1 executes ``dot(param, dense_constant)`` HLO text
+    as zeros (param-param dots are fine), so the deployed model is
+    lowered as ``fn(x, *weights)`` and the rust runtime streams the
+    weights in from the ``model_weights.bin`` sidecar at execute time.
+
+    Returns ``(fn, arrays)``: the traced function and the deployment
+    weight arrays (f32, call order).
+    """
+    frozen = freeze_deployed(spec, params)
+    arrays, layout = [], []
+    for layer, q in zip(spec, frozen):
+        entry = []
+        if "w" in q:
+            if layer["kind"] in ("conv", "pwconv", "fc"):
+                arrays.append(np.asarray(q["wt"], np.float32))
+                entry.append("wt")
+            else:
+                arrays.append(np.asarray(q["w"], np.float32))
+                entry.append("w")
+            arrays.append(np.asarray(q["b"], np.float32))
+            entry.append("b")
+        layout.append(entry)
+
+    def fn(x, *ws):
+        ps, k = [], 0
+        for entry in layout:
+            d = {}
+            for key in entry:
+                d[key] = ws[k]
+                k += 1
+            if "wt" in d:
+                d["w"] = d["wt"]  # placeholder; the patches path uses wt
+            ps.append(d)
+        return forward(spec, ps, x, conv_impl="patches")
+
+    return fn, arrays
+
+
+# ---------------------------------------------------------------- kernels
+
+
+def fcc_mvm_entry(x, w_even, m):
+    """Standalone FCC-MVM entry (kernel artifact)."""
+    return fcc_mvm(x, w_even, m)
+
+
+def pim_mac_entry(x, w):
+    """Standalone bit-serial PIM-MAC entry (kernel artifact)."""
+    return pim_mac(x, w)

@@ -1,0 +1,52 @@
+"""AOT export-path consistency: the parameterized model (weights as
+HLO parameters, the form the rust runtime executes) must agree with the
+constant-baked deployment forward, and the weights sidecar layout must
+be reconstructible."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import (
+    build_forward,
+    build_param_model,
+    freeze_deployed,
+    load_or_init,
+)
+
+
+class TestParamModel:
+    def test_param_model_matches_constant_model(self):
+        spec, params = load_or_init(None)  # deterministic random init
+        fwd_const = build_forward(spec, params)
+        fwd_param, arrays = build_param_model(spec, params)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(0, 1, (2, 32, 32, 3)), jnp.float32)
+        a = np.asarray(fwd_const(x))
+        b = np.asarray(fwd_param(x, *[jnp.asarray(w) for w in arrays]))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_weight_arrays_cover_all_layers(self):
+        spec, params = load_or_init(None)
+        _, arrays = build_param_model(spec, params)
+        weighted_layers = sum(1 for p in params if "w" in p)
+        assert len(arrays) == 2 * weighted_layers  # w + b per layer
+
+    def test_conv_weights_pre_transposed(self):
+        spec, params = load_or_init(None)
+        frozen = freeze_deployed(spec, params)
+        for layer, q in zip(spec, frozen):
+            if layer["kind"] in ("conv", "pwconv", "fc"):
+                assert q["wt"].shape == (q["w"].shape[1], q["w"].shape[0])
+                np.testing.assert_array_equal(q["wt"], q["w"].T)
+
+    def test_deployed_weights_on_fcc_grid(self):
+        from compile.fcc.core import is_bitwise_complementary
+        from compile.fcc.qat import fcc_export
+
+        spec, params = load_or_init(None)
+        frozen = freeze_deployed(spec, params)
+        for layer, q in zip(spec, frozen):
+            if layer["kind"] in ("conv", "pwconv") and layer["cout"] % 2 == 0:
+                wc, m, scale = fcc_export(jnp.asarray(q["w"]))
+                assert is_bitwise_complementary(wc)
+                break

@@ -1,0 +1,164 @@
+"""FCC core invariants: Alg. 1 / Alg. 2 postconditions and the
+decomposition identities (Eqs. 1-5, 7) — including hypothesis sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.fcc import core
+
+
+def rand_filters(n, l, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, (n, l)), jnp.float32)
+
+
+class TestSymmetrize:
+    def test_eq1_holds(self):
+        w = rand_filters(8, 18, seed=1)
+        ws, m = core.symmetrize(w)
+        assert core.is_symmetric(ws, m)
+
+    def test_mean_preserved(self):
+        # M is computed from the ORIGINAL pair; mirrored pairs share it.
+        w = rand_filters(4, 9, seed=2)
+        _, m = core.symmetrize(w)
+        assert m.shape == (2,)
+
+    def test_keeps_farther_twin(self):
+        # the twin farther from M must be kept verbatim
+        w = jnp.asarray([[-1.5, 0.0], [6.5, 2.0]], jnp.float32)
+        ws, m = core.symmetrize(w)
+        f0, f1 = np.asarray(ws[0]), np.asarray(ws[1])
+        orig = np.asarray(w)
+        for i in range(2):
+            kept = f0[i] == orig[0, i] or f1[i] == orig[1, i]
+            assert kept
+
+    def test_paper_example(self):
+        # Fig. 4: M0 = 1.0, w00 = -1.5, w01 = 6.5 -> w00^s = -4.5, w01^s = 6.5
+        w = jnp.asarray([[-1.5], [6.5]], jnp.float32)
+        ws, m = core.symmetrize(w)
+        assert float(m[0]) == pytest.approx(2.5)  # mean of just these two
+        # with L=1 the pair mean is (w00+w01)/2; the farther twin (6.5) is
+        # kept and -1.5 is replaced by 2M - 6.5
+        assert float(ws[1, 0]) == pytest.approx(6.5)
+        assert float(ws[0, 0]) == pytest.approx(2 * 2.5 - 6.5)
+
+    def test_odd_filters_rejected(self):
+        with pytest.raises(ValueError):
+            core.symmetrize(rand_filters(3, 4))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.sampled_from([2, 4, 6]),
+        l=st.integers(1, 30),
+        seed=st.integers(0, 1000),
+    )
+    def test_eq1_property(self, n, l, seed):
+        w = rand_filters(n, l, seed=seed, scale=3.0)
+        ws, m = core.symmetrize(w)
+        assert core.is_symmetric(ws, m, atol=1e-4)
+
+
+class TestSymmetrizeInt:
+    def test_eq1_int(self):
+        rng = np.random.default_rng(3)
+        w = jnp.asarray(rng.integers(-127, 128, (8, 16)), jnp.int32)
+        ws, m = core.symmetrize_int(w)
+        f0 = np.asarray(ws)[0::2]
+        f1 = np.asarray(ws)[1::2]
+        mm = np.asarray(m)[:, None]
+        assert np.all(f0 - mm == -(f1 - mm))
+
+    def test_range_safe(self):
+        # extreme values must stay in int8 range even after the later -1
+        w = jnp.asarray([[127, -128, 127], [-128, 127, -128]], jnp.int32)
+        ws, m = core.symmetrize_int(w)
+        wbc = core.complementize(ws)
+        assert int(jnp.min(wbc)) >= core.INT8_MIN
+        assert int(jnp.max(wbc)) <= core.INT8_MAX
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 500), l=st.integers(1, 25))
+    def test_int_property(self, seed, l):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.integers(-128, 128, (4, l)), jnp.int32)
+        ws, m = core.symmetrize_int(w)
+        wbc = core.complementize(ws)
+        assert core.is_biased_complementary(wbc, m)
+        assert int(jnp.min(wbc)) >= core.INT8_MIN
+        assert int(jnp.max(wbc)) <= core.INT8_MAX
+
+
+class TestComplementize:
+    def test_eq3(self):
+        rng = np.random.default_rng(4)
+        w = jnp.asarray(rng.integers(-100, 100, (6, 9)), jnp.int32)
+        ws, m = core.symmetrize_int(w)
+        wbc = core.complementize(ws)
+        assert core.is_biased_complementary(wbc, m)
+
+    def test_paper_example(self):
+        # Fig. 4: after quant+sym: w00^s=-4, w01^s=6, M=1
+        # complementize: smaller twin -1 -> w00^bc=-5, w01^bc=6
+        ws = jnp.asarray([[-4], [6]], jnp.int32)
+        wbc = core.complementize(ws)
+        assert int(wbc[0, 0]) == -5
+        assert int(wbc[1, 0]) == 6
+
+
+class TestDecompose:
+    def test_paper_example(self):
+        # Fig. 9: w00^bc=-5, w01^bc=6, M=1 -> w00^c=-6 (0b11111010),
+        # w01^c=5 (0b00000101) — exact bitwise complements
+        wbc = jnp.asarray([[-5], [6]], jnp.int32)
+        m = jnp.asarray([1], jnp.int32)
+        wc = core.decompose(wbc, m)
+        assert int(wc[0, 0]) == -6
+        assert int(wc[1, 0]) == 5
+        assert (int(wc[0, 0]) & 0xFF) == 0b11111010
+        assert (int(wc[1, 0]) & 0xFF) == 0b00000101
+        assert core.is_bitwise_complementary(wc)
+
+    def test_roundtrip(self):
+        rng = np.random.default_rng(5)
+        w = jnp.asarray(rng.integers(-128, 128, (8, 27)), jnp.int32)
+        ws, m = core.symmetrize_int(w)
+        wbc = core.complementize(ws)
+        wc = core.decompose(wbc, m)
+        assert core.is_bitwise_complementary(wc)
+        back = core.recompose(wc, m)
+        assert bool(jnp.all(back == wbc))
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 1000), n=st.sampled_from([2, 4, 8]),
+           l=st.integers(1, 40))
+    def test_bitwise_complement_property(self, seed, n, l):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(0, 1, (n, l)), jnp.float32)
+        wbc, m = core.fcc_quantize(w, float(jnp.abs(w).max()) / 127 + 1e-9)
+        wc = core.decompose(wbc, m)
+        # Eq. 2: exact two's-complement bitwise complement per twin
+        f0, f1 = np.asarray(wc)[0::2], np.asarray(wc)[1::2]
+        assert np.all(f0 == ~f1)
+
+
+class TestFccQuantize:
+    def test_int8_range(self):
+        rng = np.random.default_rng(6)
+        w = jnp.asarray(rng.normal(0, 2, (16, 9)), jnp.float32)
+        wbc, m = core.fcc_quantize(w, 2.0 / 127)
+        assert int(jnp.min(wbc)) >= core.INT8_MIN
+        assert int(jnp.max(wbc)) <= core.INT8_MAX
+
+    def test_only_half_needed(self):
+        # storing even comp filters + M reconstructs the odd ones exactly
+        rng = np.random.default_rng(7)
+        w = jnp.asarray(rng.normal(0, 1, (8, 12)), jnp.float32)
+        wbc, m = core.fcc_quantize(w, 1.0 / 64)
+        wc = core.decompose(wbc, m)
+        even = np.asarray(wc)[0::2]
+        odd_reconstructed = ~even
+        assert np.all(odd_reconstructed == np.asarray(wc)[1::2])

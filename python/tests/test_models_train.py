@@ -1,0 +1,94 @@
+"""Model zoo shape checks and a smoke training run (quick config)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.fcc.data import make_dataset
+from compile.fcc.models import (
+    MODELS,
+    conv_layer_indices,
+    fc_layer_indices,
+    forward,
+    init_params,
+    param_counts,
+)
+from compile.fcc.train import scope_layers, train_model
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    return make_dataset(num_classes=10, train_per_class=8, test_per_class=4,
+                        seed=11)
+
+
+class TestModels:
+    @pytest.mark.parametrize("name", sorted(MODELS))
+    def test_forward_shape(self, name):
+        spec = MODELS[name](10)
+        params = init_params(spec, seed=0)
+        x = jnp.zeros((2, 32, 32, 3), jnp.float32)
+        out = forward(spec, params, x)
+        assert out.shape == (2, 10)
+
+    @pytest.mark.parametrize("name", sorted(MODELS))
+    def test_conv_layers_pairable(self, name):
+        spec = MODELS[name](10)
+        for i in conv_layer_indices(spec):
+            assert spec[i]["cout"] % 2 == 0
+
+    def test_fc_ratio_ordering(self):
+        """Paper Table III: AlexNet/VGG19 are FC-heavy, the compact NNs and
+        ResNet18 are not — the ordering must hold for our scaled zoo."""
+        ratios = {}
+        for name in MODELS:
+            conv_n, fc_n, total = param_counts(MODELS[name](10))
+            ratios[name] = fc_n / total
+        assert ratios["alexnet"] > 0.5
+        assert ratios["vgg19"] > 0.3
+        assert ratios["mobilenet_v2"] < 0.1
+        assert ratios["resnet18"] < 0.1
+
+    def test_scope_selection(self):
+        spec = MODELS["mobilenet_v2"](10)
+        all_layers = scope_layers(spec, 0)
+        some = scope_layers(spec, 32)
+        none = scope_layers(spec, None)
+        assert none == set()
+        assert some.issubset(all_layers)
+        assert len(some) < len(all_layers)
+
+    def test_dataset_learnable_labels(self, tiny_data):
+        x_tr, y_tr, x_te, y_te = tiny_data
+        assert x_tr.shape[1:] == (32, 32, 3)
+        assert set(np.unique(y_tr)) == set(range(10))
+
+
+class TestTrainSmoke:
+    def test_quick_train_runs(self, tiny_data):
+        r = train_model(
+            "mobilenet_v2",
+            fcc_conv=True,
+            data=tiny_data,
+            steps_pre=4,
+            steps_qat=2,
+            batch=16,
+        )
+        assert 0.0 <= r["acc"] <= 100.0
+        assert r["fcc_param_ratio"] > 50.0  # conv dominates MobileNetV2
+
+    def test_fcc_weights_on_grid_after_training(self, tiny_data):
+        from compile.fcc.qat import fcc_export
+        from compile.fcc.core import is_bitwise_complementary
+
+        r = train_model(
+            "mobilenet_v2",
+            fcc_conv=True,
+            data=tiny_data,
+            steps_pre=4,
+            steps_qat=2,
+            batch=16,
+        )
+        idx = conv_layer_indices(r["spec"])[0]
+        wc, m, scale = fcc_export(r["params"][idx]["w"])
+        assert is_bitwise_complementary(wc)

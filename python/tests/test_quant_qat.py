@@ -1,0 +1,96 @@
+"""Quantization, 2:4 pruning and FCC-QAT/export round trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.fcc.qat import fcc_export, fcc_import, fcc_quant_ste, quant_ste
+from compile.fcc.quant import dequantize_int8, prune_2_4, quantize_int8, sparsity
+from compile.fcc.core import is_bitwise_complementary
+
+
+class TestQuant:
+    def test_roundtrip_error_bounded(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(0, 1, (64,)), jnp.float32)
+        codes, scale = quantize_int8(w)
+        back = dequantize_int8(codes, scale)
+        assert float(jnp.max(jnp.abs(back - w))) <= float(scale) / 2 + 1e-6
+
+    def test_codes_in_range(self):
+        w = jnp.asarray([-10.0, 10.0, 0.0], jnp.float32)
+        codes, _ = quantize_int8(w)
+        assert int(codes.min()) >= -128 and int(codes.max()) <= 127
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 500), scale=st.floats(0.1, 10.0))
+    def test_property(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(0, scale, (32,)), jnp.float32)
+        codes, s = quantize_int8(w)
+        assert int(jnp.max(jnp.abs(codes))) <= 127
+
+
+class TestPrune24:
+    def test_half_sparse(self):
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.normal(0, 1, (16, 16)), jnp.float32)
+        p = prune_2_4(w)
+        assert abs(sparsity(p) - 0.5) < 1e-6
+
+    def test_keeps_largest(self):
+        w = jnp.asarray([[1.0, -4.0, 0.5, 3.0]], jnp.float32)
+        p = np.asarray(prune_2_4(w))
+        assert p[0, 1] == -4.0 and p[0, 3] == 3.0
+        assert p[0, 0] == 0.0 and p[0, 2] == 0.0
+
+    def test_tail_kept(self):
+        w = jnp.arange(6, dtype=jnp.float32) + 1.0
+        p = np.asarray(prune_2_4(w))
+        assert p[4] == 5.0 and p[5] == 6.0  # tail untouched
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 300), n=st.integers(4, 64))
+    def test_sparsity_property(self, seed, n):
+        rng = np.random.default_rng(seed)
+        n4 = (n // 4) * 4
+        w = jnp.asarray(rng.normal(0, 1, (n4,)), jnp.float32)
+        assert abs(sparsity(prune_2_4(w)) - 0.5) < 1e-6
+
+
+class TestSTE:
+    def test_gradient_is_identity(self):
+        w = jnp.asarray(np.random.default_rng(2).normal(0, 1, (4, 6)),
+                        jnp.float32)
+        g = jax.grad(lambda w: fcc_quant_ste(w).sum())(w)
+        np.testing.assert_allclose(np.asarray(g), np.ones_like(g), atol=1e-6)
+        g2 = jax.grad(lambda w: quant_ste(w).sum())(w)
+        np.testing.assert_allclose(np.asarray(g2), np.ones_like(g2), atol=1e-6)
+
+    def test_forward_is_quantized(self):
+        rng = np.random.default_rng(3)
+        w = jnp.asarray(rng.normal(0, 1, (4, 9)), jnp.float32)
+        out = fcc_quant_ste(w)
+        # forward values live on the FCC INT8 grid: out/scale integral
+        from compile.fcc.quant import quant_scale
+
+        scale = quant_scale(w)
+        codes = np.asarray(out / scale)
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+
+
+class TestExport:
+    def test_export_bitwise_complementary(self):
+        rng = np.random.default_rng(4)
+        w = jnp.asarray(rng.normal(0, 1, (8, 27)), jnp.float32)
+        wc, m, scale = fcc_export(w)
+        assert is_bitwise_complementary(wc)
+
+    def test_import_matches_ste_forward(self):
+        rng = np.random.default_rng(5)
+        w = jnp.asarray(rng.normal(0, 1, (8, 18)), jnp.float32)
+        wc, m, scale = fcc_export(w)
+        back = fcc_import(wc, m, scale, w.shape)
+        fwd = fcc_quant_ste(w)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(fwd), atol=1e-5)

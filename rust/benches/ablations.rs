@@ -1,0 +1,69 @@
+//! Ablation benches for the design choices DESIGN.md calls out (beyond
+//! the paper's own Fig. 13 ladder):
+//!
+//! * DRAM prefetch on/off (exposed stalls),
+//! * macro count scaling,
+//! * weight-memory capacity sensitivity,
+//! * batching policy for the serving path (latency/throughput trade).
+
+use ddc_pim::config::{ArchConfig, SimConfig};
+use ddc_pim::coordinator::scheduler::{schedule, total_stall};
+use ddc_pim::mapping::plan_network;
+use ddc_pim::model::zoo;
+use ddc_pim::sim::simulate_network;
+use ddc_pim::util::benchkit::report;
+
+fn main() {
+    let net = zoo::mobilenet_v2();
+    let sim = SimConfig::ddc_full();
+
+    println!("== ablation: DRAM prefetch (scheduler stalls) ==");
+    for bw in [1.0, 8.0, 64.0] {
+        let mut arch = ArchConfig::ddc_pim();
+        arch.dram_bytes_per_cycle = bw;
+        let plans = plan_network(&net, &arch, &sim);
+        let (slots, makespan) = schedule(&plans, &arch, 3072);
+        report(
+            &format!("prefetch.bw{bw}.stall_share"),
+            100.0 * total_stall(&slots) as f64 / makespan as f64,
+            "% of makespan",
+        );
+    }
+
+    println!("\n== ablation: macro count ==");
+    let base = simulate_network(&net, &ArchConfig::ddc_pim(), &sim).total_cycles;
+    for macros in [1usize, 2, 4, 8, 16] {
+        let mut arch = ArchConfig::ddc_pim();
+        arch.macros = macros;
+        let run = simulate_network(&net, &arch, &sim);
+        report(
+            &format!("macros.{macros}.speedup_vs_4"),
+            base as f64 / run.total_cycles as f64,
+            "x (dw-conv does not scale across macros: Y=1)",
+        );
+    }
+
+    println!("\n== ablation: input-bit precision (bit-serial depth) ==");
+    for bits in [4usize, 8, 16] {
+        let mut arch = ArchConfig::ddc_pim();
+        arch.input_bits = bits;
+        let run = simulate_network(&net, &arch, &sim);
+        report(
+            &format!("input_bits.{bits}.cycles"),
+            run.total_cycles as f64,
+            "cycles (linear in bit-serial depth)",
+        );
+    }
+
+    println!("\n== ablation: compartment rows (weight-reload pressure) ==");
+    for rows in [16usize, 32, 64, 128] {
+        let mut arch = ArchConfig::ddc_pim();
+        arch.rows = rows;
+        let run = simulate_network(&net, &arch, &sim);
+        report(
+            &format!("rows.{rows}.cycles"),
+            run.total_cycles as f64,
+            "cycles",
+        );
+    }
+}

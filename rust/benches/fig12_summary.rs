@@ -1,0 +1,45 @@
+//! Bench: Fig. 12 — implementation summary (area, peak, efficiency,
+//! end-to-end MobileNetV2 latency) and macro area breakdown.
+
+use ddc_pim::arch::cost::CostModel;
+use ddc_pim::config::{ArchConfig, SimConfig};
+use ddc_pim::model::zoo;
+use ddc_pim::sim::simulate_network;
+use ddc_pim::util::benchkit::report;
+
+fn main() {
+    println!("== fig12: implementation summary ==");
+    let cfg = ArchConfig::ddc_pim();
+    let cost = CostModel::new(cfg.clone());
+    report("system.area_mm2", cost.system_area_mm2(), "mm2 (paper 0.918)");
+    report("system.peak_gops", cfg.peak_gops(), "GOPS (paper 42.67)");
+    report(
+        "macro.energy_eff",
+        cost.energy_efficiency_tops_w(),
+        "TOPS/W (paper 72.41)",
+    );
+    for (name, frac) in cost.macro_breakdown() {
+        report(
+            &format!("breakdown.{}", name.replace(' ', "_")),
+            100.0 * frac,
+            "% of macro area",
+        );
+    }
+    let run = simulate_network(&zoo::mobilenet_v2(), &cfg, &SimConfig::ddc_full());
+    report(
+        "mobilenet_v2.latency_ms",
+        run.latency_ms(),
+        "ms CIFAR-scale (paper 20.97 ms ImageNet-scale)",
+    );
+    report(
+        "mobilenet_v2.mvm_share",
+        100.0 * run.mvm_cycles() as f64 / run.total_cycles as f64,
+        "% (paper 18.02/20.97 = 85.9%)",
+    );
+    report("mobilenet_v2.achieved_gops", run.achieved_gops(), "GOPS");
+    report(
+        "mobilenet_v2.energy_eff",
+        run.achieved_tops_per_w(),
+        "TOPS/W (system incl. DRAM)",
+    );
+}

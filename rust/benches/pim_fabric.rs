@@ -1,0 +1,60 @@
+//! Bench: the bit-true fabric hot paths (functional macro executor) and
+//! the runtime artifact path.  Not a paper table — this is the §Perf
+//! instrumentation for the L3 hot loops.
+
+use ddc_pim::arch::lpu::Mode;
+use ddc_pim::arch::pim_macro::PimMacro;
+use ddc_pim::arch::reconfig::Grouping;
+use ddc_pim::fcc::{fcc_transform, FilterBank};
+use ddc_pim::mapping::exec::exec_std_fcc;
+use ddc_pim::util::benchkit::{bench, report};
+use ddc_pim::util::rng::Rng;
+
+fn main() {
+    println!("== pim fabric hot paths ==");
+    let mut rng = Rng::new(3);
+
+    // single row-step (the innermost simulator unit: 8 bit cycles x 32
+    // compartments x 16 columns)
+    let mut mac = PimMacro::paper();
+    let ws: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
+    for (cmp, &w) in ws.iter().enumerate() {
+        mac.load_weight(cmp, 0, 0, w);
+        mac.load_weight(cmp, 0, 1, !w);
+    }
+    let xs: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
+    let r = bench("mvm_row.double.combined", 10, 2000, || {
+        std::hint::black_box(mac.mvm_row(0, &xs, &xs, Mode::Double, Grouping::Combined));
+    });
+    // each row-step models 8 hardware cycles; how much faster than
+    // real-time 333 MHz are we?
+    let hw_ns = 8.0 * 3.0; // 8 cycles @ 3 ns
+    report("mvm_row.vs_realtime", r.mean_ns / hw_ns, "x slower than silicon (bit-true model)");
+
+    bench("mvm_row.regular.split", 10, 2000, || {
+        std::hint::black_box(mac.mvm_row(0, &xs, &xs, Mode::Regular, Grouping::Split));
+    });
+
+    // a full small conv layer through the functional path
+    let (h, w, c, k, n) = (6, 6, 8, 3, 8);
+    let input: Vec<i32> = (0..h * w * c).map(|_| rng.int8() as i32).collect();
+    let bank = FilterBank::new(
+        (0..n * k * k * c).map(|_| rng.int8() as i32).collect(),
+        n,
+        k * k * c,
+    );
+    let fcc = fcc_transform(&bank);
+    bench("exec_std_fcc.6x6x8.k3.n8", 1, 10, || {
+        std::hint::black_box(exec_std_fcc(&input, h, w, c, &fcc, k, 1));
+    });
+
+    // FCC transform itself (deployment path, MobileNetV2-layer-sized)
+    let big = FilterBank::new(
+        (0..320 * 960).map(|_| rng.int8() as i32).collect(),
+        320,
+        960,
+    );
+    bench("fcc_transform.320x960", 2, 50, || {
+        std::hint::black_box(fcc_transform(&big));
+    });
+}

@@ -1,0 +1,63 @@
+//! Bench: Table II — macro density/efficiency metrics, recomputed from
+//! the cost model, against the paper's published values.
+
+use ddc_pim::arch::cost::CostModel;
+use ddc_pim::config::ArchConfig;
+use ddc_pim::report::table2::prior_works;
+use ddc_pim::util::benchkit::report;
+
+fn main() {
+    println!("== table2: PIM macro comparison (ours vs paper constants) ==");
+    let cost = CostModel::new(ArchConfig::ddc_pim());
+    report("this_work.macro_area_mm2", cost.macro_area_mm2(), "mm2 (paper 0.0115)");
+    report(
+        "this_work.integration_density_28nm",
+        cost.integration_density(true),
+        "Kb/mm2 (paper 697)",
+    );
+    report(
+        "this_work.weight_density_28nm",
+        cost.weight_density(true),
+        "Kb/mm2 (paper 1391)",
+    );
+    report(
+        "this_work.area_efficiency_28nm",
+        cost.area_efficiency(true),
+        "GOPS/mm2 (paper 231.9)",
+    );
+    report(
+        "this_work.energy_efficiency",
+        cost.energy_efficiency_tops_w(),
+        "TOPS/W (paper 72.41)",
+    );
+
+    let base = CostModel::new(ArchConfig::baseline());
+    report(
+        "baseline.integration_density_28nm",
+        base.integration_density(true),
+        "Kb/mm2 (ISSCC'22 [14]: 800)",
+    );
+
+    for p in prior_works() {
+        report(
+            &format!("prior.{}.weight_density_28nm", p.name.replace(' ', "_")),
+            p.weight_density_28(),
+            "Kb/mm2",
+        );
+    }
+    let weakest_sram = prior_works()
+        .iter()
+        .filter(|p| p.device == "SRAM")
+        .map(|p| p.weight_density_28())
+        .fold(f64::MAX, f64::min);
+    report(
+        "improvement.weight_density_vs_weakest_sram",
+        cost.weight_density(true) / weakest_sram,
+        "x (paper: up to 8.41x)",
+    );
+    report(
+        "improvement.area_eff_vs_isscc22",
+        cost.area_efficiency(true) / 133.3,
+        "x (paper: 1.74x / up to 2.75x vs weakest)",
+    );
+}

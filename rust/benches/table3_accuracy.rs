@@ -1,0 +1,27 @@
+//! Bench: Table III — FCC accuracy table.  The accuracy cells come from
+//! the python training pass (artifacts/accuracy.json); this bench
+//! re-derives the structural column (FC parameter ratios) from the
+//! full-size shape books and prints the combined table.
+
+use ddc_pim::model::zoo;
+use ddc_pim::report::{table3, ReportCtx};
+use ddc_pim::util::benchkit::report;
+
+fn main() {
+    println!("== table3: FCC accuracy across models ==");
+    for (model, _) in table3::MODELS {
+        let net = zoo::by_name(model).unwrap();
+        report(
+            &format!("{model}.fc_param_ratio"),
+            net.fc_param_ratio(),
+            "% of parameters in FC layers",
+        );
+        report(
+            &format!("{model}.total_params"),
+            net.total_params() as f64 / 1e6,
+            "M weights (full-size book)",
+        );
+    }
+    let ctx = ReportCtx::new("artifacts");
+    println!("\n{}", table3::render(&ctx));
+}

@@ -1,0 +1,37 @@
+//! Bench: Table IV — FCC + 2:4 pruning compression accounting (and the
+//! accuracy table when the python pass has produced it), plus the rust
+//! 2:4 pruning hot path.
+
+use ddc_pim::quant::{prune_2_4, sparsity};
+use ddc_pim::report::{table4, ReportCtx};
+use ddc_pim::util::benchkit::{bench, report};
+use ddc_pim::util::rng::Rng;
+
+fn main() {
+    println!("== table4: FCC + 2:4 pruning ==");
+    report(
+        "mobilenet_v2.fcc_prune_compression",
+        100.0 * table4::fcc_prune_compression("mobilenet_v2"),
+        "% (paper ~75%)",
+    );
+    report(
+        "alexnet.fcc_prune_compression",
+        100.0 * table4::fcc_prune_compression("alexnet"),
+        "% (FC-heavy: less benefit)",
+    );
+
+    // hot path: pruning a full MobileNetV2-sized weight vector
+    let mut rng = Rng::new(5);
+    let weights: Vec<f32> = (0..2_300_000).map(|_| rng.normal() as f32).collect();
+    bench("prune_2_4.mobilenet_sized", 2, 20, || {
+        let mut w = weights.clone();
+        prune_2_4(&mut w);
+        std::hint::black_box(w);
+    });
+    let mut w = weights.clone();
+    prune_2_4(&mut w);
+    report("prune_2_4.sparsity", 100.0 * sparsity(&w), "% (target 50%)");
+
+    let ctx = ReportCtx::new("artifacts");
+    println!("\n{}", table4::render(&ctx));
+}

@@ -1,0 +1,29 @@
+//! Bench: Table V — MobileViT-XS structural metrics + accuracy table,
+//! and the simulated latency of the transformer-variant on DDC-PIM.
+
+use ddc_pim::config::{ArchConfig, SimConfig};
+use ddc_pim::model::zoo;
+use ddc_pim::report::{table5, ReportCtx};
+use ddc_pim::sim::simulate_network;
+use ddc_pim::util::benchkit::report;
+
+fn main() {
+    println!("== table5: MobileViT-XS ==");
+    let net = zoo::mobilevit_xs();
+    report(
+        "mobilevit_xs.conv_param_share",
+        100.0 * net.conv_params() as f64 / net.total_params() as f64,
+        "% of parameters in conv layers (FCC-eligible)",
+    );
+    let base = simulate_network(&net, &ArchConfig::baseline(), &SimConfig::baseline());
+    let ddc = simulate_network(&net, &ArchConfig::ddc_pim(), &SimConfig::ddc_full());
+    report(
+        "mobilevit_xs.speedup",
+        base.total_cycles as f64 / ddc.total_cycles as f64,
+        "x over PIM baseline (conv layers FCC'd, attention on FC path)",
+    );
+    report("mobilevit_xs.latency_ms", ddc.latency_ms(), "ms (DDC)");
+
+    let ctx = ReportCtx::new("artifacts");
+    println!("\n{}", table5::render(&ctx));
+}

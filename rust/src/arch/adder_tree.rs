@@ -1,0 +1,85 @@
+//! Adder trees of the reconfigurable unit.
+//!
+//! Each adder tree accumulates the AND results of 16 compartments for
+//! one bit position; an adder unit pairs two trees whose outputs are
+//! either kept separate (two output channels) or combined (one channel
+//! spanning 32 compartments) — paper §III-C2.
+
+/// Sum `n` one-bit inputs (population count) — one tree evaluation.
+pub fn tree_sum(bits: &[bool]) -> u32 {
+    bits.iter().map(|&b| b as u32).sum()
+}
+
+/// Logic depth of a balanced binary adder tree over `n` inputs (used by
+/// the cost model for the critical path).
+pub fn tree_depth(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        (n as f64).log2().ceil() as u32
+    }
+}
+
+/// One adder unit: two 16-input trees + the combining mux.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdderOut {
+    /// Split: two independent partial sums (two output channels).
+    Split(u32, u32),
+    /// Combined: one partial sum over all 32 inputs (one channel).
+    Combined(u32),
+}
+
+/// Evaluate an adder unit over the 32 compartment results for one bit
+/// position.  `combine` selects the mux path.
+pub fn adder_unit(lo16: &[bool], hi16: &[bool], combine: bool) -> AdderOut {
+    debug_assert_eq!(lo16.len(), 16);
+    debug_assert_eq!(hi16.len(), 16);
+    let a = tree_sum(lo16);
+    let b = tree_sum(hi16);
+    if combine {
+        AdderOut::Combined(a + b)
+    } else {
+        AdderOut::Split(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn rand_bits(rng: &mut Rng, n: usize) -> Vec<bool> {
+        (0..n).map(|_| rng.below(2) == 1).collect()
+    }
+
+    #[test]
+    fn tree_sum_is_popcount() {
+        assert_eq!(tree_sum(&[true, false, true, true]), 3);
+        assert_eq!(tree_sum(&[]), 0);
+    }
+
+    #[test]
+    fn depth_16() {
+        assert_eq!(tree_depth(16), 4);
+        assert_eq!(tree_depth(32), 5);
+        assert_eq!(tree_depth(1), 0);
+    }
+
+    #[test]
+    fn combined_equals_sum_of_split() {
+        forall(
+            41,
+            200,
+            |r| (rand_bits(r, 16), rand_bits(r, 16)),
+            |(lo, hi)| {
+                let split = adder_unit(lo, hi, false);
+                let comb = adder_unit(lo, hi, true);
+                match (split, comb) {
+                    (AdderOut::Split(a, b), AdderOut::Combined(c)) => a + b == c,
+                    _ => false,
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,145 @@
+//! Compartment: 16 DBMUs + dual-broadcast input structure + readout DFFs
+//! (Fig. 6(c)).
+//!
+//! A compartment stores `rows x 16` bits = `rows` wordlines of two 8-bit
+//! weights each.  Per compute cycle one row activates and the DBIS
+//! broadcasts one INP bit and one INN bit to all 16 LPUs; the readout
+//! block latches 16 (regular) or 32 (double) AND results.
+
+use super::dbmu::Dbmu;
+use super::lpu::Mode;
+
+/// Readout of one compartment compute cycle: per-column AND results for
+/// the Q path and (double mode) the Q̄ path, latched by the 16 readout
+/// DFFs — modelled as packed bitmasks (bit i = column i), which is both
+/// the faithful circuit view and allocation-free on the simulation hot
+/// path (§Perf).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CompartmentOut {
+    /// Left-path (Q AND INP) results, bit per column.
+    pub q_mask: u16,
+    /// Right-path (Q̄ AND INN) results (0 in regular mode).
+    pub qbar_mask: u16,
+}
+
+impl CompartmentOut {
+    pub fn q(&self, col: usize) -> bool {
+        (self.q_mask >> col) & 1 == 1
+    }
+
+    pub fn qbar(&self, col: usize) -> bool {
+        (self.qbar_mask >> col) & 1 == 1
+    }
+}
+
+/// One compartment.
+#[derive(Debug, Clone)]
+pub struct Compartment {
+    dbmus: Vec<Dbmu>,
+    rows: usize,
+}
+
+impl Compartment {
+    pub fn new(rows: usize, dbmus: usize) -> Self {
+        Compartment {
+            dbmus: (0..dbmus).map(|_| Dbmu::new(rows)).collect(),
+            rows,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.dbmus.len()
+    }
+
+    /// Normal-SRAM-mode write of one full row (16 bits).
+    pub fn write_row(&mut self, row: usize, bits: &[bool]) {
+        assert_eq!(bits.len(), self.dbmus.len());
+        for (c, &b) in bits.iter().enumerate() {
+            self.dbmus[c].write(row, b);
+        }
+    }
+
+    /// Write an 8-bit weight into weight slot `slot` (0 or 1) of `row`,
+    /// LSB-first bit order (matches `SramArray::write_weight8`).
+    pub fn write_weight8(&mut self, row: usize, slot: usize, w: i32) {
+        for b in 0..8 {
+            self.dbmus[slot * 8 + b].write(row, ((w as u32) >> b) & 1 == 1);
+        }
+    }
+
+    /// Read back weight slot `slot` of `row` from the Q side.
+    pub fn read_weight8(&self, row: usize, slot: usize) -> i32 {
+        let mut v = 0u32;
+        for b in 0..8 {
+            if self.dbmus[slot * 8 + b].read_q(row) {
+                v |= 1 << b;
+            }
+        }
+        (v as u8) as i8 as i32
+    }
+
+    /// One compute cycle: activate `row`, broadcast `(inp, inn)`.
+    pub fn compute(&self, row: usize, inp: bool, inn: bool, mode: Mode) -> CompartmentOut {
+        let mut out = CompartmentOut::default();
+        for (c, d) in self.dbmus.iter().enumerate() {
+            let o = d.compute(row, inp, inn, mode);
+            out.q_mask |= (o.left as u16) << c;
+            out.qbar_mask |= (o.right as u16) << c;
+        }
+        out
+    }
+
+    /// Weight slots per row (16 columns / 8 bits = 2).
+    pub fn weight_slots(&self) -> usize {
+        self.dbmus.len() / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_roundtrip() {
+        let mut c = Compartment::new(64, 16);
+        c.write_weight8(5, 0, -6);
+        c.write_weight8(5, 1, 77);
+        assert_eq!(c.read_weight8(5, 0), -6);
+        assert_eq!(c.read_weight8(5, 1), 77);
+    }
+
+    #[test]
+    fn compute_regular_only_q_path() {
+        let mut c = Compartment::new(4, 16);
+        c.write_weight8(0, 0, 0b0101); // bits 0 and 2 set
+        let o = c.compute(0, true, true, Mode::Regular);
+        assert!(o.q(0) && !o.q(1) && o.q(2));
+        assert_eq!(o.qbar_mask, 0);
+    }
+
+    #[test]
+    fn compute_double_complementary_paths() {
+        let mut c = Compartment::new(4, 16);
+        c.write_weight8(1, 0, 0b0101);
+        let o = c.compute(1, true, true, Mode::Double);
+        // qbar path is the complement of the stored bits (INN = 1)
+        for bit in 0..8 {
+            assert_ne!(o.q(bit), o.qbar(bit));
+        }
+    }
+
+    #[test]
+    fn inp_inn_gate_paths_independently() {
+        let mut c = Compartment::new(2, 16);
+        c.write_weight8(0, 0, -1); // all Q bits set
+        let o = c.compute(0, false, true, Mode::Double);
+        assert_eq!(o.q_mask, 0); // INP = 0 kills left
+        assert_eq!(o.qbar_mask & 0x00FF, 0); // Q̄ = 0 for -1
+        // second slot holds 0 -> Q̄ = all ones there, INN = 1 passes
+        assert_eq!(o.qbar_mask & 0xFF00, 0xFF00);
+    }
+}

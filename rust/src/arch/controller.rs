@@ -1,0 +1,114 @@
+//! Top controller: executes the assembled instruction stream (Fig. 5).
+//!
+//! This is the ISA-level twin of the plan-driven engine in
+//! [`crate::sim::engine`]: it fetches words from instruction memory,
+//! decodes them, charges cycles per opcode and tracks DRAM/merge state.
+//! The two paths must agree on total busy cycles — a cross-check that
+//! the ISA stream faithfully encodes the mapping plans (tested below and
+//! in the integration suite).
+
+use crate::isa::{Instr, Op};
+
+/// Controller execution outcome.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ControllerStats {
+    /// Busy cycles charged by LOADW/COMPUTE/MERGE.
+    pub busy_cycles: u64,
+    /// DRAM bytes requested by LOADW.
+    pub dram_bytes: u64,
+    /// Activation bytes moved by MOVE.
+    pub move_bytes: u64,
+    /// Layers completed (EndLayer markers seen).
+    pub layers: u32,
+    /// Instructions retired.
+    pub retired: u64,
+}
+
+/// Decode + execute a full instruction stream.  Returns an error string
+/// on an undecodable word or a stream that does not end with HALT.
+pub fn execute(stream: &[u64]) -> Result<ControllerStats, String> {
+    let mut st = ControllerStats::default();
+    let mut halted = false;
+    for (pc, &word) in stream.iter().enumerate() {
+        if halted {
+            return Err(format!("instruction after HALT at pc={pc}"));
+        }
+        let i = Instr::decode(word).ok_or_else(|| format!("bad word {word:#x} at pc={pc}"))?;
+        st.retired += 1;
+        match i.op {
+            Op::Cfg => {}
+            Op::LoadW => {
+                st.busy_cycles += i.a as u64;
+                st.dram_bytes += i.b as u64;
+            }
+            Op::Compute => {
+                st.busy_cycles += i.b as u64;
+            }
+            Op::Merge => {
+                st.busy_cycles += i.b as u64;
+            }
+            Op::Move => {
+                st.move_bytes += i.b as u64;
+            }
+            Op::EndLayer => {
+                st.layers += 1;
+            }
+            Op::Halt => {
+                halted = true;
+            }
+        }
+    }
+    if !halted {
+        return Err("stream missing HALT".into());
+    }
+    Ok(st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, SimConfig};
+    use crate::isa::assemble;
+    use crate::mapping::plan_network;
+    use crate::model::zoo;
+
+    #[test]
+    fn controller_agrees_with_plan_cycles() {
+        let arch = ArchConfig::ddc_pim();
+        let sim = SimConfig::ddc_full();
+        let plans = plan_network(&zoo::mobilenet_v2(), &arch, &sim);
+        let stream = assemble(&plans);
+        let st = execute(&stream).expect("stream executes");
+        let plan_busy: u64 = plans.iter().map(|p| p.pim_cycles()).sum();
+        assert_eq!(st.busy_cycles, plan_busy, "ISA/plan cycle mismatch");
+        assert_eq!(st.layers as usize, plans.len());
+        let plan_dram: u64 = plans.iter().map(|p| p.dram_weight_bytes).sum();
+        assert_eq!(st.dram_bytes, plan_dram);
+    }
+
+    #[test]
+    fn rejects_missing_halt() {
+        let arch = ArchConfig::ddc_pim();
+        let plans = plan_network(&zoo::resnet18(), &arch, &SimConfig::baseline());
+        let mut stream = assemble(&plans);
+        stream.pop(); // drop HALT
+        assert!(execute(&stream).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(execute(&[0u64]).is_err());
+    }
+
+    #[test]
+    fn rejects_code_after_halt() {
+        let halt = Instr {
+            op: Op::Halt,
+            mode: 0,
+            a: 0,
+            b: 0,
+        }
+        .encode();
+        assert!(execute(&[halt, halt]).is_err());
+    }
+}

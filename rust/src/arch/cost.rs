@@ -1,0 +1,247 @@
+//! Area / power / energy model (Fig. 12, Table II).
+//!
+//! The paper's silicon numbers come from post-layout extraction (macro)
+//! plus PCACTI (memories) plus DC/PTPX (digital).  Our substitution
+//! (DESIGN.md §2) is an analytical model calibrated to the paper's
+//! published constants: the macro breakdown fractions of Fig. 12(b), the
+//! 0.0115 mm² 14 nm macro area, the 42.67 GOPS / 72.41 TOPS/W headline,
+//! and the 0.918 mm² / 11.15 mW system.  Every derived metric in
+//! Table II (densities, efficiencies, 28 nm normalization) is recomputed
+//! from these constants, and ablation configs (baseline) scale the
+//! model structurally (blocks that are absent cost nothing).
+
+use crate::config::ArchConfig;
+
+/// Fig. 12(b) macro area breakdown (fractions of the DDC macro).
+pub const FRAC_PIM_BASE: f64 = 0.8652;
+pub const FRAC_DFFS: f64 = 0.0524;
+pub const FRAC_RECOVER: f64 = 0.0479;
+pub const FRAC_ADDER: f64 = 0.0273;
+pub const FRAC_OTHERS: f64 = 0.0072;
+
+/// DDC-PIM macro area at 14 nm (paper Table II).
+pub const MACRO_AREA_MM2_14NM: f64 = 0.0115;
+/// Macro-level energy efficiency at 8b x 8b (paper Fig. 12 / Table II).
+pub const MACRO_TOPS_PER_W: f64 = 72.41;
+/// System total area / power (paper Fig. 12(a)).
+pub const SYSTEM_AREA_MM2: f64 = 0.918;
+pub const SYSTEM_POWER_MW: f64 = 11.15;
+/// System-level energy efficiency (Fig. 12(a)).
+pub const SYSTEM_TOPS_PER_W: f64 = 3.83;
+
+/// Non-macro system area split (calibrated so the total matches the
+/// paper's 0.918 mm²; PCACTI-style SRAM density at 14 nm).
+pub const WEIGHT_MEM_AREA_MM2: f64 = 0.500; // 256 KB
+pub const PINGPONG_AREA_MM2: f64 = 0.250; // 128 KB
+pub const DIGITAL_AREA_MM2: f64 = 0.122; // controller + pre/post + merge
+
+/// On-chip SRAM access energy (pJ/byte, 14 nm estimate).
+pub const SRAM_PJ_PER_BYTE: f64 = 0.5;
+/// Off-chip DRAM access energy (pJ/byte).
+pub const DRAM_PJ_PER_BYTE: f64 = 20.0;
+
+/// Area/energy model bound to an [`ArchConfig`].
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub cfg: ArchConfig,
+}
+
+impl CostModel {
+    pub fn new(cfg: ArchConfig) -> Self {
+        CostModel { cfg }
+    }
+
+    /// Area of one PIM macro (mm²) at the config's node.  Blocks that
+    /// the ablation removes (DFFs for the Q̄ readout, the recover unit,
+    /// the extra adder units) cost nothing when absent.
+    pub fn macro_area_mm2(&self) -> f64 {
+        // structural scale vs the paper's 32x64x16 geometry
+        let cells = (self.cfg.compartments * self.cfg.rows * self.cfg.dbmus) as f64;
+        let scale = cells / (32.0 * 64.0 * 16.0);
+        let mut frac = FRAC_PIM_BASE + FRAC_OTHERS;
+        if self.cfg.dbis {
+            frac += FRAC_DFFS; // extra readout DFFs for the Q̄ results
+            frac += FRAC_ADDER; // extra adder units in the reconfig unit
+        }
+        if self.cfg.recover {
+            frac += FRAC_RECOVER; // ARU
+        }
+        MACRO_AREA_MM2_14NM * frac * scale * self.node_area_scale()
+    }
+
+    /// Area scale factor relative to 14 nm (quadratic in node).
+    fn node_area_scale(&self) -> f64 {
+        (self.cfg.node_nm / 14.0).powi(2)
+    }
+
+    /// Factor to normalize a density/efficiency metric to 28 nm
+    /// (Table II's normalization divides area-derived metrics by
+    /// `(28/node)²`).
+    pub fn norm28_factor(&self) -> f64 {
+        (28.0 / self.cfg.node_nm).powi(2)
+    }
+
+    /// Integration density: array size / macro area (Kb/mm²).
+    pub fn integration_density(&self, norm28: bool) -> f64 {
+        let d = self.cfg.macro_array_kb() / self.macro_area_mm2();
+        if norm28 {
+            d / self.norm28_factor()
+        } else {
+            d
+        }
+    }
+
+    /// Weight density: weight capacity / macro area (Kb/mm²) — doubled
+    /// capacity under DDC.
+    pub fn weight_density(&self, norm28: bool) -> f64 {
+        let d = self.cfg.macro_weight_capacity_kb() / self.macro_area_mm2();
+        if norm28 {
+            d / self.norm28_factor()
+        } else {
+            d
+        }
+    }
+
+    /// Area efficiency: peak GOPS / total macro area (GOPS/mm²).
+    pub fn area_efficiency(&self, norm28: bool) -> f64 {
+        let total_macro_area = self.macro_area_mm2() * self.cfg.macros as f64;
+        let e = self.cfg.peak_gops() / total_macro_area;
+        if norm28 {
+            e / self.norm28_factor()
+        } else {
+            e
+        }
+    }
+
+    /// Macro-level energy efficiency (TOPS/W).  The ablated baseline
+    /// loses the doubled parallelism but also the extra logic; the net
+    /// (per [14], the PIM-base equivalent) lands at its published 27.38
+    /// TOPS/W scaled to this node.
+    pub fn energy_efficiency_tops_w(&self) -> f64 {
+        if self.cfg.dbis && self.cfg.recover {
+            MACRO_TOPS_PER_W * 14.0 / self.cfg.node_nm
+        } else {
+            // ISSCC'22 [14] baseline: 27.38 TOPS/W at 28 nm
+            27.38 * 28.0 / self.cfg.node_nm
+        }
+    }
+
+    /// Energy per 8b x 8b MAC in pJ (2 ops/MAC).
+    pub fn mac_energy_pj(&self) -> f64 {
+        2.0 / self.energy_efficiency_tops_w()
+    }
+
+    /// Total system area (mm²): macros + memories + digital.
+    pub fn system_area_mm2(&self) -> f64 {
+        self.macro_area_mm2() * self.cfg.macros as f64
+            + (WEIGHT_MEM_AREA_MM2 * self.cfg.weight_mem_kb as f64 / 256.0
+                + PINGPONG_AREA_MM2 * self.cfg.pingpong_kb as f64 / 128.0
+                + DIGITAL_AREA_MM2)
+                * self.node_area_scale()
+    }
+
+    /// Fig. 12(b): (name, fraction) area breakdown of the DDC macro.
+    pub fn macro_breakdown(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("PIM-base", FRAC_PIM_BASE),
+            ("DFFs", FRAC_DFFS),
+            ("Recover Unit", FRAC_RECOVER),
+            ("Adder Unit", FRAC_ADDER),
+            ("Others", FRAC_OTHERS),
+        ]
+    }
+
+    /// Energy of a simulated run (mJ) from its activity counts.
+    pub fn run_energy_mj(
+        &self,
+        macs: u64,
+        sram_bytes: u64,
+        dram_bytes: u64,
+    ) -> f64 {
+        (macs as f64 * self.mac_energy_pj()
+            + sram_bytes as f64 * SRAM_PJ_PER_BYTE
+            + dram_bytes as f64 * DRAM_PJ_PER_BYTE)
+            * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ddc() -> CostModel {
+        CostModel::new(ArchConfig::ddc_pim())
+    }
+
+    fn base() -> CostModel {
+        CostModel::new(ArchConfig::baseline())
+    }
+
+    #[test]
+    fn breakdown_sums_to_one() {
+        let s: f64 = ddc().macro_breakdown().iter().map(|(_, f)| f).sum();
+        assert!((s - 1.0).abs() < 1e-9, "sum={s}");
+    }
+
+    #[test]
+    fn macro_area_matches_paper() {
+        assert!((ddc().macro_area_mm2() - 0.0115).abs() < 1e-6);
+    }
+
+    #[test]
+    fn densities_match_table2() {
+        let m = ddc();
+        // Table II: 2783 Kb/mm² integration, 5565 Kb/mm² weight @ 14 nm
+        assert!((m.integration_density(false) - 2783.0).abs() < 5.0,
+                "{}", m.integration_density(false));
+        assert!((m.weight_density(false) - 5565.0).abs() < 10.0);
+        // normalized to 28 nm: 697 and 1391
+        assert!((m.integration_density(true) - 696.0).abs() < 3.0);
+        assert!((m.weight_density(true) - 1391.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn area_efficiency_matches_table2() {
+        // 231.9 GOPS/mm² normalized to 28 nm
+        let ae = ddc().area_efficiency(true);
+        assert!((ae - 231.9).abs() < 2.0, "ae={ae}");
+    }
+
+    #[test]
+    fn baseline_matches_isscc22_density() {
+        // PIM-base alone should land near [14]'s 800 Kb/mm² @ 28 nm
+        let d = base().integration_density(true);
+        assert!((d - 800.0).abs() < 15.0, "d={d}");
+        // baseline has no doubled capacity
+        assert!((base().weight_density(true) - d).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weight_density_improvement_8_41x_vs_worst_prior() {
+        // paper abstract: up to 8.41x weight density vs prior SRAM PIM —
+        // the weakest prior in Table II is PIMCA at 165.4 Kb/mm²(28nm)
+        let ratio = ddc().weight_density(true) / 165.4;
+        assert!((ratio - 8.41).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn area_efficiency_improvement_vs_isscc22() {
+        // paper §IV-C: ~1.74x over [14]'s 133.3 GOPS/mm²
+        let ratio = ddc().area_efficiency(true) / 133.3;
+        assert!((ratio - 1.74).abs() < 0.03, "ratio={ratio}");
+    }
+
+    #[test]
+    fn system_area_matches_fig12() {
+        let a = ddc().system_area_mm2();
+        assert!((a - SYSTEM_AREA_MM2).abs() < 0.002, "a={a}");
+    }
+
+    #[test]
+    fn mac_energy_positive_and_small() {
+        let e = ddc().mac_energy_pj();
+        assert!(e > 0.0 && e < 1.0, "e={e}");
+        // baseline less efficient per op
+        assert!(base().mac_energy_pj() > e);
+    }
+}

@@ -1,0 +1,82 @@
+//! Double-Bitwise Multiply Unit: 64 6T cells sharing one LPU (Fig. 6(a)).
+//!
+//! A DBMU is one bit-column of a compartment: 64 stacked cells (SC#0–63)
+//! whose selected row drives the shared LPU.  One row activates per cycle
+//! (read-disturb rule), producing up to two AND results.
+
+use super::lpu::{evaluate, LpuOut, Mode};
+use super::sram::SramCell;
+
+/// One DBMU column: 64 cells + the shared LPU.
+#[derive(Debug, Clone)]
+pub struct Dbmu {
+    cells: Vec<SramCell>,
+}
+
+impl Dbmu {
+    pub fn new(rows: usize) -> Self {
+        Dbmu {
+            cells: vec![SramCell::default(); rows],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn write(&mut self, row: usize, bit: bool) {
+        self.cells[row].write(bit);
+    }
+
+    pub fn read_q(&self, row: usize) -> bool {
+        self.cells[row].q()
+    }
+
+    pub fn read_q_bar(&self, row: usize) -> bool {
+        self.cells[row].q_bar()
+    }
+
+    /// One compute cycle: activate `row`, broadcast `(inp, inn)`, return
+    /// the LPU output(s).
+    pub fn compute(&self, row: usize, inp: bool, inn: bool, mode: Mode) -> LpuOut {
+        evaluate(self.cells[row].q(), inp, inn, mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stores_64_rows() {
+        let mut d = Dbmu::new(64);
+        for r in 0..64 {
+            d.write(r, r % 2 == 0);
+        }
+        for r in 0..64 {
+            assert_eq!(d.read_q(r), r % 2 == 0);
+            assert_eq!(d.read_q_bar(r), r % 2 != 0);
+        }
+    }
+
+    #[test]
+    fn compute_uses_selected_row_only() {
+        let mut d = Dbmu::new(8);
+        d.write(3, true);
+        // row 3 holds 1: left = inp
+        assert!(d.compute(3, true, false, Mode::Regular).left);
+        // other rows hold 0
+        assert!(!d.compute(2, true, false, Mode::Regular).left);
+        // but their Q̄ path fires in double mode
+        assert!(d.compute(2, false, true, Mode::Double).right);
+    }
+
+    #[test]
+    fn double_mode_both_paths() {
+        let mut d = Dbmu::new(4);
+        d.write(0, true);
+        let o = d.compute(0, true, true, Mode::Double);
+        assert!(o.left);
+        assert!(!o.right); // Q̄ = 0
+    }
+}

@@ -1,0 +1,76 @@
+//! Off-chip DRAM model: fixed access latency + bandwidth, with the
+//! layer-ahead prefetch the paper describes ("our system proactively
+//! pre-fetches the weights for the subsequent layer, effectively masking
+//! the latency typically associated with off-chip DRAM access").
+
+/// DRAM transfer bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Dram {
+    pub bytes_per_cycle: f64,
+    pub latency_cycles: u64,
+    /// Total bytes moved (traffic statistics; FCC halves conv weights).
+    pub total_bytes: u64,
+    pub total_transfers: u64,
+}
+
+impl Dram {
+    pub fn new(bytes_per_cycle: f64, latency_cycles: u64) -> Self {
+        Dram {
+            bytes_per_cycle,
+            latency_cycles,
+            total_bytes: 0,
+            total_transfers: 0,
+        }
+    }
+
+    /// Cycles to move `bytes` (setup + streaming).
+    pub fn transfer_cycles(&self, bytes: usize) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        self.latency_cycles + (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+
+    /// Record a transfer and return its cycle cost.
+    pub fn transfer(&mut self, bytes: usize) -> u64 {
+        self.total_bytes += bytes as u64;
+        self.total_transfers += 1;
+        self.transfer_cycles(bytes)
+    }
+
+    /// Cycles of a transfer that remain *exposed* when `overlap_cycles`
+    /// of compute run concurrently (prefetch masking).
+    pub fn exposed_cycles(&self, transfer: u64, overlap_cycles: u64) -> u64 {
+        transfer.saturating_sub(overlap_cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost() {
+        let d = Dram::new(8.0, 100);
+        assert_eq!(d.transfer_cycles(0), 0);
+        assert_eq!(d.transfer_cycles(8), 101);
+        assert_eq!(d.transfer_cycles(80), 110);
+    }
+
+    #[test]
+    fn prefetch_masks_latency() {
+        let d = Dram::new(8.0, 100);
+        let t = d.transfer_cycles(800); // 200 cycles
+        assert_eq!(d.exposed_cycles(t, 150), 50);
+        assert_eq!(d.exposed_cycles(t, 500), 0); // fully hidden
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut d = Dram::new(8.0, 10);
+        d.transfer(100);
+        d.transfer(50);
+        assert_eq!(d.total_bytes, 150);
+        assert_eq!(d.total_transfers, 2);
+    }
+}

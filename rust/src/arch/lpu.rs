@@ -1,0 +1,94 @@
+//! Local Processing Unit — the dynamic-logic dual-AND paths of Fig. 6.
+//!
+//! Each LPU sits under a DBMU column and has two pull-down paths gated by
+//! the dynamic-logic enables EN0..EN3:
+//!
+//! * left path:  `Q  AND INP`  (enabled in regular + double mode)
+//! * right path: `Q̄ AND INN`  (enabled only in double mode)
+//!
+//! In regular computing mode only EN0/EN2 are grounded, so half the LPU
+//! is active; in double computing mode all four enables are grounded and
+//! the LPU produces two independent AND results per cycle — the circuit
+//! mechanism behind the doubled parallelism.
+
+/// PIM core operating mode (paper §III-C2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Plain SRAM read/write; LPU disabled.
+    NormalSram,
+    /// Regular computing: Q path only.
+    Regular,
+    /// Double computing: Q and Q̄ paths with dual-broadcast inputs.
+    Double,
+}
+
+/// Result of one LPU evaluation cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LpuOut {
+    /// `Q AND INP` (valid unless NormalSram).
+    pub left: bool,
+    /// `Q̄ AND INN` (valid only in Double mode; pre-charged high ->
+    /// reads false when the path is disabled).
+    pub right: bool,
+}
+
+/// Evaluate the LPU truth table (Fig. 6(b)) for one cell.
+pub fn evaluate(q: bool, inp: bool, inn: bool, mode: Mode) -> LpuOut {
+    match mode {
+        Mode::NormalSram => LpuOut::default(),
+        Mode::Regular => LpuOut {
+            left: q & inp,
+            right: false,
+        },
+        Mode::Double => LpuOut {
+            left: q & inp,
+            right: (!q) & inn,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_table_regular() {
+        // O = w & INP; right path dark
+        for q in [false, true] {
+            for inp in [false, true] {
+                let o = evaluate(q, inp, true, Mode::Regular);
+                assert_eq!(o.left, q & inp);
+                assert!(!o.right);
+            }
+        }
+    }
+
+    #[test]
+    fn truth_table_double() {
+        // Fig. 6(b): left = Q & INP, right = Q̄ & INN — all 8 rows
+        for q in [false, true] {
+            for inp in [false, true] {
+                for inn in [false, true] {
+                    let o = evaluate(q, inp, inn, Mode::Double);
+                    assert_eq!(o.left, q & inp, "q={q} inp={inp}");
+                    assert_eq!(o.right, !q & inn, "q={q} inn={inn}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn normal_mode_inert() {
+        let o = evaluate(true, true, true, Mode::NormalSram);
+        assert_eq!(o, LpuOut::default());
+    }
+
+    #[test]
+    fn double_mode_two_independent_ands() {
+        // the headline: one cell, two simultaneous independent products
+        let o = evaluate(true, true, true, Mode::Double);
+        assert!(o.left && !o.right);
+        let o = evaluate(false, true, true, Mode::Double);
+        assert!(!o.left && o.right);
+    }
+}

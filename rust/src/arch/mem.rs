@@ -1,0 +1,137 @@
+//! On-chip memories: weight memory (256 KB), ping-pong activation memory
+//! (128 KB), instruction memory (Fig. 5).
+//!
+//! These are capacity/occupancy models with byte-accurate bookkeeping;
+//! the cycle engine charges access cycles, the coordinator uses the
+//! occupancy to decide layer-by-layer weight staging and when the
+//! prefetcher must spill to DRAM.
+
+/// A simple capacity-tracked on-chip buffer.
+#[derive(Debug, Clone)]
+pub struct Buffer {
+    pub name: &'static str,
+    capacity_bytes: usize,
+    used_bytes: usize,
+}
+
+impl Buffer {
+    pub fn new(name: &'static str, capacity_kb: usize) -> Self {
+        Buffer {
+            name,
+            capacity_bytes: capacity_kb * 1024,
+            used_bytes: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    pub fn used(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity_bytes - self.used_bytes
+    }
+
+    /// Try to reserve `bytes`; returns false if it does not fit.
+    pub fn alloc(&mut self, bytes: usize) -> bool {
+        if bytes <= self.free() {
+            self.used_bytes += bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn release(&mut self, bytes: usize) {
+        assert!(bytes <= self.used_bytes, "{}: over-release", self.name);
+        self.used_bytes -= bytes;
+    }
+
+    pub fn reset(&mut self) {
+        self.used_bytes = 0;
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used_bytes as f64 / self.capacity_bytes as f64
+    }
+}
+
+/// Ping-pong activation memory: two half-capacity banks that swap roles
+/// between layers (read current layer's inputs from one, write outputs
+/// to the other — hides the writeback behind the next layer's compute).
+#[derive(Debug, Clone)]
+pub struct PingPong {
+    banks: [Buffer; 2],
+    active: usize,
+}
+
+impl PingPong {
+    pub fn new(total_kb: usize) -> Self {
+        PingPong {
+            banks: [
+                Buffer::new("pingpong.a", total_kb / 2),
+                Buffer::new("pingpong.b", total_kb / 2),
+            ],
+            active: 0,
+        }
+    }
+
+    /// Bank being read (current layer inputs).
+    pub fn read_bank(&self) -> &Buffer {
+        &self.banks[self.active]
+    }
+
+    /// Bank being written (current layer outputs).
+    pub fn write_bank(&mut self) -> &mut Buffer {
+        &mut self.banks[1 - self.active]
+    }
+
+    /// Swap roles at a layer boundary; the new write bank is cleared.
+    pub fn swap(&mut self) {
+        self.active = 1 - self.active;
+        self.banks[1 - self.active].reset();
+    }
+
+    pub fn bank_capacity(&self) -> usize {
+        self.banks[0].capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_alloc_release() {
+        let mut b = Buffer::new("w", 1); // 1 KB
+        assert!(b.alloc(512));
+        assert!(b.alloc(512));
+        assert!(!b.alloc(1)); // full
+        b.release(256);
+        assert!(b.alloc(256));
+        assert_eq!(b.used(), 1024);
+        assert!((b.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "over-release")]
+    fn over_release_panics() {
+        let mut b = Buffer::new("w", 1);
+        b.release(1);
+    }
+
+    #[test]
+    fn pingpong_swap_clears_new_write_bank() {
+        let mut pp = PingPong::new(128);
+        assert_eq!(pp.bank_capacity(), 64 * 1024);
+        assert!(pp.write_bank().alloc(1000));
+        pp.swap();
+        // previous write bank is now the read bank and keeps its data
+        assert_eq!(pp.read_bank().used(), 1000);
+        // the new write bank (old read bank) was cleared
+        assert_eq!(pp.write_bank().used(), 0);
+    }
+}

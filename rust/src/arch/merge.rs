@@ -1,0 +1,125 @@
+//! Merge unit: shift-&-add + Accumulate-and-Recover Unit (Fig. 8).
+//!
+//! The shift-&-add unit recombines adder-tree outputs across weight-bit
+//! positions and bit-serial input cycles (two's complement: the MSB of
+//! each operand carries negative weight).  The ARU implements Eq. 7:
+//!
+//! ```text
+//! O = Σ(I * f^c) + (ΣI) · M
+//! ```
+//!
+//! recovering the convolution result of *both* twins of a filter pair
+//! from the stored psum, the complementary psum and the input sum.  FC
+//! layers bypass the recover stage (paper §III-C3).
+
+/// Two's-complement significance of bit `k` in a `bits`-wide operand.
+pub fn bit_weight(k: usize, bits: usize) -> i64 {
+    if k == bits - 1 {
+        -(1i64 << k)
+    } else {
+        1i64 << k
+    }
+}
+
+/// Shift-&-add accumulation: fold one adder-tree output (`tree_sum`, the
+/// count of set AND results) for input-bit `ki` and weight-bit `kw` into
+/// a partial sum.
+pub fn shift_add(psum: &mut i64, tree_sum: u32, ki: usize, kw: usize, bits: usize) {
+    *psum += tree_sum as i64 * bit_weight(ki, bits) * bit_weight(kw, bits);
+}
+
+/// ARU recovery for one FCC filter pair (double computing mode).
+///
+/// * `psum_q`    — Σ INP·w       (stored even comp filter)
+/// * `psum_qbar` — Σ INN·(!w)    (free odd comp filter)
+/// * `sum_p`/`sum_n` — ΣI on the INP / INN streams (equal for std/pw
+///   where both streams carry the same vector; distinct for dw)
+/// * `m` — the pair mean
+///
+/// Returns `(out_even, out_odd)`.
+pub fn aru_recover(psum_q: i64, psum_qbar: i64, sum_p: i64, sum_n: i64, m: i64) -> (i64, i64) {
+    (psum_q + sum_p * m, psum_qbar + sum_n * m)
+}
+
+/// FC-layer path: recover unit disabled, psum passes through.
+pub fn aru_bypass(psum_q: i64) -> i64 {
+    psum_q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn bit_weights_8b() {
+        assert_eq!(bit_weight(0, 8), 1);
+        assert_eq!(bit_weight(6, 8), 64);
+        assert_eq!(bit_weight(7, 8), -128);
+    }
+
+    #[test]
+    fn shift_add_reconstructs_product() {
+        // one "compartment": x * w must emerge from the 64 bit-plane terms
+        forall(
+            51,
+            300,
+            |r| (r.int8() as i64, r.int8() as i64),
+            |&(x, w)| {
+                let mut psum = 0i64;
+                for ki in 0..8 {
+                    let xb = ((x as u8) >> ki) & 1;
+                    for kw in 0..8 {
+                        let wb = ((w as u8) >> kw) & 1;
+                        shift_add(&mut psum, (xb & wb) as u32, ki, kw, 8);
+                    }
+                }
+                psum == x * w
+            },
+        );
+    }
+
+    #[test]
+    fn aru_eq7() {
+        // direct check of Eq. 7 against integer conv on a tiny vector:
+        // I = [2, -1], f0^c = [3, -6], M = 1
+        // psum_q = 2*3 + (-1)(-6) = 12; f1^c = !f0^c = [-4, 5]
+        // psum_qbar = 2*(-4) + (-1)(5) = -13; ΣI = 1
+        let (even, odd) = aru_recover(12, -13, 1, 1, 1);
+        // f0^bc = f0^c + M = [4, -5] -> O_even = 2*4 + (-1)(-5) = 13
+        assert_eq!(even, 13);
+        // f1^bc = f1^c + M = [-3, 6] -> O_odd = 2*(-3) + (-1)(6) = -12
+        assert_eq!(odd, -12);
+    }
+
+    #[test]
+    fn aru_identity_property() {
+        // for random x, w, M: recover(psum(w^c)) == psum(w^c + M)
+        forall(
+            52,
+            200,
+            |r| {
+                let l = 1 + r.below(12) as usize;
+                let xs: Vec<i64> = (0..l).map(|_| r.int8() as i64).collect();
+                let ws: Vec<i64> = (0..l).map(|_| r.range_i64(-100, 100) as i64).collect();
+                let m = r.range_i64(-20, 21) as i64;
+                (xs, ws, m)
+            },
+            |(xs, ws, m)| {
+                let psum_q: i64 = xs.iter().zip(ws).map(|(x, w)| x * w).sum();
+                let psum_qbar: i64 = xs.iter().zip(ws).map(|(x, w)| x * (-w - 1)).sum();
+                let si: i64 = xs.iter().sum();
+                let (even, odd) = aru_recover(psum_q, psum_qbar, si, si, *m);
+                let direct_even: i64 = xs.iter().zip(ws).map(|(x, w)| x * (w + m)).sum();
+                let direct_odd: i64 =
+                    xs.iter().zip(ws).map(|(x, w)| x * (-w - 1 + m)).sum();
+                even == direct_even && odd == direct_odd
+            },
+        );
+    }
+
+    #[test]
+    fn fc_bypass() {
+        assert_eq!(aru_bypass(42), 42);
+    }
+}

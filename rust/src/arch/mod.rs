@@ -1,0 +1,27 @@
+//! Cycle-accurate / functional model of the DDC-PIM hardware (Fig. 5–8).
+//!
+//! Two views of the same fabric:
+//!
+//! * **Functional** ([`sram`], [`lpu`], [`dbmu`], [`compartment`],
+//!   [`adder_tree`], [`reconfig`], [`pim_core`], [`pim_macro`],
+//!   [`merge`]) — bit-true models of each circuit block, composed into a
+//!   macro executor whose outputs are verified against the direct-conv
+//!   oracle.  This is how we prove the Q/Q̄-doubling produces correct
+//!   numerics (the paper's Fig. 6 truth table and Eq. 7).
+//! * **Timing/energy** ([`mem`], [`dram`], [`prepost`], [`cost`]) —
+//!   resource models consumed by the cycle engine in [`crate::sim`].
+
+pub mod adder_tree;
+pub mod compartment;
+pub mod controller;
+pub mod cost;
+pub mod dbmu;
+pub mod dram;
+pub mod lpu;
+pub mod mem;
+pub mod merge;
+pub mod pim_core;
+pub mod pim_macro;
+pub mod prepost;
+pub mod reconfig;
+pub mod sram;

@@ -1,0 +1,115 @@
+//! PIM core: 32 compartments + mode control (Fig. 6(c)).
+//!
+//! The core exposes exactly the operations the top controller issues:
+//! normal-SRAM row writes (weight load), and one-row-per-cycle compute
+//! with per-compartment vector inputs on the INP/INN broadcast pairs.
+//! Spatial accumulation across compartments is the reconfigurable unit's
+//! job ([`super::reconfig`]).
+
+use super::compartment::{Compartment, CompartmentOut};
+use super::lpu::Mode;
+
+/// One PIM core.
+#[derive(Debug, Clone)]
+pub struct PimCore {
+    compartments: Vec<Compartment>,
+    rows: usize,
+    dbmus: usize,
+}
+
+impl PimCore {
+    pub fn new(compartments: usize, rows: usize, dbmus: usize) -> Self {
+        PimCore {
+            compartments: (0..compartments)
+                .map(|_| Compartment::new(rows, dbmus))
+                .collect(),
+            rows,
+            dbmus,
+        }
+    }
+
+    /// Paper geometry: 32 compartments x 64 rows x 16 columns.
+    pub fn paper() -> Self {
+        Self::new(32, 64, 16)
+    }
+
+    pub fn num_compartments(&self) -> usize {
+        self.compartments.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Weight slots per row per compartment (2 for 16 columns).
+    pub fn slots(&self) -> usize {
+        self.dbmus / 8
+    }
+
+    /// Normal-SRAM-mode weight write.
+    pub fn write_weight(&mut self, cmp: usize, row: usize, slot: usize, w: i32) {
+        self.compartments[cmp].write_weight8(row, slot, w);
+    }
+
+    /// Read back (Q side) — test/debug path.
+    pub fn read_weight(&self, cmp: usize, row: usize, slot: usize) -> i32 {
+        self.compartments[cmp].read_weight8(row, slot)
+    }
+
+    /// One compute cycle: activate `row` in every compartment, drive the
+    /// per-compartment INP/INN bits, collect all readouts.
+    ///
+    /// `inp_bits`/`inn_bits` are indexed by compartment (the vector-wise
+    /// input of §III-D1); within a compartment the bit is broadcast to
+    /// all 16 LPUs by the DBIS.
+    pub fn compute_cycle(
+        &self,
+        row: usize,
+        inp_bits: &[bool],
+        inn_bits: &[bool],
+        mode: Mode,
+    ) -> Vec<CompartmentOut> {
+        assert_eq!(inp_bits.len(), self.compartments.len());
+        assert_eq!(inn_bits.len(), self.compartments.len());
+        self.compartments
+            .iter()
+            .enumerate()
+            .map(|(i, c)| c.compute(row, inp_bits[i], inn_bits[i], mode))
+            .collect()
+    }
+
+    /// Array size in bits.
+    pub fn size_bits(&self) -> usize {
+        self.compartments.len() * self.rows * self.dbmus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_core_is_32kb() {
+        let core = PimCore::paper();
+        assert_eq!(core.size_bits(), 32 * 1024);
+        assert_eq!(core.slots(), 2);
+    }
+
+    #[test]
+    fn weight_write_read() {
+        let mut core = PimCore::new(4, 8, 16);
+        core.write_weight(2, 3, 1, -77);
+        assert_eq!(core.read_weight(2, 3, 1), -77);
+        assert_eq!(core.read_weight(2, 3, 0), 0);
+    }
+
+    #[test]
+    fn compute_cycle_per_compartment_inputs() {
+        let mut core = PimCore::new(2, 2, 16);
+        core.write_weight(0, 0, 0, 1); // bit 0 set in cmp 0
+        core.write_weight(1, 0, 0, 1); // bit 0 set in cmp 1
+        let outs = core.compute_cycle(0, &[true, false], &[false, false], Mode::Regular);
+        assert!(outs[0].q(0)); // cmp 0 sees INP=1
+        assert!(!outs[1].q(0)); // cmp 1 sees INP=0
+    }
+}

@@ -1,0 +1,100 @@
+//! Pre-process and post-process units (Fig. 5).
+//!
+//! Pre-process: converts activations to bit-serial form, computes the
+//! per-window ΣI the ARU needs, and drives the INP/INN broadcasts.
+//! Post-process: requantization, ReLU and pooling on the recovered
+//! outputs before writeback to the ping-pong memory.
+
+/// Bit-serial conversion: the `ki`-th bit plane of an INT8 vector.
+pub fn bit_plane(xs: &[i32], ki: usize) -> Vec<bool> {
+    xs.iter().map(|&x| ((x as u8) >> ki) & 1 == 1).collect()
+}
+
+/// ΣI over a window (computed once, reused for every filter pair — the
+/// pre-process unit keeps a running sum alongside the bit-serial stream).
+pub fn input_sum(xs: &[i32]) -> i64 {
+    xs.iter().map(|&x| x as i64).sum()
+}
+
+/// Requantize an i64 accumulator back to INT8 with a float scale
+/// (multiply-truncate, symmetric).
+pub fn requantize(acc: i64, scale: f64) -> i32 {
+    ((acc as f64 * scale).round() as i64).clamp(-128, 127) as i32
+}
+
+/// ReLU on the integer domain.
+pub fn relu(x: i32) -> i32 {
+    x.max(0)
+}
+
+/// 2x2/2 average pooling over a `[h, w]` i32 feature map (row-major).
+pub fn avg_pool_2x2(map: &[i32], h: usize, w: usize) -> Vec<i32> {
+    let oh = h / 2;
+    let ow = w / 2;
+    let mut out = Vec::with_capacity(oh * ow);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let s: i32 = (0..2)
+                .flat_map(|dy| (0..2).map(move |dx| (dy, dx)))
+                .map(|(dy, dx)| map[(2 * oy + dy) * w + (2 * ox + dx)])
+                .sum();
+            out.push(s.div_euclid(4));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn bit_plane_roundtrip() {
+        forall(
+            71,
+            200,
+            |r| r.int8_vec(16).iter().map(|&v| v as i32).collect::<Vec<_>>(),
+            |xs| {
+                // reassembling all 8 planes with two's-complement weights
+                // reconstructs the values
+                xs.iter().enumerate().all(|(i, &x)| {
+                    let mut v: i64 = 0;
+                    for ki in 0..8 {
+                        let b = bit_plane(xs, ki)[i] as i64;
+                        v += b * if ki == 7 { -128 } else { 1 << ki };
+                    }
+                    v == x as i64
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn requantize_clamps() {
+        assert_eq!(requantize(1_000_000, 1.0), 127);
+        assert_eq!(requantize(-1_000_000, 1.0), -128);
+        assert_eq!(requantize(100, 0.5), 50);
+    }
+
+    #[test]
+    fn relu_works() {
+        assert_eq!(relu(-5), 0);
+        assert_eq!(relu(5), 5);
+    }
+
+    #[test]
+    fn pool_averages() {
+        // 2x2 map of [4, 4, 8, 8] -> mean 6
+        let out = avg_pool_2x2(&[4, 4, 8, 8], 2, 2);
+        assert_eq!(out, vec![6]);
+        // 4x2 -> two windows
+        let out = avg_pool_2x2(&[1, 1, 1, 1, 2, 2, 2, 2], 4, 2);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn input_sum_matches() {
+        assert_eq!(input_sum(&[1, -2, 3]), 2);
+    }
+}

@@ -1,0 +1,119 @@
+//! Reconfigurable unit: 4 adder units x 2 adder trees + output mux
+//! (paper §III-C2).
+//!
+//! For std/pw-conv the unit *combines* the two trees of an adder unit so
+//! one partial sum spans all 32 compartments; for dw-conv it *splits*
+//! them so each 16-compartment half produces an independent channel, and
+//! alternates adder units across the two computation stages.
+
+use super::compartment::CompartmentOut;
+
+/// Accumulation grouping selected by the per-layer configuration signal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Grouping {
+    /// One group of 32 compartments (std/pw-conv).
+    Combined,
+    /// Two groups of 16 compartments (dw-conv two-stage operation).
+    Split,
+}
+
+/// Tree sums for one compute cycle, per (group, weight slot, weight bit):
+/// `sums[group][slot][kw]` = number of set AND results.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TreeSums {
+    pub q: Vec<Vec<Vec<u32>>>,
+    pub qbar: Vec<Vec<Vec<u32>>>,
+}
+
+/// Reduce the per-compartment readouts of one cycle.
+///
+/// `slots` = weights per row (2), `wbits` = weight precision (8).
+pub fn reduce(outs: &[CompartmentOut], grouping: Grouping, slots: usize, wbits: usize) -> TreeSums {
+    let groups: Vec<&[CompartmentOut]> = match grouping {
+        Grouping::Combined => vec![outs],
+        Grouping::Split => {
+            let half = outs.len() / 2;
+            vec![&outs[..half], &outs[half..]]
+        }
+    };
+    let mut q = Vec::with_capacity(groups.len());
+    let mut qbar = Vec::with_capacity(groups.len());
+    for g in groups {
+        let mut gq = Vec::with_capacity(slots);
+        let mut gqbar = Vec::with_capacity(slots);
+        for s in 0..slots {
+            let mut sq = Vec::with_capacity(wbits);
+            let mut sqbar = Vec::with_capacity(wbits);
+            for kw in 0..wbits {
+                let col = s * wbits + kw;
+                // adder tree = popcount of the column across the group
+                let mut cq = 0u32;
+                let mut cb = 0u32;
+                for o in g.iter() {
+                    cq += ((o.q_mask >> col) & 1) as u32;
+                    cb += ((o.qbar_mask >> col) & 1) as u32;
+                }
+                sq.push(cq);
+                sqbar.push(cb);
+            }
+            gq.push(sq);
+            gqbar.push(sqbar);
+        }
+        q.push(gq);
+        qbar.push(gqbar);
+    }
+    TreeSums { q, qbar }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outs_with_bit0(n: usize, set: &[usize]) -> Vec<CompartmentOut> {
+        (0..n)
+            .map(|i| CompartmentOut {
+                q_mask: set.contains(&i) as u16,
+                qbar_mask: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn combined_counts_all_32() {
+        let outs = outs_with_bit0(32, &[0, 5, 20, 31]);
+        let sums = reduce(&outs, Grouping::Combined, 2, 8);
+        assert_eq!(sums.q.len(), 1);
+        assert_eq!(sums.q[0][0][0], 4);
+        assert_eq!(sums.q[0][1][0], 0); // slot 1 untouched
+    }
+
+    #[test]
+    fn split_counts_halves() {
+        let outs = outs_with_bit0(32, &[0, 5, 20, 31]);
+        let sums = reduce(&outs, Grouping::Split, 2, 8);
+        assert_eq!(sums.q.len(), 2);
+        assert_eq!(sums.q[0][0][0], 2); // cmps 0, 5
+        assert_eq!(sums.q[1][0][0], 2); // cmps 20, 31
+    }
+
+    #[test]
+    fn split_sum_equals_combined() {
+        let outs = outs_with_bit0(32, &[1, 2, 3, 17, 30]);
+        let c = reduce(&outs, Grouping::Combined, 2, 8);
+        let s = reduce(&outs, Grouping::Split, 2, 8);
+        assert_eq!(c.q[0][0][0], s.q[0][0][0] + s.q[1][0][0]);
+    }
+
+    #[test]
+    fn qbar_path_reduced_independently() {
+        let outs: Vec<CompartmentOut> = (0..32)
+            .map(|i| CompartmentOut {
+                q_mask: 0,
+                qbar_mask: ((i < 10) as u16) << 8, // slot 1, bit 0
+            })
+            .collect();
+        let sums = reduce(&outs, Grouping::Combined, 2, 8);
+        assert_eq!(sums.qbar[0][1][0], 10);
+        assert_eq!(sums.q[0][1][0], 0);
+    }
+}

@@ -1,0 +1,172 @@
+//! 6T SRAM bitcell and cell array with explicit complementary states.
+//!
+//! The entire DDC-PIM idea rests on the observation that a 6T cell's two
+//! cross-coupled inverters hold a *pair* of complementary states (Q, Q̄):
+//! conventional designs use only Q per computation, DDC-PIM treats Q̄ as
+//! a second, free, bitwise-complementary weight bit.  The model keeps
+//! both nodes explicit so the invariant `q_bar == !q` is structural.
+
+/// One 6T bitcell.  Physically stores a single bit as a complementary
+/// node pair; `q_bar` is derived, never stored separately — exactly like
+/// the silicon.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SramCell {
+    q: bool,
+}
+
+impl SramCell {
+    pub fn write(&mut self, bit: bool) {
+        self.q = bit;
+    }
+
+    /// Read the Q node (BLP side).
+    pub fn q(&self) -> bool {
+        self.q
+    }
+
+    /// Read the Q̄ node (BLN side) — the "free" complementary bit.
+    pub fn q_bar(&self) -> bool {
+        !self.q
+    }
+}
+
+/// A rows x cols array of 6T cells (one compartment's storage is a
+/// 64 x 16 instance).  Row-major.
+#[derive(Debug, Clone)]
+pub struct SramArray {
+    cells: Vec<SramCell>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl SramArray {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        SramArray {
+            cells: vec![SramCell::default(); rows * cols],
+            rows,
+            cols,
+        }
+    }
+
+    fn idx(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.rows && col < self.cols);
+        row * self.cols + col
+    }
+
+    /// Normal-SRAM-mode row write (one wordline activation).
+    pub fn write_row(&mut self, row: usize, bits: &[bool]) {
+        assert_eq!(bits.len(), self.cols, "row width mismatch");
+        for (c, &b) in bits.iter().enumerate() {
+            let i = self.idx(row, c);
+            self.cells[i].write(b);
+        }
+    }
+
+    /// Normal-SRAM-mode row read via the BL pairs (Q side).
+    pub fn read_row(&self, row: usize) -> Vec<bool> {
+        (0..self.cols).map(|c| self.cells[self.idx(row, c)].q()).collect()
+    }
+
+    /// Complementary row read (Q̄ side).
+    pub fn read_row_bar(&self, row: usize) -> Vec<bool> {
+        (0..self.cols)
+            .map(|c| self.cells[self.idx(row, c)].q_bar())
+            .collect()
+    }
+
+    pub fn cell(&self, row: usize, col: usize) -> SramCell {
+        self.cells[self.idx(row, col)]
+    }
+
+    /// Write an 8-bit two's-complement weight into columns
+    /// `[col8*8, col8*8+8)` of `row`, LSB first.
+    pub fn write_weight8(&mut self, row: usize, col8: usize, w: i32) {
+        for b in 0..8 {
+            let i = self.idx(row, col8 * 8 + b);
+            self.cells[i].write(((w as u32) >> b) & 1 == 1);
+        }
+    }
+
+    /// Read back the 8-bit weight at (row, col8) from the Q side.
+    pub fn read_weight8(&self, row: usize, col8: usize) -> i32 {
+        let mut v: u32 = 0;
+        for b in 0..8 {
+            if self.cell(row, col8 * 8 + b).q() {
+                v |= 1 << b;
+            }
+        }
+        (v as u8) as i8 as i32
+    }
+
+    /// Read the complementary weight (Q̄ side) — by construction this is
+    /// `!w` in 8-bit two's complement.
+    pub fn read_weight8_bar(&self, row: usize, col8: usize) -> i32 {
+        let mut v: u32 = 0;
+        for b in 0..8 {
+            if self.cell(row, col8 * 8 + b).q_bar() {
+                v |= 1 << b;
+            }
+        }
+        (v as u8) as i8 as i32
+    }
+
+    /// Total bits stored (array size).
+    pub fn size_bits(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn cell_complementary_invariant() {
+        let mut c = SramCell::default();
+        c.write(true);
+        assert!(c.q() && !c.q_bar());
+        c.write(false);
+        assert!(!c.q() && c.q_bar());
+    }
+
+    #[test]
+    fn row_roundtrip() {
+        let mut a = SramArray::new(4, 16);
+        let bits: Vec<bool> = (0..16).map(|i| i % 3 == 0).collect();
+        a.write_row(2, &bits);
+        assert_eq!(a.read_row(2), bits);
+        let bar = a.read_row_bar(2);
+        assert!(bits.iter().zip(&bar).all(|(&b, &nb)| b != nb));
+    }
+
+    #[test]
+    fn weight8_roundtrip_and_complement() {
+        forall(
+            31,
+            300,
+            |r| r.int8() as i32,
+            |&w| {
+                let mut a = SramArray::new(1, 16);
+                a.write_weight8(0, 1, w);
+                a.read_weight8(0, 1) == w && a.read_weight8_bar(0, 1) == !w
+            },
+        );
+    }
+
+    #[test]
+    fn paper_fig9_bit_pattern() {
+        // w^c = -6 = 0b11111010; the Q̄ side must read 5 = 0b00000101
+        let mut a = SramArray::new(1, 8);
+        a.write_weight8(0, 0, -6);
+        assert_eq!(a.read_weight8(0, 0), -6);
+        assert_eq!(a.read_weight8_bar(0, 0), 5);
+    }
+
+    #[test]
+    fn array_size() {
+        // one compartment: 64 rows x 16 cols = 1 Kb
+        let a = SramArray::new(64, 16);
+        assert_eq!(a.size_bits(), 1024);
+    }
+}

@@ -1,0 +1,204 @@
+//! Architecture + simulation configuration.
+//!
+//! Defaults reproduce the paper's hardware implementation (§IV-A): four
+//! 4 KB PIM macros (32 compartments x 16 DBMUs x 64 cells), 256 KB weight
+//! memory, 128 KB ping-pong memory, 333 MHz @ 0.7 V on 14 nm.
+//! The ablation switches (`ddc`, `reconfig`, `recover`, `fcc`) express
+//! both the PIM baseline (§IV-A "PIM baseline") and the Fig. 13 ablation
+//! ladder.
+
+/// Hardware/architecture parameters of one DDC-PIM instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// Number of PIM macros (paper: 4).
+    pub macros: usize,
+    /// Compartments per PIM core (paper: 32).
+    pub compartments: usize,
+    /// SRAM rows per compartment (64 cells per DBMU column).
+    pub rows: usize,
+    /// DBMUs (bit columns) per compartment (paper: 16 = two 8b weights).
+    pub dbmus: usize,
+    /// Weight precision in bits (paper: signed INT8).
+    pub weight_bits: usize,
+    /// Input precision in bits (bit-serial, paper: signed INT8).
+    pub input_bits: usize,
+    /// Clock frequency (paper: 333 MHz).
+    pub freq_mhz: f64,
+    /// Dual-broadcast input structure present (INP/INN) -> double
+    /// computing mode available.
+    pub dbis: bool,
+    /// Reconfigurable unit (4 adder units, 2-stage dw alternation).
+    pub reconfig: bool,
+    /// Accumulate-and-recover unit (ARU) present -> FCC layers supported.
+    pub recover: bool,
+    /// Weight memory capacity (KB).
+    pub weight_mem_kb: usize,
+    /// Ping-pong (activation) memory capacity (KB).
+    pub pingpong_kb: usize,
+    /// Off-chip DRAM effective bandwidth in bytes/cycle (per §III-D the
+    /// prefetcher masks most of this latency).
+    pub dram_bytes_per_cycle: f64,
+    /// Fixed DRAM access setup latency (cycles).
+    pub dram_latency_cycles: u64,
+    /// SRAM row writes per cycle per macro when loading weights.
+    pub load_rows_per_cycle: usize,
+    /// Technology node (nm) — used by the cost model.
+    pub node_nm: f64,
+}
+
+impl ArchConfig {
+    /// The paper's DDC-PIM configuration.
+    pub fn ddc_pim() -> Self {
+        ArchConfig {
+            macros: 4,
+            compartments: 32,
+            rows: 64,
+            dbmus: 16,
+            weight_bits: 8,
+            input_bits: 8,
+            freq_mhz: 333.0,
+            dbis: true,
+            reconfig: true,
+            recover: true,
+            weight_mem_kb: 256,
+            pingpong_kb: 128,
+            dram_bytes_per_cycle: 8.0,
+            dram_latency_cycles: 100,
+            load_rows_per_cycle: 1,
+            node_nm: 14.0,
+        }
+    }
+
+    /// The PIM baseline of §IV-A: no DBIS, no reconfigurable unit, no
+    /// recover unit; regular computing mode only.  Everything else equal.
+    pub fn baseline() -> Self {
+        ArchConfig {
+            dbis: false,
+            reconfig: false,
+            recover: false,
+            ..Self::ddc_pim()
+        }
+    }
+
+    /// Stored 8-bit weights per SRAM row (16 DBMU columns / 8 bits).
+    pub fn weights_per_row(&self) -> usize {
+        self.dbmus / self.weight_bits
+    }
+
+    /// Array size of one macro in bits (cells). Paper: 32 Kb.
+    pub fn macro_array_kb(&self) -> f64 {
+        (self.compartments * self.dbmus * self.rows) as f64 / 1024.0
+    }
+
+    /// Equivalent weight capacity of one macro in Kb: doubled when the
+    /// complementary states are exploited (DDC).
+    pub fn macro_weight_capacity_kb(&self) -> f64 {
+        if self.dbis && self.recover {
+            2.0 * self.macro_array_kb()
+        } else {
+            self.macro_array_kb()
+        }
+    }
+
+    /// Stored-weight slots per macro (8-bit weights physically written).
+    pub fn macro_weight_slots(&self) -> usize {
+        self.compartments * self.rows * self.weights_per_row()
+    }
+
+    /// 8b x 8b MACs completed per cycle at peak, whole chip (paper:
+    /// 42.67 GOPS / 333 MHz / 2 ops = 64 MACs/cycle for DDC).
+    pub fn peak_macs_per_cycle(&self) -> f64 {
+        let per_row_step = self.compartments as f64
+            * self.weights_per_row() as f64
+            * if self.dbis { 2.0 } else { 1.0 };
+        per_row_step * self.macros as f64 / self.input_bits as f64
+    }
+
+    /// Peak GOPS at 8b x 8b (2 ops per MAC).
+    pub fn peak_gops(&self) -> f64 {
+        2.0 * self.peak_macs_per_cycle() * self.freq_mhz * 1e6 / 1e9
+    }
+
+    /// Cycle time in nanoseconds.
+    pub fn cycle_ns(&self) -> f64 {
+        1e3 / self.freq_mhz
+    }
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self::ddc_pim()
+    }
+}
+
+/// Workload-level simulation options.
+#[derive(Debug, Clone, Default)]
+pub struct SimConfig {
+    /// Apply FCC to std/pw conv layers.
+    pub fcc_std_pw: bool,
+    /// Apply FCC (+DBIS pairing) to dw conv layers.
+    pub fcc_dw: bool,
+    /// Effective scope S(i): FCC only on conv layers with more than
+    /// `scope_threshold` filters. 0 = all conv layers.
+    pub scope_threshold: usize,
+    /// Batch size of the simulated inference.
+    pub batch: usize,
+}
+
+impl SimConfig {
+    pub fn ddc_full() -> Self {
+        SimConfig {
+            fcc_std_pw: true,
+            fcc_dw: true,
+            scope_threshold: 0,
+            batch: 1,
+        }
+    }
+
+    pub fn baseline() -> Self {
+        SimConfig {
+            fcc_std_pw: false,
+            fcc_dw: false,
+            scope_threshold: 0,
+            batch: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let c = ArchConfig::ddc_pim();
+        assert_eq!(c.weights_per_row(), 2);
+        // 32 compartments x 16 columns x 64 rows = 32 Kb per macro
+        assert_eq!(c.macro_array_kb(), 32.0);
+        assert_eq!(c.macro_weight_capacity_kb(), 64.0); // doubled
+        assert_eq!(c.macro_weight_slots(), 4096);
+    }
+
+    #[test]
+    fn baseline_capacity_not_doubled() {
+        let b = ArchConfig::baseline();
+        assert_eq!(b.macro_weight_capacity_kb(), 32.0);
+    }
+
+    #[test]
+    fn peak_gops_matches_fig12() {
+        // paper Fig. 12(a): 42.67 GOPS at 8b x 8b, 333 MHz
+        let c = ArchConfig::ddc_pim();
+        assert!((c.peak_macs_per_cycle() - 64.0).abs() < 1e-9);
+        assert!((c.peak_gops() - 42.67).abs() < 0.05, "gops={}", c.peak_gops());
+        // baseline has half the parallelism
+        let b = ArchConfig::baseline();
+        assert!((b.peak_gops() - 21.33).abs() < 0.05);
+    }
+
+    #[test]
+    fn macro_is_4kb() {
+        let c = ArchConfig::ddc_pim();
+        assert_eq!(c.macro_array_kb() / 8.0, 4.0); // 32 Kb = 4 KB
+    }
+}

@@ -1,0 +1,127 @@
+//! Dynamic request batcher.
+//!
+//! Groups pending requests into batches of at most `max_batch`, flushing
+//! either when full or when the oldest request has waited `max_wait`.
+//! The serving path compiles one executable per batch size (b1 / b8), so
+//! the batcher also picks the artifact: full batches go to the wide
+//! executable, stragglers to the narrow one.
+
+use std::time::{Duration, Instant};
+
+/// A queued item with its arrival time.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub item: T,
+    pub arrived: Instant,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Accumulates items and decides when to flush.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queue: Vec<Pending<T>>,
+    pub policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            queue: Vec::new(),
+            policy,
+        }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.queue.push(Pending {
+            item,
+            arrived: Instant::now(),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Whether a batch should be cut now.
+    pub fn should_flush(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.first() {
+            Some(p) => now.duration_since(p.arrived) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Cut a batch of up to `max_batch` items (FIFO).
+    pub fn cut(&mut self) -> Vec<T> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).map(|p| p.item).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(ms),
+        }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(policy(2, 1000));
+        b.push(1);
+        assert!(!b.should_flush(Instant::now()));
+        b.push(2);
+        assert!(b.should_flush(Instant::now()));
+        assert_eq!(b.cut(), vec![1, 2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let mut b = Batcher::new(policy(8, 0));
+        b.push(7);
+        assert!(b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn cut_is_fifo_and_bounded() {
+        let mut b = Batcher::new(policy(2, 0));
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.cut(), vec![0, 1]);
+        assert_eq!(b.cut(), vec![2, 3]);
+        assert_eq!(b.cut(), vec![4]);
+    }
+
+    #[test]
+    fn empty_never_flushes() {
+        let b: Batcher<i32> = Batcher::new(policy(1, 0));
+        assert!(!b.should_flush(Instant::now()));
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the serving half of the reproduction.
+//!
+//! * [`batcher`] — dynamic request batching (full batches ride the wide
+//!   executable, stragglers are padded);
+//! * [`scheduler`] — prefetch-aware layer timeline;
+//! * [`service`] — the threaded request loop that owns the PJRT runtime
+//!   and serves the AOT model artifacts.
+
+pub mod batcher;
+pub mod scheduler;
+pub mod service;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use service::{InferenceResult, InferenceService, ServiceStats};

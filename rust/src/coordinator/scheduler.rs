@@ -1,0 +1,104 @@
+//! Layer scheduler: turns a network plan into a prefetch-aware timeline.
+//!
+//! The top controller executes layers strictly in order, but DRAM weight
+//! transfers for layer `i+1` are issued as soon as layer `i` starts
+//! computing (the paper's §III-D prefetch).  The scheduler materializes
+//! the resulting timeline: per-layer start/end cycles and the exposed
+//! stall, which the reports and the e2e example visualize.
+
+use crate::arch::dram::Dram;
+use crate::config::ArchConfig;
+use crate::mapping::LayerPlan;
+
+/// One scheduled layer.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub name: String,
+    pub start: u64,
+    pub end: u64,
+    /// Cycles stalled waiting on DRAM (not hidden by prefetch).
+    pub stall: u64,
+}
+
+/// Schedule a plan sequence; returns the timeline and the makespan.
+pub fn schedule(plans: &[LayerPlan], arch: &ArchConfig, input_bytes: u64) -> (Vec<Slot>, u64) {
+    let dram = Dram::new(arch.dram_bytes_per_cycle, arch.dram_latency_cycles);
+    let mut slots = Vec::with_capacity(plans.len());
+    let mut clock: u64 = 0;
+    // DRAM "front": the cycle at which the weight stream for the next
+    // layer finishes arriving.
+    let mut dram_ready: u64 = dram.transfer_cycles(input_bytes as usize);
+
+    for plan in plans {
+        let transfer = dram.transfer_cycles(plan.dram_weight_bytes as usize);
+        // weights for THIS layer finish at dram_ready + its own transfer
+        let weights_at = dram_ready + transfer;
+        let start = clock.max(weights_at);
+        let stall = start - clock;
+        let busy = plan.pim_cycles();
+        let end = start + busy;
+        slots.push(Slot {
+            name: plan.name.clone(),
+            start,
+            end,
+            stall,
+        });
+        // next layer's weights start streaming as soon as this layer's
+        // arrived (the DRAM channel is busy until then)
+        dram_ready = weights_at;
+        clock = end;
+    }
+    (slots, clock)
+}
+
+/// Total stall cycles across the timeline (prefetch effectiveness).
+pub fn total_stall(slots: &[Slot]) -> u64 {
+    slots.iter().map(|s| s.stall).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::mapping::plan_network;
+    use crate::model::zoo;
+
+    #[test]
+    fn timeline_is_monotone() {
+        let arch = ArchConfig::ddc_pim();
+        let plans = plan_network(&zoo::mobilenet_v2(), &arch, &SimConfig::ddc_full());
+        let (slots, makespan) = schedule(&plans, &arch, 3072);
+        assert_eq!(slots.len(), plans.len());
+        let mut prev = 0;
+        for s in &slots {
+            assert!(s.start >= prev, "{} starts before prev ends", s.name);
+            assert!(s.end >= s.start);
+            prev = s.end;
+        }
+        assert_eq!(makespan, slots.last().unwrap().end);
+    }
+
+    #[test]
+    fn prefetch_hides_most_traffic() {
+        // with the paper's bandwidth, stalls should be a small fraction
+        // of the makespan for MobileNetV2
+        let arch = ArchConfig::ddc_pim();
+        let plans = plan_network(&zoo::mobilenet_v2(), &arch, &SimConfig::ddc_full());
+        let (slots, makespan) = schedule(&plans, &arch, 3072);
+        let stall = total_stall(&slots);
+        assert!(
+            (stall as f64) < 0.35 * makespan as f64,
+            "stall {stall} vs makespan {makespan}"
+        );
+    }
+
+    #[test]
+    fn zero_bandwidth_starves() {
+        let mut arch = ArchConfig::ddc_pim();
+        arch.dram_bytes_per_cycle = 0.001;
+        let plans = plan_network(&zoo::resnet18(), &arch, &SimConfig::ddc_full());
+        let (slots, makespan) = schedule(&plans, &arch, 3072);
+        // DRAM-bound: stalls dominate
+        assert!(total_stall(&slots) > makespan / 2);
+    }
+}

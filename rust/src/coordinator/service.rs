@@ -1,0 +1,285 @@
+//! Inference service: the request loop that owns the PJRT runtime.
+//!
+//! A dedicated worker thread owns the [`Runtime`] (PJRT handles are not
+//! `Send`-safe by contract, so they never leave the thread).  Clients
+//! submit CIFAR-shaped images over a channel; the batcher groups them;
+//! full batches run on the wide executable (`model_b8`), stragglers are
+//! padded.  Alongside the functional result, each request is annotated
+//! with the *simulated* DDC-PIM latency of the model so the serving path
+//! reports both wall-clock and modelled-hardware numbers.
+
+use std::sync::mpsc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{ArchConfig, SimConfig};
+use crate::metrics::LatencyHistogram;
+use crate::model::zoo;
+use crate::runtime::Runtime;
+use crate::sim::simulate_network;
+
+use super::batcher::{BatchPolicy, Batcher};
+
+pub const IMG_ELEMS: usize = 32 * 32 * 3;
+pub const NUM_CLASSES: usize = 10;
+const WIDE_BATCH: usize = 8;
+
+/// One inference request.
+struct Request {
+    input: Vec<f32>,
+    resp: mpsc::Sender<Result<InferenceResult, String>>,
+    submitted: Instant,
+}
+
+/// The answer a client gets back.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    pub logits: Vec<f32>,
+    pub argmax: usize,
+    /// Wall-clock service latency.
+    pub latency: Duration,
+    /// Batch this request rode in.
+    pub batch_size: usize,
+    /// Modelled DDC-PIM latency for the whole model (ms, from the cycle
+    /// simulator; amortized per batch).
+    pub simulated_ms: f64,
+}
+
+/// Aggregate service statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub total_latency: Duration,
+    pub max_latency: Duration,
+    /// Log-bucketed latency distribution (p50/p99 queries).
+    pub latency_hist: LatencyHistogram,
+}
+
+impl ServiceStats {
+    pub fn mean_latency(&self) -> Duration {
+        if self.requests == 0 {
+            Duration::ZERO
+        } else {
+            self.total_latency / self.requests as u32
+        }
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.latency_hist.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.latency_hist.percentile(99.0)
+    }
+}
+
+enum Msg {
+    Infer(Request),
+    Stats(mpsc::Sender<ServiceStats>),
+    Shutdown,
+}
+
+/// Handle to a running service.
+pub struct InferenceService {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl InferenceService {
+    /// Start the worker thread; compiles artifacts on first use.
+    pub fn start(artifact_dir: String, policy: BatchPolicy) -> InferenceService {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = thread::spawn(move || worker_loop(artifact_dir, policy, rx));
+        InferenceService {
+            tx,
+            worker: Some(worker),
+        }
+    }
+
+    /// Submit an image; returns a receiver for the result.
+    pub fn submit(&self, input: Vec<f32>) -> mpsc::Receiver<Result<InferenceResult, String>> {
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            input,
+            resp: rtx,
+            submitted: Instant::now(),
+        };
+        // if the worker died the receiver will simply disconnect
+        let _ = self.tx.send(Msg::Infer(req));
+        rrx
+    }
+
+    /// Blocking convenience call.
+    pub fn infer(&self, input: Vec<f32>) -> Result<InferenceResult, String> {
+        self.submit(input)
+            .recv()
+            .map_err(|e| format!("service dropped request: {e}"))?
+    }
+
+    pub fn stats(&self) -> Option<ServiceStats> {
+        let (stx, srx) = mpsc::channel();
+        self.tx.send(Msg::Stats(stx)).ok()?;
+        srx.recv().ok()
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(artifact_dir: String, policy: BatchPolicy, rx: mpsc::Receiver<Msg>) {
+    let init = Runtime::cpu(&artifact_dir).and_then(|rt| {
+        let w = crate::runtime::artifacts::load_model_weights(&artifact_dir)?;
+        Ok((rt, w))
+    });
+    let (mut runtime, weights) = match init {
+        Ok(r) => r,
+        Err(e) => {
+            // drain: fail every request with the init error; exit on
+            // Shutdown (Drop joins this thread, so it must terminate)
+            for msg in rx {
+                match msg {
+                    Msg::Infer(req) => {
+                        let _ =
+                            req.resp.send(Err(format!("runtime init failed: {e}")));
+                    }
+                    Msg::Stats(stx) => {
+                        let _ = stx.send(ServiceStats::default());
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    // modelled hardware latency (once; amortized per batch below)
+    let sim_ms = simulate_network(
+        &zoo::mobilenet_v2(),
+        &ArchConfig::ddc_pim(),
+        &SimConfig::ddc_full(),
+    )
+    .latency_ms();
+
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    let mut stats = ServiceStats::default();
+    let mut open = true;
+
+    while open || !batcher.is_empty() {
+        // pull at least one message (with timeout so timed flushes fire)
+        if open {
+            match rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(Msg::Infer(r)) => batcher.push(r),
+                Ok(Msg::Stats(stx)) => {
+                    let _ = stx.send(stats.clone());
+                }
+                Ok(Msg::Shutdown) => open = false,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+            }
+            // opportunistically drain without blocking
+            while let Ok(msg) = rx.try_recv() {
+                match msg {
+                    Msg::Infer(r) => batcher.push(r),
+                    Msg::Stats(stx) => {
+                        let _ = stx.send(stats.clone());
+                    }
+                    Msg::Shutdown => open = false,
+                }
+            }
+        }
+        if batcher.is_empty() {
+            continue;
+        }
+        if !batcher.should_flush(Instant::now()) && open {
+            continue;
+        }
+        let batch = batcher.cut();
+        let bsize = batch.len();
+        stats.batches += 1;
+        let result = run_batch(&mut runtime, &weights, &batch);
+        match result {
+            Ok(all_logits) => {
+                for (i, req) in batch.into_iter().enumerate() {
+                    let logits =
+                        all_logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].to_vec();
+                    let argmax = logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(k, _)| k)
+                        .unwrap_or(0);
+                    let latency = req.submitted.elapsed();
+                    stats.requests += 1;
+                    stats.total_latency += latency;
+                    stats.max_latency = stats.max_latency.max(latency);
+                    stats.latency_hist.record(latency);
+                    let _ = req.resp.send(Ok(InferenceResult {
+                        logits,
+                        argmax,
+                        latency,
+                        batch_size: bsize,
+                        simulated_ms: sim_ms / bsize as f64,
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e}");
+                for req in batch {
+                    let _ = req.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+fn run_batch(
+    runtime: &mut Runtime,
+    weights: &crate::runtime::artifacts::ModelWeights,
+    batch: &[Request],
+) -> Result<Vec<f32>> {
+    // pick the artifact: wide for full batches, narrow otherwise (pad)
+    let (name, eff) = if batch.len() == WIDE_BATCH {
+        ("model_b8", WIDE_BATCH)
+    } else if batch.len() == 1 {
+        ("model_b1", 1)
+    } else {
+        ("model_b8", WIDE_BATCH) // pad partial batches up to the wide size
+    };
+    let mut input = vec![0f32; eff * IMG_ELEMS];
+    for (i, req) in batch.iter().enumerate() {
+        anyhow::ensure!(
+            req.input.len() == IMG_ELEMS,
+            "bad input size {} (want {IMG_ELEMS})",
+            req.input.len()
+        );
+        input[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].copy_from_slice(&req.input);
+    }
+    runtime.run_model(name, &input, &[eff as i64, 32, 32, 3], weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_reports_error_without_artifacts() {
+        let svc = InferenceService::start("/nonexistent".into(), BatchPolicy::default());
+        let res = svc.infer(vec![0.0; IMG_ELEMS]);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_input_size() {
+        let svc = InferenceService::start("/nonexistent".into(), BatchPolicy::default());
+        let res = svc.infer(vec![0.0; 3]);
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! Alg. 2 — Complementization.
+//!
+//! On integer *symmetric* filters, subtract 1 from the smaller twin of
+//! every pair, turning the negation symmetry of Eq. 1 into the bitwise
+//! complement relation of Eq. 3 (because `~x = -x - 1`, Eq. 4).
+
+use super::FilterBank;
+
+/// Alg. 2: `if f0 >= f1 { f1 -= 1 } else { f0 -= 1 }` elementwise.
+pub fn complementize(sym: &FilterBank) -> FilterBank {
+    let mut out = sym.clone();
+    for p in 0..sym.pairs() {
+        for i in 0..sym.l {
+            let a = sym.filter(2 * p)[i];
+            let b = sym.filter(2 * p + 1)[i];
+            if a >= b {
+                out.filter_mut(2 * p + 1)[i] = b - 1;
+            } else {
+                out.filter_mut(2 * p)[i] = a - 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fcc::{is_biased_complementary, symmetrize_int};
+    use crate::util::prop::forall;
+
+    #[test]
+    fn paper_example_fig4() {
+        // symmetric: w00^s = -4, w01^s = 6, M = 1
+        // smaller twin (-4) loses 1 -> w00^bc = -5, w01^bc = 6
+        let sym = FilterBank::new(vec![-4, 6], 2, 1);
+        let bc = complementize(&sym);
+        assert_eq!(bc.data, vec![-5, 6]);
+        assert!(is_biased_complementary(&bc, &[1]));
+    }
+
+    #[test]
+    fn equal_twins() {
+        // a == b: the "else" branch of Alg. 2 takes b - 1 via a >= b
+        let sym = FilterBank::new(vec![5, 5], 2, 1);
+        let bc = complementize(&sym);
+        assert_eq!(bc.data, vec![5, 4]);
+    }
+
+    #[test]
+    fn eq3_property() {
+        forall(
+            13,
+            300,
+            |r| {
+                let l = 1 + r.below(25) as usize;
+                let n = 2 * (1 + r.below(4) as usize);
+                FilterBank::new(
+                    (0..n * l).map(|_| r.range_i64(-128, 128) as i32).collect(),
+                    n,
+                    l,
+                )
+            },
+            |b| {
+                let (sym, m) = symmetrize_int(b);
+                is_biased_complementary(&complementize(&sym), &m)
+            },
+        );
+    }
+
+    #[test]
+    fn exactly_one_twin_changes() {
+        let sym = FilterBank::new(vec![10, -4, 3, 3], 2, 2);
+        let bc = complementize(&sym);
+        for i in 0..2 {
+            let changed = (sym.filter(0)[i] != bc.filter(0)[i]) as u32
+                + (sym.filter(1)[i] != bc.filter(1)[i]) as u32;
+            assert_eq!(changed, 1);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Decomposition of biased-comp filters into comp filters + means
+//! (paper Fig. 9), and the deployable weight container.
+//!
+//! After `f^c = f^bc - M`, the twins of each pair are exact bitwise
+//! complements, so only the even-indexed comp filters plus the `M`
+//! vector are stored/transferred — the Q-bar side of the 6T array holds
+//! the odd filters for free.  `O = Σ(I*f^c) + (ΣI)·M` (Eq. 7) recovers
+//! the convolution results in the ARU.
+
+use super::FilterBank;
+
+/// Deployable FCC weights for one conv layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FccWeights {
+    /// Comp filters, all `N` of them `[N, L]` (odd rows are `!even`).
+    pub comp: FilterBank,
+    /// Per-pair means `M` (`N/2` entries).
+    pub means: Vec<i32>,
+}
+
+impl FccWeights {
+    /// The stored half: even-indexed comp filters, `[N/2, L]`.
+    pub fn stored_even(&self) -> FilterBank {
+        let l = self.comp.l;
+        let mut data = Vec::with_capacity(self.comp.pairs() * l);
+        for p in 0..self.comp.pairs() {
+            data.extend_from_slice(self.comp.filter(2 * p));
+        }
+        FilterBank {
+            data,
+            n: self.comp.pairs().max(1),
+            l,
+        }
+    }
+
+    /// Reconstruct the full comp bank from the stored half (what the
+    /// cross-coupled array does physically: `Q̄ = !Q`).
+    pub fn reconstruct_from_even(even: &FilterBank, means: &[i32]) -> FccWeights {
+        let l = even.l;
+        let mut data = Vec::with_capacity(even.n * 2 * l);
+        for p in 0..even.n {
+            data.extend_from_slice(even.filter(p));
+            data.extend(even.filter(p).iter().map(|&w| !w));
+        }
+        FccWeights {
+            comp: FilterBank::new(data, even.n * 2, l),
+            means: means.to_vec(),
+        }
+    }
+
+    /// Bits that must be transferred off-chip for this layer (half the
+    /// filters at 8 b/weight + one 8 b mean per pair) — the bandwidth
+    /// bookkeeping behind the paper's "~2x equivalent transfer bandwidth".
+    pub fn transfer_bits(&self) -> usize {
+        self.comp.pairs() * self.comp.l * 8 + self.means.len() * 8
+    }
+
+    /// Bits a non-FCC INT8 layer of the same shape must transfer.
+    pub fn dense_transfer_bits(&self) -> usize {
+        self.comp.n * self.comp.l * 8
+    }
+}
+
+/// `f^c = f^bc - M` (per pair).
+pub fn decompose(bc: &FilterBank, means: &[i32]) -> FccWeights {
+    assert_eq!(means.len(), bc.pairs());
+    let mut comp = bc.clone();
+    for p in 0..bc.pairs() {
+        let m = means[p];
+        for i in 0..bc.l {
+            comp.filter_mut(2 * p)[i] -= m;
+            comp.filter_mut(2 * p + 1)[i] -= m;
+        }
+    }
+    FccWeights {
+        comp,
+        means: means.to_vec(),
+    }
+}
+
+/// Inverse: `f^bc = f^c + M`.
+pub fn recompose(fcc: &FccWeights) -> FilterBank {
+    let mut bc = fcc.comp.clone();
+    for p in 0..bc.pairs() {
+        let m = fcc.means[p];
+        for i in 0..bc.l {
+            bc.filter_mut(2 * p)[i] += m;
+            bc.filter_mut(2 * p + 1)[i] += m;
+        }
+    }
+    bc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fcc::{complementize, is_bitwise_complementary, symmetrize_int};
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_example_fig9() {
+        // w00^bc = -5, w01^bc = 6, M = 1 -> w00^c = -6, w01^c = 5
+        let bc = FilterBank::new(vec![-5, 6], 2, 1);
+        let fcc = decompose(&bc, &[1]);
+        assert_eq!(fcc.comp.data, vec![-6, 5]);
+        // -6 = 0b11111010, 5 = 0b00000101 in 8-bit two's complement
+        assert_eq!(fcc.comp.data[0] & 0xFF, 0b1111_1010);
+        assert_eq!(fcc.comp.data[1] & 0xFF, 0b0000_0101);
+        assert!(is_bitwise_complementary(&fcc.comp));
+    }
+
+    #[test]
+    fn reconstruct_matches_original() {
+        let mut rng = Rng::new(21);
+        for _ in 0..30 {
+            let l = 1 + rng.below(20) as usize;
+            let n = 2 * (1 + rng.below(6) as usize);
+            let bank = FilterBank::new(
+                (0..n * l).map(|_| rng.range_i64(-128, 128) as i32).collect(),
+                n,
+                l,
+            );
+            let (sym, m) = symmetrize_int(&bank);
+            let fcc = decompose(&complementize(&sym), &m);
+            let rebuilt = FccWeights::reconstruct_from_even(&fcc.stored_even(), &m);
+            assert_eq!(rebuilt.comp.data, fcc.comp.data);
+        }
+    }
+
+    #[test]
+    fn transfer_bits_half_plus_means() {
+        let bc = FilterBank::new(vec![0; 8 * 9], 8, 9);
+        let fcc = decompose(&bc, &[0; 4]);
+        assert_eq!(fcc.dense_transfer_bits(), 8 * 9 * 8);
+        assert_eq!(fcc.transfer_bits(), 4 * 9 * 8 + 4 * 8);
+        // the paper's ~2x bandwidth claim: ratio just over 0.5
+        let ratio = fcc.transfer_bits() as f64 / fcc.dense_transfer_bits() as f64;
+        assert!(ratio < 0.6 && ratio > 0.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        forall(
+            17,
+            200,
+            |r| {
+                let l = 1 + r.below(30) as usize;
+                let means: Vec<i32> =
+                    (0..2).map(|_| r.range_i64(-50, 51) as i32).collect();
+                let bc = FilterBank::new(
+                    (0..4 * l).map(|_| r.range_i64(-100, 101) as i32).collect(),
+                    4,
+                    l,
+                );
+                (bc, means)
+            },
+            |(bc, means)| {
+                let fcc = decompose(bc, means);
+                recompose(&fcc).data == bc.data
+            },
+        );
+    }
+}

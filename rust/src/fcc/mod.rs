@@ -1,0 +1,157 @@
+//! FCC (Filter-wise Complementary Correlation) transforms — rust side.
+//!
+//! The training half of FCC lives in python (build-time).  This module
+//! implements the *deployment* half used by the mapper, the functional
+//! simulator and the verification suite: Alg. 1 (symmetrization), Alg. 2
+//! (complementization), the biased-comp → comp + M decomposition, and
+//! the invariant checks (Eqs. 1–5).
+//!
+//! Filters are `[N, L]` row-major (`N` even; adjacent rows pair up).
+
+mod complementize;
+mod decompose;
+mod symmetrize;
+
+pub use complementize::complementize;
+pub use decompose::{decompose, recompose, FccWeights};
+pub use symmetrize::{pair_means_int, symmetrize_int};
+
+use crate::quant::{INT8_MAX, INT8_MIN};
+
+/// A bank of INT8 filters in filter-major layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FilterBank {
+    /// `n * l` INT8 codes (i32 storage), row-major `[N, L]`.
+    pub data: Vec<i32>,
+    pub n: usize,
+    pub l: usize,
+}
+
+impl FilterBank {
+    pub fn new(data: Vec<i32>, n: usize, l: usize) -> Self {
+        assert_eq!(data.len(), n * l, "shape mismatch");
+        assert!(n % 2 == 0, "FCC needs an even filter count, got {n}");
+        FilterBank { data, n, l }
+    }
+
+    pub fn filter(&self, j: usize) -> &[i32] {
+        &self.data[j * self.l..(j + 1) * self.l]
+    }
+
+    pub fn filter_mut(&mut self, j: usize) -> &mut [i32] {
+        &mut self.data[j * self.l..(j + 1) * self.l]
+    }
+
+    pub fn pairs(&self) -> usize {
+        self.n / 2
+    }
+}
+
+/// Check Eq. 1 (integer domain): `(w0 - M) == -(w1 - M)` elementwise.
+pub fn is_symmetric(bank: &FilterBank, means: &[i32]) -> bool {
+    assert_eq!(means.len(), bank.pairs());
+    (0..bank.pairs()).all(|p| {
+        let (f0, f1) = (bank.filter(2 * p), bank.filter(2 * p + 1));
+        let m = means[p];
+        f0.iter().zip(f1).all(|(&a, &b)| a - m == -(b - m))
+    })
+}
+
+/// Check Eq. 3: `(w0 - M) == ~(w1 - M)`, i.e. `(w0-M) + (w1-M) == -1`.
+pub fn is_biased_complementary(bank: &FilterBank, means: &[i32]) -> bool {
+    assert_eq!(means.len(), bank.pairs());
+    (0..bank.pairs()).all(|p| {
+        let (f0, f1) = (bank.filter(2 * p), bank.filter(2 * p + 1));
+        let m = means[p];
+        f0.iter().zip(f1).all(|(&a, &b)| (a - m) + (b - m) == -1)
+    })
+}
+
+/// Check Eq. 2: `w0 == !w1` elementwise (two's complement bitwise).
+pub fn is_bitwise_complementary(bank: &FilterBank) -> bool {
+    (0..bank.pairs()).all(|p| {
+        let (f0, f1) = (bank.filter(2 * p), bank.filter(2 * p + 1));
+        f0.iter().zip(f1).all(|(&a, &b)| a == !b)
+    })
+}
+
+/// Check all values fit the signed INT8 range.
+pub fn in_int8_range(bank: &FilterBank) -> bool {
+    bank.data.iter().all(|&v| (INT8_MIN..=INT8_MAX).contains(&v))
+}
+
+/// Full FCC quantization pipeline on INT8 codes (paper Fig. 3 right):
+/// symmetrize → complementize → decompose.  Returns the deployable
+/// [`FccWeights`].
+pub fn fcc_transform(bank: &FilterBank) -> FccWeights {
+    let (sym, means) = symmetrize_int(bank);
+    let bc = complementize(&sym);
+    debug_assert!(is_biased_complementary(&bc, &means));
+    decompose(&bc, &means)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_explain;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn random_bank(rng: &mut Rng, n: usize, l: usize) -> FilterBank {
+        FilterBank::new(
+            (0..n * l).map(|_| rng.range_i64(-128, 128) as i32).collect(),
+            n,
+            l,
+        )
+    }
+
+    #[test]
+    fn full_pipeline_invariants() {
+        let mut rng = Rng::new(42);
+        let bank = random_bank(&mut rng, 8, 27);
+        let fcc = fcc_transform(&bank);
+        // stored even filters + recovered odd are exact complements
+        assert!(is_bitwise_complementary(&fcc.comp));
+        assert!(in_int8_range(&fcc.comp));
+    }
+
+    #[test]
+    fn pipeline_property() {
+        forall_explain(
+            7,
+            150,
+            |r| {
+                let n = 2 * (1 + r.below(8) as usize);
+                let l = 1 + r.below(40) as usize;
+                random_bank(r, n, l)
+            },
+            |bank| {
+                let (sym, means) = symmetrize_int(bank);
+                if !is_symmetric(&sym, &means) {
+                    return Err("Eq.1 violated after symmetrize".into());
+                }
+                let bc = complementize(&sym);
+                if !is_biased_complementary(&bc, &means) {
+                    return Err("Eq.3 violated after complementize".into());
+                }
+                if !in_int8_range(&bc) {
+                    return Err("int8 range violated".into());
+                }
+                let fcc = decompose(&bc, &means);
+                if !is_bitwise_complementary(&fcc.comp) {
+                    return Err("Eq.2 violated after decompose".into());
+                }
+                let back = recompose(&fcc);
+                if back.data != bc.data {
+                    return Err("recompose != original biased-comp".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "even filter count")]
+    fn odd_filter_count_rejected() {
+        FilterBank::new(vec![0; 9], 3, 3);
+    }
+}

@@ -1,0 +1,133 @@
+//! Alg. 1 — Symmetrization (integer domain, deployment path).
+//!
+//! For each adjacent filter pair `(f_j, f_{j+1})` compute the rounded
+//! pair mean `M_j`, then elementwise replace the twin *closer* to `M`
+//! with the mirror image of the farther one, so that afterwards
+//! `f0 - M = -(f1 - M)` (Eq. 1).  The deviation is clamped pairwise so
+//! that both twins — including the later `-1` of Alg. 2 — stay inside
+//! the signed INT8 range (see python `fcc/core.py`).
+
+use super::FilterBank;
+use crate::quant::{INT8_MAX, INT8_MIN};
+
+/// Rounded per-pair means `M_j = round((Σf_j + Σf_{j+1}) / 2L)`.
+pub fn pair_means_int(bank: &FilterBank) -> Vec<i32> {
+    (0..bank.pairs())
+        .map(|p| {
+            let s: i64 = bank.filter(2 * p).iter().map(|&x| x as i64).sum::<i64>()
+                + bank.filter(2 * p + 1).iter().map(|&x| x as i64).sum::<i64>();
+            let denom = 2.0 * bank.l as f64;
+            (s as f64 / denom).round() as i32
+        })
+        .collect()
+}
+
+/// Alg. 1 with INT8-safe pairwise deviation clamping.
+/// Returns `(symmetric bank, means)`.
+pub fn symmetrize_int(bank: &FilterBank) -> (FilterBank, Vec<i32>) {
+    let means = pair_means_int(bank);
+    let mut out = bank.clone();
+    for p in 0..bank.pairs() {
+        let m = means[p];
+        // deviation clamp: M + dev <= INT8_MAX and M - dev - 1 >= INT8_MIN
+        let dmax = (INT8_MAX - m).min(m - (INT8_MIN + 1)).max(0);
+        for i in 0..bank.l {
+            let a = bank.filter(2 * p)[i];
+            let b = bank.filter(2 * p + 1)[i];
+            // keep the twin farther from M, mirror the other
+            let f0 = if (a - m).abs() >= (b - m).abs() {
+                a
+            } else {
+                2 * m - b
+            };
+            let dev = (f0 - m).clamp(-dmax, dmax);
+            out.filter_mut(2 * p)[i] = m + dev;
+            out.filter_mut(2 * p + 1)[i] = m - dev;
+        }
+    }
+    (out, means)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fcc::is_symmetric;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn bank(data: Vec<i32>, n: usize, l: usize) -> FilterBank {
+        FilterBank::new(data, n, l)
+    }
+
+    #[test]
+    fn paper_example_fig4() {
+        // quantized: w00 = -4-ish, w01 = 6, M = 1 (paper works the example
+        // with L=1): mean((-4)+6)/2 = 1; farther twin is 6 -> w00^s = -4
+        let b = bank(vec![-4, 6], 2, 1);
+        let (sym, m) = symmetrize_int(&b);
+        assert_eq!(m, vec![1]);
+        assert_eq!(sym.data, vec![-4, 6]);
+        assert!(is_symmetric(&sym, &m));
+    }
+
+    #[test]
+    fn mirror_replaces_closer_twin() {
+        // L=2: f0 = [10, 0], f1 = [2, 0] -> M = (10+0+2+0)/4 = 3.
+        // position 0: 10 is farther from M, so 2 -> 2*3-10 = -4;
+        // position 1: tie keeps f0's 0, mirrors f1 to 2*3-0 = 6.
+        let b = bank(vec![10, 0, 2, 0], 2, 2);
+        let (sym, m) = symmetrize_int(&b);
+        assert_eq!(m, vec![3]);
+        assert_eq!(sym.data, vec![10, 0, -4, 6]);
+    }
+
+    #[test]
+    fn eq1_property_and_range() {
+        forall(
+            11,
+            300,
+            |r| {
+                let l = 1 + r.below(30) as usize;
+                FilterBank::new(
+                    (0..2 * l).map(|_| r.range_i64(-128, 128) as i32).collect(),
+                    2,
+                    l,
+                )
+            },
+            |b| {
+                let (sym, m) = symmetrize_int(b);
+                is_symmetric(&sym, &m)
+                    && sym.data.iter().all(|&v| (-128..=127).contains(&v))
+            },
+        );
+    }
+
+    #[test]
+    fn extreme_values_clamped() {
+        let b = bank(vec![127, -128, 127, -128], 2, 2);
+        let (sym, _m) = symmetrize_int(&b);
+        // after the later -1, everything must still fit int8
+        assert!(sym.data.iter().all(|&v| (-127..=127).contains(&v)));
+    }
+
+    #[test]
+    fn kept_twin_preserved_when_in_range() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let l = 1 + rng.below(10) as usize;
+            let b = FilterBank::new(
+                (0..2 * l).map(|_| rng.range_i64(-60, 61) as i32).collect(),
+                2,
+                l,
+            );
+            let (sym, m) = symmetrize_int(&b);
+            // small-range inputs never hit the clamp, so the farther twin
+            // must be byte-identical to the original
+            for i in 0..l {
+                let (a, bb) = (b.filter(0)[i], b.filter(1)[i]);
+                let far = if (a - m[0]).abs() >= (bb - m[0]).abs() { a } else { bb };
+                assert!(sym.filter(0)[i] == far || sym.filter(1)[i] == far);
+            }
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Per-layer instruction stream (Fig. 5: instruction memory + top
+//! controller).
+//!
+//! The dataflow mapper emits one stream per network; the top controller
+//! (cycle engine) decodes and executes it.  Encoding: one 64-bit word
+//! per instruction — 4-bit opcode, 4-bit mode/config, 24-bit operand A,
+//! 32-bit operand B.
+
+use crate::mapping::{LayerPlan, PlanKind};
+
+/// Opcodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Configure the PIM cores for a layer (mode, grouping, FCC).
+    Cfg = 0x1,
+    /// Load weight rows: A = rows (cycles), B = DRAM bytes to stage.
+    LoadW = 0x2,
+    /// Compute: A = row-steps, B = total cycles.
+    Compute = 0x3,
+    /// Merge/ARU flush: B = cycles.
+    Merge = 0x4,
+    /// Move activations through the ping-pong memory: B = bytes.
+    Move = 0x5,
+    /// End of layer marker: A = layer index.
+    EndLayer = 0x6,
+    /// End of network.
+    Halt = 0xF,
+}
+
+/// Per-layer mode nibble.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CfgMode {
+    Regular = 0x0,
+    Double = 0x1,
+    DwRegular = 0x2,
+    DwDbis = 0x3,
+    DwReconfig = 0x4,
+    FcPath = 0x5,
+    Bypass = 0x6,
+}
+
+/// A decoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instr {
+    pub op: Op,
+    pub mode: u8,
+    pub a: u32, // 24-bit
+    pub b: u32,
+}
+
+impl Instr {
+    pub fn encode(&self) -> u64 {
+        ((self.op as u64) << 60)
+            | ((self.mode as u64 & 0xF) << 56)
+            | ((self.a as u64 & 0xFF_FFFF) << 32)
+            | self.b as u64
+    }
+
+    pub fn decode(word: u64) -> Option<Instr> {
+        let op = match word >> 60 {
+            0x1 => Op::Cfg,
+            0x2 => Op::LoadW,
+            0x3 => Op::Compute,
+            0x4 => Op::Merge,
+            0x5 => Op::Move,
+            0x6 => Op::EndLayer,
+            0xF => Op::Halt,
+            _ => return None,
+        };
+        Some(Instr {
+            op,
+            mode: ((word >> 56) & 0xF) as u8,
+            a: ((word >> 32) & 0xFF_FFFF) as u32,
+            b: (word & 0xFFFF_FFFF) as u32,
+        })
+    }
+}
+
+fn cfg_mode(kind: PlanKind) -> CfgMode {
+    match kind {
+        PlanKind::StdRegular => CfgMode::Regular,
+        PlanKind::StdDouble => CfgMode::Double,
+        PlanKind::DwRegular => CfgMode::DwRegular,
+        PlanKind::DwDbis => CfgMode::DwDbis,
+        PlanKind::DwReconfig => CfgMode::DwReconfig,
+        PlanKind::Fc => CfgMode::FcPath,
+        PlanKind::PostProcess => CfgMode::Bypass,
+    }
+}
+
+/// Lower a network plan to an instruction stream.
+pub fn assemble(plans: &[LayerPlan]) -> Vec<u64> {
+    let mut out = Vec::new();
+    for (i, p) in plans.iter().enumerate() {
+        let mode = cfg_mode(p.kind) as u8;
+        let push = |v: &mut Vec<u64>, op: Op, a: u32, b: u32| {
+            v.push(Instr { op, mode, a, b }.encode());
+        };
+        push(&mut out, Op::Cfg, i as u32, 0);
+        if p.load_cycles > 0 {
+            push(
+                &mut out,
+                Op::LoadW,
+                p.load_cycles.min(u32::MAX as u64) as u32,
+                p.dram_weight_bytes.min(u32::MAX as u64) as u32,
+            );
+        }
+        if p.compute_cycles > 0 {
+            push(
+                &mut out,
+                Op::Compute,
+                (p.compute_cycles / 8).min(0xFF_FFFF) as u32,
+                p.compute_cycles.min(u32::MAX as u64) as u32,
+            );
+            push(&mut out, Op::Merge, 0, p.merge_cycles as u32);
+        }
+        if p.sram_act_bytes > 0 {
+            push(
+                &mut out,
+                Op::Move,
+                0,
+                p.sram_act_bytes.min(u32::MAX as u64) as u32,
+            );
+        }
+        push(&mut out, Op::EndLayer, i as u32, 0);
+    }
+    out.push(
+        Instr {
+            op: Op::Halt,
+            mode: 0,
+            a: 0,
+            b: 0,
+        }
+        .encode(),
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, SimConfig};
+    use crate::mapping::plan_network;
+    use crate::model::zoo;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let i = Instr {
+            op: Op::Compute,
+            mode: CfgMode::Double as u8,
+            a: 0x12_3456,
+            b: 0xDEAD_BEEF,
+        };
+        assert_eq!(Instr::decode(i.encode()), Some(i));
+    }
+
+    #[test]
+    fn decode_rejects_bad_opcode() {
+        assert_eq!(Instr::decode(0x0), None);
+        assert_eq!(Instr::decode(0x7 << 60), None);
+    }
+
+    #[test]
+    fn assemble_ends_with_halt() {
+        let plans = plan_network(
+            &zoo::mobilenet_v2(),
+            &ArchConfig::ddc_pim(),
+            &SimConfig::ddc_full(),
+        );
+        let stream = assemble(&plans);
+        let last = Instr::decode(*stream.last().unwrap()).unwrap();
+        assert_eq!(last.op, Op::Halt);
+        // every layer contributes an EndLayer
+        let ends = stream
+            .iter()
+            .filter(|&&w| Instr::decode(w).map(|i| i.op) == Some(Op::EndLayer))
+            .count();
+        assert_eq!(ends, plans.len());
+    }
+
+    #[test]
+    fn all_words_decode() {
+        let plans = plan_network(
+            &zoo::resnet18(),
+            &ArchConfig::baseline(),
+            &SimConfig::baseline(),
+        );
+        for w in assemble(&plans) {
+            assert!(Instr::decode(w).is_some(), "word {w:#x} undecodable");
+        }
+    }
+}

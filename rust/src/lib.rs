@@ -1,0 +1,32 @@
+//! # DDC-PIM
+//!
+//! Full-system reproduction of *"DDC-PIM: Efficient Algorithm/Architecture
+//! Co-design for Doubling Data Capacity of SRAM-based Processing-In-Memory"*
+//! (Duan et al., 2023).
+//!
+//! The crate is the L3 (rust) layer of a three-layer stack:
+//!
+//! * **L1/L2 (python, build-time only)** — the FCC training algorithm, a
+//!   Pallas bit-serial PIM kernel and the quantized inference model,
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * **L3 (this crate)** — the dataflow mapper, the cycle-accurate and
+//!   bit-true functional simulators of the DDC-PIM architecture, the
+//!   PJRT runtime that serves the AOT artifacts, the inference
+//!   coordinator, and the report generators that regenerate every table
+//!   and figure of the paper's evaluation.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index.
+
+pub mod arch;
+pub mod mapping;
+pub mod config;
+pub mod coordinator;
+pub mod fcc;
+pub mod metrics;
+pub mod model;
+pub mod isa;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,317 @@
+//! `ddc-pim` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `info` — architecture + cost-model summary (Fig. 12 style);
+//! * `simulate --model <name> [--baseline] [--batch N] [--scope i]` —
+//!   cycle-accurate per-layer simulation of one network;
+//! * `report <fig1|fig2|fig12|fig13|fig14|table2|table3|table4|table5|all>`
+//!   — regenerate a paper table/figure;
+//! * `selfcheck` — load every AOT artifact and replay its goldens
+//!   through PJRT;
+//! * `serve [--requests N] [--batch N]` — run the inference service on
+//!   synthetic requests and report latency/throughput.
+//!
+//! Python never runs here: all compute comes from the AOT artifacts and
+//! the rust simulator.
+
+use std::collections::HashMap;
+
+use ddc_pim::config::{ArchConfig, SimConfig};
+use ddc_pim::coordinator::{BatchPolicy, InferenceService};
+use ddc_pim::model::zoo;
+use ddc_pim::report::{render_named, ReportCtx};
+use ddc_pim::runtime::{artifacts, Runtime};
+use ddc_pim::sim::simulate_network;
+use ddc_pim::util::rng::Rng;
+use ddc_pim::util::table::{f2, fp, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = run(&args);
+    std::process::exit(code);
+}
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else {
+            pos.push(args[i].clone());
+        }
+        i += 1;
+    }
+    (pos, flags)
+}
+
+fn run(args: &[String]) -> i32 {
+    let (pos, flags) = parse_flags(args);
+    let artifact_dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+    match pos.first().map(String::as_str) {
+        Some("info") => cmd_info(),
+        Some("simulate") => cmd_simulate(&flags),
+        Some("report") => cmd_report(pos.get(1).map(String::as_str), &artifact_dir),
+        Some("selfcheck") => cmd_selfcheck(&artifact_dir),
+        Some("serve") => cmd_serve(&flags, &artifact_dir),
+        _ => {
+            eprintln!(
+                "usage: ddc-pim <info|simulate|report|selfcheck|serve> [flags]\n\
+                 \n  simulate --model <name> [--baseline] [--batch N] [--scope i]\
+                 \n  report <fig1|fig2|fig12|fig13|fig14|table2|table3|table4|table5|all>\
+                 \n  serve [--requests N] [--batch N]\
+                 \n  flags: --artifacts <dir>  (default: artifacts)\
+                 \n  models: {}",
+                zoo::ALL_MODELS.join(", ")
+            );
+            2
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    let cfg = ArchConfig::ddc_pim();
+    let cost = ddc_pim::arch::cost::CostModel::new(cfg.clone());
+    println!("DDC-PIM architecture (paper defaults)");
+    println!(
+        "  macros:          {} x {} KB array",
+        cfg.macros,
+        cfg.macro_array_kb() / 8.0
+    );
+    println!(
+        "  geometry:        {} compartments x {} rows x {} DBMUs",
+        cfg.compartments, cfg.rows, cfg.dbmus
+    );
+    println!(
+        "  weight capacity: {} Kb/macro (doubled via Q/Q-bar)",
+        cfg.macro_weight_capacity_kb()
+    );
+    println!("  frequency:       {} MHz", cfg.freq_mhz);
+    println!("  peak:            {} GOPS (8bx8b)", f2(cfg.peak_gops()));
+    println!(
+        "  macro area:      {} mm2 @ {} nm",
+        fp(cost.macro_area_mm2(), 4),
+        cfg.node_nm
+    );
+    println!("  system area:     {} mm2", fp(cost.system_area_mm2(), 3));
+    println!(
+        "  weight density:  {} Kb/mm2 (28 nm-normalized)",
+        f2(cost.weight_density(true))
+    );
+    println!(
+        "  energy eff:      {} TOPS/W (macro)",
+        f2(cost.energy_efficiency_tops_w())
+    );
+    0
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> i32 {
+    let model = flags
+        .get("model")
+        .map(String::as_str)
+        .unwrap_or("mobilenet_v2");
+    let Some(net) = zoo::by_name(model) else {
+        eprintln!("unknown model {model}; have: {}", zoo::ALL_MODELS.join(", "));
+        return 2;
+    };
+    let baseline = flags.contains_key("baseline");
+    let arch = if baseline {
+        ArchConfig::baseline()
+    } else {
+        ArchConfig::ddc_pim()
+    };
+    let mut sim = if baseline {
+        SimConfig::baseline()
+    } else {
+        SimConfig::ddc_full()
+    };
+    if let Some(b) = flags.get("batch").and_then(|v| v.parse().ok()) {
+        sim.batch = b;
+    }
+    if let Some(s) = flags.get("scope").and_then(|v| v.parse().ok()) {
+        sim.scope_threshold = s;
+    }
+    let run = simulate_network(&net, &arch, &sim);
+    let mut t = Table::new(format!(
+        "{model} on {} (batch {})",
+        if baseline { "PIM baseline" } else { "DDC-PIM" },
+        sim.batch.max(1)
+    ))
+    .header(&[
+        "layer", "kind", "cycles", "compute", "load", "dram stall", "MACs", "FCC",
+    ]);
+    for l in &run.layers {
+        if l.cycles == 0 {
+            continue;
+        }
+        t.row(vec![
+            l.name.clone(),
+            format!("{:?}", l.kind),
+            l.cycles.to_string(),
+            l.compute_cycles.to_string(),
+            l.load_cycles.to_string(),
+            l.exposed_dram_cycles.to_string(),
+            l.macs.to_string(),
+            if l.fcc { "yes".into() } else { "-".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "total: {} cycles = {} ms @ {} MHz | {} GOPS achieved | {} mJ | dw fraction {}%",
+        run.total_cycles,
+        fp(run.latency_ms(), 3),
+        run.freq_mhz,
+        f2(run.achieved_gops()),
+        fp(run.total_energy_mj, 4),
+        f2(100.0 * run.dw_fraction()),
+    );
+    0
+}
+
+fn cmd_report(name: Option<&str>, artifact_dir: &str) -> i32 {
+    let ctx = ReportCtx::new(artifact_dir);
+    match render_named(&ctx, name.unwrap_or("all")) {
+        Some(s) => {
+            println!("{s}");
+            0
+        }
+        None => {
+            eprintln!("unknown report {name:?}");
+            2
+        }
+    }
+}
+
+fn cmd_selfcheck(artifact_dir: &str) -> i32 {
+    println!("selfcheck: artifact dir = {artifact_dir}");
+    let mut rt = match Runtime::cpu(artifact_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("FAIL: PJRT client: {e:#}");
+            return 1;
+        }
+    };
+    println!("platform: {}", rt.platform());
+    let goldens = match artifacts::load_goldens(artifact_dir) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("FAIL: goldens: {e:#} (run `make artifacts`)");
+            return 1;
+        }
+    };
+    let mut failures = 0;
+    for (name, g) in &goldens {
+        let res = match name.as_str() {
+            "fcc_mvm" => rt.load("fcc_mvm").and_then(|exe| {
+                let out = exe.run_i32(&[
+                    (&g.x_i32(), &g.x_shape),
+                    (&g.w_i32(), &g.w_shape),
+                    (&g.m_i32(), &g.m_shape),
+                ])?;
+                anyhow::ensure!(out == g.out_i32(), "output mismatch");
+                Ok(())
+            }),
+            "pim_mac" => rt.load("pim_mac").and_then(|exe| {
+                let out =
+                    exe.run_i32(&[(&g.x_i32(), &g.x_shape), (&g.w_i32(), &g.w_shape)])?;
+                anyhow::ensure!(out == g.out_i32(), "output mismatch");
+                Ok(())
+            }),
+            "model_b1" => artifacts::load_model_weights(artifact_dir).and_then(|w| {
+                let out = rt.run_model("model_b1", &g.x_f32(), &g.x_shape, &w)?;
+                let want = g.out_f32();
+                anyhow::ensure!(out.len() == want.len(), "length mismatch");
+                let max_err = out
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                anyhow::ensure!(max_err < 1e-3, "max abs err {max_err}");
+                Ok(())
+            }),
+            _ => Ok(()),
+        };
+        match res {
+            Ok(()) => println!("  {name}: OK"),
+            Err(e) => {
+                println!("  {name}: FAIL ({e})");
+                failures += 1;
+            }
+        }
+    }
+    if failures == 0 {
+        println!("selfcheck OK ({} goldens)", goldens.len());
+        0
+    } else {
+        eprintln!("selfcheck: {failures} failures");
+        1
+    }
+}
+
+fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str) -> i32 {
+    let n: usize = flags
+        .get("requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    let max_batch: usize = flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let policy = BatchPolicy {
+        max_batch,
+        ..Default::default()
+    };
+    let svc = InferenceService::start(artifact_dir.to_string(), policy);
+    let mut rng = Rng::new(7);
+    let start = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let img: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.normal() as f32).collect();
+            svc.submit(img)
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(Ok(r)) => {
+                ok += 1;
+                if ok <= 3 {
+                    println!(
+                        "  req: class={} latency={:.2}ms batch={} sim={:.3}ms",
+                        r.argmax,
+                        r.latency.as_secs_f64() * 1e3,
+                        r.batch_size,
+                        r.simulated_ms
+                    );
+                }
+            }
+            Ok(Err(e)) => {
+                eprintln!("request failed: {e}");
+                return 1;
+            }
+            Err(e) => {
+                eprintln!("service dropped: {e}");
+                return 1;
+            }
+        }
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let stats = svc.stats().unwrap_or_default();
+    println!(
+        "served {ok}/{n} requests in {:.2}s = {:.1} req/s | batches {} | mean latency {:.2}ms | max {:.2}ms",
+        elapsed,
+        n as f64 / elapsed,
+        stats.batches,
+        stats.mean_latency().as_secs_f64() * 1e3,
+        stats.max_latency.as_secs_f64() * 1e3,
+    );
+    0
+}

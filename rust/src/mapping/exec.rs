@@ -1,0 +1,508 @@
+//! Functional layer executor: runs whole conv layers through the
+//! bit-true [`PimMacro`] using the paper's mapping strategies, and
+//! recovers outputs in the merge unit/ARU.
+//!
+//! This is the correctness proof of the co-design: for every mapping
+//! mode the recovered outputs must equal the direct convolution with the
+//! *full* (biased-comp) filter bank, even though only half the filters
+//! were ever written into the array.
+
+use crate::arch::lpu::Mode;
+use crate::arch::merge::aru_recover;
+use crate::arch::pim_macro::PimMacro;
+use crate::arch::reconfig::Grouping;
+use crate::fcc::FccWeights;
+
+use super::im2col::{im2col, im2col_channel};
+
+/// std/pw-conv in double computing mode with FCC weights (paper Fig. 10).
+///
+/// Only the even comp filters are loaded; INP and INN carry the same
+/// vector-wise input; the ARU recovers both twins of every pair.
+/// Returns `[P, N]` i64 outputs equal to conv with the biased-comp bank.
+pub fn exec_std_fcc(
+    input: &[i32],
+    h: usize,
+    w: usize,
+    c: usize,
+    fcc: &FccWeights,
+    k: usize,
+    stride: usize,
+) -> Vec<i64> {
+    let l = k * k * c;
+    assert_eq!(fcc.comp.l, l, "filter length mismatch");
+    let n = fcc.comp.n;
+    let pairs = n / 2;
+    let (cols, oh, ow) = im2col(input, h, w, c, k, stride);
+    let pixels = oh * ow;
+
+    let mut mac = PimMacro::paper();
+    let cmp = mac.core.num_compartments();
+    let slots = mac.core.slots();
+    let rows = mac.core.rows();
+    let l_tiles = l.div_ceil(cmp);
+    let groups = pairs.div_ceil(slots);
+
+    let mut out = vec![0i64; pixels * n];
+    // iterate groups in row-capacity chunks (weight reload passes)
+    let groups_per_pass = (rows / l_tiles).max(1);
+    let mut g0 = 0;
+    while g0 < groups {
+        let g1 = (g0 + groups_per_pass).min(groups);
+        // ---- load pass: write even comp filters (normal SRAM mode)
+        for g in g0..g1 {
+            for ti in 0..l_tiles {
+                let row = (g - g0) * l_tiles + ti;
+                for cc in 0..cmp {
+                    let li = ti * cmp + cc;
+                    for s in 0..slots {
+                        let p = g * slots + s; // stored pair index
+                        let wv = if p < pairs && li < l {
+                            fcc.comp.filter(2 * p)[li]
+                        } else {
+                            0
+                        };
+                        mac.load_weight(cc, row, s, wv);
+                    }
+                }
+            }
+        }
+        // ---- compute pass: stream all pixels (weight stationary)
+        for px in 0..pixels {
+            let window = &cols[px * l..(px + 1) * l];
+            let sum_i: i64 = window.iter().map(|&x| x as i64).sum();
+            for g in g0..g1 {
+                let mut psum = vec![(0i64, 0i64); slots];
+                for ti in 0..l_tiles {
+                    let row = (g - g0) * l_tiles + ti;
+                    let inputs: Vec<i32> = (0..cmp)
+                        .map(|cc| {
+                            let li = ti * cmp + cc;
+                            if li < l {
+                                window[li]
+                            } else {
+                                0
+                            }
+                        })
+                        .collect();
+                    let ps = mac.mvm_row(row, &inputs, &inputs, Mode::Double, Grouping::Combined);
+                    for s in 0..slots {
+                        psum[s].0 += ps[0][s].q;
+                        psum[s].1 += ps[0][s].qbar;
+                    }
+                }
+                for s in 0..slots {
+                    let p = g * slots + s;
+                    if p >= pairs {
+                        continue;
+                    }
+                    let m = fcc.means[p] as i64;
+                    let (even, odd) = aru_recover(psum[s].0, psum[s].1, sum_i, sum_i, m);
+                    out[px * n + 2 * p] = even;
+                    out[px * n + 2 * p + 1] = odd;
+                }
+            }
+        }
+        g0 = g1;
+    }
+    out
+}
+
+/// std/pw-conv in regular computing mode (PIM baseline): full filter
+/// bank loaded, Q path only, ARU bypassed.
+pub fn exec_std_regular(
+    input: &[i32],
+    h: usize,
+    w: usize,
+    c: usize,
+    filters: &[i32], // [N, L]
+    n: usize,
+    k: usize,
+    stride: usize,
+) -> Vec<i64> {
+    let l = k * k * c;
+    let (cols, oh, ow) = im2col(input, h, w, c, k, stride);
+    let pixels = oh * ow;
+
+    let mut mac = PimMacro::paper();
+    let cmp = mac.core.num_compartments();
+    let slots = mac.core.slots();
+    let rows = mac.core.rows();
+    let l_tiles = l.div_ceil(cmp);
+    let groups = n.div_ceil(slots);
+    let groups_per_pass = (rows / l_tiles).max(1);
+
+    let mut out = vec![0i64; pixels * n];
+    let zeros = vec![0i32; cmp];
+    let mut g0 = 0;
+    while g0 < groups {
+        let g1 = (g0 + groups_per_pass).min(groups);
+        for g in g0..g1 {
+            for ti in 0..l_tiles {
+                let row = (g - g0) * l_tiles + ti;
+                for cc in 0..cmp {
+                    let li = ti * cmp + cc;
+                    for s in 0..slots {
+                        let f = g * slots + s;
+                        let wv = if f < n && li < l { filters[f * l + li] } else { 0 };
+                        mac.load_weight(cc, row, s, wv);
+                    }
+                }
+            }
+        }
+        for px in 0..pixels {
+            let window = &cols[px * l..(px + 1) * l];
+            for g in g0..g1 {
+                let mut psum = vec![0i64; slots];
+                for ti in 0..l_tiles {
+                    let row = (g - g0) * l_tiles + ti;
+                    let inputs: Vec<i32> = (0..cmp)
+                        .map(|cc| {
+                            let li = ti * cmp + cc;
+                            if li < l {
+                                window[li]
+                            } else {
+                                0
+                            }
+                        })
+                        .collect();
+                    let ps = mac.mvm_row(row, &inputs, &zeros, Mode::Regular, Grouping::Combined);
+                    for s in 0..slots {
+                        psum[s] += ps[0][s].q;
+                    }
+                }
+                for s in 0..slots {
+                    let f = g * slots + s;
+                    if f < n {
+                        out[px * n + f] = psum[s];
+                    }
+                }
+            }
+        }
+        g0 = g1;
+    }
+    out
+}
+
+/// dw-conv with FCC + DBIS (+ optionally the reconfigurable unit's
+/// split-grouping / padded mapping, paper Fig. 11).
+///
+/// * `reconfig = false` — one channel *pair* per row-step: the stored
+///   even comp filter occupies compartments `0..k*k`; INP carries the
+///   even channel's window, INN the odd channel's (parallelism 9x1x16).
+/// * `reconfig = true` — two pairs per row-step: pair A in compartments
+///   `0..k*k`, pair B in `16..16+k*k`, two alternating stages over the
+///   two weight slots (parallelism 18x1x16; 8 channels per stored row).
+pub fn exec_dw_fcc(
+    input: &[i32],
+    h: usize,
+    w: usize,
+    c: usize,
+    fcc: &FccWeights, // [C, K*K] comp filters, channel pairs
+    k: usize,
+    stride: usize,
+    reconfig: bool,
+) -> Vec<i64> {
+    let taps = k * k;
+    assert_eq!(fcc.comp.l, taps);
+    assert_eq!(fcc.comp.n, c);
+    let pairs = c / 2;
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    let pixels = oh * ow;
+
+    // per-channel im2col windows
+    let windows: Vec<Vec<i32>> = (0..c)
+        .map(|ch| im2col_channel(input, h, w, c, ch, k, stride).0)
+        .collect();
+
+    let mut mac = PimMacro::paper();
+    let cmp = mac.core.num_compartments();
+    let mut out = vec![0i64; pixels * c];
+
+    if reconfig && 2 * taps <= cmp {
+        // 4 pairs per stored row: (g0 slot0, g0 slot1, g1 slot0, g1 slot1)
+        let half = cmp / 2;
+        let row_groups = pairs.div_ceil(4);
+        for rg in 0..row_groups {
+            let row = rg % mac.core.rows();
+            // load: group half g in {0,1}, slot s in {0,1}
+            for cc in 0..cmp {
+                for s in 0..2 {
+                    let (ghalf, off) = if cc < half { (0, cc) } else { (1, cc - half) };
+                    // layout: stage s selects slot s; half 0 computes
+                    // pair (4rg+2s), half 1 pair (4rg+2s+1)
+                    let p = rg * 4 + 2 * s + ghalf;
+                    let wv = if p < pairs && off < taps {
+                        fcc.comp.filter(2 * p)[off]
+                    } else {
+                        0
+                    };
+                    mac.load_weight(cc, row, s, wv);
+                }
+            }
+            for px in 0..pixels {
+                // two stages, alternating slots
+                for s in 0..2 {
+                    let pa = rg * 4 + 2 * s; // half 0 pair
+                    let pb = rg * 4 + 2 * s + 1; // half 1 pair
+                    let mut inp = vec![0i32; cmp];
+                    let mut inn = vec![0i32; cmp];
+                    for (half_id, p) in [(0usize, pa), (1usize, pb)] {
+                        if p >= pairs {
+                            continue;
+                        }
+                        for t in 0..taps {
+                            let ccx = half_id * half + t;
+                            inp[ccx] = windows[2 * p][px * taps + t];
+                            inn[ccx] = windows[2 * p + 1][px * taps + t];
+                        }
+                    }
+                    let ps = mac.mvm_row(row, &inp, &inn, Mode::Double, Grouping::Split);
+                    for (ghalf, p) in [(0usize, pa), (1usize, pb)] {
+                        if p >= pairs {
+                            continue;
+                        }
+                        let m = fcc.means[p] as i64;
+                        let sp: i64 = (0..taps)
+                            .map(|t| windows[2 * p][px * taps + t] as i64)
+                            .sum();
+                        let sn: i64 = (0..taps)
+                            .map(|t| windows[2 * p + 1][px * taps + t] as i64)
+                            .sum();
+                        let (even, odd) = aru_recover(ps[ghalf][s].q, ps[ghalf][s].qbar, sp, sn, m);
+                        out[px * c + 2 * p] = even;
+                        out[px * c + 2 * p + 1] = odd;
+                    }
+                }
+            }
+        }
+    } else {
+        // DBIS-only: one pair per row-step in compartments 0..taps
+        for p in 0..pairs {
+            let row = p % mac.core.rows();
+            for cc in 0..cmp {
+                let wv = if cc < taps { fcc.comp.filter(2 * p)[cc] } else { 0 };
+                mac.load_weight(cc, row, 0, wv);
+                mac.load_weight(cc, row, 1, 0);
+            }
+            for px in 0..pixels {
+                let mut inp = vec![0i32; cmp];
+                let mut inn = vec![0i32; cmp];
+                for t in 0..taps {
+                    inp[t] = windows[2 * p][px * taps + t];
+                    inn[t] = windows[2 * p + 1][px * taps + t];
+                }
+                let ps = mac.mvm_row(row, &inp, &inn, Mode::Double, Grouping::Combined);
+                let m = fcc.means[p] as i64;
+                let sp: i64 = inp.iter().map(|&x| x as i64).sum();
+                let sn: i64 = inn.iter().map(|&x| x as i64).sum();
+                let (even, odd) = aru_recover(ps[0][0].q, ps[0][0].qbar, sp, sn, m);
+                out[px * c + 2 * p] = even;
+                out[px * c + 2 * p + 1] = odd;
+            }
+        }
+    }
+    out
+}
+
+/// dw-conv baseline: one channel per row-step, regular mode.
+pub fn exec_dw_regular(
+    input: &[i32],
+    h: usize,
+    w: usize,
+    c: usize,
+    filters: &[i32], // [C, K*K]
+    k: usize,
+    stride: usize,
+) -> Vec<i64> {
+    let taps = k * k;
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    let pixels = oh * ow;
+    let mut mac = PimMacro::paper();
+    let cmp = mac.core.num_compartments();
+    let zeros = vec![0i32; cmp];
+    let mut out = vec![0i64; pixels * c];
+    for ch in 0..c {
+        let row = ch % mac.core.rows();
+        for cc in 0..cmp {
+            let wv = if cc < taps { filters[ch * taps + cc] } else { 0 };
+            mac.load_weight(cc, row, 0, wv);
+            mac.load_weight(cc, row, 1, 0);
+        }
+        let (win, _, _) = im2col_channel(input, h, w, c, ch, k, stride);
+        for px in 0..pixels {
+            let mut inp = vec![0i32; cmp];
+            inp[..taps].copy_from_slice(&win[px * taps..(px + 1) * taps]);
+            let ps = mac.mvm_row(row, &inp, &zeros, Mode::Regular, Grouping::Combined);
+            out[px * c + ch] = ps[0][0].q;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fcc::{fcc_transform, FilterBank};
+    use crate::mapping::im2col::{direct_conv, direct_dwconv};
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<i32> {
+        (0..n).map(|_| rng.int8() as i32).collect()
+    }
+
+    /// direct conv with the biased-comp bank = the FCC ground truth
+    fn fcc_oracle(
+        input: &[i32],
+        h: usize,
+        w: usize,
+        c: usize,
+        fcc: &FccWeights,
+        k: usize,
+        stride: usize,
+    ) -> Vec<i64> {
+        let n = fcc.comp.n;
+        let l = fcc.comp.l;
+        let mut bc = vec![0i32; n * l];
+        for p in 0..n / 2 {
+            for i in 0..l {
+                bc[(2 * p) * l + i] = fcc.comp.filter(2 * p)[i] + fcc.means[p];
+                bc[(2 * p + 1) * l + i] = fcc.comp.filter(2 * p + 1)[i] + fcc.means[p];
+            }
+        }
+        direct_conv(input, h, w, c, &bc, n, k, stride)
+    }
+
+    #[test]
+    fn std_fcc_matches_direct_conv() {
+        let mut rng = Rng::new(91);
+        let (h, w, c, k, n) = (4, 4, 3, 3, 8);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, n * k * k * c), n, k * k * c);
+        let fcc = fcc_transform(&bank);
+        let got = exec_std_fcc(&input, h, w, c, &fcc, k, 1);
+        let want = fcc_oracle(&input, h, w, c, &fcc, k, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn std_fcc_pointwise_many_filters_multipass() {
+        // enough filters to force multiple groups and a reload pass
+        let mut rng = Rng::new(92);
+        let (h, w, c, k, n) = (3, 3, 40, 1, 12);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, n * c), n, c);
+        let fcc = fcc_transform(&bank);
+        let got = exec_std_fcc(&input, h, w, c, &fcc, k, 1);
+        let want = fcc_oracle(&input, h, w, c, &fcc, k, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn std_regular_matches_direct_conv() {
+        let mut rng = Rng::new(93);
+        let (h, w, c, k, n) = (4, 4, 2, 3, 5);
+        let input = rand_vec(&mut rng, h * w * c);
+        let filters = rand_vec(&mut rng, n * k * k * c);
+        let got = exec_std_regular(&input, h, w, c, &filters, n, k, 1);
+        let want = direct_conv(&input, h, w, c, &filters, n, k, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn std_stride2() {
+        let mut rng = Rng::new(94);
+        let (h, w, c, k, n) = (5, 5, 3, 3, 4);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, n * k * k * c), n, k * k * c);
+        let fcc = fcc_transform(&bank);
+        assert_eq!(
+            exec_std_fcc(&input, h, w, c, &fcc, k, 2),
+            fcc_oracle(&input, h, w, c, &fcc, k, 2)
+        );
+    }
+
+    fn dw_fcc_oracle(
+        input: &[i32],
+        h: usize,
+        w: usize,
+        c: usize,
+        fcc: &FccWeights,
+        k: usize,
+        stride: usize,
+    ) -> Vec<i64> {
+        let taps = k * k;
+        let mut bc = vec![0i32; c * taps];
+        for p in 0..c / 2 {
+            for i in 0..taps {
+                bc[(2 * p) * taps + i] = fcc.comp.filter(2 * p)[i] + fcc.means[p];
+                bc[(2 * p + 1) * taps + i] = fcc.comp.filter(2 * p + 1)[i] + fcc.means[p];
+            }
+        }
+        direct_dwconv(input, h, w, c, &bc, k, stride)
+    }
+
+    #[test]
+    fn dw_fcc_dbis_matches_direct() {
+        let mut rng = Rng::new(95);
+        let (h, w, c, k) = (4, 4, 6, 3);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, c * k * k), c, k * k);
+        let fcc = fcc_transform(&bank);
+        let got = exec_dw_fcc(&input, h, w, c, &fcc, k, 1, false);
+        let want = dw_fcc_oracle(&input, h, w, c, &fcc, k, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dw_fcc_reconfig_matches_direct() {
+        let mut rng = Rng::new(96);
+        let (h, w, c, k) = (4, 4, 16, 3);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, c * k * k), c, k * k);
+        let fcc = fcc_transform(&bank);
+        let got = exec_dw_fcc(&input, h, w, c, &fcc, k, 1, true);
+        let want = dw_fcc_oracle(&input, h, w, c, &fcc, k, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dw_fcc_reconfig_odd_pair_tail() {
+        // pairs not divisible by 4 exercises the tail handling
+        let mut rng = Rng::new(97);
+        let (h, w, c, k) = (3, 3, 10, 3);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, c * k * k), c, k * k);
+        let fcc = fcc_transform(&bank);
+        let got = exec_dw_fcc(&input, h, w, c, &fcc, k, 1, true);
+        let want = dw_fcc_oracle(&input, h, w, c, &fcc, k, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dw_regular_matches_direct() {
+        let mut rng = Rng::new(98);
+        let (h, w, c, k) = (4, 4, 5, 3);
+        let input = rand_vec(&mut rng, h * w * c);
+        let filters = rand_vec(&mut rng, c * k * k);
+        let got = exec_dw_regular(&input, h, w, c, &filters, k, 1);
+        let want = direct_dwconv(&input, h, w, c, &filters, k, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dw_5x5_falls_back_to_dbis() {
+        // 5x5 taps don't fit twice -> reconfig path must still be correct
+        // via the DBIS fallback inside exec_dw_fcc
+        let mut rng = Rng::new(99);
+        let (h, w, c, k) = (5, 5, 4, 5);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, c * k * k), c, k * k);
+        let fcc = fcc_transform(&bank);
+        let got = exec_dw_fcc(&input, h, w, c, &fcc, k, 1, true);
+        let want = dw_fcc_oracle(&input, h, w, c, &fcc, k, 1);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,16 @@
+//! Data mapping (paper §III-D): offline decomposition + mapping
+//! strategies for std/pw-conv, dw-conv and FC layers.
+//!
+//! * [`im2col`] — input/window lowering used by both the functional
+//!   executor and the AOT model.
+//! * [`plan`] — the per-layer cycle/resource plan the timing engine and
+//!   the ISA generator consume.
+//! * [`exec`] — functional executor: runs a whole conv layer through the
+//!   bit-true [`crate::arch::pim_macro::PimMacro`] and recovers outputs
+//!   via the ARU; verified against the direct-conv oracle.
+
+pub mod exec;
+pub mod im2col;
+pub mod plan;
+
+pub use plan::{plan_layer, plan_network, LayerPlan, PlanKind};

@@ -1,0 +1,406 @@
+//! Per-layer mapping plans: how a layer tiles onto the PIM fabric and
+//! what it costs (cycles, loads, DRAM traffic) — the quantitative heart
+//! of the Fig. 13/14 reproduction.
+//!
+//! Cycle model (derived from §III-C/D):
+//!
+//! * one *row-step* = activating one stored row across the compartments
+//!   for a full bit-serial input pass = `input_bits` cycles;
+//! * **std/pw**: a row-step covers 32 reduction positions and
+//!   `weights_per_row` stored filters; double-computing mode (DBIS +
+//!   FCC) doubles the output channels per stored filter → 4 channels
+//!   per row-step vs 2 for the baseline;
+//! * **dw**: a filter occupies `k*k` of the 32 compartments; the
+//!   baseline computes 1 channel per row-step (parallelism `9x1x8`),
+//!   FCC+DBIS pairs channels on INP/INN (2 per row-step, `9x1x16`), and
+//!   the reconfigurable unit's split grouping + padding doubles spatial
+//!   utilization again (4 per row-step in two alternating stages,
+//!   `18x1x16`) when `2*k*k` compartments fit;
+//! * weight loads: one 16-bit row write per cycle per macro; FCC halves
+//!   the stored weights (only even comp filters are written);
+//! * FC layers: regular mode, no FCC (paper §III-B).
+
+use crate::config::{ArchConfig, SimConfig};
+use crate::model::{ConvKind, Layer, Network};
+
+/// How a layer maps onto the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKind {
+    /// std/pw conv, regular computing mode (baseline or non-FCC layer).
+    StdRegular,
+    /// std/pw conv, double computing mode (FCC; INP == INN).
+    StdDouble,
+    /// dw conv, regular mode, one channel per row-step.
+    DwRegular,
+    /// dw conv, FCC + DBIS: channel pair per row-step.
+    DwDbis,
+    /// dw conv, FCC + DBIS + reconfigurable unit: 4 channels/row-step.
+    DwReconfig,
+    /// FC / attention — regular mode on the FC path.
+    Fc,
+    /// No PIM work (pool / gap handled by post-process).
+    PostProcess,
+}
+
+/// The plan for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub name: String,
+    pub kind: PlanKind,
+    /// Weight-stationary compute cycles.
+    pub compute_cycles: u64,
+    /// SRAM row-write cycles for weight loading (all passes).
+    pub load_cycles: u64,
+    /// Merge/ARU pipeline flush overhead.
+    pub merge_cycles: u64,
+    /// Weight bytes fetched from DRAM (FCC: halved + means).
+    pub dram_weight_bytes: u64,
+    /// Activation bytes moved on-chip (ping-pong traffic).
+    pub sram_act_bytes: u64,
+    /// Number of weight-reload passes (core capacity overflow).
+    pub passes: u64,
+    /// MAC count (for GOPS/energy accounting).
+    pub macs: u64,
+    /// Spatial utilization of the compartment dimension (0..1).
+    pub utilization: f64,
+    /// Whether FCC is applied to this layer.
+    pub fcc: bool,
+}
+
+impl LayerPlan {
+    /// Cycles the layer occupies the PIM fabric (loads stall compute;
+    /// merge is pipelined and only its flush is exposed).
+    pub fn pim_cycles(&self) -> u64 {
+        self.compute_cycles + self.load_cycles + self.merge_cycles
+    }
+
+    fn empty(name: String, kind: PlanKind) -> Self {
+        LayerPlan {
+            name,
+            kind,
+            compute_cycles: 0,
+            load_cycles: 0,
+            merge_cycles: 0,
+            dram_weight_bytes: 0,
+            sram_act_bytes: 0,
+            passes: 0,
+            macs: 0,
+            utilization: 1.0,
+            fcc: false,
+        }
+    }
+}
+
+/// Merge-pipeline flush cost per weight-reload pass (adder tree depth +
+/// shift-&-add + ARU stages).
+const MERGE_FLUSH_CYCLES: u64 = 8;
+
+fn std_pw_plan(
+    name: &str,
+    l: usize,
+    n: usize,
+    pixels: usize,
+    macs: u64,
+    fcc: bool,
+    arch: &ArchConfig,
+) -> LayerPlan {
+    let cmp = arch.compartments;
+    let wpr = arch.weights_per_row(); // stored filters per row
+    let ib = arch.input_bits as u64;
+
+    // channels produced per row-step per macro
+    let ch_per_step = wpr * if fcc { 2 } else { 1 };
+    // filters assigned per macro (output-channel tiling across macros)
+    let n_per_macro = n.div_ceil(arch.macros);
+    let l_tiles = l.div_ceil(cmp);
+    let steps_per_pixel = l_tiles * n_per_macro.div_ceil(ch_per_step);
+    let compute_cycles = pixels as u64 * steps_per_pixel as u64 * ib;
+
+    // stored 8-bit weights per macro (FCC stores only even comp filters)
+    let stored_per_macro = l * n_per_macro / if fcc { 2 } else { 1 };
+    let rows_needed = steps_per_pixel; // one row per (l-tile, filter-group)
+    let passes = (rows_needed as u64).div_ceil(arch.rows as u64).max(1);
+    let load_cycles = (stored_per_macro as u64).div_ceil(wpr as u64);
+
+    // DRAM: all macros' weights stream in once (+ 1 byte M per pair)
+    let total_weights = l * n;
+    let dram_weight_bytes = if fcc {
+        (total_weights / 2 + n / 2) as u64
+    } else {
+        total_weights as u64
+    };
+
+    let utilization = l as f64 / (l_tiles * cmp) as f64;
+    LayerPlan {
+        name: name.to_string(),
+        kind: if fcc { PlanKind::StdDouble } else { PlanKind::StdRegular },
+        compute_cycles,
+        load_cycles,
+        merge_cycles: passes * MERGE_FLUSH_CYCLES,
+        dram_weight_bytes,
+        sram_act_bytes: (pixels * l) as u64,
+        passes,
+        macs,
+        utilization,
+        fcc,
+    }
+}
+
+fn dw_plan(
+    name: &str,
+    k: usize,
+    c: usize,
+    pixels: usize,
+    macs: u64,
+    fcc_dbis: bool,
+    arch: &ArchConfig,
+) -> LayerPlan {
+    let taps = k * k;
+    let ib = arch.input_bits as u64;
+    // reconfig doubling requires two filter groups to fit spatially
+    let reconfig_ok = arch.reconfig && 2 * taps <= arch.compartments;
+    let (kind, ch_per_step) = if fcc_dbis && reconfig_ok {
+        (PlanKind::DwReconfig, 4)
+    } else if fcc_dbis {
+        (PlanKind::DwDbis, 2)
+    } else {
+        (PlanKind::DwRegular, 1)
+    };
+    // dw-conv cannot parallelize across macros: the pre-process unit
+    // broadcasts ONE input stream to all four macros, but each dw channel
+    // needs its own window — hence the paper's Y = 1 in the 9x1x8 /
+    // 18x1x16 parallelism figures.  All channels run through one macro.
+    let steps_per_pixel = c.div_ceil(ch_per_step);
+    let compute_cycles = pixels as u64 * steps_per_pixel as u64 * ib;
+
+    // stored weights: FCC halves the channel filters
+    let stored_per_macro = taps * c / if fcc_dbis { 2 } else { 1 };
+    let load_cycles = (stored_per_macro as u64).div_ceil(arch.weights_per_row() as u64);
+    let rows_needed = steps_per_pixel;
+    let passes = (rows_needed as u64).div_ceil(arch.rows as u64).max(1);
+
+    let total_weights = taps * c;
+    let dram_weight_bytes = if fcc_dbis {
+        (total_weights / 2 + c / 2) as u64
+    } else {
+        total_weights as u64
+    };
+
+    let spatial = match kind {
+        PlanKind::DwReconfig => 2 * taps,
+        _ => taps,
+    };
+    LayerPlan {
+        name: name.to_string(),
+        kind,
+        compute_cycles,
+        load_cycles,
+        merge_cycles: passes * MERGE_FLUSH_CYCLES,
+        dram_weight_bytes,
+        sram_act_bytes: (pixels * taps * c) as u64 / c.max(1) as u64 * c as u64,
+        passes,
+        macs,
+        utilization: spatial as f64 / arch.compartments as f64,
+        fcc: fcc_dbis,
+    }
+}
+
+/// Build the plan for one layer under `(arch, sim)`.
+pub fn plan_layer(layer: &Layer, arch: &ArchConfig, sim: &SimConfig) -> LayerPlan {
+    match layer {
+        Layer::Conv {
+            name,
+            kind,
+            k,
+            cin,
+            cout,
+            ..
+        } => {
+            let (oh, ow) = layer.out_hw();
+            let pixels = oh * ow;
+            let macs = layer.macs() as u64;
+            match kind {
+                ConvKind::Depthwise => {
+                    let fcc = sim.fcc_dw
+                        && layer.fcc_eligible()
+                        && *cout > sim.scope_threshold
+                        && arch.dbis
+                        && arch.recover;
+                    dw_plan(name, *k, *cin, pixels, macs, fcc, arch)
+                }
+                _ => {
+                    let fcc = sim.fcc_std_pw
+                        && layer.fcc_eligible()
+                        && *cout > sim.scope_threshold
+                        && arch.dbis
+                        && arch.recover;
+                    std_pw_plan(name, k * k * cin, *cout, pixels, macs, fcc, arch)
+                }
+            }
+        }
+        Layer::Fc { name, cin, cout } => {
+            let mut p = std_pw_plan(name, *cin, *cout, 1, layer.macs() as u64, false, arch);
+            p.kind = PlanKind::Fc;
+            p
+        }
+        Layer::Attention { name, dim, tokens } => {
+            // 4 projections + 2 attention matmuls, all on the FC path
+            let mut p = std_pw_plan(name, *dim, 4 * dim, *tokens, layer.macs() as u64, false, arch);
+            p.kind = PlanKind::Fc;
+            p
+        }
+        Layer::Pool { .. } | Layer::Gap { .. } => {
+            LayerPlan::empty(layer.name(), PlanKind::PostProcess)
+        }
+    }
+}
+
+/// Plan a whole network.
+pub fn plan_network(net: &Network, arch: &ArchConfig, sim: &SimConfig) -> Vec<LayerPlan> {
+    net.layers
+        .iter()
+        .map(|l| plan_layer(l, arch, sim))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn conv(kind: ConvKind, k: usize, cin: usize, cout: usize, hw: usize) -> Layer {
+        Layer::Conv {
+            name: "t".into(),
+            kind,
+            k,
+            cin,
+            cout,
+            stride: 1,
+            in_h: hw,
+            in_w: hw,
+        }
+    }
+
+    #[test]
+    fn fcc_halves_std_compute() {
+        let arch = ArchConfig::ddc_pim();
+        let layer = conv(ConvKind::Pointwise, 1, 64, 128, 16);
+        let base = plan_layer(&layer, &arch, &SimConfig::baseline());
+        let ddc = plan_layer(&layer, &arch, &SimConfig::ddc_full());
+        assert_eq!(base.kind, PlanKind::StdRegular);
+        assert_eq!(ddc.kind, PlanKind::StdDouble);
+        assert_eq!(base.compute_cycles, 2 * ddc.compute_cycles);
+        // loads and DRAM traffic roughly halved too
+        assert!(ddc.load_cycles <= base.load_cycles / 2 + 1);
+        assert!(ddc.dram_weight_bytes < base.dram_weight_bytes / 2 + 128);
+    }
+
+    #[test]
+    fn dw_speedup_ladder_is_1_2_4() {
+        let arch = ArchConfig::ddc_pim();
+        let layer = conv(ConvKind::Depthwise, 3, 128, 128, 16);
+        let base = plan_layer(&layer, &arch, &SimConfig::baseline());
+        let full = plan_layer(&layer, &arch, &SimConfig::ddc_full());
+        assert_eq!(base.kind, PlanKind::DwRegular);
+        assert_eq!(full.kind, PlanKind::DwReconfig);
+        assert_eq!(base.compute_cycles, 4 * full.compute_cycles);
+
+        // DBIS-only arch (no reconfig): 2x
+        let mut arch2 = ArchConfig::ddc_pim();
+        arch2.reconfig = false;
+        let dbis = plan_layer(&layer, &arch2, &SimConfig::ddc_full());
+        assert_eq!(dbis.kind, PlanKind::DwDbis);
+        assert_eq!(base.compute_cycles, 2 * dbis.compute_cycles);
+    }
+
+    #[test]
+    fn dw_5x5_no_reconfig_doubling() {
+        // 2*25 > 32 compartments: reconfig cannot double 5x5 dw
+        let arch = ArchConfig::ddc_pim();
+        let layer = conv(ConvKind::Depthwise, 5, 64, 64, 8);
+        let p = plan_layer(&layer, &arch, &SimConfig::ddc_full());
+        assert_eq!(p.kind, PlanKind::DwDbis);
+    }
+
+    #[test]
+    fn dw_parallelism_matches_paper() {
+        // paper §III-D2: 3x3 dw utilization 9/32 baseline, 18/32 with
+        // padding + reconfig
+        let arch = ArchConfig::ddc_pim();
+        let layer = conv(ConvKind::Depthwise, 3, 32, 32, 8);
+        let base = plan_layer(&layer, &arch, &SimConfig::baseline());
+        let full = plan_layer(&layer, &arch, &SimConfig::ddc_full());
+        assert!((base.utilization - 9.0 / 32.0).abs() < 1e-9);
+        assert!((full.utilization - 18.0 / 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fc_never_fcc() {
+        let arch = ArchConfig::ddc_pim();
+        let layer = Layer::Fc {
+            name: "fc".into(),
+            cin: 1280,
+            cout: 10,
+        };
+        let p = plan_layer(&layer, &arch, &SimConfig::ddc_full());
+        assert_eq!(p.kind, PlanKind::Fc);
+        assert!(!p.fcc);
+    }
+
+    #[test]
+    fn scope_threshold_gates_fcc() {
+        let arch = ArchConfig::ddc_pim();
+        let layer = conv(ConvKind::Pointwise, 1, 32, 64, 8);
+        let mut sim = SimConfig::ddc_full();
+        sim.scope_threshold = 64; // cout not > 64
+        let p = plan_layer(&layer, &arch, &sim);
+        assert!(!p.fcc);
+        sim.scope_threshold = 63;
+        assert!(plan_layer(&layer, &arch, &sim).fcc);
+    }
+
+    #[test]
+    fn baseline_arch_ignores_fcc_request() {
+        // without DBIS/ARU hardware the FCC mapping is impossible
+        let arch = ArchConfig::baseline();
+        let layer = conv(ConvKind::Pointwise, 1, 64, 64, 8);
+        let p = plan_layer(&layer, &arch, &SimConfig::ddc_full());
+        assert!(!p.fcc);
+        assert_eq!(p.kind, PlanKind::StdRegular);
+    }
+
+    #[test]
+    fn mobilenet_dw_dominates_baseline_latency() {
+        // the paper's premise: dw-conv dominates compact-NN latency on
+        // the baseline despite having far fewer MACs
+        let arch = ArchConfig::baseline();
+        let net = zoo::mobilenet_v2();
+        let plans = plan_network(&net, &arch, &SimConfig::baseline());
+        let dw_cycles: u64 = plans
+            .iter()
+            .filter(|p| matches!(p.kind, PlanKind::DwRegular))
+            .map(|p| p.pim_cycles())
+            .sum();
+        let total: u64 = plans.iter().map(|p| p.pim_cycles()).sum();
+        let frac = dw_cycles as f64 / total as f64;
+        assert!(frac > 0.5, "dw fraction {frac}");
+        let dw_macs: u64 = plans
+            .iter()
+            .filter(|p| matches!(p.kind, PlanKind::DwRegular))
+            .map(|p| p.macs)
+            .sum();
+        let total_macs: u64 = plans.iter().map(|p| p.macs).sum();
+        assert!((dw_macs as f64 / total_macs as f64) < 0.15);
+    }
+
+    #[test]
+    fn pool_layers_free() {
+        let arch = ArchConfig::ddc_pim();
+        let p = plan_layer(
+            &Layer::Pool { in_h: 8, in_w: 8, c: 64 },
+            &arch,
+            &SimConfig::ddc_full(),
+        );
+        assert_eq!(p.pim_cycles(), 0);
+    }
+}

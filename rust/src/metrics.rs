@@ -1,0 +1,147 @@
+//! Service-level metrics: streaming latency histogram with percentile
+//! queries (used by the coordinator and the serving benches).
+
+use std::time::Duration;
+
+/// Log-bucketed latency histogram (1 µs .. ~68 s range).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [2^i, 2^(i+1)) microseconds
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; 27],
+            count: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Approximate percentile (upper edge of the containing bucket).
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+/// Throughput accumulator (ops over wall time).
+#[derive(Debug, Clone, Default)]
+pub struct Throughput {
+    pub items: u64,
+    pub elapsed: Duration,
+}
+
+impl Throughput {
+    pub fn per_sec(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            return 0.0;
+        }
+        self.items as f64 / self.elapsed.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for ms in [1u64, 2, 3, 4, 5, 10, 20, 50, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 9);
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p99);
+        assert!(p99 >= Duration::from_millis(64)); // bucket upper edge
+    }
+
+    #[test]
+    fn mean_and_max() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(30));
+        assert_eq!(h.mean(), Duration::from_millis(20));
+        assert_eq!(h.max(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        a.record(Duration::from_millis(5));
+        b.record(Duration::from_millis(50));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn empty_safe() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.percentile(99.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput() {
+        let t = Throughput {
+            items: 100,
+            elapsed: Duration::from_secs(2),
+        };
+        assert!((t.per_sec() - 50.0).abs() < 1e-9);
+    }
+}

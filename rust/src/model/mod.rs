@@ -1,0 +1,409 @@
+//! Network IR: the layer/graph representation the mapper and simulator
+//! consume.  Shape books for the paper's benchmark models live in
+//! [`zoo`]; layers are kept in execution order with propagated spatial
+//! dimensions.
+
+pub mod zoo;
+
+/// Convolution flavor — determines the mapping strategy and the PIM-core
+/// computing mode (paper §III-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvKind {
+    /// Standard KxKxCxN convolution.
+    Standard,
+    /// Pointwise 1x1 convolution (mapped like std-conv).
+    Pointwise,
+    /// Depthwise convolution (per-channel filters; the low-parallelism
+    /// case the DBIS + reconfigurable unit accelerate).
+    Depthwise,
+}
+
+/// One layer of the network, with resolved input spatial dims.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    Conv {
+        name: String,
+        kind: ConvKind,
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        in_h: usize,
+        in_w: usize,
+    },
+    Fc {
+        name: String,
+        cin: usize,
+        cout: usize,
+    },
+    /// 2x2/2 pooling — timing handled by the post-process unit.
+    Pool { in_h: usize, in_w: usize, c: usize },
+    /// Global average pool.
+    Gap { in_h: usize, in_w: usize, c: usize },
+    /// Self-attention over the flattened feature map (MobileViT); runs on
+    /// the FC path (regular mode, no FCC).
+    Attention { name: String, dim: usize, tokens: usize },
+}
+
+impl Layer {
+    /// Output spatial dims (SAME padding for conv).
+    pub fn out_hw(&self) -> (usize, usize) {
+        match self {
+            Layer::Conv {
+                stride, in_h, in_w, ..
+            } => (in_h.div_ceil(*stride), in_w.div_ceil(*stride)),
+            Layer::Pool { in_h, in_w, .. } => (in_h / 2, in_w / 2),
+            Layer::Gap { .. } => (1, 1),
+            Layer::Fc { .. } | Layer::Attention { .. } => (1, 1),
+        }
+    }
+
+    /// Number of weights (no bias).
+    pub fn params(&self) -> usize {
+        match self {
+            Layer::Conv {
+                kind: ConvKind::Depthwise,
+                k,
+                cin,
+                ..
+            } => k * k * cin,
+            Layer::Conv { k, cin, cout, .. } => k * k * cin * cout,
+            Layer::Fc { cin, cout, .. } => cin * cout,
+            Layer::Attention { dim, .. } => 4 * dim * dim,
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> usize {
+        match self {
+            Layer::Conv {
+                kind: ConvKind::Depthwise,
+                k,
+                cin,
+                ..
+            } => {
+                let (oh, ow) = self.out_hw();
+                oh * ow * k * k * cin
+            }
+            Layer::Conv { k, cin, cout, .. } => {
+                let (oh, ow) = self.out_hw();
+                oh * ow * k * k * cin * cout
+            }
+            Layer::Fc { cin, cout, .. } => cin * cout,
+            Layer::Attention { dim, tokens, .. } => {
+                4 * tokens * dim * dim + 2 * tokens * tokens * dim
+            }
+            _ => 0,
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, Layer::Conv { .. })
+    }
+
+    /// FCC-eligible: conv layer with an even number of output channels
+    /// (filters pair up).  The paper excludes FC layers by default.
+    pub fn fcc_eligible(&self) -> bool {
+        match self {
+            Layer::Conv { cout, .. } => cout % 2 == 0,
+            _ => false,
+        }
+    }
+
+    pub fn cout(&self) -> usize {
+        match self {
+            Layer::Conv { cout, .. } | Layer::Fc { cout, .. } => *cout,
+            Layer::Attention { dim, .. } => *dim,
+            Layer::Pool { c, .. } | Layer::Gap { c, .. } => *c,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Layer::Conv { name, .. } | Layer::Fc { name, .. } | Layer::Attention { name, .. } => {
+                name.clone()
+            }
+            Layer::Pool { .. } => "pool".into(),
+            Layer::Gap { .. } => "gap".into(),
+        }
+    }
+}
+
+/// A network = named, ordered layer list with consistent shapes.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(Layer::params).sum()
+    }
+
+    pub fn total_macs(&self) -> usize {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    pub fn conv_params(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| l.is_conv())
+            .map(Layer::params)
+            .sum()
+    }
+
+    pub fn fc_params(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Fc { .. }))
+            .map(Layer::params)
+            .sum()
+    }
+
+    /// Paper Table III rightmost column: FC share of total parameters.
+    pub fn fc_param_ratio(&self) -> f64 {
+        100.0 * self.fc_params() as f64 / self.total_params() as f64
+    }
+
+    /// Conv layers within effective scope S(i): "more than i filters"
+    /// (paper §IV-E).  Returns layer indices.
+    pub fn scope(&self, i: usize) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.fcc_eligible() && l.cout() > i)
+            .map(|(idx, _)| idx)
+            .collect()
+    }
+
+    /// Share of parameters covered by S(i) (bar heights in Fig. 14).
+    pub fn scope_param_ratio(&self, i: usize) -> f64 {
+        let scoped: usize = self.scope(i).iter().map(|&ix| self.layers[ix].params()).sum();
+        100.0 * scoped as f64 / self.total_params() as f64
+    }
+}
+
+/// Sequential network builder that tracks spatial dims.
+pub struct NetBuilder {
+    name: String,
+    h: usize,
+    w: usize,
+    c: usize,
+    layers: Vec<Layer>,
+    counter: usize,
+}
+
+impl NetBuilder {
+    pub fn new(name: &str, h: usize, w: usize, c: usize) -> Self {
+        NetBuilder {
+            name: name.to_string(),
+            h,
+            w,
+            c,
+            layers: Vec::new(),
+            counter: 0,
+        }
+    }
+
+    fn next_name(&mut self, prefix: &str) -> String {
+        let n = format!("{prefix}{}", self.counter);
+        self.counter += 1;
+        n
+    }
+
+    pub fn conv(mut self, cout: usize, k: usize, stride: usize) -> Self {
+        let kind = if k == 1 {
+            ConvKind::Pointwise
+        } else {
+            ConvKind::Standard
+        };
+        let name = self.next_name("conv");
+        let layer = Layer::Conv {
+            name,
+            kind,
+            k,
+            cin: self.c,
+            cout,
+            stride,
+            in_h: self.h,
+            in_w: self.w,
+        };
+        let (oh, ow) = layer.out_hw();
+        self.h = oh;
+        self.w = ow;
+        self.c = cout;
+        self.layers.push(layer);
+        self
+    }
+
+    pub fn dwconv(mut self, k: usize, stride: usize) -> Self {
+        let name = self.next_name("dw");
+        let layer = Layer::Conv {
+            name,
+            kind: ConvKind::Depthwise,
+            k,
+            cin: self.c,
+            cout: self.c,
+            stride,
+            in_h: self.h,
+            in_w: self.w,
+        };
+        let (oh, ow) = layer.out_hw();
+        self.h = oh;
+        self.w = ow;
+        self.layers.push(layer);
+        self
+    }
+
+    pub fn pw(self, cout: usize) -> Self {
+        self.conv(cout, 1, 1)
+    }
+
+    /// MobileNetV2 inverted residual (expand t, project to cout).
+    pub fn inv_residual(self, cout: usize, t: usize, stride: usize, k: usize) -> Self {
+        let mid = self.c * t;
+        let mut b = self;
+        if t != 1 {
+            b = b.pw(mid);
+        }
+        b.dwconv(k, stride).pw(cout)
+    }
+
+    pub fn basic_block(self, cout: usize, stride: usize) -> Self {
+        self.conv(cout, 3, stride).conv(cout, 3, 1)
+    }
+
+    pub fn pool(mut self) -> Self {
+        let layer = Layer::Pool {
+            in_h: self.h,
+            in_w: self.w,
+            c: self.c,
+        };
+        self.h /= 2;
+        self.w /= 2;
+        self.layers.push(layer);
+        self
+    }
+
+    pub fn gap(mut self) -> Self {
+        self.layers.push(Layer::Gap {
+            in_h: self.h,
+            in_w: self.w,
+            c: self.c,
+        });
+        self.h = 1;
+        self.w = 1;
+        self
+    }
+
+    pub fn fc(mut self, cout: usize) -> Self {
+        let cin = self.h * self.w * self.c;
+        let name = self.next_name("fc");
+        self.layers.push(Layer::Fc { name, cin, cout });
+        self.h = 1;
+        self.w = 1;
+        self.c = cout;
+        self
+    }
+
+    pub fn attention(mut self, dim: usize) -> Self {
+        let tokens = self.h * self.w;
+        let name = self.next_name("attn");
+        self.layers.push(Layer::Attention { name, dim, tokens });
+        self
+    }
+
+    pub fn build(self) -> Network {
+        Network {
+            name: self.name,
+            layers: self.layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_tracks_shapes() {
+        let net = NetBuilder::new("t", 32, 32, 3)
+            .conv(16, 3, 1)
+            .conv(32, 3, 2)
+            .pool()
+            .gap()
+            .fc(10)
+            .build();
+        match &net.layers[1] {
+            Layer::Conv { in_h, in_w, cin, .. } => {
+                assert_eq!((*in_h, *in_w, *cin), (32, 32, 16));
+            }
+            _ => panic!(),
+        }
+        match &net.layers[2] {
+            Layer::Pool { in_h, .. } => assert_eq!(*in_h, 16),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn macs_and_params() {
+        let l = Layer::Conv {
+            name: "c".into(),
+            kind: ConvKind::Standard,
+            k: 3,
+            cin: 16,
+            cout: 32,
+            stride: 1,
+            in_h: 8,
+            in_w: 8,
+        };
+        assert_eq!(l.params(), 3 * 3 * 16 * 32);
+        assert_eq!(l.macs(), 8 * 8 * 3 * 3 * 16 * 32);
+    }
+
+    #[test]
+    fn dw_params_per_channel() {
+        let l = Layer::Conv {
+            name: "d".into(),
+            kind: ConvKind::Depthwise,
+            k: 3,
+            cin: 64,
+            cout: 64,
+            stride: 1,
+            in_h: 8,
+            in_w: 8,
+        };
+        assert_eq!(l.params(), 9 * 64);
+        assert_eq!(l.macs(), 8 * 8 * 9 * 64);
+    }
+
+    #[test]
+    fn scope_filters_by_cout() {
+        let net = NetBuilder::new("t", 32, 32, 3)
+            .conv(16, 3, 1)
+            .conv(64, 3, 1)
+            .fc(10)
+            .build();
+        assert_eq!(net.scope(0).len(), 2);
+        assert_eq!(net.scope(32), vec![1]);
+        assert!(net.scope(64).is_empty());
+    }
+
+    #[test]
+    fn stride_rounding_same_padding() {
+        let l = Layer::Conv {
+            name: "c".into(),
+            kind: ConvKind::Standard,
+            k: 3,
+            cin: 3,
+            cout: 8,
+            stride: 2,
+            in_h: 15,
+            in_w: 15,
+        };
+        assert_eq!(l.out_hw(), (8, 8));
+    }
+}

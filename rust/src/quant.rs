@@ -1,0 +1,109 @@
+//! Symmetric per-tensor INT8 quantization and 2:4 structured pruning —
+//! the rust-side mirror of `python/compile/fcc/quant.py` (deployment
+//! consumes integer weights; these helpers regenerate/verify them and
+//! feed the mapper and the functional simulator).
+
+pub const INT8_MIN: i32 = -128;
+pub const INT8_MAX: i32 = 127;
+
+/// Symmetric per-tensor scale: `max|w| / 127` (never zero).
+pub fn quant_scale(w: &[f32]) -> f32 {
+    let amax = w.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    amax.max(1e-8) / INT8_MAX as f32
+}
+
+/// Quantize to INT8 codes (stored as i32 for headroom in accumulation).
+pub fn quantize_int8(w: &[f32], scale: f32) -> Vec<i32> {
+    w.iter()
+        .map(|&x| ((x / scale).round() as i32).clamp(INT8_MIN, INT8_MAX))
+        .collect()
+}
+
+/// De-quantize INT8 codes back to float.
+pub fn dequantize_int8(codes: &[i32], scale: f32) -> Vec<f32> {
+    codes.iter().map(|&c| c as f32 * scale).collect()
+}
+
+/// NVIDIA-style 2:4 fine-grained structured pruning: in every group of 4
+/// consecutive weights, zero the 2 smallest-magnitude ones.  Tail
+/// elements (len % 4) are kept.
+pub fn prune_2_4(w: &mut [f32]) {
+    let n4 = (w.len() / 4) * 4;
+    for g in w[..n4].chunks_mut(4) {
+        let mut idx = [0usize, 1, 2, 3];
+        idx.sort_by(|&a, &b| g[a].abs().partial_cmp(&g[b].abs()).unwrap());
+        g[idx[0]] = 0.0;
+        g[idx[1]] = 0.0;
+    }
+}
+
+/// Fraction of exact zeros.
+pub fn sparsity(w: &[f32]) -> f64 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    w.iter().filter(|&&x| x == 0.0).count() as f64 / w.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let s = quant_scale(&w);
+        let back = dequantize_int8(&quantize_int8(&w, s), s);
+        for (a, b) in w.iter().zip(&back) {
+            assert!((a - b).abs() <= s / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn codes_in_range_property() {
+        forall(
+            2,
+            200,
+            |r| {
+                let n = 1 + r.below(64) as usize;
+                (0..n).map(|_| (r.normal() * 3.0) as f32).collect::<Vec<f32>>()
+            },
+            |w| {
+                let s = quant_scale(w);
+                quantize_int8(w, s)
+                    .iter()
+                    .all(|&c| (INT8_MIN..=INT8_MAX).contains(&c))
+            },
+        );
+    }
+
+    #[test]
+    fn prune_is_half_sparse() {
+        let mut rng = Rng::new(3);
+        let mut w: Vec<f32> = (0..128).map(|_| rng.normal() as f32 + 0.1).collect();
+        prune_2_4(&mut w);
+        assert!((sparsity(&w) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prune_keeps_largest() {
+        let mut w = vec![1.0f32, -4.0, 0.5, 3.0];
+        prune_2_4(&mut w);
+        assert_eq!(w, vec![0.0, -4.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn prune_keeps_tail() {
+        let mut w = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        prune_2_4(&mut w);
+        assert_eq!(&w[4..], &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn scale_never_zero() {
+        assert!(quant_scale(&[0.0, 0.0]) > 0.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Fig. 1: qualitative radar comparison — this work vs analog PIM,
+//! analog 6T+LCC and digital 6T+LCC, over the paper's five axes.
+
+use crate::report::fig13::ladder;
+use crate::util::table::{f2, Table};
+
+use super::ReportCtx;
+
+/// Scores on a 0..5 scale per the paper's radar plot semantics.
+struct Radar {
+    name: &'static str,
+    accuracy: f64,
+    area_eff: f64,
+    weight_density: f64,
+    speedup: f64,
+    integration: f64,
+}
+
+pub fn render(_ctx: &ReportCtx) -> String {
+    let (_, _, _, total) = ladder("mobilenet_v2").factors();
+    let rows = [
+        Radar {
+            name: "Analog Others",
+            accuracy: 2.0,
+            area_eff: 2.0,
+            weight_density: 2.0,
+            speedup: 2.0,
+            integration: 3.0,
+        },
+        Radar {
+            name: "Analog 6T+LCC",
+            accuracy: 3.0,
+            area_eff: 2.5,
+            weight_density: 2.5,
+            speedup: 2.5,
+            integration: 3.5,
+        },
+        Radar {
+            name: "Digital 6T+LCC",
+            accuracy: 5.0,
+            area_eff: 3.5,
+            weight_density: 3.0,
+            speedup: 3.0,
+            integration: 5.0,
+        },
+        Radar {
+            name: "This Work (DDC-PIM)",
+            accuracy: 4.7, // negligible FCC accuracy loss
+            area_eff: 5.0,
+            weight_density: 5.0,
+            speedup: (total).min(5.0),
+            integration: 4.5, // slight dip: extra DFFs/adders
+        },
+    ];
+    let mut t = Table::new("Fig. 1 — radar comparison (qualitative, 0-5)").header(&[
+        "Design",
+        "Accuracy",
+        "Area eff.",
+        "Weight density",
+        "Speedup",
+        "Integration",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.name.into(),
+            f2(r.accuracy),
+            f2(r.area_eff),
+            f2(r.weight_density),
+            f2(r.speedup),
+            f2(r.integration),
+        ]);
+    }
+    format!(
+        "{}\n(speedup axis for This Work uses the measured Fig. 13 overall factor)",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_four_designs() {
+        let s = render(&ReportCtx::new("/nonexistent"));
+        assert!(s.contains("This Work"));
+        assert!(s.contains("Digital 6T+LCC"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Fig. 12: implementation summary table + macro area breakdown.
+
+use crate::arch::cost::{CostModel, SYSTEM_POWER_MW};
+use crate::config::{ArchConfig, SimConfig};
+use crate::model::zoo;
+use crate::sim::simulate_network;
+use crate::util::table::{f2, fp, Table};
+
+use super::ReportCtx;
+
+pub fn render(_ctx: &ReportCtx) -> String {
+    let cfg = ArchConfig::ddc_pim();
+    let cost = CostModel::new(cfg.clone());
+    let net = zoo::mobilenet_v2();
+    let run = simulate_network(&net, &cfg, &SimConfig::ddc_full());
+
+    let mut summary = Table::new("Fig. 12(a) — summary").header(&["item", "value", "paper"]);
+    summary.row(vec![
+        "Technology Node".into(),
+        format!("{} nm", cfg.node_nm),
+        "14 nm".into(),
+    ]);
+    summary.row(vec![
+        "Area Estimation".into(),
+        format!("{} mm2", fp(cost.system_area_mm2(), 3)),
+        "0.918 mm2".into(),
+    ]);
+    summary.row(vec![
+        "Power Consumption".into(),
+        format!("{} mW", f2(SYSTEM_POWER_MW)),
+        "11.15 mW".into(),
+    ]);
+    summary.row(vec![
+        "Working Frequency".into(),
+        format!("{} MHz", cfg.freq_mhz),
+        "333 MHz".into(),
+    ]);
+    summary.row(vec![
+        "Peak Performance (8bx8b)".into(),
+        format!("{} GOPS", f2(cfg.peak_gops())),
+        "42.67 GOPS".into(),
+    ]);
+    summary.row(vec![
+        "Macro Energy Efficiency".into(),
+        format!("{} TOPS/W", f2(cost.energy_efficiency_tops_w())),
+        "72.41 TOPS/W".into(),
+    ]);
+    summary.row(vec![
+        "End-to-end Latency (MobileNetV2, CIFAR-scale)".into(),
+        format!("{} ms", fp(run.latency_ms(), 3)),
+        "20.97 ms (ImageNet-scale)".into(),
+    ]);
+    summary.row(vec![
+        "MVM Latency share".into(),
+        format!(
+            "{} ms ({}%)",
+            fp(run.mvm_cycles() as f64 / (cfg.freq_mhz * 1e3), 3),
+            f2(100.0 * run.mvm_cycles() as f64 / run.total_cycles as f64)
+        ),
+        "18.02 of 20.97 ms".into(),
+    ]);
+
+    let mut breakdown =
+        Table::new("Fig. 12(b) — PIM macro area breakdown").header(&["block", "share"]);
+    for (name, frac) in cost.macro_breakdown() {
+        breakdown.row(vec![name.into(), format!("{}%", f2(100.0 * frac))]);
+    }
+    format!("{}\n\n{}", summary.render(), breakdown.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_contains_paper_constants() {
+        let s = render(&ReportCtx::new("/nonexistent"));
+        assert!(s.contains("42.67 GOPS"));
+        assert!(s.contains("72.41 TOPS/W"));
+        assert!(s.contains("86.52%"));
+        assert!(s.contains("5.24%"));
+    }
+}

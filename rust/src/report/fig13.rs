@@ -1,0 +1,134 @@
+//! Fig. 13: speedup ablation ladder for MobileNetV2 and EfficientNet-B0.
+//!
+//! The paper reports three multiplicative contribution factors whose
+//! product is the overall speedup (1.196 x 1.583 x 1.501 = 2.841 for
+//! MobileNetV2):
+//!
+//! * FCC on std/pw-conv (double computing mode),
+//! * FCC on dw-conv with DBIS (channel pairing),
+//! * the DDC-PIM architecture extras (reconfigurable unit / padded dw
+//!   mapping).
+//!
+//! We regenerate the ladder by simulating the four rungs and reporting
+//! the same incremental factors.
+
+use crate::config::{ArchConfig, SimConfig};
+use crate::model::zoo;
+use crate::sim::simulate_network;
+use crate::util::table::{speedup, Table};
+
+use super::ReportCtx;
+
+/// Cycle counts of the four ablation rungs for one model.
+#[derive(Debug, Clone, Copy)]
+pub struct Ladder {
+    pub baseline: u64,
+    pub fcc_std_pw: u64,
+    pub plus_fcc_dw_dbis: u64,
+    pub plus_reconfig: u64,
+}
+
+impl Ladder {
+    /// The three incremental (multiplicative) factors + total.
+    pub fn factors(&self) -> (f64, f64, f64, f64) {
+        let a = self.baseline as f64 / self.fcc_std_pw as f64;
+        let b = self.fcc_std_pw as f64 / self.plus_fcc_dw_dbis as f64;
+        let c = self.plus_fcc_dw_dbis as f64 / self.plus_reconfig as f64;
+        let total = self.baseline as f64 / self.plus_reconfig as f64;
+        (a, b, c, total)
+    }
+}
+
+/// Simulate the ablation ladder for `model`.
+pub fn ladder(model: &str) -> Ladder {
+    let net = zoo::by_name(model).expect("unknown model");
+    let base_arch = ArchConfig::baseline();
+    let ddc = ArchConfig::ddc_pim();
+    let mut no_reconfig = ArchConfig::ddc_pim();
+    no_reconfig.reconfig = false;
+
+    let baseline =
+        simulate_network(&net, &base_arch, &SimConfig::baseline()).total_cycles;
+    // rung 1: FCC on std/pw only (DBIS hardware present, dw unchanged)
+    let mut sim_std = SimConfig::ddc_full();
+    sim_std.fcc_dw = false;
+    let fcc_std_pw = simulate_network(&net, &no_reconfig, &sim_std).total_cycles;
+    // rung 2: + FCC dw with DBIS (no reconfig doubling yet)
+    let plus_dw = simulate_network(&net, &no_reconfig, &SimConfig::ddc_full()).total_cycles;
+    // rung 3: full DDC-PIM (reconfigurable unit)
+    let full = simulate_network(&net, &ddc, &SimConfig::ddc_full()).total_cycles;
+    Ladder {
+        baseline,
+        fcc_std_pw,
+        plus_fcc_dw_dbis: plus_dw,
+        plus_reconfig: full,
+    }
+}
+
+pub fn render(_ctx: &ReportCtx) -> String {
+    let mut t = Table::new(
+        "Fig. 13 — speedup over PIM baseline (incremental multiplicative factors)",
+    )
+    .header(&[
+        "Model",
+        "FCC std/pw",
+        "FCC dw + DBIS",
+        "arch (reconfig)",
+        "overall",
+        "paper overall",
+    ]);
+    for (model, paper) in [("mobilenet_v2", 2.841), ("efficientnet_b0", 2.694)] {
+        let l = ladder(model);
+        let (a, b, c, total) = l.factors();
+        t.row(vec![
+            model.into(),
+            speedup(a),
+            speedup(b),
+            speedup(c),
+            speedup(total),
+            speedup(paper),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factors_multiply_to_total() {
+        let l = ladder("mobilenet_v2");
+        let (a, b, c, total) = l.factors();
+        assert!((a * b * c - total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ladder_is_monotone() {
+        let l = ladder("mobilenet_v2");
+        assert!(l.baseline > l.fcc_std_pw);
+        assert!(l.fcc_std_pw > l.plus_fcc_dw_dbis);
+        assert!(l.plus_fcc_dw_dbis > l.plus_reconfig);
+    }
+
+    #[test]
+    fn mobilenet_overall_in_paper_band() {
+        let (_, _, _, total) = ladder("mobilenet_v2").factors();
+        assert!(total > 2.3 && total < 3.3, "total={total}");
+    }
+
+    #[test]
+    fn efficientnet_below_mobilenet() {
+        let (_, _, _, m) = ladder("mobilenet_v2").factors();
+        let (_, _, _, e) = ladder("efficientnet_b0").factors();
+        assert!(e < m, "e={e} m={m}");
+    }
+
+    #[test]
+    fn std_pw_factor_modest() {
+        // paper: 1.196x / 1.237x — std/pw rung is the smallest
+        let (a, b, _, _) = ladder("mobilenet_v2").factors();
+        assert!(a > 1.05 && a < 1.5, "a={a}");
+        assert!(b > a, "dw rung should dominate: a={a} b={b}");
+    }
+}

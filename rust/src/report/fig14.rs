@@ -1,0 +1,121 @@
+//! Fig. 14: speedup / accuracy trade-off over the effective scope S(i).
+//!
+//! The speedup side is simulated on the full-size shape books by sweeping
+//! the scope threshold; the accuracy side comes from the python training
+//! pass (`accuracy.json`, scaled models — thresholds are scaled
+//! correspondingly, see DESIGN.md §2).
+
+use crate::config::{ArchConfig, SimConfig};
+use crate::model::zoo;
+use crate::sim::simulate_network;
+use crate::util::table::{f2, speedup, Table};
+
+use super::ReportCtx;
+
+/// Full-size scope thresholds swept (paper Fig. 14 uses S(i) up to the
+/// widest layer; usize::MAX = FCC disabled).
+pub const THRESHOLDS: &[usize] = &[usize::MAX, 320, 160, 112, 64, 32, 0];
+
+/// Simulated speedup of DDC-PIM over baseline at scope threshold `i`.
+pub fn speedup_at(model: &str, threshold: usize) -> f64 {
+    let net = zoo::by_name(model).expect("unknown model");
+    let base = simulate_network(&net, &ArchConfig::baseline(), &SimConfig::baseline());
+    let mut sim = SimConfig::ddc_full();
+    sim.scope_threshold = threshold;
+    if threshold == usize::MAX {
+        sim.fcc_std_pw = false;
+        sim.fcc_dw = false;
+    }
+    let ddc = simulate_network(&net, &ArchConfig::ddc_pim(), &sim);
+    base.total_cycles as f64 / ddc.total_cycles as f64
+}
+
+pub fn render(ctx: &ReportCtx) -> String {
+    let acc = ctx.accuracy();
+    let mut out = String::new();
+    for model in ["mobilenet_v2", "efficientnet_b0"] {
+        let net = zoo::by_name(model).unwrap();
+        let mut t = Table::new(format!(
+            "Fig. 14 — {model}: speedup & S(i) parameter share (simulated, full-size shapes)"
+        ))
+        .header(&["S(i)", "params in scope", "speedup vs baseline"]);
+        for &th in THRESHOLDS {
+            let label = if th == usize::MAX {
+                "none".to_string()
+            } else {
+                format!("S({th})")
+            };
+            let share = if th == usize::MAX {
+                0.0
+            } else {
+                net.scope_param_ratio(th)
+            };
+            t.row(vec![
+                label,
+                format!("{}%", f2(share)),
+                speedup(speedup_at(model, th)),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+
+        // accuracy side (scaled models, python pass)
+        if let Some(series) = acc
+            .as_ref()
+            .and_then(|j| j.get("fig14"))
+            .and_then(|j| j.get(model))
+            .and_then(|j| j.as_arr().map(<[_]>::to_vec))
+        {
+            let mut ta = Table::new(format!(
+                "Fig. 14 — {model}: measured accuracy (scaled model, scaled thresholds)"
+            ))
+            .header(&["scaled S(i)", "top-1 acc (%)", "FCC param share (%)"]);
+            for pt in &series {
+                let th = pt.get("threshold").and_then(|v| v.as_i64()).unwrap_or(-1);
+                let a = pt.get("acc").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+                let r = pt
+                    .get("fcc_param_ratio")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0);
+                let label = if th < 0 { "none".into() } else { format!("S({th})") };
+                ta.row(vec![label, f2(a), f2(r)]);
+            }
+            out.push_str(&ta.render());
+            out.push('\n');
+        } else {
+            out.push_str("(accuracy series pending: run `make accuracy`)\n");
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_monotone_in_scope() {
+        // widening the scope (smaller i) can only help
+        let s_none = speedup_at("mobilenet_v2", usize::MAX);
+        let s_mid = speedup_at("mobilenet_v2", 112);
+        let s_all = speedup_at("mobilenet_v2", 0);
+        assert!((s_none - 1.0).abs() < 0.05, "s_none={s_none}");
+        assert!(s_mid >= s_none - 1e-9);
+        assert!(s_all >= s_mid - 1e-9);
+        assert!(s_all > 2.0);
+    }
+
+    #[test]
+    fn s112_speedup_near_paper_2x() {
+        // paper: S(112) covers 92.58% of params, 2.01x speedup
+        let s = speedup_at("mobilenet_v2", 112);
+        assert!(s > 1.4 && s < 2.8, "s={s}");
+    }
+
+    #[test]
+    fn renders_without_accuracy() {
+        let s = render(&ReportCtx::new("/nonexistent"));
+        assert!(s.contains("S(112)"));
+        assert!(s.contains("pending"));
+    }
+}

@@ -1,0 +1,104 @@
+//! Report generators: regenerate every table and figure of the paper's
+//! evaluation section from the simulator, the cost model and the
+//! python-side accuracy results (`artifacts/accuracy.json`).
+//!
+//! | generator | paper artifact |
+//! |---|---|
+//! | [`fig1`]   | radar comparison (qualitative)            |
+//! | [`fig2`]   | normalized weight density / area eff bars |
+//! | [`fig12`]  | implementation summary + area breakdown   |
+//! | [`fig13`]  | speedup ablation ladder                   |
+//! | [`fig14`]  | speedup/accuracy vs effective scope S(i)  |
+//! | [`table2`] | comparison with prior PIM macros          |
+//! | [`table3`] | FCC accuracy across models/layers         |
+//! | [`table4`] | FCC + 2:4 pruning                         |
+//! | [`table5`] | MobileViT-XS                              |
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Shared context: where artifacts (accuracy.json) live.
+pub struct ReportCtx {
+    pub artifact_dir: String,
+}
+
+impl ReportCtx {
+    pub fn new(artifact_dir: impl Into<String>) -> Self {
+        ReportCtx {
+            artifact_dir: artifact_dir.into(),
+        }
+    }
+
+    /// Load accuracy.json if the python training pass has produced it.
+    pub fn accuracy(&self) -> Option<Json> {
+        let path = Path::new(&self.artifact_dir).join("accuracy.json");
+        let text = std::fs::read_to_string(path).ok()?;
+        Json::parse(&text).ok()
+    }
+}
+
+/// Render every report in experiment-index order.
+pub fn render_all(ctx: &ReportCtx) -> String {
+    let mut out = String::new();
+    for (name, body) in [
+        ("fig1", fig1::render(ctx)),
+        ("fig2", fig2::render(ctx)),
+        ("fig12", fig12::render(ctx)),
+        ("table2", table2::render(ctx)),
+        ("fig13", fig13::render(ctx)),
+        ("fig14", fig14::render(ctx)),
+        ("table3", table3::render(ctx)),
+        ("table4", table4::render(ctx)),
+        ("table5", table5::render(ctx)),
+    ] {
+        out.push_str(&format!("\n===== {name} =====\n{body}\n"));
+    }
+    out
+}
+
+/// Dispatch by name (CLI `report <name>`).
+pub fn render_named(ctx: &ReportCtx, name: &str) -> Option<String> {
+    Some(match name {
+        "fig1" => fig1::render(ctx),
+        "fig2" => fig2::render(ctx),
+        "fig12" => fig12::render(ctx),
+        "fig13" => fig13::render(ctx),
+        "fig14" => fig14::render(ctx),
+        "table2" => table2::render(ctx),
+        "table3" => table3::render(ctx),
+        "table4" => table4::render(ctx),
+        "table5" => table5::render(ctx),
+        "all" => render_all(ctx),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_reports_render_without_accuracy_file() {
+        let ctx = ReportCtx::new("/nonexistent");
+        let s = render_all(&ctx);
+        assert!(s.contains("fig13"));
+        assert!(s.len() > 1000);
+    }
+
+    #[test]
+    fn named_dispatch() {
+        let ctx = ReportCtx::new("/nonexistent");
+        assert!(render_named(&ctx, "table2").is_some());
+        assert!(render_named(&ctx, "nope").is_none());
+    }
+}

@@ -1,0 +1,230 @@
+//! Table II: comparison with prior PIM macros.
+//!
+//! Prior-work rows are the paper's published constants; the "This Work"
+//! row is *recomputed* from our cost model and architecture config, so
+//! any change to the modelled macro propagates here.
+
+use crate::arch::cost::CostModel;
+use crate::config::ArchConfig;
+use crate::util::table::{f2, Table};
+
+use super::ReportCtx;
+
+/// One prior-work column of Table II.
+pub struct PriorMacro {
+    pub name: &'static str,
+    pub device: &'static str,
+    pub node_nm: f64,
+    pub array_kb: f64,
+    pub weight_capacity_kb: f64,
+    pub cell: &'static str,
+    pub area_mm2: f64,
+    pub area_eff_gops_mm2_28: f64,
+    pub energy_eff_tops_w: f64,
+    pub precision: &'static str,
+}
+
+/// The seven prior works of Table II (paper constants).
+pub fn prior_works() -> Vec<PriorMacro> {
+    vec![
+        PriorMacro {
+            name: "Nat.Elec.'22 [33]",
+            device: "PCM",
+            node_nm: 14.0,
+            array_kb: 64.0,
+            weight_capacity_kb: 64.0,
+            cell: "8T4R",
+            area_mm2: 1.392,
+            area_eff_gops_mm2_28: 177.38,
+            energy_eff_tops_w: 9.76,
+            precision: "8b/8b",
+        },
+        PriorMacro {
+            name: "JETCAS'22 [34]",
+            device: "PCM",
+            node_nm: 22.0,
+            array_kb: 64.0,
+            weight_capacity_kb: 64.0,
+            cell: "/",
+            area_mm2: 0.83,
+            area_eff_gops_mm2_28: 712.15,
+            energy_eff_tops_w: 6.39,
+            precision: "8b/4b",
+        },
+        PriorMacro {
+            name: "Nat.Elec.'21 [35]",
+            device: "RRAM",
+            node_nm: 22.0,
+            array_kb: 4096.0,
+            weight_capacity_kb: 4096.0,
+            cell: "1T1R",
+            area_mm2: 6.0,
+            area_eff_gops_mm2_28: 3.47,
+            energy_eff_tops_w: 15.60,
+            precision: "8b/8b",
+        },
+        PriorMacro {
+            name: "VLSI'21 [11]",
+            device: "SRAM",
+            node_nm: 28.0,
+            array_kb: 3456.0,
+            weight_capacity_kb: 3456.0,
+            cell: "10T1C",
+            area_mm2: 20.9,
+            area_eff_gops_mm2_28: 234.0,
+            energy_eff_tops_w: 588.0,
+            precision: "1b/1b",
+        },
+        PriorMacro {
+            name: "ISSCC'20 [24]",
+            device: "SRAM",
+            node_nm: 28.0,
+            array_kb: 64.0,
+            weight_capacity_kb: 64.0,
+            cell: "6T+LCC",
+            area_mm2: 0.362,
+            area_eff_gops_mm2_28: 84.2,
+            energy_eff_tops_w: 14.1,
+            precision: "8b/8b",
+        },
+        PriorMacro {
+            name: "ISSCC'21 [26]",
+            device: "SRAM",
+            node_nm: 22.0,
+            array_kb: 64.0,
+            weight_capacity_kb: 64.0,
+            cell: "6T",
+            area_mm2: 0.202,
+            area_eff_gops_mm2_28: 2802.5,
+            energy_eff_tops_w: 24.7,
+            precision: "8b/8b",
+        },
+        PriorMacro {
+            name: "ISSCC'22 [14]",
+            device: "SRAM",
+            node_nm: 28.0,
+            array_kb: 32.0,
+            weight_capacity_kb: 32.0,
+            cell: "6T+LCC",
+            area_mm2: 0.040,
+            area_eff_gops_mm2_28: 133.3,
+            energy_eff_tops_w: 27.38,
+            precision: "8b/8b",
+        },
+    ]
+}
+
+impl PriorMacro {
+    pub fn integration_density(&self) -> f64 {
+        self.array_kb / self.area_mm2
+    }
+
+    pub fn integration_density_28(&self) -> f64 {
+        self.integration_density() / (28.0 / self.node_nm).powi(2)
+    }
+
+    pub fn weight_density(&self) -> f64 {
+        self.weight_capacity_kb / self.area_mm2
+    }
+
+    pub fn weight_density_28(&self) -> f64 {
+        self.weight_density() / (28.0 / self.node_nm).powi(2)
+    }
+}
+
+pub fn render(_ctx: &ReportCtx) -> String {
+    let cfg = ArchConfig::ddc_pim();
+    let cost = CostModel::new(cfg.clone());
+    let mut t = Table::new(
+        "Table II — comparison with prior works for PIM macros (This Work recomputed from the cost model)",
+    )
+    .header(&[
+        "Macro",
+        "Device",
+        "Node",
+        "Array(Kb)",
+        "WeightCap(Kb)",
+        "Area(mm2)",
+        "IntDens(Kb/mm2@28)",
+        "WtDens(Kb/mm2@28)",
+        "AreaEff(GOPS/mm2@28)",
+        "EnergyEff(TOPS/W)",
+    ]);
+    for p in prior_works() {
+        t.row(vec![
+            p.name.into(),
+            p.device.into(),
+            format!("{}nm", p.node_nm),
+            f2(p.array_kb),
+            f2(p.weight_capacity_kb),
+            format!("{:.3}", p.area_mm2),
+            f2(p.integration_density_28()),
+            f2(p.weight_density_28()),
+            f2(p.area_eff_gops_mm2_28),
+            f2(p.energy_eff_tops_w),
+        ]);
+    }
+    t.row(vec![
+        "This Work (DDC-PIM)".into(),
+        "SRAM".into(),
+        format!("{}nm", cfg.node_nm),
+        f2(cfg.macro_array_kb()),
+        f2(cfg.macro_weight_capacity_kb()),
+        format!("{:.4}", cost.macro_area_mm2()),
+        f2(cost.integration_density(true)),
+        f2(cost.weight_density(true)),
+        f2(cost.area_efficiency(true)),
+        f2(cost.energy_efficiency_tops_w()),
+    ]);
+    // the paper's "up to 8.41x" compares against SRAM-based priors
+    let sram: Vec<f64> = prior_works()
+        .iter()
+        .filter(|p| p.device == "SRAM")
+        .map(|p| p.weight_density_28())
+        .collect();
+    let weakest_sram = sram.iter().copied().fold(f64::MAX, f64::min);
+    let strongest_sram = sram.iter().copied().fold(f64::MIN, f64::max);
+    format!(
+        "{}\nweight-density improvement vs SRAM priors: up to {:.2}x (weakest) / {:.2}x (strongest)\narea-efficiency vs ISSCC'22 [14]: {:.2}x",
+        t.render(),
+        cost.weight_density(true) / weakest_sram,
+        cost.weight_density(true) / strongest_sram,
+        cost.area_efficiency(true) / 133.3,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_densities_match_paper() {
+        let works = prior_works();
+        // VLSI'21: 165.4 Kb/mm² at 28 nm (already 28 nm)
+        let pimca = &works[3];
+        assert!((pimca.integration_density_28() - 165.4).abs() < 0.5);
+        // ISSCC'22 [14]: 800 Kb/mm²
+        let isscc22 = &works[6];
+        assert!((isscc22.integration_density_28() - 800.0).abs() < 1.0);
+        // Nat.Elec.'22: 45.98 @ 14nm -> 11.52 @ 28nm
+        let ne22 = &works[0];
+        assert!((ne22.integration_density() - 45.98).abs() < 0.05);
+        assert!((ne22.integration_density_28() - 11.49).abs() < 0.1);
+    }
+
+    #[test]
+    fn this_work_wins_weight_density() {
+        let ctx = ReportCtx::new("/nonexistent");
+        let s = render(&ctx);
+        assert!(s.contains("This Work"));
+        // headline: 8.41x vs weakest prior (PIMCA 165.4)
+        assert!(s.contains("8.41x") || s.contains("8.40x"), "{s}");
+    }
+
+    #[test]
+    fn area_eff_ratio_in_report() {
+        let ctx = ReportCtx::new("/nonexistent");
+        let s = render(&ctx);
+        assert!(s.contains("1.74x") || s.contains("1.73x"), "{s}");
+    }
+}

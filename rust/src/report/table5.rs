@@ -1,0 +1,49 @@
+//! Table V: FCC on MobileViT-XS conv layers (transformer-variant
+//! applicability check).
+
+use crate::model::zoo;
+use crate::util::table::{f2, Table};
+
+use super::ReportCtx;
+
+pub fn render(ctx: &ReportCtx) -> String {
+    let acc = ctx.accuracy().and_then(|j| j.get("table5").cloned());
+    let net = zoo::mobilevit_xs();
+    let conv_share = 100.0 * net.conv_params() as f64 / net.total_params() as f64;
+
+    let mut t = Table::new("Table V — MobileViT-XS (scaled) accuracy").header(&[
+        "Method",
+        "Top-1 acc (%)",
+    ]);
+    let g = |k: &str| {
+        acc.as_ref()
+            .and_then(|j| j.get(k))
+            .and_then(|v| v.as_f64())
+    };
+    match (g("original_acc"), g("fcc_acc")) {
+        (Some(orig), Some(fcc)) => {
+            t.row(vec!["Original".into(), f2(orig)]);
+            t.row(vec!["FCC (conv layers)".into(), f2(fcc)]);
+        }
+        _ => {
+            t.row(vec!["pending (run `make accuracy`)".into(), "-".into()]);
+        }
+    }
+    format!(
+        "{}\nconv layers hold {}% of MobileViT-XS parameters (full-size book);\npaper: 90.88 -> 89.04 with FCC on conv layers only.",
+        t.render(),
+        f2(conv_share)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders() {
+        let s = render(&ReportCtx::new("/nonexistent"));
+        assert!(s.contains("MobileViT-XS"));
+        assert!(s.contains("conv layers hold"));
+    }
+}

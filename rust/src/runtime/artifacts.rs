@@ -1,0 +1,152 @@
+//! Artifact registry + goldens loader.
+//!
+//! `goldens.json` (written by `python/compile/aot.py`) carries
+//! deterministic inputs/outputs for every artifact; the integration
+//! tests replay them through PJRT to prove the AOT bridge is numerically
+//! faithful.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// The standard artifact set `make artifacts` produces.
+pub const MODEL_B1: &str = "model_b1";
+pub const MODEL_B8: &str = "model_b8";
+pub const FCC_MVM: &str = "fcc_mvm";
+pub const PIM_MAC: &str = "pim_mac";
+
+pub const ALL: &[&str] = &[MODEL_B1, MODEL_B8, FCC_MVM, PIM_MAC];
+
+/// One golden test vector.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub x: Vec<f64>,
+    pub x_shape: Vec<i64>,
+    pub w: Option<Vec<f64>>,
+    pub w_shape: Vec<i64>,
+    pub m: Option<Vec<f64>>,
+    pub m_shape: Vec<i64>,
+    pub out: Vec<f64>,
+    pub out_shape: Vec<i64>,
+}
+
+impl Golden {
+    fn from_json(j: &Json) -> Result<Golden> {
+        let vecf = |k: &str| -> Option<Vec<f64>> { j.get(k).and_then(Json::as_f64_vec) };
+        let shape = |k: &str| -> Vec<i64> {
+            j.get(k).and_then(Json::as_i64_vec).unwrap_or_default()
+        };
+        Ok(Golden {
+            x: vecf("x").ok_or_else(|| anyhow!("golden missing x"))?,
+            x_shape: shape("x_shape"),
+            w: vecf("w"),
+            w_shape: shape("w_shape"),
+            m: vecf("m"),
+            m_shape: shape("m_shape"),
+            out: vecf("out").ok_or_else(|| anyhow!("golden missing out"))?,
+            out_shape: shape("out_shape"),
+        })
+    }
+
+    pub fn x_i32(&self) -> Vec<i32> {
+        self.x.iter().map(|&v| v as i32).collect()
+    }
+
+    pub fn w_i32(&self) -> Vec<i32> {
+        self.w.as_deref().unwrap_or(&[]).iter().map(|&v| v as i32).collect()
+    }
+
+    pub fn m_i32(&self) -> Vec<i32> {
+        self.m.as_deref().unwrap_or(&[]).iter().map(|&v| v as i32).collect()
+    }
+
+    pub fn x_f32(&self) -> Vec<f32> {
+        self.x.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn out_f32(&self) -> Vec<f32> {
+        self.out.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn out_i32(&self) -> Vec<i32> {
+        self.out.iter().map(|&v| v as i32).collect()
+    }
+}
+
+/// The model's weight tensors (the AOT model takes weights as
+/// parameters — see `python/compile/aot.py`): flattened f32 data +
+/// shape per tensor, in call order.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub tensors: Vec<(Vec<f32>, Vec<i64>)>,
+}
+
+/// Load `<dir>/model_weights.{json,bin}`.
+pub fn load_model_weights(dir: impl AsRef<Path>) -> Result<ModelWeights> {
+    let dir = dir.as_ref();
+    let manifest = std::fs::read_to_string(dir.join("model_weights.json"))
+        .with_context(|| format!("reading {}/model_weights.json", dir.display()))?;
+    let j = Json::parse(&manifest).context("parsing model_weights.json")?;
+    let shapes: Vec<Vec<i64>> = j
+        .get("shapes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing shapes"))?
+        .iter()
+        .filter_map(Json::as_i64_vec)
+        .collect();
+    let bin = std::fs::read(dir.join("model_weights.bin"))
+        .with_context(|| format!("reading {}/model_weights.bin", dir.display()))?;
+    let mut tensors = Vec::with_capacity(shapes.len());
+    let mut off = 0usize;
+    for shape in shapes {
+        let n: i64 = shape.iter().product();
+        let bytes = n as usize * 4;
+        anyhow::ensure!(off + bytes <= bin.len(), "weights bin truncated");
+        let data: Vec<f32> = bin[off..off + bytes]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        tensors.push((data, shape));
+        off += bytes;
+    }
+    anyhow::ensure!(off == bin.len(), "weights bin has trailing bytes");
+    Ok(ModelWeights { tensors })
+}
+
+/// Load all goldens from `<dir>/goldens.json`.
+pub fn load_goldens(dir: impl AsRef<Path>) -> Result<Vec<(String, Golden)>> {
+    let path = dir.as_ref().join("goldens.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text).context("parsing goldens.json")?;
+    let obj = j.as_obj().ok_or_else(|| anyhow!("goldens.json not an object"))?;
+    let mut out = Vec::new();
+    for (k, v) in obj {
+        out.push((k.clone(), Golden::from_json(v)?));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn golden_parses() {
+        let j = Json::parse(
+            r#"{"x":[1,2],"x_shape":[1,2],"out":[3],"out_shape":[1,1]}"#,
+        )
+        .unwrap();
+        let g = Golden::from_json(&j).unwrap();
+        assert_eq!(g.x_i32(), vec![1, 2]);
+        assert_eq!(g.out_f32(), vec![3.0]);
+        assert!(g.w.is_none());
+    }
+
+    #[test]
+    fn golden_requires_x_and_out() {
+        let j = Json::parse(r#"{"x":[1]}"#).unwrap();
+        assert!(Golden::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Cycle-accurate simulation engine.
+//!
+//! Consumes the mapper's [`crate::mapping::LayerPlan`]s (or the assembled
+//! ISA stream) and produces per-layer and end-to-end cycle/energy
+//! statistics, modelling the DRAM prefetch overlap the paper describes
+//! (§III-D: next-layer weights stream in behind the current layer's
+//! compute).
+
+pub mod engine;
+pub mod stats;
+
+pub use engine::{simulate, simulate_network, Simulation};
+pub use stats::{LayerStats, RunStats};

@@ -1,0 +1,112 @@
+//! Simulation statistics containers.
+
+use crate::mapping::PlanKind;
+
+/// Per-layer simulation outcome.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    pub name: String,
+    pub kind: PlanKind,
+    /// Cycles the layer occupied the fabric (incl. exposed DRAM stalls).
+    pub cycles: u64,
+    pub compute_cycles: u64,
+    pub load_cycles: u64,
+    pub exposed_dram_cycles: u64,
+    pub macs: u64,
+    pub dram_bytes: u64,
+    pub sram_bytes: u64,
+    pub energy_mj: f64,
+    pub fcc: bool,
+}
+
+/// Whole-run outcome.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub layers: Vec<LayerStats>,
+    pub total_cycles: u64,
+    pub total_macs: u64,
+    pub total_dram_bytes: u64,
+    pub total_energy_mj: f64,
+    pub freq_mhz: f64,
+}
+
+impl RunStats {
+    pub fn latency_ms(&self) -> f64 {
+        self.total_cycles as f64 / (self.freq_mhz * 1e3)
+    }
+
+    /// Achieved GOPS (2 ops per MAC).
+    pub fn achieved_gops(&self) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        2.0 * self.total_macs as f64 / (self.total_cycles as f64 / (self.freq_mhz * 1e6)) / 1e9
+    }
+
+    /// Achieved TOPS/W over the run.
+    pub fn achieved_tops_per_w(&self) -> f64 {
+        if self.total_energy_mj <= 0.0 {
+            return 0.0;
+        }
+        let ops = 2.0 * self.total_macs as f64;
+        let joules = self.total_energy_mj * 1e-3;
+        ops / joules / 1e12
+    }
+
+    /// Cycles spent in layers matching a predicate.
+    pub fn cycles_where(&self, pred: impl Fn(&LayerStats) -> bool) -> u64 {
+        self.layers.iter().filter(|l| pred(l)).map(|l| l.cycles).sum()
+    }
+
+    /// Latency fraction of depthwise layers (the paper's bottleneck
+    /// analysis).
+    pub fn dw_fraction(&self) -> f64 {
+        let dw = self.cycles_where(|l| {
+            matches!(
+                l.kind,
+                PlanKind::DwRegular | PlanKind::DwDbis | PlanKind::DwReconfig
+            )
+        });
+        dw as f64 / self.total_cycles.max(1) as f64
+    }
+
+    /// MVM-only latency (paper Fig. 12(a) reports 18.02 of 20.97 ms).
+    pub fn mvm_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.compute_cycles).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(cycles: u64, macs: u64) -> RunStats {
+        RunStats {
+            layers: vec![],
+            total_cycles: cycles,
+            total_macs: macs,
+            total_dram_bytes: 0,
+            total_energy_mj: 1e-3,
+            freq_mhz: 333.0,
+        }
+    }
+
+    #[test]
+    fn latency_at_333mhz() {
+        let s = stats(333_000, 0);
+        assert!((s.latency_ms() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gops_math() {
+        // 64 MACs/cycle at 333 MHz = 42.6 GOPS
+        let s = stats(1_000_000, 64_000_000);
+        assert!((s.achieved_gops() - 42.624).abs() < 0.01);
+    }
+
+    #[test]
+    fn tops_per_w() {
+        let s = stats(1, 500_000); // 1e6 ops over 1e-6 J = 1 TOPS/W... scaled
+        assert!(s.achieved_tops_per_w() > 0.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! Tiny benchmark harness (offline substitute for criterion).
+//!
+//! `cargo bench` targets are plain `harness = false` binaries that call
+//! [`bench`]: warmup, then timed iterations with mean / min / max and
+//! iterations-per-second, printed in a stable, grep-friendly format.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Time `f` over `iters` iterations (after `warmup` untimed runs).
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().copied().fold(f64::MAX, f64::min);
+    let max = samples.iter().copied().fold(f64::MIN, f64::max);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        min_ns: min,
+        max_ns: max,
+    };
+    println!(
+        "bench {:<48} {:>12.1} ns/iter (min {:>10.1}, max {:>10.1}, {:>10.2}/s, n={})",
+        r.name,
+        r.mean_ns,
+        r.min_ns,
+        r.max_ns,
+        r.per_sec(),
+        r.iters
+    );
+    r
+}
+
+/// Report a derived scalar (speedups, ratios) in the bench output.
+pub fn report(name: &str, value: f64, unit: &str) {
+    println!("value {name:<48} {value:>12.4} {unit}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let r = bench("noop", 1, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
+        assert!(r.per_sec() > 0.0);
+    }
+}

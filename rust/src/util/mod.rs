@@ -1,0 +1,12 @@
+//! Small self-contained substrates: JSON, deterministic PRNG, a mini
+//! property-testing harness and ASCII table rendering.
+//!
+//! These exist because the build is fully offline (vendored crates only):
+//! no serde/proptest/prettytable — so the substrates are part of the
+//! library, per the reproduction ground rules.
+
+pub mod benchkit;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

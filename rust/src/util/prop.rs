@@ -1,0 +1,80 @@
+//! Mini property-testing harness (offline substrate for proptest).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` random inputs
+//! drawn by `gen` from a deterministic [`Rng`]; on failure it reports the
+//! case index and the debug form of the failing input so the exact case
+//! can be replayed from the seed.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Run `prop` against `cases` generated inputs; panic with a replayable
+/// report on the first failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so the
+/// failure message can carry diagnostic detail.
+pub fn forall_explain<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed}): {msg}\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(1, 100, |r| r.range_i64(0, 10), |x| *x < 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        forall(2, 100, |r| r.range_i64(0, 10), |x| *x < 9);
+    }
+
+    #[test]
+    fn explain_variant() {
+        forall_explain(
+            3,
+            50,
+            |r| (r.int8(), r.int8()),
+            |(a, b)| {
+                let s = (*a as i32) + (*b as i32);
+                if s.abs() <= 256 {
+                    Ok(())
+                } else {
+                    Err(format!("sum {s} out of range"))
+                }
+            },
+        );
+    }
+}

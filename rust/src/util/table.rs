@@ -1,0 +1,132 @@
+//! ASCII table rendering for the report generators (the paper's tables
+//! and figure data series are printed as aligned text tables).
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Table {
+            title: Some(title.into()),
+            ..Default::default()
+        }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cols: Vec<String>) -> &mut Self {
+        self.rows.push(cols);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .rows
+            .iter()
+            .map(Vec::len)
+            .chain(std::iter::once(self.header.len()))
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncols];
+        let measure = |row: &[String], widths: &mut Vec<usize>| {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        };
+        measure(&self.header, &mut widths);
+        for row in &self.rows {
+            measure(row, &mut widths);
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |row: &[String]| {
+            let mut s = String::from("|");
+            for (i, w) in widths.iter().enumerate() {
+                let cell = row.get(i).map(String::as_str).unwrap_or("");
+                s.push_str(&format!(" {:<width$} |", cell, width = w));
+            }
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            out.push_str(&sep);
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+/// Format helper: `12.345` -> `"12.35"`.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format helper with arbitrary precision.
+pub fn fp(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+/// Format a speedup, e.g. `2.841x`.
+pub fn speedup(x: f64) -> String {
+    format!("{x:.3}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo").header(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| name      | value |"), "{s}");
+        assert!(s.contains("| long-name | 2.5   |"), "{s}");
+        // all separator lines equal length
+        let lens: Vec<usize> = s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn handles_ragged_rows() {
+        let mut t = Table::new("r").header(&["a", "b", "c"]);
+        t.row(vec!["1".into()]);
+        let s = t.render();
+        assert!(s.contains("| 1 |"));
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(f2(12.345), "12.35"); // rounds
+        assert_eq!(speedup(2.8411), "2.841x");
+        assert_eq!(fp(1.23456, 3), "1.235");
+    }
+}

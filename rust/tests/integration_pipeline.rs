@@ -1,0 +1,164 @@
+//! Integration: the full mapper -> functional-fabric -> merge pipeline
+//! against direct-conv oracles, and the timing engine's cross-module
+//! consistency on real networks.
+
+use ddc_pim::config::{ArchConfig, SimConfig};
+use ddc_pim::fcc::{fcc_transform, FilterBank};
+use ddc_pim::isa::{assemble, Instr, Op};
+use ddc_pim::mapping::exec::{exec_dw_fcc, exec_std_fcc, exec_std_regular};
+use ddc_pim::mapping::im2col::{direct_conv, direct_dwconv};
+use ddc_pim::mapping::{plan_network, PlanKind};
+use ddc_pim::model::zoo;
+use ddc_pim::sim::simulate_network;
+use ddc_pim::util::prop::forall_explain;
+use ddc_pim::util::rng::Rng;
+
+/// Property: for ANY random layer shape + filters, the DDC functional
+/// path (half the weights stored, Q-bar recovery, ARU) equals direct
+/// convolution with the full biased-comp bank.
+#[test]
+fn property_std_fcc_equals_direct_conv() {
+    forall_explain(
+        1234,
+        12,
+        |r: &mut Rng| {
+            let h = 2 + r.below(4) as usize;
+            let c = 1 + r.below(6) as usize;
+            let n = 2 * (1 + r.below(4) as usize);
+            let k = [1usize, 3][r.below(2) as usize];
+            let stride = 1 + r.below(2) as usize;
+            let input: Vec<i32> = (0..h * h * c).map(|_| r.int8() as i32).collect();
+            let bank: Vec<i32> = (0..n * k * k * c).map(|_| r.int8() as i32).collect();
+            (h, c, n, k, stride, input, bank)
+        },
+        |(h, c, n, k, stride, input, bank)| {
+            let l = k * k * c;
+            let fcc = fcc_transform(&FilterBank::new(bank.clone(), *n, l));
+            let got = exec_std_fcc(input, *h, *h, *c, &fcc, *k, *stride);
+            let mut bc = vec![0i32; n * l];
+            for p in 0..n / 2 {
+                for i in 0..l {
+                    bc[(2 * p) * l + i] = fcc.comp.filter(2 * p)[i] + fcc.means[p];
+                    bc[(2 * p + 1) * l + i] = fcc.comp.filter(2 * p + 1)[i] + fcc.means[p];
+                }
+            }
+            let want = direct_conv(input, *h, *h, *c, &bc, *n, *k, *stride);
+            if got == want {
+                Ok(())
+            } else {
+                Err("DDC functional path != direct conv".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn property_dw_fcc_equals_direct_conv() {
+    forall_explain(
+        987,
+        10,
+        |r: &mut Rng| {
+            let h = 3 + r.below(3) as usize;
+            let c = 2 * (1 + r.below(6) as usize);
+            let reconfig = r.below(2) == 1;
+            let input: Vec<i32> = (0..h * h * c).map(|_| r.int8() as i32).collect();
+            let bank: Vec<i32> = (0..c * 9).map(|_| r.int8() as i32).collect();
+            (h, c, reconfig, input, bank)
+        },
+        |(h, c, reconfig, input, bank)| {
+            let fcc = fcc_transform(&FilterBank::new(bank.clone(), *c, 9));
+            let got = exec_dw_fcc(input, *h, *h, *c, &fcc, 3, 1, *reconfig);
+            let mut bc = vec![0i32; c * 9];
+            for p in 0..c / 2 {
+                for i in 0..9 {
+                    bc[(2 * p) * 9 + i] = fcc.comp.filter(2 * p)[i] + fcc.means[p];
+                    bc[(2 * p + 1) * 9 + i] = fcc.comp.filter(2 * p + 1)[i] + fcc.means[p];
+                }
+            }
+            let want = direct_dwconv(input, *h, *h, *c, &bc, 3, 1);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("dw mismatch (reconfig={reconfig})"))
+            }
+        },
+    );
+}
+
+/// The FCC and non-FCC functional paths agree when fed equivalent banks:
+/// regular execution of the recomposed biased-comp filters == FCC
+/// execution of the stored halves.
+#[test]
+fn fcc_and_regular_paths_agree() {
+    let mut rng = Rng::new(55);
+    let (h, c, n, k) = (4usize, 3usize, 6usize, 3usize);
+    let l = k * k * c;
+    let input: Vec<i32> = (0..h * h * c).map(|_| rng.int8() as i32).collect();
+    let bank = FilterBank::new((0..n * l).map(|_| rng.int8() as i32).collect(), n, l);
+    let fcc = fcc_transform(&bank);
+    let mut bc = vec![0i32; n * l];
+    for p in 0..n / 2 {
+        for i in 0..l {
+            bc[(2 * p) * l + i] = fcc.comp.filter(2 * p)[i] + fcc.means[p];
+            bc[(2 * p + 1) * l + i] = fcc.comp.filter(2 * p + 1)[i] + fcc.means[p];
+        }
+    }
+    let via_fcc = exec_std_fcc(&input, h, h, c, &fcc, k, 1);
+    let via_regular = exec_std_regular(&input, h, h, c, &bc, n, k, 1);
+    assert_eq!(via_fcc, via_regular);
+}
+
+/// Timing engine consistency across the whole zoo: DDC never loses to
+/// the baseline, MAC counts are config-invariant, ISA streams decode.
+#[test]
+fn zoo_wide_timing_invariants() {
+    for name in zoo::ALL_MODELS {
+        let net = zoo::by_name(name).unwrap();
+        let base = simulate_network(&net, &ArchConfig::baseline(), &SimConfig::baseline());
+        let ddc = simulate_network(&net, &ArchConfig::ddc_pim(), &SimConfig::ddc_full());
+        assert!(
+            ddc.total_cycles <= base.total_cycles,
+            "{name}: DDC slower than baseline"
+        );
+        assert_eq!(ddc.total_macs, base.total_macs, "{name}: MACs changed");
+        assert!(ddc.total_dram_bytes <= base.total_dram_bytes, "{name}");
+        let plans = plan_network(&net, &ArchConfig::ddc_pim(), &SimConfig::ddc_full());
+        for word in assemble(&plans) {
+            assert!(Instr::decode(word).is_some(), "{name}: bad ISA word");
+        }
+    }
+}
+
+/// dw plans in the DDC config must actually use the accelerated kinds.
+#[test]
+fn mobilenet_dw_layers_accelerated() {
+    let net = zoo::mobilenet_v2();
+    let plans = plan_network(&net, &ArchConfig::ddc_pim(), &SimConfig::ddc_full());
+    let dw_kinds: Vec<PlanKind> = plans
+        .iter()
+        .filter(|p| {
+            matches!(
+                p.kind,
+                PlanKind::DwRegular | PlanKind::DwDbis | PlanKind::DwReconfig
+            )
+        })
+        .map(|p| p.kind)
+        .collect();
+    assert!(!dw_kinds.is_empty());
+    assert!(
+        dw_kinds.iter().all(|k| *k == PlanKind::DwReconfig),
+        "3x3 dw should all use the reconfig mapping: {dw_kinds:?}"
+    );
+}
+
+/// ISA round-trip preserves the full stream.
+#[test]
+fn isa_stream_roundtrip() {
+    let net = zoo::efficientnet_b0();
+    let plans = plan_network(&net, &ArchConfig::ddc_pim(), &SimConfig::ddc_full());
+    let words = assemble(&plans);
+    let decoded: Vec<Instr> = words.iter().map(|&w| Instr::decode(w).unwrap()).collect();
+    assert_eq!(decoded.last().unwrap().op, Op::Halt);
+    let reencoded: Vec<u64> = decoded.iter().map(Instr::encode).collect();
+    assert_eq!(words, reencoded);
+}

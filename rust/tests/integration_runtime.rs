@@ -1,0 +1,128 @@
+//! Integration: the AOT bridge — load every HLO-text artifact through
+//! PJRT and replay the python-side goldens bit-exactly.
+//!
+//! Requires `make artifacts` (skips cleanly when absent so `cargo test`
+//! works in a fresh checkout).
+
+use ddc_pim::runtime::{artifacts, Runtime};
+
+fn artifact_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("goldens.json").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+#[test]
+fn fcc_mvm_kernel_golden_exact() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).expect("PJRT client");
+    let goldens = artifacts::load_goldens(&dir).expect("goldens");
+    let (_, g) = goldens
+        .iter()
+        .find(|(n, _)| n == "fcc_mvm")
+        .expect("fcc_mvm golden");
+    let exe = rt.load("fcc_mvm").expect("compile fcc_mvm");
+    let out = exe
+        .run_i32(&[
+            (&g.x_i32(), &g.x_shape),
+            (&g.w_i32(), &g.w_shape),
+            (&g.m_i32(), &g.m_shape),
+        ])
+        .expect("execute");
+    assert_eq!(out, g.out_i32(), "pallas FCC kernel output mismatch");
+}
+
+#[test]
+fn pim_mac_kernel_golden_exact() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).expect("PJRT client");
+    let goldens = artifacts::load_goldens(&dir).expect("goldens");
+    let (_, g) = goldens
+        .iter()
+        .find(|(n, _)| n == "pim_mac")
+        .expect("pim_mac golden");
+    let exe = rt.load("pim_mac").expect("compile pim_mac");
+    let out = exe
+        .run_i32(&[(&g.x_i32(), &g.x_shape), (&g.w_i32(), &g.w_shape)])
+        .expect("execute");
+    assert_eq!(out, g.out_i32(), "bit-serial pim_mac kernel mismatch");
+}
+
+#[test]
+fn model_b1_golden_close() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).expect("PJRT client");
+    let goldens = artifacts::load_goldens(&dir).expect("goldens");
+    let (_, g) = goldens
+        .iter()
+        .find(|(n, _)| n == "model_b1")
+        .expect("model golden");
+    let weights = artifacts::load_model_weights(&dir).expect("weights sidecar");
+    let out = rt
+        .run_model("model_b1", &g.x_f32(), &g.x_shape, &weights)
+        .expect("execute");
+    let want = g.out_f32();
+    assert_eq!(out.len(), want.len());
+    let max_err = out
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "model max |err| = {max_err}");
+}
+
+#[test]
+fn fcc_mvm_matches_rust_fcc_semantics() {
+    // cross-layer check: the pallas kernel's FCC recovery must agree
+    // with the rust-side definition (ref oracle reimplemented here)
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).expect("PJRT client");
+    let goldens = artifacts::load_goldens(&dir).expect("goldens");
+    let (_, g) = goldens.iter().find(|(n, _)| n == "fcc_mvm").unwrap();
+    let (b, l) = (g.x_shape[0] as usize, g.x_shape[1] as usize);
+    let half = g.w_shape[1] as usize;
+    let x = g.x_i32();
+    let w = g.w_i32(); // [L, half] column-major filters
+    let m = g.m_i32();
+    let mut want = vec![0i32; b * 2 * half];
+    for bi in 0..b {
+        let si: i64 = x[bi * l..(bi + 1) * l].iter().map(|&v| v as i64).sum();
+        for p in 0..half {
+            let mut psum = 0i64;
+            for li in 0..l {
+                psum += x[bi * l + li] as i64 * w[li * half + p] as i64;
+            }
+            want[bi * 2 * half + 2 * p] = (psum + si * m[p] as i64) as i32;
+            want[bi * 2 * half + 2 * p + 1] = (si * (m[p] as i64 - 1) - psum) as i32;
+        }
+    }
+    let exe = rt.load("fcc_mvm").unwrap();
+    let out = exe
+        .run_i32(&[
+            (&g.x_i32(), &g.x_shape),
+            (&g.w_i32(), &g.w_shape),
+            (&g.m_i32(), &g.m_shape),
+        ])
+        .unwrap();
+    assert_eq!(out, want, "kernel semantics drifted from Eq. 7");
+}
+
+#[test]
+fn model_batch8_runs() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::cpu(&dir).expect("PJRT client");
+    let weights = artifacts::load_model_weights(&dir).expect("weights sidecar");
+    let input = vec![0.5f32; 8 * 32 * 32 * 3];
+    let out = rt
+        .run_model("model_b8", &input, &[8, 32, 32, 3], &weights)
+        .expect("execute");
+    assert_eq!(out.len(), 8 * 10);
+    // identical rows in, identical logits out
+    for i in 1..8 {
+        assert_eq!(out[..10], out[i * 10..(i + 1) * 10]);
+    }
+}

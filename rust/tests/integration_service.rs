@@ -1,0 +1,78 @@
+//! Integration: the inference service end-to-end (request -> batcher ->
+//! PJRT -> response).  Requires artifacts; skips cleanly otherwise.
+
+use ddc_pim::coordinator::{BatchPolicy, InferenceService};
+use ddc_pim::util::rng::Rng;
+use std::time::Duration;
+
+fn artifact_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("model_b1.hlo.txt").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+fn image(rng: &mut Rng) -> Vec<f32> {
+    (0..32 * 32 * 3).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = InferenceService::start(dir, BatchPolicy::default());
+    let mut rng = Rng::new(1);
+    let r = svc.infer(image(&mut rng)).expect("inference");
+    assert_eq!(r.logits.len(), 10);
+    assert!(r.argmax < 10);
+    assert!(r.simulated_ms > 0.0);
+}
+
+#[test]
+fn batched_requests_all_answered() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = InferenceService::start(
+        dir,
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        },
+    );
+    let mut rng = Rng::new(2);
+    let rxs: Vec<_> = (0..24).map(|_| svc.submit(image(&mut rng))).collect();
+    let mut batched = 0;
+    for rx in rxs {
+        let r = rx.recv().expect("channel").expect("inference");
+        assert_eq!(r.logits.len(), 10);
+        if r.batch_size > 1 {
+            batched += 1;
+        }
+    }
+    assert!(batched > 0, "no request ever rode a batch");
+    let stats = svc.stats().expect("stats");
+    assert_eq!(stats.requests, 24);
+    assert!(stats.batches <= 24);
+}
+
+#[test]
+fn deterministic_logits_for_same_input() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = InferenceService::start(dir, BatchPolicy::default());
+    let mut rng = Rng::new(3);
+    let img = image(&mut rng);
+    let a = svc.infer(img.clone()).expect("a");
+    let b = svc.infer(img).expect("b");
+    assert_eq!(a.logits, b.logits);
+}
+
+#[test]
+fn service_survives_mixed_good_and_bad_requests() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = InferenceService::start(dir, BatchPolicy::default());
+    let mut rng = Rng::new(4);
+    assert!(svc.infer(vec![0.0; 7]).is_err()); // malformed
+    let r = svc.infer(image(&mut rng)); // still serving
+    assert!(r.is_ok(), "service died after bad request: {r:?}");
+}
