@@ -1,0 +1,21 @@
+.PHONY: artifacts accuracy goldens test test-rust test-python
+
+# AOT-lower the L2 model + L1 kernels to HLO text + goldens (needs jax)
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+# python training pass -> artifacts/accuracy.json (needs jax; slow)
+accuracy:
+	cd python && python3 -m compile.fcc.train --out ../artifacts --quick
+
+# regenerate the checked-in reference kernel goldens (numpy only)
+goldens:
+	python3 python/tools/gen_ref_goldens.py
+
+test-rust:
+	cargo build --release && cargo test -q
+
+test-python:
+	python3 -m pytest python/tests -q
+
+test: test-rust test-python

@@ -1,23 +1,24 @@
-//! End-to-end driver (DESIGN.md §6): the full three-layer stack on a
-//! real small workload.
+//! End-to-end driver (DESIGN.md §6): the full stack on a real small
+//! workload, hermetically.
 //!
-//! 1. loads the python-AOT HLO artifacts (quantized-FCC MobileNetV2-tiny
-//!    + the Pallas kernel artifacts) through the PJRT runtime;
-//! 2. replays the build-time goldens to prove the AOT bridge is
-//!    numerically faithful;
-//! 3. starts the inference coordinator and serves a batch of synthetic
-//!    CIFAR-like requests, reporting wall-clock latency/throughput;
-//! 4. runs the cycle-accurate simulator on the same model for the
-//!    modelled DDC-PIM latency and the speedup over the PIM baseline.
+//! 1. constructs the execution backend (PJRT + AOT artifacts when the
+//!    `pjrt` feature and `make artifacts` outputs are present, else the
+//!    pure-Rust reference backend) and verifies its kernels against the
+//!    L1 oracles (dense INT8 MVM, Eq. 7 ARU recovery);
+//! 2. starts the inference coordinator on that backend and serves a
+//!    batch of synthetic CIFAR-like requests, reporting wall-clock
+//!    latency/throughput;
+//! 3. runs the cycle-accurate simulator on MobileNetV2 for the modelled
+//!    DDC-PIM latency and the speedup over the PIM baseline.
 //!
-//!     make artifacts && cargo run --release --example e2e_inference
+//!     cargo run --release --example e2e_inference [artifact_dir]
 
 use std::time::Instant;
 
 use ddc_pim::config::{ArchConfig, SimConfig};
-use ddc_pim::coordinator::{BatchPolicy, InferenceService};
+use ddc_pim::coordinator::{BatchPolicy, InferenceService, IMG_ELEMS};
 use ddc_pim::model::zoo;
-use ddc_pim::runtime::{artifacts, Runtime};
+use ddc_pim::runtime::{create_backend, verify_kernel_oracles, Backend, BackendKind};
 use ddc_pim::sim::simulate_network;
 use ddc_pim::util::rng::Rng;
 
@@ -26,47 +27,30 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .unwrap_or_else(|| "artifacts".to_string());
 
-    // ---- 1+2: runtime up, goldens replayed --------------------------
-    println!("== loading AOT artifacts from {artifact_dir} ==");
-    let mut rt = Runtime::cpu(&artifact_dir)?;
-    println!("PJRT platform: {}", rt.platform());
-    let goldens = artifacts::load_goldens(&artifact_dir)?;
-    for (name, g) in &goldens {
-        match name.as_str() {
-            "fcc_mvm" => {
-                let exe = rt.load("fcc_mvm")?;
-                let out = exe.run_i32(&[
-                    (&g.x_i32(), &g.x_shape),
-                    (&g.w_i32(), &g.w_shape),
-                    (&g.m_i32(), &g.m_shape),
-                ])?;
-                anyhow::ensure!(out == g.out_i32(), "fcc_mvm golden mismatch");
-                println!("golden fcc_mvm: OK (pallas FCC kernel, {} outputs)", out.len());
-            }
-            "model_b1" => {
-                let weights = artifacts::load_model_weights(&artifact_dir)?;
-                let out = rt.run_model("model_b1", &g.x_f32(), &g.x_shape, &weights)?;
-                let max_err = out
-                    .iter()
-                    .zip(g.out_f32())
-                    .map(|(a, b)| (a - b).abs())
-                    .fold(0f32, f32::max);
-                anyhow::ensure!(max_err < 1e-3, "model_b1 max err {max_err}");
-                println!("golden model_b1: OK (max |err| = {max_err:.2e})");
-            }
-            _ => {}
-        }
-    }
-    drop(rt); // the service owns its own runtime thread
+    // ---- 1: backend up, kernels verified against the oracles --------
+    println!("== constructing backend (artifact dir: {artifact_dir}) ==");
+    let mut backend = create_backend(BackendKind::Auto, &artifact_dir)?;
+    println!("backend: {}", backend.name());
 
-    // ---- 3: serve a batch of requests -------------------------------
+    if backend.supports_arbitrary_kernel_shapes() {
+        // dense INT8 MVM + Eq. 7 ARU recovery vs the L1 oracles
+        verify_kernel_oracles(backend.as_mut())?;
+        println!("kernel oracles: OK (dense INT8 MVM + half-stored FCC, Eq. 7 recovery)");
+    } else {
+        // AOT executables are lowered at fixed shapes; their kernel
+        // goldens are replayed by `ddc-pim selfcheck` instead.
+        println!("kernel oracles: skipped ({} executes fixed AOT shapes)", backend.name());
+    }
+    drop(backend); // the service owns its own backend thread
+
+    // ---- 2: serve a batch of requests -------------------------------
     println!("\n== serving 64 synthetic CIFAR requests ==");
     let svc = InferenceService::start(artifact_dir.clone(), BatchPolicy::default());
     let mut rng = Rng::new(42);
     let start = Instant::now();
     let rxs: Vec<_> = (0..64)
         .map(|_| {
-            let img: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.normal() as f32).collect();
+            let img: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect();
             svc.submit(img)
         })
         .collect();
@@ -78,15 +62,15 @@ fn main() -> anyhow::Result<()> {
     let elapsed = start.elapsed();
     let stats = svc.stats().unwrap_or_default();
     println!(
-        "throughput: {:.1} req/s | batches: {} | mean latency {:.2} ms | max {:.2} ms",
+        "throughput: {:.1} req/s | batches: {} | mean latency {:.2} ms | p99 {:.2} ms",
         64.0 / elapsed.as_secs_f64(),
         stats.batches,
         stats.mean_latency().as_secs_f64() * 1e3,
-        stats.max_latency.as_secs_f64() * 1e3,
+        stats.p99().as_secs_f64() * 1e3,
     );
     println!("predicted-class histogram: {class_hist:?}");
 
-    // ---- 4: modelled hardware latency + speedup ----------------------
+    // ---- 3: modelled hardware latency + speedup ----------------------
     println!("\n== cycle-accurate DDC-PIM model (full-size MobileNetV2 shapes) ==");
     let net = zoo::mobilenet_v2();
     let base = simulate_network(&net, &ArchConfig::baseline(), &SimConfig::baseline());

@@ -1,0 +1,12 @@
+"""Pytest root conftest for the L1/L2 build-time layer.
+
+Ensures ``python/`` is importable as the package root (tests import
+``compile.*``) regardless of how pytest is invoked (``pytest
+python/tests`` from the repo root, or ``python -m pytest tests`` from
+``python/``).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

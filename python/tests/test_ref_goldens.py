@@ -1,0 +1,95 @@
+"""Reference-kernel golden semantics — numpy-only (no jax, no
+hypothesis), so the minimal CI environment (`pip install numpy pytest`)
+always has live tests and the checked-in golden file is validated on
+every run.
+
+The oracles under test are the pure-numpy restatements in
+``tools/gen_ref_goldens.py`` of ``compile/kernels/ref.py``; the rust
+``ReferenceBackend`` replays the same file from
+``rust/tests/data/ref_kernel_goldens.json``.
+"""
+
+import json
+import os
+
+import numpy as np
+
+from tools.gen_ref_goldens import OUT, fcc_mvm_ref, mvm_int8_ref
+
+GOLDEN_PATH = os.path.normpath(OUT)
+
+
+def load_goldens():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+class TestOracleSemantics:
+    def test_mvm_matches_dense_int64(self):
+        rng = np.random.default_rng(1)
+        x = rng.integers(-128, 128, (3, 7)).astype(np.int32)
+        w = rng.integers(-128, 128, (7, 5)).astype(np.int32)
+        want = x.astype(np.int64) @ w.astype(np.int64)
+        assert np.array_equal(mvm_int8_ref(x, w), want.astype(np.int32))
+
+    def test_fcc_mvm_equals_dense_with_recomposed_bank(self):
+        # Eq. 7: the half-stored recovery must equal a dense MVM with
+        # the recomposed biased-comp bank [even+m, odd+m] interleaved,
+        # where odd = bitwise complement = -even - 1.
+        rng = np.random.default_rng(2)
+        b, l, half = 4, 9, 3
+        x = rng.integers(-128, 128, (b, l)).astype(np.int32)
+        w_even = rng.integers(-128, 128, (l, half)).astype(np.int32)
+        m = rng.integers(-20, 21, (half,)).astype(np.int32)
+        got = fcc_mvm_ref(x, w_even, m)
+        w_odd = -w_even - 1
+        bank = np.empty((l, 2 * half), np.int64)
+        bank[:, 0::2] = w_even.astype(np.int64) + m
+        bank[:, 1::2] = w_odd.astype(np.int64) + m
+        want = (x.astype(np.int64) @ bank).astype(np.int32)
+        assert np.array_equal(got, want)
+
+    def test_fcc_mvm_interleaves_even_odd(self):
+        x = np.array([[1, 2]], np.int32)
+        w_even = np.array([[3], [4]], np.int32)  # psum = 11, si = 3
+        m = np.array([5], np.int32)
+        out = fcc_mvm_ref(x, w_even, m)
+        assert out.shape == (1, 2)
+        assert out[0, 0] == 11 + 3 * 5  # even: psum + si*m
+        assert out[0, 1] == 3 * 4 - 11  # odd: si*(m-1) - psum
+
+
+class TestCheckedInGoldens:
+    def test_file_exists_and_shapes_consistent(self):
+        g = load_goldens()
+        for key in ("pim_mac", "fcc_mvm"):
+            assert key in g, f"golden {key} missing"
+        p = g["pim_mac"]
+        assert len(p["x"]) == p["b"] * p["l"]
+        assert len(p["w"]) == p["l"] * p["n"]
+        assert len(p["out"]) == p["b"] * p["n"]
+        f = g["fcc_mvm"]
+        assert len(f["x"]) == f["b"] * f["l"]
+        assert len(f["w_even"]) == f["l"] * f["half"]
+        assert len(f["m"]) == f["half"]
+        assert len(f["out"]) == f["b"] * 2 * f["half"]
+
+    def test_pim_mac_golden_semantics(self):
+        p = load_goldens()["pim_mac"]
+        x = np.array(p["x"], np.int32).reshape(p["b"], p["l"])
+        w = np.array(p["w"], np.int32).reshape(p["l"], p["n"])
+        assert mvm_int8_ref(x, w).ravel().tolist() == p["out"]
+
+    def test_fcc_mvm_golden_semantics(self):
+        f = load_goldens()["fcc_mvm"]
+        x = np.array(f["x"], np.int32).reshape(f["b"], f["l"])
+        w = np.array(f["w_even"], np.int32).reshape(f["l"], f["half"])
+        m = np.array(f["m"], np.int32)
+        assert fcc_mvm_ref(x, w, m).ravel().tolist() == f["out"]
+
+    def test_values_fit_int8_operand_range(self):
+        g = load_goldens()
+        for key, fields in (("pim_mac", ("x", "w")), ("fcc_mvm", ("x", "w_even", "m"))):
+            for field in fields:
+                vals = g[key][field]
+                assert all(-128 <= v <= 127 for v in vals), f"{key}.{field} out of int8 range"

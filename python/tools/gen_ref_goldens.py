@@ -1,0 +1,119 @@
+"""Generate rust/tests/data/ref_kernel_goldens.json — golden vectors for
+the L1 kernel oracles of ``compile/kernels/ref.py``, replayed by the rust
+``ReferenceBackend`` integration tests.
+
+The math here is a pure-numpy restatement of the jnp oracles (int32
+matmul for ``mvm_int8_ref``/``pim_mac``; the Eq. 7 ARU recovery for
+``fcc_mvm_ref``) so the goldens pin the *python reference semantics*
+without requiring jax at generation time.  Deterministic: fixed seed.
+
+Usage (from the repo root):
+
+    python3 python/tools/gen_ref_goldens.py            # (re)generate
+    python3 python/tools/gen_ref_goldens.py --check    # verify checked-in file
+
+``--check`` validates the checked-in goldens *semantically* (recompute
+the outputs from the stored inputs) rather than byte-comparing a fresh
+generation — NumPy's NEP 19 allows Generator bit streams to change
+across releases, so a byte gate would rot; the semantic gate cannot.
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+OUT = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "..", "..", "rust", "tests", "data", "ref_kernel_goldens.json",
+)
+
+
+def mvm_int8_ref(x, w):
+    """x [B, L] int8-range, w [L, N] int8-range -> [B, N] int32."""
+    return (x.astype(np.int64) @ w.astype(np.int64)).astype(np.int32)
+
+
+def fcc_mvm_ref(x, w_even, m):
+    """FCC MVM with ARU recovery (paper Eq. 7); see kernels/ref.py.
+
+    x [B, L], w_even [L, N/2], m [N/2] -> [B, N] int32 interleaved
+    (even, odd, even, ...).
+    """
+    x = x.astype(np.int64)
+    w_even = w_even.astype(np.int64)
+    m = m.astype(np.int64)
+    psum = x @ w_even                      # [B, N/2]
+    si = x.sum(axis=1, keepdims=True)      # [B, 1]
+    out_even = psum + si * m[None, :]
+    out_odd = si * (m[None, :] - 1) - psum
+    b, half = psum.shape
+    return (
+        np.stack([out_even, out_odd], axis=2).reshape(b, 2 * half).astype(np.int32)
+    )
+
+
+def check(path):
+    """Recompute every golden output from its stored inputs; exit 1 on
+    any semantic mismatch."""
+    with open(path) as f:
+        g = json.load(f)
+    p = g["pim_mac"]
+    px = np.array(p["x"], np.int32).reshape(p["b"], p["l"])
+    pw = np.array(p["w"], np.int32).reshape(p["l"], p["n"])
+    assert mvm_int8_ref(px, pw).ravel().tolist() == p["out"], "pim_mac golden mismatch"
+    fc = g["fcc_mvm"]
+    fx = np.array(fc["x"], np.int32).reshape(fc["b"], fc["l"])
+    fw = np.array(fc["w_even"], np.int32).reshape(fc["l"], fc["half"])
+    fm = np.array(fc["m"], np.int32)
+    assert fcc_mvm_ref(fx, fw, fm).ravel().tolist() == fc["out"], "fcc_mvm golden mismatch"
+    print(f"checked {path}: goldens match the reference semantics")
+
+
+def main():
+    if "--check" in sys.argv[1:]:
+        check(os.path.normpath(OUT))
+        return
+    rng = np.random.default_rng(20231031)  # the paper's arXiv date
+
+    # ---- pim_mac golden: dense INT8 MVM ---------------------------------
+    pb, pl, pn = 4, 16, 6
+    px = rng.integers(-128, 128, (pb, pl)).astype(np.int32)
+    pw = rng.integers(-128, 128, (pl, pn)).astype(np.int32)
+    pout = mvm_int8_ref(px, pw)
+
+    # ---- fcc_mvm golden: Eq. 7 recovery ---------------------------------
+    fb, fl, fhalf = 3, 10, 4
+    fx = rng.integers(-128, 128, (fb, fl)).astype(np.int32)
+    # comp filters are int8 codes; means are small ints (pair means of
+    # int8 filters always fit int8)
+    fw_even = rng.integers(-128, 128, (fl, fhalf)).astype(np.int32)
+    fm = rng.integers(-20, 21, (fhalf,)).astype(np.int32)
+    fout = fcc_mvm_ref(fx, fw_even, fm)
+
+    goldens = {
+        "pim_mac": {
+            "b": pb, "l": pl, "n": pn,
+            "x": px.ravel().tolist(),
+            "w": pw.ravel().tolist(),
+            "out": pout.ravel().tolist(),
+        },
+        "fcc_mvm": {
+            "b": fb, "l": fl, "half": fhalf,
+            "x": fx.ravel().tolist(),
+            "w_even": fw_even.ravel().tolist(),
+            "m": fm.ravel().tolist(),
+            "out": fout.ravel().tolist(),
+        },
+    }
+    out_path = os.path.normpath(OUT)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(goldens, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

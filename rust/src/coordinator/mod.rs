@@ -3,12 +3,13 @@
 //! * [`batcher`] — dynamic request batching (full batches ride the wide
 //!   executable, stragglers are padded);
 //! * [`scheduler`] — prefetch-aware layer timeline;
-//! * [`service`] — the threaded request loop that owns the PJRT runtime
-//!   and serves the AOT model artifacts.
+//! * [`service`] — the threaded request loop that owns the execution
+//!   [`crate::runtime::Backend`] (reference by default, PJRT/AOT
+//!   artifacts behind the `pjrt` feature).
 
 pub mod batcher;
 pub mod scheduler;
 pub mod service;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use service::{InferenceResult, InferenceService, ServiceStats};
+pub use service::{InferenceResult, InferenceService, ServiceStats, IMG_ELEMS, NUM_CLASSES};

@@ -1,12 +1,14 @@
-//! Inference service: the request loop that owns the PJRT runtime.
+//! Inference service: the request loop that owns the execution backend.
 //!
-//! A dedicated worker thread owns the [`Runtime`] (PJRT handles are not
-//! `Send`-safe by contract, so they never leave the thread).  Clients
-//! submit CIFAR-shaped images over a channel; the batcher groups them;
-//! full batches run on the wide executable (`model_b8`), stragglers are
-//! padded.  Alongside the functional result, each request is annotated
-//! with the *simulated* DDC-PIM latency of the model so the serving path
-//! reports both wall-clock and modelled-hardware numbers.
+//! A dedicated worker thread owns the [`Backend`] (PJRT handles are not
+//! `Send`-safe by contract, so the backend is constructed inside the
+//! thread and never leaves it).  Clients submit CIFAR-shaped images over
+//! a channel; the batcher groups them; the backend executes the batch
+//! (the PJRT backend pads stragglers up to its wide executable, the
+//! reference backend takes any batch natively).  Alongside the
+//! functional result, each request is annotated with the *simulated*
+//! DDC-PIM latency of the model so the serving path reports both
+//! wall-clock and modelled-hardware numbers.
 
 use std::sync::mpsc;
 use std::thread::{self, JoinHandle};
@@ -17,14 +19,12 @@ use anyhow::Result;
 use crate::config::{ArchConfig, SimConfig};
 use crate::metrics::LatencyHistogram;
 use crate::model::zoo;
-use crate::runtime::Runtime;
+use crate::runtime::{create_backend, Backend, BackendKind};
 use crate::sim::simulate_network;
 
 use super::batcher::{BatchPolicy, Batcher};
 
-pub const IMG_ELEMS: usize = 32 * 32 * 3;
-pub const NUM_CLASSES: usize = 10;
-const WIDE_BATCH: usize = 8;
+pub use crate::runtime::{IMG_ELEMS, NUM_CLASSES};
 
 /// One inference request.
 struct Request {
@@ -45,6 +45,8 @@ pub struct InferenceResult {
     /// Modelled DDC-PIM latency for the whole model (ms, from the cycle
     /// simulator; amortized per batch).
     pub simulated_ms: f64,
+    /// Which backend executed the request ("reference" / "pjrt").
+    pub backend: &'static str,
 }
 
 /// Aggregate service statistics.
@@ -89,10 +91,20 @@ pub struct InferenceService {
 }
 
 impl InferenceService {
-    /// Start the worker thread; compiles artifacts on first use.
+    /// Start the worker thread with automatic backend selection (PJRT
+    /// when compiled in and artifacts exist, else the reference backend).
     pub fn start(artifact_dir: String, policy: BatchPolicy) -> InferenceService {
+        Self::start_with(BackendKind::Auto, artifact_dir, policy)
+    }
+
+    /// Start the worker thread with an explicit backend choice.
+    pub fn start_with(
+        kind: BackendKind,
+        artifact_dir: String,
+        policy: BatchPolicy,
+    ) -> InferenceService {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let worker = thread::spawn(move || worker_loop(artifact_dir, policy, rx));
+        let worker = thread::spawn(move || worker_loop(kind, artifact_dir, policy, rx));
         InferenceService {
             tx,
             worker: Some(worker),
@@ -102,6 +114,15 @@ impl InferenceService {
     /// Submit an image; returns a receiver for the result.
     pub fn submit(&self, input: Vec<f32>) -> mpsc::Receiver<Result<InferenceResult, String>> {
         let (rtx, rrx) = mpsc::channel();
+        // reject malformed inputs here, before batching, so one bad
+        // request can never fail the valid requests batched with it
+        if input.len() != IMG_ELEMS {
+            let _ = rtx.send(Err(format!(
+                "bad input size {} (want {IMG_ELEMS})",
+                input.len()
+            )));
+            return rrx;
+        }
         let req = Request {
             input,
             resp: rtx,
@@ -135,21 +156,21 @@ impl Drop for InferenceService {
     }
 }
 
-fn worker_loop(artifact_dir: String, policy: BatchPolicy, rx: mpsc::Receiver<Msg>) {
-    let init = Runtime::cpu(&artifact_dir).and_then(|rt| {
-        let w = crate::runtime::artifacts::load_model_weights(&artifact_dir)?;
-        Ok((rt, w))
-    });
-    let (mut runtime, weights) = match init {
-        Ok(r) => r,
+fn worker_loop(
+    kind: BackendKind,
+    artifact_dir: String,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<Msg>,
+) {
+    let mut backend = match create_backend(kind, &artifact_dir) {
+        Ok(b) => b,
         Err(e) => {
             // drain: fail every request with the init error; exit on
             // Shutdown (Drop joins this thread, so it must terminate)
             for msg in rx {
                 match msg {
                     Msg::Infer(req) => {
-                        let _ =
-                            req.resp.send(Err(format!("runtime init failed: {e}")));
+                        let _ = req.resp.send(Err(format!("backend init failed: {e:#}")));
                     }
                     Msg::Stats(stx) => {
                         let _ = stx.send(ServiceStats::default());
@@ -160,6 +181,7 @@ fn worker_loop(artifact_dir: String, policy: BatchPolicy, rx: mpsc::Receiver<Msg
             return;
         }
     };
+    let backend_name = backend.name();
     // modelled hardware latency (once; amortized per batch below)
     let sim_ms = simulate_network(
         &zoo::mobilenet_v2(),
@@ -204,7 +226,7 @@ fn worker_loop(artifact_dir: String, policy: BatchPolicy, rx: mpsc::Receiver<Msg
         let batch = batcher.cut();
         let bsize = batch.len();
         stats.batches += 1;
-        let result = run_batch(&mut runtime, &weights, &batch);
+        let result = run_batch(backend.as_mut(), &batch);
         match result {
             Ok(all_logits) => {
                 for (i, req) in batch.into_iter().enumerate() {
@@ -227,11 +249,12 @@ fn worker_loop(artifact_dir: String, policy: BatchPolicy, rx: mpsc::Receiver<Msg
                         latency,
                         batch_size: bsize,
                         simulated_ms: sim_ms / bsize as f64,
+                        backend: backend_name,
                     }));
                 }
             }
             Err(e) => {
-                let msg = format!("batch execution failed: {e}");
+                let msg = format!("batch execution failed: {e:#}");
                 for req in batch {
                     let _ = req.resp.send(Err(msg.clone()));
                 }
@@ -240,29 +263,16 @@ fn worker_loop(artifact_dir: String, policy: BatchPolicy, rx: mpsc::Receiver<Msg
     }
 }
 
-fn run_batch(
-    runtime: &mut Runtime,
-    weights: &crate::runtime::artifacts::ModelWeights,
-    batch: &[Request],
-) -> Result<Vec<f32>> {
-    // pick the artifact: wide for full batches, narrow otherwise (pad)
-    let (name, eff) = if batch.len() == WIDE_BATCH {
-        ("model_b8", WIDE_BATCH)
-    } else if batch.len() == 1 {
-        ("model_b1", 1)
-    } else {
-        ("model_b8", WIDE_BATCH) // pad partial batches up to the wide size
-    };
-    let mut input = vec![0f32; eff * IMG_ELEMS];
+fn run_batch(backend: &mut dyn Backend, batch: &[Request]) -> Result<Vec<f32>> {
+    let mut input = vec![0f32; batch.len() * IMG_ELEMS];
     for (i, req) in batch.iter().enumerate() {
-        anyhow::ensure!(
-            req.input.len() == IMG_ELEMS,
-            "bad input size {} (want {IMG_ELEMS})",
-            req.input.len()
-        );
+        // submit() already rejected malformed inputs; a violation here
+        // is a programming error, and must never fail co-batched
+        // requests (the no-poison invariant)
+        debug_assert_eq!(req.input.len(), IMG_ELEMS, "unvalidated request reached batcher");
         input[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].copy_from_slice(&req.input);
     }
-    runtime.run_model(name, &input, &[eff as i64, 32, 32, 3], weights)
+    backend.infer_batch(&input, batch.len())
 }
 
 #[cfg(test)]
@@ -270,10 +280,11 @@ mod tests {
     use super::*;
 
     #[test]
-    fn service_reports_error_without_artifacts() {
+    fn serves_without_artifacts_via_reference_backend() {
         let svc = InferenceService::start("/nonexistent".into(), BatchPolicy::default());
-        let res = svc.infer(vec![0.0; IMG_ELEMS]);
-        assert!(res.is_err());
+        let r = svc.infer(vec![0.0; IMG_ELEMS]).expect("reference inference");
+        assert_eq!(r.logits.len(), NUM_CLASSES);
+        assert_eq!(r.backend, "reference");
     }
 
     #[test]
@@ -281,5 +292,15 @@ mod tests {
         let svc = InferenceService::start("/nonexistent".into(), BatchPolicy::default());
         let res = svc.infer(vec![0.0; 3]);
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn explicit_reference_kind() {
+        let svc = InferenceService::start_with(
+            BackendKind::Reference,
+            "/nonexistent".into(),
+            BatchPolicy::default(),
+        );
+        assert!(svc.infer(vec![0.1; IMG_ELEMS]).is_ok());
     }
 }

@@ -48,6 +48,34 @@ impl FccWeights {
         }
     }
 
+    /// The stored half in the kernel's column-major `[L, N/2]` layout
+    /// (`out[li * pairs + p] = comp_filter(2p)[li]`) — the `w_even`
+    /// operand of the python `fcc_mvm` kernel and [`crate::runtime::Backend::fcc_mvm`].
+    pub fn stored_even_cols(&self) -> Vec<i32> {
+        let (l, pairs) = (self.comp.l, self.comp.pairs());
+        let mut out = vec![0i32; l * pairs];
+        for li in 0..l {
+            for p in 0..pairs {
+                out[li * pairs + p] = self.comp.filter(2 * p)[li];
+            }
+        }
+        out
+    }
+
+    /// The full recomposed biased-comp bank in column-major `[L, N]`
+    /// layout (`out[li * n + j] = comp_filter(j)[li] + M[j/2]`) — the
+    /// dense-MVM oracle for the Eq. 7 recovery path.
+    pub fn biased_comp_cols(&self) -> Vec<i32> {
+        let (l, n) = (self.comp.l, self.comp.n);
+        let mut out = vec![0i32; l * n];
+        for li in 0..l {
+            for j in 0..n {
+                out[li * n + j] = self.comp.filter(j)[li] + self.means[j / 2];
+            }
+        }
+        out
+    }
+
     /// Bits that must be transferred off-chip for this layer (half the
     /// filters at 8 b/weight + one 8 b mean per pair) — the bandwidth
     /// bookkeeping behind the paper's "~2x equivalent transfer bandwidth".

@@ -11,20 +11,23 @@
 //!   AOT-lowered to HLO text under `artifacts/`.
 //! * **L3 (this crate)** — the dataflow mapper, the cycle-accurate and
 //!   bit-true functional simulators of the DDC-PIM architecture, the
-//!   PJRT runtime that serves the AOT artifacts, the inference
-//!   coordinator, and the report generators that regenerate every table
-//!   and figure of the paper's evaluation.
+//!   pluggable inference [`runtime`] (a hermetic pure-Rust reference
+//!   backend by default; the PJRT path that serves the AOT artifacts
+//!   behind the `pjrt` cargo feature), the inference coordinator, and
+//!   the report generators that regenerate every table and figure of
+//!   the paper's evaluation.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index.
+//! See `DESIGN.md` for the system inventory, the experiment index and
+//! the build/feature-flag instructions.
 
 pub mod arch;
-pub mod mapping;
 pub mod config;
 pub mod coordinator;
 pub mod fcc;
+pub mod isa;
+pub mod mapping;
 pub mod metrics;
 pub mod model;
-pub mod isa;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -84,7 +84,9 @@ pub fn vgg19() -> Network {
 /// ResNet18 (CIFAR adaptation: 3x3 stem, no initial pool).
 pub fn resnet18() -> Network {
     let mut b = NetBuilder::new("resnet18", 32, 32, 3).conv(64, 3, 1);
-    for &(c, s) in &[(64usize, 1usize), (64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2), (512, 1)] {
+    let blocks: &[(usize, usize)] =
+        &[(64, 1), (64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2), (512, 1)];
+    for &(c, s) in blocks {
         b = b.basic_block(c, s);
     }
     b.gap().fc(10).build()

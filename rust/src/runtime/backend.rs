@@ -1,0 +1,203 @@
+//! The [`Backend`] trait: one interface for every way this system can
+//! execute a network, plus the factory that selects an implementation.
+//!
+//! The contract is deliberately small — a batched float classifier for
+//! the serving path and the two integer L1 kernels for golden replay —
+//! so a backend can be a pure-Rust interpreter, a PJRT executable, or
+//! anything future PRs add (sharded, remote, ...), without the
+//! coordinator knowing the difference.
+
+use anyhow::Result;
+
+/// Flattened CIFAR image size the serving path accepts ([32, 32, 3]).
+pub const IMG_ELEMS: usize = 32 * 32 * 3;
+
+/// Number of classifier outputs.
+pub const NUM_CLASSES: usize = 10;
+
+/// An inference executor.
+///
+/// Shape conventions match the python side (`compile/kernels/ref.py`):
+/// row-major `x: [B, L]`, `w: [L, N]`, `w_even: [L, N/2]` with FCC
+/// outputs interleaved `(even, odd, even, ...)` along the channel dim.
+pub trait Backend {
+    /// Stable implementation name ("reference", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// Whether the integer kernels accept arbitrary `(b, l, n)` shapes.
+    /// Interpreters return `true`; AOT-compiled backends (PJRT) are
+    /// lowered at fixed shapes and return `false` — their kernels are
+    /// verified by artifact-golden replay instead of
+    /// [`verify_kernel_oracles`].
+    fn supports_arbitrary_kernel_shapes(&self) -> bool {
+        false
+    }
+
+    /// Classify a batch of CIFAR images: `x.len() == batch * IMG_ELEMS`,
+    /// returns `batch * NUM_CLASSES` logits.
+    fn infer_batch(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>>;
+
+    /// FCC matrix-vector kernel with ARU recovery (paper Eq. 7, the
+    /// `fcc_mvm_ref` oracle): `x [b, l]`, `w_even [l, half]`, `m [half]`
+    /// → `[b, 2 * half]` interleaved.
+    fn fcc_mvm(
+        &mut self,
+        x: &[i32],
+        w_even: &[i32],
+        m: &[i32],
+        b: usize,
+        l: usize,
+        half: usize,
+    ) -> Result<Vec<i32>>;
+
+    /// Dense signed-INT8 MVM (the `mvm_int8_ref` / bit-serial PIM-MAC
+    /// oracle): `x [b, l]`, `w [l, n]` → `[b, n]` int32.
+    fn pim_mac(
+        &mut self,
+        x: &[i32],
+        w: &[i32],
+        b: usize,
+        l: usize,
+        n: usize,
+    ) -> Result<Vec<i32>>;
+}
+
+/// Which backend to construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// PJRT when compiled in and artifacts are present, else reference.
+    #[default]
+    Auto,
+    /// The pure-Rust reference backend (always available).
+    Reference,
+    /// The PJRT/HLO artifact path (requires the `pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a CLI flag value.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "auto" => Some(BackendKind::Auto),
+            "reference" | "ref" => Some(BackendKind::Reference),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// Construct a backend.  `artifact_dir` is only consulted by the PJRT
+/// path; the reference backend is hermetic.
+pub fn create_backend(kind: BackendKind, artifact_dir: &str) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Reference => Ok(Box::new(super::reference::ReferenceBackend::seeded(
+            super::reference::DEFAULT_SEED,
+        ))),
+        BackendKind::Pjrt => create_pjrt(artifact_dir),
+        BackendKind::Auto => {
+            #[cfg(feature = "pjrt")]
+            {
+                let has_artifacts = std::path::Path::new(artifact_dir)
+                    .join("model_b1.hlo.txt")
+                    .exists();
+                if has_artifacts {
+                    match create_pjrt(artifact_dir) {
+                        Ok(b) => return Ok(b),
+                        // artifacts exist but PJRT won't come up: fall
+                        // back, but say why — a silent fallback would
+                        // serve seeded random weights in place of the
+                        // trained model with no explanation.
+                        Err(e) => eprintln!(
+                            "warning: artifacts present in {artifact_dir} but PJRT backend \
+                             failed ({e:#}); falling back to the reference backend"
+                        ),
+                    }
+                }
+            }
+            create_backend(BackendKind::Reference, artifact_dir)
+        }
+    }
+}
+
+/// Verify a backend's integer kernels against the L1 oracle semantics
+/// (`kernels/ref.py`) on small random shapes: dense INT8 MVM and the
+/// Eq. 7 ARU recovery vs a dense MVM with the recomposed biased-comp
+/// bank.
+///
+/// Only valid for backends that accept arbitrary kernel shapes (the
+/// reference interpreter).  AOT/PJRT executables are lowered at *fixed*
+/// shapes and must instead be verified by replaying the artifact
+/// goldens, which carry their own shapes.
+pub fn verify_kernel_oracles(backend: &mut dyn Backend) -> Result<()> {
+    use crate::fcc::{fcc_transform, FilterBank};
+    use crate::util::rng::Rng;
+
+    // dense INT8 MVM vs the mvm_int8_ref oracle
+    let mut rng = Rng::new(101);
+    let (b, l, n) = (4usize, 16usize, 8usize);
+    let x: Vec<i32> = (0..b * l).map(|_| rng.int8() as i32).collect();
+    let w: Vec<i32> = (0..l * n).map(|_| rng.int8() as i32).collect();
+    let got = backend.pim_mac(&x, &w, b, l, n)?;
+    anyhow::ensure!(
+        got == super::reference::mvm_i32(&x, &w, b, l, n),
+        "pim_mac output mismatch vs dense oracle"
+    );
+
+    // FCC MVM vs the Eq. 7 identity
+    let half = n / 2;
+    let bank = FilterBank::new((0..n * l).map(|_| rng.int8() as i32).collect(), n, l);
+    let fcc = fcc_transform(&bank);
+    let got = backend.fcc_mvm(&x, &fcc.stored_even_cols(), &fcc.means, b, l, half)?;
+    anyhow::ensure!(
+        got == super::reference::mvm_i32(&x, &fcc.biased_comp_cols(), b, l, n),
+        "fcc_mvm ARU recovery mismatch vs Eq. 7 identity"
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn create_pjrt(artifact_dir: &str) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(super::pjrt::PjrtBackend::new(artifact_dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn create_pjrt(_artifact_dir: &str) -> Result<Box<dyn Backend>> {
+    Err(anyhow::anyhow!(
+        "this binary was built without the `pjrt` feature; \
+         rebuild with `--features pjrt` (and a real xla crate) or use --backend reference"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(BackendKind::parse("auto"), Some(BackendKind::Auto));
+        assert_eq!(BackendKind::parse("reference"), Some(BackendKind::Reference));
+        assert_eq!(BackendKind::parse("ref"), Some(BackendKind::Reference));
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("tpu"), None);
+    }
+
+    #[test]
+    fn auto_falls_back_to_reference_without_artifacts() {
+        let b = create_backend(BackendKind::Auto, "/nonexistent").expect("backend");
+        assert_eq!(b.name(), "reference");
+    }
+
+    #[test]
+    fn reference_always_constructs() {
+        let mut b = create_backend(BackendKind::Reference, "/nonexistent").expect("backend");
+        let img = vec![0.0f32; IMG_ELEMS];
+        let out = b.infer_batch(&img, 1).expect("infer");
+        assert_eq!(out.len(), NUM_CLASSES);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_unavailable_without_feature() {
+        assert!(create_backend(BackendKind::Pjrt, "/nonexistent").is_err());
+    }
+}

@@ -1,140 +1,39 @@
-//! PJRT runtime: loads the python-AOT HLO-text artifacts and executes
-//! them on the request path (python never runs at inference time).
+//! Inference runtime: the pluggable execution layer behind the
+//! coordinator and the CLI.
 //!
-//! Interchange format is HLO **text** (see `python/compile/aot.py` and
-//! /opt/xla-example/README.md): jax >= 0.5 emits protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids and round-trips cleanly.  Artifacts are lowered with
-//! `return_tuple=True`, so results unwrap with `to_tuple1`.
+//! Everything that *runs a model* goes through the [`Backend`] trait:
+//!
+//! * [`reference`] — the default, pure-Rust backend.  Executes a
+//!   seeded, FCC-quantized CIFAR network with exactly the integer
+//!   semantics of the python oracles in `python/compile/kernels/ref.py`
+//!   (dense INT8 MVM and the Eq. 7 ARU recovery), so it is bit-true
+//!   against the L1 kernel contracts and needs no artifacts, no native
+//!   libraries and no network — this is what CI exercises.
+//! * [`pjrt`] (cargo feature `pjrt`) — the PJRT/HLO path: loads the
+//!   python-AOT HLO-text artifacts (see `python/compile/aot.py`) and
+//!   executes them through the `xla` crate.  The default build vendors a
+//!   compile-time stub for `xla`; swap in the real crate to run the
+//!   artifacts (DESIGN.md §Backends).
+//! * [`artifacts`] — the artifact registry + goldens loader shared by
+//!   both backends (golden replay works on either: the kernels carry
+//!   their shapes).
+//!
+//! [`create_backend`] picks the implementation: `Auto` prefers PJRT when
+//! the feature is on and artifacts exist, and falls back to the
+//! reference backend otherwise, so every caller (service, CLI,
+//! examples, tests) works on a clean checkout.
 
 pub mod artifacts;
+pub mod backend;
+pub mod reference;
 
-use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-/// A compiled executable plus its artifact identity.
-pub struct Executable {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
+pub use backend::{
+    create_backend, verify_kernel_oracles, Backend, BackendKind, IMG_ELEMS, NUM_CLASSES,
+};
+pub use reference::ReferenceBackend;
 
-impl Executable {
-    /// Run with f32 inputs; returns the flattened f32 output.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
-        let lits = self.literals_f32(inputs)?;
-        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// Run with i32 inputs; returns the flattened i32 output.
-    pub fn run_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<i32>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            lits.push(xla::Literal::vec1(data).reshape(dims)?);
-        }
-        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<i32>()?)
-    }
-
-    fn literals_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<xla::Literal>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            lits.push(xla::Literal::vec1(data).reshape(dims)?);
-        }
-        Ok(lits)
-    }
-}
-
-/// PJRT client wrapper with a compile cache keyed by artifact name.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifact_dir: PathBuf,
-    cache: HashMap<String, Executable>,
-}
-
-impl Runtime {
-    /// CPU PJRT client rooted at an artifact directory.
-    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            artifact_dir: artifact_dir.as_ref().to_path_buf(),
-            cache: HashMap::new(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact (cached).
-    pub fn load(&mut self, name: &str) -> Result<&Executable> {
-        if !self.cache.contains_key(name) {
-            let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact {name}"))?;
-            self.cache.insert(
-                name.to_string(),
-                Executable {
-                    name: name.to_string(),
-                    exe,
-                },
-            );
-        }
-        Ok(&self.cache[name])
-    }
-
-    /// Names of currently compiled artifacts.
-    pub fn loaded(&self) -> Vec<&str> {
-        self.cache.keys().map(String::as_str).collect()
-    }
-
-    pub fn artifact_dir(&self) -> &Path {
-        &self.artifact_dir
-    }
-
-    /// Check an artifact file exists without compiling it.
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
-    }
-
-    /// Run a model artifact whose signature is `(x, *weights)` (the AOT
-    /// models take their weights as parameters — see artifacts module).
-    pub fn run_model(
-        &mut self,
-        name: &str,
-        x: &[f32],
-        x_shape: &[i64],
-        weights: &artifacts::ModelWeights,
-    ) -> Result<Vec<f32>> {
-        let exe = self.load(name)?;
-        let mut inputs: Vec<(&[f32], &[i64])> = vec![(x, x_shape)];
-        for (data, shape) in &weights.tensors {
-            inputs.push((data.as_slice(), shape.as_slice()));
-        }
-        exe.run_f32(&inputs)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    // runtime tests that need artifacts live in rust/tests/ (integration)
-    // where `make artifacts` outputs are available; here we only check
-    // cheap invariants.
-    use super::*;
-
-    #[test]
-    fn missing_artifact_detected() {
-        if let Ok(rt) = Runtime::cpu("/nonexistent") {
-            assert!(!rt.has_artifact("model_b1"));
-        }
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, PjrtBackend, Runtime};

@@ -1,0 +1,307 @@
+//! PJRT runtime (cargo feature `pjrt`): loads the python-AOT HLO-text
+//! artifacts and executes them through the `xla` crate.
+//!
+//! Interchange format is HLO **text** (see `python/compile/aot.py`):
+//! jax >= 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly.  Artifacts are lowered with `return_tuple=True`,
+//! so results unwrap with `to_tuple1`.
+//!
+//! The default build links the vendored `xla` stub (compiles anywhere,
+//! reports "unavailable" at runtime); swap in the real crate to execute
+//! artifacts — see DESIGN.md §Backends.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::artifacts;
+use super::backend::{Backend, IMG_ELEMS, NUM_CLASSES};
+
+/// Batch size of the wide model artifact (`model_b8`).
+const WIDE_BATCH: usize = 8;
+
+/// A compiled executable plus its artifact identity.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Run with f32 inputs; returns the flattened f32 output.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            lits.push(xla::Literal::vec1(data).reshape(dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Run with i32 inputs; returns the flattened i32 output.
+    pub fn run_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<i32>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            lits.push(xla::Literal::vec1(data).reshape(dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+/// PJRT client wrapper with a compile cache keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.cache.insert(
+                name.to_string(),
+                Executable {
+                    name: name.to_string(),
+                    exe,
+                },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Names of currently compiled artifacts.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.cache.keys().map(String::as_str).collect()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Check an artifact file exists without compiling it.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Run a model artifact whose signature is `(x, *weights)` (the AOT
+    /// models take their weights as parameters — see artifacts module).
+    pub fn run_model(
+        &mut self,
+        name: &str,
+        x: &[f32],
+        x_shape: &[i64],
+        weights: &artifacts::ModelWeights,
+    ) -> Result<Vec<f32>> {
+        let exe = self.load(name)?;
+        let mut inputs: Vec<(&[f32], &[i64])> = vec![(x, x_shape)];
+        for (data, shape) in &weights.tensors {
+            inputs.push((data.as_slice(), shape.as_slice()));
+        }
+        exe.run_f32(&inputs)
+    }
+}
+
+/// One execution step of a batched inference over the fixed (b1, b8)
+/// artifact set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ChunkStep {
+    /// First request index covered by this step.
+    start: usize,
+    /// Real requests in this step.
+    chunk: usize,
+    /// Which model artifact executes it.
+    artifact: &'static str,
+    /// Batch dimension of that artifact (`chunk` padded with zeros).
+    padded: usize,
+}
+
+/// Split a batch into executable steps: full/partial groups of up to
+/// [`WIDE_BATCH`] ride `model_b8` (zero-padded), lone trailing images
+/// ride `model_b1`.
+fn chunk_plan(batch: usize) -> Vec<ChunkStep> {
+    let mut plan = Vec::new();
+    let mut done = 0;
+    while done < batch {
+        let chunk = (batch - done).min(WIDE_BATCH);
+        let (artifact, padded) = if chunk == 1 {
+            ("model_b1", 1)
+        } else {
+            ("model_b8", WIDE_BATCH)
+        };
+        plan.push(ChunkStep {
+            start: done,
+            chunk,
+            artifact,
+            padded,
+        });
+        done += chunk;
+    }
+    plan
+}
+
+/// [`Backend`] over the PJRT runtime + AOT artifacts.
+pub struct PjrtBackend {
+    rt: Runtime,
+    weights: artifacts::ModelWeights,
+}
+
+impl PjrtBackend {
+    /// Requires a PJRT client and the `model_weights` sidecar.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<PjrtBackend> {
+        let dir = artifact_dir.as_ref();
+        let rt = Runtime::cpu(dir)?;
+        let weights = artifacts::load_model_weights(dir)?;
+        Ok(PjrtBackend { rt, weights })
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn infer_batch(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == batch * IMG_ELEMS,
+            "bad input length {} (want {})",
+            x.len(),
+            batch * IMG_ELEMS
+        );
+        // only b1/b8 artifacts exist: single-image chunks ride the
+        // narrow executable, everything else is zero-padded to the wide
+        // one and truncated on the way out.
+        let mut out = Vec::with_capacity(batch * NUM_CLASSES);
+        for step in chunk_plan(batch) {
+            let mut input = vec![0f32; step.padded * IMG_ELEMS];
+            input[..step.chunk * IMG_ELEMS].copy_from_slice(
+                &x[step.start * IMG_ELEMS..(step.start + step.chunk) * IMG_ELEMS],
+            );
+            let logits = self.rt.run_model(
+                step.artifact,
+                &input,
+                &[step.padded as i64, 32, 32, 3],
+                &self.weights,
+            )?;
+            out.extend_from_slice(&logits[..step.chunk * NUM_CLASSES]);
+        }
+        Ok(out)
+    }
+
+    fn fcc_mvm(
+        &mut self,
+        x: &[i32],
+        w_even: &[i32],
+        m: &[i32],
+        b: usize,
+        l: usize,
+        half: usize,
+    ) -> Result<Vec<i32>> {
+        let exe = self.rt.load(artifacts::FCC_MVM)?;
+        exe.run_i32(&[
+            (x, &[b as i64, l as i64]),
+            (w_even, &[l as i64, half as i64]),
+            (m, &[half as i64]),
+        ])
+    }
+
+    fn pim_mac(
+        &mut self,
+        x: &[i32],
+        w: &[i32],
+        b: usize,
+        l: usize,
+        n: usize,
+    ) -> Result<Vec<i32>> {
+        let exe = self.rt.load(artifacts::PIM_MAC)?;
+        exe.run_i32(&[(x, &[b as i64, l as i64]), (w, &[l as i64, n as i64])])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // runtime tests that need artifacts live in rust/tests/ (integration)
+    // where `make artifacts` outputs are available; here we only check
+    // cheap invariants.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_detected() {
+        if let Ok(rt) = Runtime::cpu("/nonexistent") {
+            assert!(!rt.has_artifact("model_b1"));
+        }
+    }
+
+    #[test]
+    fn chunk_plan_covers_batch_contiguously() {
+        for batch in [1usize, 2, 7, 8, 9, 12, 16, 17, 25] {
+            let plan = chunk_plan(batch);
+            let mut next = 0;
+            for step in &plan {
+                assert_eq!(step.start, next, "batch {batch}: gap in coverage");
+                assert!(step.chunk >= 1 && step.chunk <= step.padded);
+                next += step.chunk;
+            }
+            assert_eq!(next, batch, "batch {batch}: not fully covered");
+        }
+    }
+
+    #[test]
+    fn chunk_plan_routes_artifacts() {
+        // lone image -> narrow executable
+        assert_eq!(
+            chunk_plan(1),
+            vec![ChunkStep { start: 0, chunk: 1, artifact: "model_b1", padded: 1 }]
+        );
+        // exact wide batch -> one unpadded wide step
+        assert_eq!(
+            chunk_plan(8),
+            vec![ChunkStep { start: 0, chunk: 8, artifact: "model_b8", padded: 8 }]
+        );
+        // 9 = wide batch + a lone trailing image on the narrow path
+        assert_eq!(
+            chunk_plan(9),
+            vec![
+                ChunkStep { start: 0, chunk: 8, artifact: "model_b8", padded: 8 },
+                ChunkStep { start: 8, chunk: 1, artifact: "model_b1", padded: 1 },
+            ]
+        );
+        // partial chunks pad up to the wide executable
+        assert_eq!(
+            chunk_plan(12),
+            vec![
+                ChunkStep { start: 0, chunk: 8, artifact: "model_b8", padded: 8 },
+                ChunkStep { start: 8, chunk: 4, artifact: "model_b8", padded: 8 },
+            ]
+        );
+    }
+}

@@ -125,6 +125,43 @@ mod tests {
     use super::*;
     use crate::model::zoo;
 
+    /// CI smoke test: RunStats bookkeeping invariants on a full
+    /// MobileNetV2 plan — per-layer stats must sum to the totals, the
+    /// run must be non-trivial, and DDC must beat the `--baseline`
+    /// configuration.
+    #[test]
+    fn run_stats_invariants_on_mobilenet_plan() {
+        let net = zoo::mobilenet_v2();
+        let ddc = simulate_network(&net, &ArchConfig::ddc_pim(), &SimConfig::ddc_full());
+        assert!(ddc.total_cycles > 0, "empty simulation");
+        assert!(!ddc.layers.is_empty());
+        assert_eq!(ddc.layers.len(), net.layers.len());
+        // per-layer stats sum to run totals
+        let cycle_sum: u64 = ddc.layers.iter().map(|l| l.cycles).sum();
+        assert_eq!(cycle_sum, ddc.total_cycles, "layer cycles != total");
+        let mac_sum: u64 = ddc.layers.iter().map(|l| l.macs).sum();
+        assert_eq!(mac_sum, ddc.total_macs, "layer MACs != total");
+        let dram_sum: u64 = ddc.layers.iter().map(|l| l.dram_bytes).sum();
+        // totals include the input image stream on top of layer weights
+        assert!(ddc.total_dram_bytes >= dram_sum, "DRAM accounting shrank");
+        assert!(ddc.total_dram_bytes - dram_sum <= 32 * 32 * 3);
+        let energy_sum: f64 = ddc.layers.iter().map(|l| l.energy_mj).sum();
+        assert!((energy_sum - ddc.total_energy_mj).abs() < 1e-9);
+        // each layer's cycle decomposition is internally consistent
+        for l in &ddc.layers {
+            assert!(
+                l.cycles >= l.compute_cycles + l.load_cycles + l.exposed_dram_cycles,
+                "{}: component cycles exceed layer total",
+                l.name
+            );
+        }
+        // DDC speedup over --baseline > 1 on the paper's flagship model
+        let base = simulate_network(&net, &ArchConfig::baseline(), &SimConfig::baseline());
+        let speedup = base.total_cycles as f64 / ddc.total_cycles as f64;
+        assert!(speedup > 1.0, "DDC not faster than baseline: {speedup}");
+        assert!(ddc.latency_ms() > 0.0 && ddc.achieved_gops() > 0.0);
+    }
+
     #[test]
     fn ddc_faster_than_baseline_mobilenet() {
         let net = zoo::mobilenet_v2();
@@ -192,10 +229,11 @@ mod tests {
         let ddc = simulate_network(&net, &ArchConfig::ddc_pim(), &SimConfig::ddc_full());
         // conv weights halve; FC (large in VGG) unchanged
         assert!(ddc.total_dram_bytes < base.total_dram_bytes);
+        use crate::mapping::PlanKind;
         let conv_only_base: u64 = base
             .layers
             .iter()
-            .filter(|l| l.fcc || matches!(l.kind, crate::mapping::PlanKind::StdRegular | crate::mapping::PlanKind::StdDouble))
+            .filter(|l| l.fcc || matches!(l.kind, PlanKind::StdRegular | PlanKind::StdDouble))
             .map(|l| l.dram_bytes)
             .sum();
         assert!(conv_only_base > 0);

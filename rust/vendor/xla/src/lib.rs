@@ -1,0 +1,164 @@
+//! Compile-time stub of the `xla` crate (the API surface
+//! `ddc_pim::runtime::pjrt` uses: PJRT client/executable, literals and
+//! HLO-text parsing).
+//!
+//! Purpose: the `pjrt` cargo feature must *compile* on any host — CI
+//! runners and dev machines have no native XLA installed — while the
+//! actual PJRT execution path stays an explicit opt-in.  Every
+//! constructor here returns [`Error::Unavailable`], so a `pjrt` build
+//! degrades gracefully at runtime (`Runtime::cpu` fails with a clear
+//! message and the backend factory falls back to the reference backend).
+//!
+//! To run real AOT artifacts, replace this path dependency in
+//! `rust/Cargo.toml` with the published crate (`xla = "0.1.6"`, which
+//! links `xla_extension`) — the module in `runtime/pjrt.rs` is written
+//! against that crate's API (see DESIGN.md §Backends).
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: the native XLA/PJRT library is not linked.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: native XLA is not available in this build \
+                 (vendored stub; swap rust/vendor/xla for the real `xla` crate)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Uninhabited marker: stub handles can never actually be constructed,
+/// which lets the compiler prove the execution paths unreachable.
+#[derive(Debug, Clone, Copy)]
+enum Never {}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side literal (stub: shape-only placeholder).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            _dims: vec![data.len() as i64],
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        Ok(Literal {
+            _dims: dims.to_vec(),
+        })
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module (stub: retains nothing).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle (uninstantiable in the stub).
+pub struct PjRtClient {
+    never: Never,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self.never {}
+    }
+}
+
+/// Compiled executable handle (uninstantiable in the stub).
+pub struct PjRtLoadedExecutable {
+    never: Never,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals; result buffers per (device, output).
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.never {}
+    }
+}
+
+/// Device buffer handle (uninstantiable in the stub).
+pub struct PjRtBuffer {
+    never: Never,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("native XLA is not available"));
+    }
+
+    #[test]
+    fn literal_shape_ops_work_host_side() {
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
