@@ -1,4 +1,4 @@
-.PHONY: artifacts accuracy goldens test test-rust test-python
+.PHONY: artifacts accuracy goldens test test-rust test-python bench bench-smoke
 
 # AOT-lower the L2 model + L1 kernels to HLO text + goldens (needs jax)
 artifacts:
@@ -19,3 +19,15 @@ test-python:
 	python3 -m pytest python/tests -q
 
 test: test-rust test-python
+
+# populate the bench trajectory: BENCH_*.json at the repo root
+# (mean/min/max ns per named hot path; see DESIGN.md §7)
+bench:
+	cargo build --release --benches
+	cargo bench --bench pim_fabric -- --json BENCH_pim_fabric.json
+	cargo bench --bench fig13_speedup -- --json BENCH_fig13.json
+
+# tiny-iteration executor-regression run (what CI's bench-smoke job does)
+bench-smoke:
+	cargo build --release --benches
+	cargo bench --bench pim_fabric -- --quick --json BENCH_pim_fabric.json

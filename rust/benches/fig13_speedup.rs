@@ -1,39 +1,45 @@
 //! Bench: Fig. 13 — speedup ablation ladder for MobileNetV2 and
 //! EfficientNet-B0, plus the wall-clock cost of the cycle simulation
 //! itself (the L3 hot path measured in §Perf).
+//!
+//! `--json BENCH_fig13.json` persists the ladder factors and simulator
+//! timings for the bench trajectory (see `make bench`).
 
 use ddc_pim::config::{ArchConfig, SimConfig};
 use ddc_pim::model::zoo;
 use ddc_pim::report::fig13::ladder;
 use ddc_pim::sim::simulate_network;
-use ddc_pim::util::benchkit::{bench, report};
+use ddc_pim::util::benchkit::BenchSession;
 
 fn main() {
+    let mut s = BenchSession::from_env("fig13");
     println!("== fig13: speedup ladder (paper: MNv2 2.841x, ENB0 2.694x) ==");
     for (model, paper) in [("mobilenet_v2", 2.841), ("efficientnet_b0", 2.694)] {
         let l = ladder(model);
         let (a, b, c, total) = l.factors();
-        report(&format!("{model}.fcc_std_pw"), a, "x");
-        report(&format!("{model}.fcc_dw_dbis"), b, "x");
-        report(&format!("{model}.arch_reconfig"), c, "x");
-        report(&format!("{model}.overall"), total, "x");
-        report(&format!("{model}.paper"), paper, "x");
+        s.report(&format!("{model}.fcc_std_pw"), a, "x");
+        s.report(&format!("{model}.fcc_dw_dbis"), b, "x");
+        s.report(&format!("{model}.arch_reconfig"), c, "x");
+        s.report(&format!("{model}.overall"), total, "x");
+        s.report(&format!("{model}.paper"), paper, "x");
     }
 
     println!("\n== simulator wall-clock (L3 hot path) ==");
     let net = zoo::mobilenet_v2();
     let arch = ArchConfig::ddc_pim();
     let sim = SimConfig::ddc_full();
-    bench("simulate.mobilenet_v2.ddc", 3, 50, || {
+    s.bench("simulate.mobilenet_v2.ddc", 3, 50, || {
         std::hint::black_box(simulate_network(&net, &arch, &sim));
     });
     let base_arch = ArchConfig::baseline();
     let base_sim = SimConfig::baseline();
-    bench("simulate.mobilenet_v2.baseline", 3, 50, || {
+    s.bench("simulate.mobilenet_v2.baseline", 3, 50, || {
         std::hint::black_box(simulate_network(&net, &base_arch, &base_sim));
     });
     let enb0 = zoo::efficientnet_b0();
-    bench("simulate.efficientnet_b0.ddc", 3, 50, || {
+    s.bench("simulate.efficientnet_b0.ddc", 3, 50, || {
         std::hint::black_box(simulate_network(&enb0, &arch, &sim));
     });
+
+    s.finish();
 }

@@ -1,16 +1,23 @@
 //! Bench: the bit-true fabric hot paths (functional macro executor) and
-//! the runtime artifact path.  Not a paper table — this is the §Perf
+//! the runtime kernels.  Not a paper table — this is the §Perf
 //! instrumentation for the L3 hot loops.
+//!
+//! The bitsliced `mvm_row` and the retained scalar oracle are measured
+//! in the same run so the reported speedup compares like with like on
+//! the same host; `--json BENCH_pim_fabric.json` persists the numbers
+//! for the bench trajectory (see `make bench`).
 
 use ddc_pim::arch::lpu::Mode;
-use ddc_pim::arch::pim_macro::PimMacro;
+use ddc_pim::arch::pim_macro::{MvmScratch, PimMacro};
 use ddc_pim::arch::reconfig::Grouping;
 use ddc_pim::fcc::{fcc_transform, FilterBank};
 use ddc_pim::mapping::exec::exec_std_fcc;
-use ddc_pim::util::benchkit::{bench, report};
+use ddc_pim::runtime::reference::mvm_i32;
+use ddc_pim::util::benchkit::BenchSession;
 use ddc_pim::util::rng::Rng;
 
 fn main() {
+    let mut s = BenchSession::from_env("pim_fabric");
     println!("== pim fabric hot paths ==");
     let mut rng = Rng::new(3);
 
@@ -23,17 +30,41 @@ fn main() {
         mac.load_weight(cmp, 0, 1, !w);
     }
     let xs: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
-    let r = bench("mvm_row.double.combined", 10, 2000, || {
-        std::hint::black_box(mac.mvm_row(0, &xs, &xs, Mode::Double, Grouping::Combined));
+    let mut scratch = MvmScratch::new();
+
+    let fast = s.bench("mvm_row.double.combined", 10, 2000, || {
+        mac.mvm_row_into(0, &xs, &xs, Mode::Double, Grouping::Combined, &mut scratch);
+        std::hint::black_box(scratch.psum(0, 0));
     });
+    let slow = s.bench("mvm_row.double.combined.scalar_oracle", 10, 2000, || {
+        std::hint::black_box(mac.mvm_row_scalar(0, &xs, &xs, Mode::Double, Grouping::Combined));
+    });
+    s.report(
+        "mvm_row.double.combined.speedup_vs_scalar",
+        slow.mean_ns / fast.mean_ns,
+        "x",
+    );
     // each row-step models 8 hardware cycles; how much faster than
     // real-time 333 MHz are we?
     let hw_ns = 8.0 * 3.0; // 8 cycles @ 3 ns
-    report("mvm_row.vs_realtime", r.mean_ns / hw_ns, "x slower than silicon (bit-true model)");
+    s.report(
+        "mvm_row.vs_realtime",
+        fast.mean_ns / hw_ns,
+        "x slower than silicon (bit-true model)",
+    );
 
-    bench("mvm_row.regular.split", 10, 2000, || {
-        std::hint::black_box(mac.mvm_row(0, &xs, &xs, Mode::Regular, Grouping::Split));
+    let fast_split = s.bench("mvm_row.regular.split", 10, 2000, || {
+        mac.mvm_row_into(0, &xs, &xs, Mode::Regular, Grouping::Split, &mut scratch);
+        std::hint::black_box(scratch.psum(1, 0));
     });
+    let slow_split = s.bench("mvm_row.regular.split.scalar_oracle", 10, 2000, || {
+        std::hint::black_box(mac.mvm_row_scalar(0, &xs, &xs, Mode::Regular, Grouping::Split));
+    });
+    s.report(
+        "mvm_row.regular.split.speedup_vs_scalar",
+        slow_split.mean_ns / fast_split.mean_ns,
+        "x",
+    );
 
     // a full small conv layer through the functional path
     let (h, w, c, k, n) = (6, 6, 8, 3, 8);
@@ -44,17 +75,23 @@ fn main() {
         k * k * c,
     );
     let fcc = fcc_transform(&bank);
-    bench("exec_std_fcc.6x6x8.k3.n8", 1, 10, || {
+    s.bench("exec_std_fcc.6x6x8.k3.n8", 1, 10, || {
         std::hint::black_box(exec_std_fcc(&input, h, w, c, &fcc, k, 1));
     });
 
+    // the dense runtime kernel (register-blocked 4-column unroll)
+    let (mb, ml, mn) = (16, 128, 128);
+    let mx: Vec<i32> = (0..mb * ml).map(|_| rng.int8() as i32).collect();
+    let mw: Vec<i32> = (0..ml * mn).map(|_| rng.int8() as i32).collect();
+    s.bench("mvm_i32.16x128x128", 3, 200, || {
+        std::hint::black_box(mvm_i32(&mx, &mw, mb, ml, mn));
+    });
+
     // FCC transform itself (deployment path, MobileNetV2-layer-sized)
-    let big = FilterBank::new(
-        (0..320 * 960).map(|_| rng.int8() as i32).collect(),
-        320,
-        960,
-    );
-    bench("fcc_transform.320x960", 2, 50, || {
+    let big = FilterBank::new((0..320 * 960).map(|_| rng.int8() as i32).collect(), 320, 960);
+    s.bench("fcc_transform.320x960", 2, 50, || {
         std::hint::black_box(fcc_transform(&big));
     });
+
+    s.finish();
 }

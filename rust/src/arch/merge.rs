@@ -13,6 +13,7 @@
 //! layers bypass the recover stage (paper §III-C3).
 
 /// Two's-complement significance of bit `k` in a `bits`-wide operand.
+#[inline]
 pub fn bit_weight(k: usize, bits: usize) -> i64 {
     if k == bits - 1 {
         -(1i64 << k)
@@ -24,6 +25,7 @@ pub fn bit_weight(k: usize, bits: usize) -> i64 {
 /// Shift-&-add accumulation: fold one adder-tree output (`tree_sum`, the
 /// count of set AND results) for input-bit `ki` and weight-bit `kw` into
 /// a partial sum.
+#[inline]
 pub fn shift_add(psum: &mut i64, tree_sum: u32, ki: usize, kw: usize, bits: usize) {
     *psum += tree_sum as i64 * bit_weight(ki, bits) * bit_weight(kw, bits);
 }

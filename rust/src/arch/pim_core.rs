@@ -5,24 +5,45 @@
 //! with per-compartment vector inputs on the INP/INN broadcast pairs.
 //! Spatial accumulation across compartments is the reconfigurable unit's
 //! job ([`super::reconfig`]).
+//!
+//! Storage is kept twice, coherently, by the single write path
+//! ([`PimCore::write_weight`]):
+//!
+//! * per-cell ([`Compartment`]/DBMU/6T) — the faithful circuit view used
+//!   by the scalar oracle ([`PimCore::compute_cycle`]) and readback;
+//! * per-bit-plane ([`WeightPlanes`]) — one `u64` word per
+//!   (row, slot, weight-bit) packing that bit across all compartments,
+//!   so the bitsliced hot path in [`super::pim_macro`] reduces a whole
+//!   adder-tree column with one AND + `count_ones`.
+pub use super::sram::WeightPlanes;
 
 use super::compartment::{Compartment, CompartmentOut};
 use super::lpu::Mode;
+
+/// Weight precision of a row slot (8 columns per INT8 weight).
+pub const WEIGHT_BITS: usize = 8;
 
 /// One PIM core.
 #[derive(Debug, Clone)]
 pub struct PimCore {
     compartments: Vec<Compartment>,
+    planes: WeightPlanes,
     rows: usize,
     dbmus: usize,
 }
 
 impl PimCore {
     pub fn new(compartments: usize, rows: usize, dbmus: usize) -> Self {
+        assert!(
+            dbmus % WEIGHT_BITS == 0,
+            "dbmus {dbmus} not a multiple of the {WEIGHT_BITS}-bit weight slot"
+        );
+        let slots = dbmus / WEIGHT_BITS;
         PimCore {
             compartments: (0..compartments)
                 .map(|_| Compartment::new(rows, dbmus))
                 .collect(),
+            planes: WeightPlanes::new(compartments, rows, slots, WEIGHT_BITS),
             rows,
             dbmus,
         }
@@ -43,17 +64,25 @@ impl PimCore {
 
     /// Weight slots per row per compartment (2 for 16 columns).
     pub fn slots(&self) -> usize {
-        self.dbmus / 8
+        self.dbmus / WEIGHT_BITS
     }
 
-    /// Normal-SRAM-mode weight write.
+    /// Normal-SRAM-mode weight write (updates both the per-cell array and
+    /// the bit-plane shadow — the only weight write path).
     pub fn write_weight(&mut self, cmp: usize, row: usize, slot: usize, w: i32) {
         self.compartments[cmp].write_weight8(row, slot, w);
+        self.planes.record(cmp, row, slot, w);
     }
 
     /// Read back (Q side) — test/debug path.
     pub fn read_weight(&self, cmp: usize, row: usize, slot: usize) -> i32 {
         self.compartments[cmp].read_weight8(row, slot)
+    }
+
+    /// The packed per-weight-bit view of the stored array (hot path).
+    #[inline]
+    pub fn weight_planes(&self) -> &WeightPlanes {
+        &self.planes
     }
 
     /// One compute cycle: activate `row` in every compartment, drive the
@@ -62,6 +91,10 @@ impl PimCore {
     /// `inp_bits`/`inn_bits` are indexed by compartment (the vector-wise
     /// input of §III-D1); within a compartment the bit is broadcast to
     /// all 16 LPUs by the DBIS.
+    ///
+    /// This is the per-cell circuit walk — the differential-testing
+    /// oracle for the word-parallel planes; the hot executors go through
+    /// [`super::pim_macro::PimMacro::mvm_row_into`] instead.
     pub fn compute_cycle(
         &self,
         row: usize,
@@ -111,5 +144,36 @@ mod tests {
         let outs = core.compute_cycle(0, &[true, false], &[false, false], Mode::Regular);
         assert!(outs[0].q(0)); // cmp 0 sees INP=1
         assert!(!outs[1].q(0)); // cmp 1 sees INP=0
+    }
+
+    #[test]
+    fn planes_stay_coherent_with_cells() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        let mut core = PimCore::new(8, 4, 16);
+        // random writes, including overwrites of the same (cmp, row, slot)
+        for _ in 0..200 {
+            let cmp = rng.below(8) as usize;
+            let row = rng.below(4) as usize;
+            let slot = rng.below(2) as usize;
+            core.write_weight(cmp, row, slot, rng.int8() as i32);
+        }
+        // every plane bit must equal the corresponding cell's Q
+        for row in 0..4 {
+            for slot in 0..2 {
+                for kw in 0..WEIGHT_BITS {
+                    let plane = core.weight_planes().plane(row, slot, kw);
+                    for cmp in 0..8 {
+                        let w = core.read_weight(cmp, row, slot);
+                        let q = (w as u32 >> kw) & 1 == 1;
+                        assert_eq!(
+                            (plane >> cmp) & 1 == 1,
+                            q,
+                            "plane/cell drift at cmp={cmp} row={row} slot={slot} kw={kw}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -1,16 +1,32 @@
 //! PIM macro: core + reconfigurable unit + merge pipeline — the
 //! functional (bit-true) executor.
 //!
-//! `mvm_row` performs one full bit-serial row computation: 8 input-bit
-//! cycles through the core, adder-tree reduction per weight-bit position,
-//! shift-&-add recombination — returning the per-slot partial-sum pairs
-//! `(Σ INP·w, Σ INN·!w)` that the ARU consumes.  This is the model that
-//! *proves* the DDC numerics; the timing engine never recomputes values,
-//! it only counts the cycles this executor implies.
+//! [`PimMacro::mvm_row_into`] performs one full bit-serial row
+//! computation: 8 input-bit cycles through the core, adder-tree
+//! reduction per weight-bit position, shift-&-add recombination —
+//! writing the per-slot partial-sum pairs `(Σ INP·w, Σ INN·!w)` that the
+//! ARU consumes into a caller-provided [`MvmScratch`].  This is the
+//! model that *proves* the DDC numerics; the timing engine never
+//! recomputes values, it only counts the cycles this executor implies.
+//!
+//! Two implementations of the same semantics:
+//!
+//! * **bitsliced** (default hot path) — input bits are packed into one
+//!   `u64` word per bit-cycle (bit = compartment), weight bits come from
+//!   the precomputed [`WeightPlanes`][crate::arch::sram::WeightPlanes]
+//!   shadow, and every adder-tree column reduces to
+//!   `(plane & inputs).count_ones()`.  All-zero input bit-planes are
+//!   skipped outright — the software twin of the zero bit-column skip in
+//!   the bit-level-sparsity PIM lines of work.
+//! * **scalar** ([`PimMacro::mvm_row_scalar`]) — the original per-cell
+//!   circuit walk, retained as the differential-testing oracle.  The
+//!   `scalar-fabric` cargo feature forces it as the `mvm_row_into`
+//!   implementation so any divergence can be bisected by flipping one
+//!   flag.
 
 use super::lpu::Mode;
-use super::merge::{bit_weight, shift_add};
-use super::pim_core::PimCore;
+use super::merge::bit_weight;
+use super::pim_core::{PimCore, WEIGHT_BITS};
 use super::reconfig::{reduce, Grouping};
 
 /// Partial-sum pair for one (group, slot): the stored-filter psum (Q
@@ -19,6 +35,79 @@ use super::reconfig::{reduce, Grouping};
 pub struct PsumPair {
     pub q: i64,
     pub qbar: i64,
+}
+
+/// Caller-owned scratch for [`PimMacro::mvm_row_into`]: the psum
+/// accumulators plus the packed input bit-planes, reused across calls so
+/// the hot loop performs no allocation.  Create one per executor (or per
+/// thread) and pass it to every row-step; buffers grow on first use and
+/// are reset — never reallocated — afterwards.
+#[derive(Debug, Clone, Default)]
+pub struct MvmScratch {
+    psums: Vec<PsumPair>,
+    inp_planes: Vec<u64>,
+    inn_planes: Vec<u64>,
+    ngroups: usize,
+    slots: usize,
+}
+
+impl MvmScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size for `ngroups * slots` psums and `input_bits` input planes,
+    /// zeroing all of them (allocation-free once capacity exists).
+    fn reset(&mut self, ngroups: usize, slots: usize, input_bits: usize) {
+        self.ngroups = ngroups;
+        self.slots = slots;
+        self.psums.clear();
+        self.psums.resize(ngroups * slots, PsumPair::default());
+        self.inp_planes.clear();
+        self.inp_planes.resize(input_bits, 0);
+        self.inn_planes.clear();
+        self.inn_planes.resize(input_bits, 0);
+    }
+
+    /// Result of the last `mvm_row_into` call for (group, slot).
+    #[inline]
+    pub fn psum(&self, group: usize, slot: usize) -> PsumPair {
+        self.psums[group * self.slots + slot]
+    }
+
+    pub fn ngroups(&self) -> usize {
+        self.ngroups
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Copy the psums out in the legacy `psums[group][slot]` shape
+    /// (allocates — test/compat convenience, not the hot path).
+    pub fn to_vecs(&self) -> Vec<Vec<PsumPair>> {
+        (0..self.ngroups)
+            .map(|g| (0..self.slots).map(|s| self.psum(g, s)).collect())
+            .collect()
+    }
+}
+
+/// Pack per-lane INT8 values into per-bit `u64` planes: bit `lane` of
+/// `planes[ki]` is bit `ki` of `inputs[lane]` (two's complement, low 8
+/// bits — identical to the `(x as u8) >> ki` view of the scalar path).
+#[inline]
+fn pack_input_planes(planes: &mut [u64], inputs: &[i32]) {
+    for (lane, &x) in inputs.iter().enumerate() {
+        let mut v = (x as u8) as u64;
+        while v != 0 {
+            let ki = v.trailing_zeros() as usize;
+            if ki >= planes.len() {
+                break; // input precision below 8 bits truncates high bits
+            }
+            planes[ki] |= 1u64 << lane;
+            v &= v - 1;
+        }
+    }
 }
 
 /// One PIM macro.
@@ -30,7 +119,19 @@ pub struct PimMacro {
 }
 
 impl PimMacro {
+    /// `weight_bits` must equal the storage slot width
+    /// ([`WEIGHT_BITS`] = 8: the column layout is fixed by the macro
+    /// geometry); `input_bits` may be reduced below 8 (bit-serial cycles
+    /// simply stop early) — both implementations honor it identically.
     pub fn new(core: PimCore, input_bits: usize, weight_bits: usize) -> Self {
+        assert_eq!(
+            weight_bits, WEIGHT_BITS,
+            "weight precision is fixed by the {WEIGHT_BITS}-bit slot layout"
+        );
+        assert!(
+            (1..=8).contains(&input_bits),
+            "input precision must be 1..=8 bits, got {input_bits}"
+        );
         PimMacro {
             core,
             input_bits,
@@ -44,22 +145,145 @@ impl PimMacro {
 
     /// Load one stored weight (normal SRAM mode).
     pub fn load_weight(&mut self, cmp: usize, row: usize, slot: usize, w: i32) {
-        assert!(
-            (-128..=127).contains(&w),
-            "weight {w} out of INT8 range"
-        );
+        assert!((-128..=127).contains(&w), "weight {w} out of INT8 range");
         self.core.write_weight(cmp, row, slot, w);
     }
 
-    /// Full bit-serial MVM over one activated row.
+    /// Full bit-serial MVM over one activated row, into caller scratch.
     ///
     /// * `inputs_p[cmp]` / `inputs_n[cmp]` — signed INT8 vector elements
-    ///   on the INP / INN broadcast of each compartment.
+    ///   on the INP / INN broadcast of each compartment.  Slices shorter
+    ///   than the compartment count are zero-extended (absent lanes
+    ///   drive no input), so executors can stream im2col slices without
+    ///   copying into padded buffers.
     /// * `mode` — Regular (Q path only) or Double.
     /// * `grouping` — Combined (std/pw) or Split (dw two-stage).
     ///
-    /// Returns `psums[group][slot]`.
+    /// Results land in `scratch.psum(group, slot)`.
+    pub fn mvm_row_into(
+        &self,
+        row: usize,
+        inputs_p: &[i32],
+        inputs_n: &[i32],
+        mode: Mode,
+        grouping: Grouping,
+        scratch: &mut MvmScratch,
+    ) {
+        if cfg!(feature = "scalar-fabric") {
+            self.mvm_row_scalar_into(row, inputs_p, inputs_n, mode, grouping, scratch);
+        } else {
+            self.mvm_row_bitsliced_into(row, inputs_p, inputs_n, mode, grouping, scratch);
+        }
+    }
+
+    /// The word-parallel bit-plane kernel (see module docs).
+    fn mvm_row_bitsliced_into(
+        &self,
+        row: usize,
+        inputs_p: &[i32],
+        inputs_n: &[i32],
+        mode: Mode,
+        grouping: Grouping,
+        scratch: &mut MvmScratch,
+    ) {
+        let ncmp = self.core.num_compartments();
+        assert!(inputs_p.len() <= ncmp, "INP vector wider than the core");
+        assert!(inputs_n.len() <= ncmp, "INN vector wider than the core");
+        let slots = self.core.slots();
+        let ngroups = grouping.ngroups();
+        scratch.reset(ngroups, slots, self.input_bits);
+        if mode == Mode::NormalSram {
+            return; // LPU disabled: all psums stay zero, like the silicon
+        }
+        let planes = self.core.weight_planes();
+        debug_assert_eq!(
+            planes.wbits(),
+            self.weight_bits,
+            "weight precision is fixed by the 8-bit slot layout"
+        );
+        pack_input_planes(&mut scratch.inp_planes, inputs_p);
+        if mode == Mode::Double {
+            pack_input_planes(&mut scratch.inn_planes, inputs_n);
+        }
+        let gmasks = grouping.lane_masks(ncmp);
+        for ki in 0..self.input_bits {
+            let pw = scratch.inp_planes[ki];
+            let nw = scratch.inn_planes[ki]; // all-zero in Regular mode
+            if pw == 0 && nw == 0 {
+                continue; // zero input bit-plane: nothing fires this cycle
+            }
+            let wki = bit_weight(ki, self.input_bits);
+            for (g, &gmask) in gmasks.iter().take(ngroups).enumerate() {
+                let pg = pw & gmask;
+                let ng = nw & gmask;
+                if pg == 0 && ng == 0 {
+                    continue;
+                }
+                for s in 0..slots {
+                    // one AND + popcount per weight bit = one adder tree
+                    let ws = planes.row_slot_planes(row, s);
+                    let mut q_acc = 0i64;
+                    let mut qbar_acc = 0i64;
+                    for (kw, &plane) in ws.iter().enumerate() {
+                        let bw = bit_weight(kw, self.weight_bits);
+                        q_acc += (plane & pg).count_ones() as i64 * bw;
+                        qbar_acc += (!plane & ng).count_ones() as i64 * bw;
+                    }
+                    let pair = &mut scratch.psums[g * slots + s];
+                    pair.q += q_acc * wki;
+                    pair.qbar += qbar_acc * wki;
+                }
+            }
+        }
+    }
+
+    /// Scalar-oracle adapter: zero-extend to core width, run the per-cell
+    /// walk, copy into scratch (the `scalar-fabric` dispatch target).
+    fn mvm_row_scalar_into(
+        &self,
+        row: usize,
+        inputs_p: &[i32],
+        inputs_n: &[i32],
+        mode: Mode,
+        grouping: Grouping,
+        scratch: &mut MvmScratch,
+    ) {
+        let ncmp = self.core.num_compartments();
+        let mut p = inputs_p.to_vec();
+        p.resize(ncmp, 0);
+        let mut n = inputs_n.to_vec();
+        n.resize(ncmp, 0);
+        let psums = self.mvm_row_scalar(row, &p, &n, mode, grouping);
+        scratch.reset(psums.len(), self.core.slots(), self.input_bits);
+        for (g, group) in psums.iter().enumerate() {
+            for (s, &pair) in group.iter().enumerate() {
+                scratch.psums[g * scratch.slots + s] = pair;
+            }
+        }
+    }
+
+    /// Legacy allocating API: runs [`Self::mvm_row_into`] on a fresh
+    /// scratch and returns `psums[group][slot]`.
     pub fn mvm_row(
+        &self,
+        row: usize,
+        inputs_p: &[i32],
+        inputs_n: &[i32],
+        mode: Mode,
+        grouping: Grouping,
+    ) -> Vec<Vec<PsumPair>> {
+        let mut scratch = MvmScratch::new();
+        self.mvm_row_into(row, inputs_p, inputs_n, mode, grouping, &mut scratch);
+        scratch.to_vecs()
+    }
+
+    /// The per-cell scalar fabric: every compartment's LPUs evaluated
+    /// individually, adder trees as explicit popcount loops
+    /// ([`reduce`]).  Bit-true by construction against Fig. 6; kept as
+    /// the differential-testing oracle for the bitsliced kernel (and as
+    /// the `mvm_row_into` implementation under `--features
+    /// scalar-fabric`).  Requires full-width input slices.
+    pub fn mvm_row_scalar(
         &self,
         row: usize,
         inputs_p: &[i32],
@@ -71,35 +295,30 @@ impl PimMacro {
         assert_eq!(inputs_p.len(), ncmp);
         assert_eq!(inputs_n.len(), ncmp);
         let slots = self.core.slots();
-        let ngroups = match grouping {
-            Grouping::Combined => 1,
-            Grouping::Split => 2,
-        };
+        let ngroups = grouping.ngroups();
         let mut psums = vec![vec![PsumPair::default(); slots]; ngroups];
 
         for ki in 0..self.input_bits {
-            let inp_bits: Vec<bool> = inputs_p
-                .iter()
-                .map(|&x| ((x as u8) >> ki) & 1 == 1)
-                .collect();
-            let inn_bits: Vec<bool> = inputs_n
-                .iter()
-                .map(|&x| ((x as u8) >> ki) & 1 == 1)
-                .collect();
+            let inp_bits: Vec<bool> =
+                inputs_p.iter().map(|&x| ((x as u8) >> ki) & 1 == 1).collect();
+            let inn_bits: Vec<bool> =
+                inputs_n.iter().map(|&x| ((x as u8) >> ki) & 1 == 1).collect();
             let outs = self.core.compute_cycle(row, &inp_bits, &inn_bits, mode);
             let sums = reduce(&outs, grouping, slots, self.weight_bits);
+            // shift-&-add with the *configured* operand widths (the MSB
+            // of each operand carries negative weight) — the same terms
+            // the bitsliced kernel accumulates, in the same widths
+            let wki = bit_weight(ki, self.input_bits);
             for g in 0..ngroups {
                 for s in 0..slots {
                     for kw in 0..self.weight_bits {
-                        shift_add(&mut psums[g][s].q, sums.q[g][s][kw], ki, kw, 8);
-                        shift_add(&mut psums[g][s].qbar, sums.qbar[g][s][kw], ki, kw, 8);
+                        let bw = bit_weight(kw, self.weight_bits) * wki;
+                        psums[g][s].q += sums.q[g][s][kw] as i64 * bw;
+                        psums[g][s].qbar += sums.qbar[g][s][kw] as i64 * bw;
                     }
                 }
             }
         }
-        // bit-serial input MSB carries negative weight: shift_add applied
-        // bit_weight(ki) per input bit via the ki term above, so nothing
-        // further to correct here.
         psums
     }
 
@@ -142,7 +361,7 @@ mod tests {
         let ws: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
         let xs: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
         load_column(&mut m, 0, &ws);
-        let psums = m.mvm_row(0, &xs, &vec![0; 32], Mode::Regular, Grouping::Combined);
+        let psums = m.mvm_row(0, &xs, &[0; 32], Mode::Regular, Grouping::Combined);
         assert_eq!(psums[0][0].q, PimMacro::expected_psum(&xs, &ws));
         assert_eq!(psums[0][0].qbar, 0); // Q̄ path dark in regular mode
     }
@@ -182,12 +401,12 @@ mod tests {
         let ws: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
         let xs: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
         load_column(&mut m, 0, &ws);
-        let psums = m.mvm_row(0, &xs, &vec![0; 32], Mode::Regular, Grouping::Split);
+        let psums = m.mvm_row(0, &xs, &[0; 32], Mode::Regular, Grouping::Split);
         assert_eq!(psums.len(), 2);
         assert_eq!(psums[0][0].q, PimMacro::expected_psum(&xs[..16], &ws[..16]));
         assert_eq!(psums[1][0].q, PimMacro::expected_psum(&xs[16..], &ws[16..]));
         // split halves sum to the combined result
-        let comb = m.mvm_row(0, &xs, &vec![0; 32], Mode::Regular, Grouping::Combined);
+        let comb = m.mvm_row(0, &xs, &[0; 32], Mode::Regular, Grouping::Combined);
         assert_eq!(psums[0][0].q + psums[1][0].q, comb[0][0].q);
     }
 
@@ -208,5 +427,107 @@ mod tests {
     fn rejects_oversized_weight() {
         let mut m = PimMacro::paper();
         m.load_weight(0, 0, 0, 300);
+    }
+
+    #[test]
+    fn bitsliced_matches_scalar_oracle() {
+        // the in-module smoke version of the full differential property
+        // test in tests/differential_fabric.rs
+        let mut rng = Rng::new(65);
+        let mut m = PimMacro::paper();
+        for row in 0..4 {
+            for cmp in 0..32 {
+                for slot in 0..2 {
+                    m.load_weight(cmp, row, slot, rng.int8() as i32);
+                }
+            }
+        }
+        let xs: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
+        let xn: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
+        let mut scratch = MvmScratch::new();
+        for row in 0..4 {
+            for mode in [Mode::Regular, Mode::Double, Mode::NormalSram] {
+                for grouping in [Grouping::Combined, Grouping::Split] {
+                    m.mvm_row_into(row, &xs, &xn, mode, grouping, &mut scratch);
+                    let want = m.mvm_row_scalar(row, &xs, &xn, mode, grouping);
+                    assert_eq!(
+                        scratch.to_vecs(),
+                        want,
+                        "divergence at row {row} {mode:?} {grouping:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduced_input_precision_matches_scalar() {
+        // input_bits < 8: both implementations must read the same low
+        // bits and give the reduced MSB the same negative significance
+        let mut rng = Rng::new(68);
+        for input_bits in [1usize, 4, 7] {
+            let mut m = PimMacro::new(PimCore::new(16, 2, 16), input_bits, 8);
+            for cmp in 0..16 {
+                for slot in 0..2 {
+                    m.load_weight(cmp, 1, slot, rng.int8() as i32);
+                }
+            }
+            let xs: Vec<i32> = (0..16).map(|_| rng.int8() as i32).collect();
+            let xn: Vec<i32> = (0..16).map(|_| rng.int8() as i32).collect();
+            let mut scratch = MvmScratch::new();
+            for grouping in [Grouping::Combined, Grouping::Split] {
+                m.mvm_row_into(1, &xs, &xn, Mode::Double, grouping, &mut scratch);
+                let want = m.mvm_row_scalar(1, &xs, &xn, Mode::Double, grouping);
+                assert_eq!(scratch.to_vecs(), want, "divergence at input_bits={input_bits}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "slot layout")]
+    fn rejects_non_slot_weight_precision() {
+        PimMacro::new(PimCore::new(2, 2, 16), 8, 4);
+    }
+
+    #[test]
+    fn short_inputs_zero_extend() {
+        let mut rng = Rng::new(66);
+        let mut m = PimMacro::paper();
+        let ws: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
+        load_column(&mut m, 0, &ws);
+        let xs: Vec<i32> = (0..20).map(|_| rng.int8() as i32).collect();
+        let mut padded = xs.clone();
+        padded.resize(32, 0);
+        let mut scratch = MvmScratch::new();
+        m.mvm_row_into(0, &xs, &xs, Mode::Double, Grouping::Combined, &mut scratch);
+        let want = m.mvm_row(0, &padded, &padded, Mode::Double, Grouping::Combined);
+        assert_eq!(scratch.to_vecs(), want);
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // a dirty scratch from a previous (larger) call must not leak
+        // into the next result
+        let mut rng = Rng::new(67);
+        let mut m = PimMacro::paper();
+        let ws: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
+        let xs: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
+        load_column(&mut m, 0, &ws);
+        let mut scratch = MvmScratch::new();
+        m.mvm_row_into(0, &xs, &xs, Mode::Double, Grouping::Split, &mut scratch);
+        m.mvm_row_into(0, &xs, &xs, Mode::Double, Grouping::Combined, &mut scratch);
+        let fresh = m.mvm_row(0, &xs, &xs, Mode::Double, Grouping::Combined);
+        assert_eq!(scratch.to_vecs(), fresh);
+        assert_eq!(scratch.ngroups(), 1);
+    }
+
+    #[test]
+    fn pack_input_planes_is_bit_transpose() {
+        let mut planes = vec![0u64; 8];
+        pack_input_planes(&mut planes, &[0b0101, -1, 0]);
+        assert_eq!(planes[0], 0b011); // lanes 0 and 1 have bit 0 set
+        assert_eq!(planes[1], 0b010); // only lane 1 (-1 = all bits)
+        assert_eq!(planes[2], 0b011);
+        assert_eq!(planes[7], 0b010);
     }
 }

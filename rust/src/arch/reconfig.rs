@@ -17,6 +17,33 @@ pub enum Grouping {
     Split,
 }
 
+impl Grouping {
+    /// Number of independent accumulation groups.
+    pub fn ngroups(self) -> usize {
+        match self {
+            Grouping::Combined => 1,
+            Grouping::Split => 2,
+        }
+    }
+
+    /// Lane masks of each accumulation group over `lanes` packed
+    /// compartments (`lanes <= 64`) — the word-level view of the
+    /// adder-unit combine/split mux used by the bitsliced hot path:
+    /// Combined is one full-width group (second mask 0), Split is the
+    /// low/high compartment halves.
+    pub fn lane_masks(self, lanes: usize) -> [u64; 2] {
+        debug_assert!((1..=64).contains(&lanes));
+        let full = if lanes == 64 { u64::MAX } else { (1u64 << lanes) - 1 };
+        match self {
+            Grouping::Combined => [full, 0],
+            Grouping::Split => {
+                let lo = (1u64 << (lanes / 2)) - 1;
+                [lo, full & !lo]
+            }
+        }
+    }
+}
+
 /// Tree sums for one compute cycle, per (group, weight slot, weight bit):
 /// `sums[group][slot][kw]` = number of set AND results.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -102,6 +129,33 @@ mod tests {
         let c = reduce(&outs, Grouping::Combined, 2, 8);
         let s = reduce(&outs, Grouping::Split, 2, 8);
         assert_eq!(c.q[0][0][0], s.q[0][0][0] + s.q[1][0][0]);
+    }
+
+    #[test]
+    fn lane_masks_cover_and_partition() {
+        for lanes in [1usize, 2, 16, 32, 63, 64] {
+            let full = if lanes == 64 { u64::MAX } else { (1u64 << lanes) - 1 };
+            let [c0, c1] = Grouping::Combined.lane_masks(lanes);
+            assert_eq!(c0, full);
+            assert_eq!(c1, 0);
+            let [s0, s1] = Grouping::Split.lane_masks(lanes);
+            assert_eq!(s0 | s1, full, "split must cover all {lanes} lanes");
+            assert_eq!(s0 & s1, 0, "split groups must be disjoint");
+            assert_eq!(s0.count_ones() as usize, lanes / 2);
+        }
+    }
+
+    #[test]
+    fn lane_masks_match_scalar_group_slicing() {
+        // the mask halves must select exactly the compartment ranges the
+        // scalar `reduce` slices (`..half` / `half..`)
+        let lanes = 32;
+        let [s0, s1] = Grouping::Split.lane_masks(lanes);
+        for cmp in 0..lanes {
+            let in_lo = cmp < lanes / 2;
+            assert_eq!((s0 >> cmp) & 1 == 1, in_lo);
+            assert_eq!((s1 >> cmp) & 1 == 1, !in_lo);
+        }
     }
 
     #[test]

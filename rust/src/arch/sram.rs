@@ -116,6 +116,93 @@ impl SramArray {
     }
 }
 
+/// Bit-plane shadow of a core's weight storage: for every
+/// (row, slot, weight-bit) one `u64` word packs that weight bit across up
+/// to 64 lanes (compartments).
+///
+/// Built incrementally at weight-load time (the cold path), so the
+/// compute hot loop is one AND + `count_ones` per word instead of a
+/// per-cell walk.  The Q̄ plane is never stored: it is
+/// `!plane & lane_mask` — the 6T complementary-pair invariant lifted to
+/// word level, exactly as [`SramCell::q_bar`] derives it per cell.
+#[derive(Debug, Clone)]
+pub struct WeightPlanes {
+    /// `rows * slots * wbits` words; bit `lane` of
+    /// `planes[(row * slots + slot) * wbits + kw]` is weight bit `kw` of
+    /// lane `lane`'s slot-`slot` weight at `row`.
+    planes: Vec<u64>,
+    rows: usize,
+    slots: usize,
+    wbits: usize,
+    lane_mask: u64,
+}
+
+impl WeightPlanes {
+    pub fn new(lanes: usize, rows: usize, slots: usize, wbits: usize) -> Self {
+        assert!(
+            (1..=64).contains(&lanes),
+            "bit-plane packing supports 1..=64 lanes, got {lanes}"
+        );
+        WeightPlanes {
+            planes: vec![0; rows * slots * wbits],
+            rows,
+            slots,
+            wbits,
+            lane_mask: if lanes == 64 { u64::MAX } else { (1u64 << lanes) - 1 },
+        }
+    }
+
+    fn idx(&self, row: usize, slot: usize, kw: usize) -> usize {
+        debug_assert!(row < self.rows && slot < self.slots && kw < self.wbits);
+        (row * self.slots + slot) * self.wbits + kw
+    }
+
+    /// Record lane `lane`'s weight at (row, slot) into all `wbits` planes
+    /// (two's complement, LSB-first — matches [`SramArray::write_weight8`]).
+    pub fn record(&mut self, lane: usize, row: usize, slot: usize, w: i32) {
+        let bit = 1u64 << lane;
+        debug_assert!(bit & self.lane_mask != 0, "lane {lane} out of range");
+        for kw in 0..self.wbits {
+            let i = self.idx(row, slot, kw);
+            if (w as u32 >> kw) & 1 == 1 {
+                self.planes[i] |= bit;
+            } else {
+                self.planes[i] &= !bit;
+            }
+        }
+    }
+
+    /// Q bit-plane of (row, slot, weight-bit): bit `lane` = stored Q bit.
+    #[inline]
+    pub fn plane(&self, row: usize, slot: usize, kw: usize) -> u64 {
+        self.planes[self.idx(row, slot, kw)]
+    }
+
+    /// Q̄ bit-plane — the free complementary word of the 6T pair.
+    #[inline]
+    pub fn plane_bar(&self, row: usize, slot: usize, kw: usize) -> u64 {
+        !self.plane(row, slot, kw) & self.lane_mask
+    }
+
+    /// All `wbits` planes of (row, slot) as one contiguous slice — the
+    /// hot-path access pattern (one bounds check per row-step).
+    #[inline]
+    pub fn row_slot_planes(&self, row: usize, slot: usize) -> &[u64] {
+        let i = self.idx(row, slot, 0);
+        &self.planes[i..i + self.wbits]
+    }
+
+    /// Mask of the populated lane bits.
+    #[inline]
+    pub fn lane_mask(&self) -> u64 {
+        self.lane_mask
+    }
+
+    pub fn wbits(&self) -> usize {
+        self.wbits
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,5 +255,67 @@ mod tests {
         // one compartment: 64 rows x 16 cols = 1 Kb
         let a = SramArray::new(64, 16);
         assert_eq!(a.size_bits(), 1024);
+    }
+
+    #[test]
+    fn weight_planes_match_cell_bits() {
+        // the bit-plane shadow must agree bit-for-bit with the per-cell
+        // array for random weights (both sides written identically)
+        forall(
+            33,
+            200,
+            |r| (r.below(4) as usize, r.below(2) as usize, r.int8() as i32),
+            |&(row, slot, w)| {
+                let mut a = SramArray::new(4, 16);
+                a.write_weight8(row, slot, w);
+                let mut p = WeightPlanes::new(1, 4, 2, 8);
+                p.record(0, row, slot, w);
+                (0..8).all(|kw| {
+                    let q = a.cell(row, slot * 8 + kw).q();
+                    let qb = a.cell(row, slot * 8 + kw).q_bar();
+                    (p.plane(row, slot, kw) & 1 == 1) == q
+                        && (p.plane_bar(row, slot, kw) & 1 == 1) == qb
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn weight_planes_pack_lanes() {
+        let mut p = WeightPlanes::new(32, 2, 2, 8);
+        p.record(0, 1, 0, 0b0101);
+        p.record(5, 1, 0, 0b0001);
+        p.record(31, 1, 0, -1); // all bits set
+        // kw=0: lanes 0, 5, 31
+        assert_eq!(p.plane(1, 0, 0), (1 << 0) | (1 << 5) | (1 << 31));
+        // kw=2: lanes 0, 31
+        assert_eq!(p.plane(1, 0, 2), (1 << 0) | (1 << 31));
+        // complementary plane is the inverse within the 32 lanes
+        assert_eq!(p.plane_bar(1, 0, 0), !p.plane(1, 0, 0) & 0xFFFF_FFFF);
+        // untouched (row, slot) stays all-zero / all-complement
+        assert_eq!(p.plane(0, 1, 3), 0);
+        assert_eq!(p.plane_bar(0, 1, 3), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn weight_planes_overwrite_clears_stale_bits() {
+        let mut p = WeightPlanes::new(8, 1, 1, 8);
+        p.record(3, 0, 0, -1);
+        p.record(3, 0, 0, 0);
+        for kw in 0..8 {
+            assert_eq!(p.plane(0, 0, kw), 0, "stale bit left in plane {kw}");
+        }
+    }
+
+    #[test]
+    fn weight_planes_row_slot_slice() {
+        let mut p = WeightPlanes::new(64, 2, 2, 8);
+        p.record(63, 1, 1, 0b1000_0001u32 as i32);
+        let ws = p.row_slot_planes(1, 1);
+        assert_eq!(ws.len(), 8);
+        assert_eq!(ws[0], 1 << 63);
+        assert_eq!(ws[7], 1 << 63);
+        assert_eq!(ws[3], 0);
+        assert_eq!(p.lane_mask(), u64::MAX);
     }
 }

@@ -6,14 +6,41 @@
 //! mode the recovered outputs must equal the direct convolution with the
 //! *full* (biased-comp) filter bank, even though only half the filters
 //! were ever written into the array.
+//!
+//! Hot-loop discipline (§Performance architecture in DESIGN.md): each
+//! executor owns one [`MvmScratch`] for the whole layer, per-pixel
+//! window sums are computed once at im2col time (they are group- and
+//! pass-invariant), tile inputs are streamed as im2col slices (the
+//! macro zero-extends short tails), and pixels are processed in
+//! [`PIXEL_BLOCK`]-sized runs per loaded row so a weight pass streams
+//! activations cache-friendly.  No allocation happens inside the
+//! per-pixel loops.
 
 use crate::arch::lpu::Mode;
 use crate::arch::merge::aru_recover;
-use crate::arch::pim_macro::PimMacro;
+use crate::arch::pim_macro::{MvmScratch, PimMacro};
 use crate::arch::reconfig::Grouping;
 use crate::fcc::FccWeights;
 
 use super::im2col::{im2col, im2col_channel};
+
+/// Pixels streamed per loaded (row, slot) pass: the row's bit-planes
+/// stay register/L1-hot while this many activation windows flow past.
+const PIXEL_BLOCK: usize = 64;
+
+/// Per-pixel window sums (the ΣI the pre-process unit feeds the ARU),
+/// computed once over the im2col matrix `cols` (`[P, l]` row-major).
+///
+/// The sum depends only on the pixel window — not on the filter group
+/// or the weight-reload pass — so the executors compute it here exactly
+/// once instead of re-reducing the window inside the (pass, group,
+/// pixel) loops as the scalar executor did.
+pub fn window_sums(cols: &[i32], l: usize) -> Vec<i64> {
+    assert!(l > 0 && cols.len() % l == 0, "im2col shape mismatch");
+    cols.chunks_exact(l)
+        .map(|w| w.iter().map(|&x| x as i64).sum())
+        .collect()
+}
 
 /// std/pw-conv in double computing mode with FCC weights (paper Fig. 10).
 ///
@@ -35,6 +62,7 @@ pub fn exec_std_fcc(
     let pairs = n / 2;
     let (cols, oh, ow) = im2col(input, h, w, c, k, stride);
     let pixels = oh * ow;
+    let win_sums = window_sums(&cols, l);
 
     let mut mac = PimMacro::paper();
     let cmp = mac.core.num_compartments();
@@ -44,6 +72,9 @@ pub fn exec_std_fcc(
     let groups = pairs.div_ceil(slots);
 
     let mut out = vec![0i64; pixels * n];
+    let mut scratch = MvmScratch::new();
+    // per-(pixel-in-block, slot) psum accumulators, reused across blocks
+    let mut blk = Vec::new();
     // iterate groups in row-capacity chunks (weight reload passes)
     let groups_per_pass = (rows / l_tiles).max(1);
     let mut g0 = 0;
@@ -67,41 +98,51 @@ pub fn exec_std_fcc(
                 }
             }
         }
-        // ---- compute pass: stream all pixels (weight stationary)
-        for px in 0..pixels {
-            let window = &cols[px * l..(px + 1) * l];
-            let sum_i: i64 = window.iter().map(|&x| x as i64).sum();
+        // ---- compute pass: stream pixel blocks (weight stationary)
+        let mut pb0 = 0;
+        while pb0 < pixels {
+            let pb1 = (pb0 + PIXEL_BLOCK).min(pixels);
             for g in g0..g1 {
-                let mut psum = vec![(0i64, 0i64); slots];
+                blk.clear();
+                blk.resize((pb1 - pb0) * slots, (0i64, 0i64));
                 for ti in 0..l_tiles {
                     let row = (g - g0) * l_tiles + ti;
-                    let inputs: Vec<i32> = (0..cmp)
-                        .map(|cc| {
-                            let li = ti * cmp + cc;
-                            if li < l {
-                                window[li]
-                            } else {
-                                0
-                            }
-                        })
-                        .collect();
-                    let ps = mac.mvm_row(row, &inputs, &inputs, Mode::Double, Grouping::Combined);
-                    for s in 0..slots {
-                        psum[s].0 += ps[0][s].q;
-                        psum[s].1 += ps[0][s].qbar;
+                    let lo = ti * cmp;
+                    let hi = ((ti + 1) * cmp).min(l);
+                    for px in pb0..pb1 {
+                        let tile = &cols[px * l + lo..px * l + hi];
+                        mac.mvm_row_into(
+                            row,
+                            tile,
+                            tile,
+                            Mode::Double,
+                            Grouping::Combined,
+                            &mut scratch,
+                        );
+                        let base = (px - pb0) * slots;
+                        for s in 0..slots {
+                            let ps = scratch.psum(0, s);
+                            blk[base + s].0 += ps.q;
+                            blk[base + s].1 += ps.qbar;
+                        }
                     }
                 }
-                for s in 0..slots {
-                    let p = g * slots + s;
-                    if p >= pairs {
-                        continue;
+                for px in pb0..pb1 {
+                    let base = (px - pb0) * slots;
+                    for s in 0..slots {
+                        let p = g * slots + s;
+                        if p >= pairs {
+                            continue;
+                        }
+                        let m = fcc.means[p] as i64;
+                        let (q, qbar) = blk[base + s];
+                        let (even, odd) = aru_recover(q, qbar, win_sums[px], win_sums[px], m);
+                        out[px * n + 2 * p] = even;
+                        out[px * n + 2 * p + 1] = odd;
                     }
-                    let m = fcc.means[p] as i64;
-                    let (even, odd) = aru_recover(psum[s].0, psum[s].1, sum_i, sum_i, m);
-                    out[px * n + 2 * p] = even;
-                    out[px * n + 2 * p + 1] = odd;
                 }
             }
+            pb0 = pb1;
         }
         g0 = g1;
     }
@@ -133,7 +174,8 @@ pub fn exec_std_regular(
     let groups_per_pass = (rows / l_tiles).max(1);
 
     let mut out = vec![0i64; pixels * n];
-    let zeros = vec![0i32; cmp];
+    let mut scratch = MvmScratch::new();
+    let mut blk = Vec::new();
     let mut g0 = 0;
     while g0 < groups {
         let g1 = (g0 + groups_per_pass).min(groups);
@@ -150,34 +192,43 @@ pub fn exec_std_regular(
                 }
             }
         }
-        for px in 0..pixels {
-            let window = &cols[px * l..(px + 1) * l];
+        let mut pb0 = 0;
+        while pb0 < pixels {
+            let pb1 = (pb0 + PIXEL_BLOCK).min(pixels);
             for g in g0..g1 {
-                let mut psum = vec![0i64; slots];
+                blk.clear();
+                blk.resize((pb1 - pb0) * slots, 0i64);
                 for ti in 0..l_tiles {
                     let row = (g - g0) * l_tiles + ti;
-                    let inputs: Vec<i32> = (0..cmp)
-                        .map(|cc| {
-                            let li = ti * cmp + cc;
-                            if li < l {
-                                window[li]
-                            } else {
-                                0
-                            }
-                        })
-                        .collect();
-                    let ps = mac.mvm_row(row, &inputs, &zeros, Mode::Regular, Grouping::Combined);
-                    for s in 0..slots {
-                        psum[s] += ps[0][s].q;
+                    let lo = ti * cmp;
+                    let hi = ((ti + 1) * cmp).min(l);
+                    for px in pb0..pb1 {
+                        let tile = &cols[px * l + lo..px * l + hi];
+                        mac.mvm_row_into(
+                            row,
+                            tile,
+                            &[],
+                            Mode::Regular,
+                            Grouping::Combined,
+                            &mut scratch,
+                        );
+                        let base = (px - pb0) * slots;
+                        for s in 0..slots {
+                            blk[base + s] += scratch.psum(0, s).q;
+                        }
                     }
                 }
-                for s in 0..slots {
-                    let f = g * slots + s;
-                    if f < n {
-                        out[px * n + f] = psum[s];
+                for px in pb0..pb1 {
+                    let base = (px - pb0) * slots;
+                    for s in 0..slots {
+                        let f = g * slots + s;
+                        if f < n {
+                            out[px * n + f] = blk[base + s];
+                        }
                     }
                 }
             }
+            pb0 = pb1;
         }
         g0 = g1;
     }
@@ -211,19 +262,23 @@ pub fn exec_dw_fcc(
     let ow = w.div_ceil(stride);
     let pixels = oh * ow;
 
-    // per-channel im2col windows
+    // per-channel im2col windows + their pixel sums (ΣI per stream)
     let windows: Vec<Vec<i32>> = (0..c)
         .map(|ch| im2col_channel(input, h, w, c, ch, k, stride).0)
         .collect();
+    let win_sums: Vec<Vec<i64>> = windows.iter().map(|wn| window_sums(wn, taps)).collect();
 
     let mut mac = PimMacro::paper();
     let cmp = mac.core.num_compartments();
+    let mut scratch = MvmScratch::new();
     let mut out = vec![0i64; pixels * c];
 
     if reconfig && 2 * taps <= cmp {
         // 4 pairs per stored row: (g0 slot0, g0 slot1, g1 slot0, g1 slot1)
         let half = cmp / 2;
         let row_groups = pairs.div_ceil(4);
+        let mut inp = vec![0i32; cmp];
+        let mut inn = vec![0i32; cmp];
         for rg in 0..row_groups {
             let row = rg % mac.core.rows();
             // load: group half g in {0,1}, slot s in {0,1}
@@ -246,8 +301,8 @@ pub fn exec_dw_fcc(
                 for s in 0..2 {
                     let pa = rg * 4 + 2 * s; // half 0 pair
                     let pb = rg * 4 + 2 * s + 1; // half 1 pair
-                    let mut inp = vec![0i32; cmp];
-                    let mut inn = vec![0i32; cmp];
+                    inp.fill(0);
+                    inn.fill(0);
                     for (half_id, p) in [(0usize, pa), (1usize, pb)] {
                         if p >= pairs {
                             continue;
@@ -258,19 +313,16 @@ pub fn exec_dw_fcc(
                             inn[ccx] = windows[2 * p + 1][px * taps + t];
                         }
                     }
-                    let ps = mac.mvm_row(row, &inp, &inn, Mode::Double, Grouping::Split);
+                    mac.mvm_row_into(row, &inp, &inn, Mode::Double, Grouping::Split, &mut scratch);
                     for (ghalf, p) in [(0usize, pa), (1usize, pb)] {
                         if p >= pairs {
                             continue;
                         }
                         let m = fcc.means[p] as i64;
-                        let sp: i64 = (0..taps)
-                            .map(|t| windows[2 * p][px * taps + t] as i64)
-                            .sum();
-                        let sn: i64 = (0..taps)
-                            .map(|t| windows[2 * p + 1][px * taps + t] as i64)
-                            .sum();
-                        let (even, odd) = aru_recover(ps[ghalf][s].q, ps[ghalf][s].qbar, sp, sn, m);
+                        let sp = win_sums[2 * p][px];
+                        let sn = win_sums[2 * p + 1][px];
+                        let ps = scratch.psum(ghalf, s);
+                        let (even, odd) = aru_recover(ps.q, ps.qbar, sp, sn, m);
                         out[px * c + 2 * p] = even;
                         out[px * c + 2 * p + 1] = odd;
                     }
@@ -286,18 +338,15 @@ pub fn exec_dw_fcc(
                 mac.load_weight(cc, row, 0, wv);
                 mac.load_weight(cc, row, 1, 0);
             }
+            let m = fcc.means[p] as i64;
             for px in 0..pixels {
-                let mut inp = vec![0i32; cmp];
-                let mut inn = vec![0i32; cmp];
-                for t in 0..taps {
-                    inp[t] = windows[2 * p][px * taps + t];
-                    inn[t] = windows[2 * p + 1][px * taps + t];
-                }
-                let ps = mac.mvm_row(row, &inp, &inn, Mode::Double, Grouping::Combined);
-                let m = fcc.means[p] as i64;
-                let sp: i64 = inp.iter().map(|&x| x as i64).sum();
-                let sn: i64 = inn.iter().map(|&x| x as i64).sum();
-                let (even, odd) = aru_recover(ps[0][0].q, ps[0][0].qbar, sp, sn, m);
+                let inp = &windows[2 * p][px * taps..(px + 1) * taps];
+                let inn = &windows[2 * p + 1][px * taps..(px + 1) * taps];
+                mac.mvm_row_into(row, inp, inn, Mode::Double, Grouping::Combined, &mut scratch);
+                let ps = scratch.psum(0, 0);
+                let sp = win_sums[2 * p][px];
+                let sn = win_sums[2 * p + 1][px];
+                let (even, odd) = aru_recover(ps.q, ps.qbar, sp, sn, m);
                 out[px * c + 2 * p] = even;
                 out[px * c + 2 * p + 1] = odd;
             }
@@ -322,7 +371,7 @@ pub fn exec_dw_regular(
     let pixels = oh * ow;
     let mut mac = PimMacro::paper();
     let cmp = mac.core.num_compartments();
-    let zeros = vec![0i32; cmp];
+    let mut scratch = MvmScratch::new();
     let mut out = vec![0i64; pixels * c];
     for ch in 0..c {
         let row = ch % mac.core.rows();
@@ -333,10 +382,9 @@ pub fn exec_dw_regular(
         }
         let (win, _, _) = im2col_channel(input, h, w, c, ch, k, stride);
         for px in 0..pixels {
-            let mut inp = vec![0i32; cmp];
-            inp[..taps].copy_from_slice(&win[px * taps..(px + 1) * taps]);
-            let ps = mac.mvm_row(row, &inp, &zeros, Mode::Regular, Grouping::Combined);
-            out[px * c + ch] = ps[0][0].q;
+            let window = &win[px * taps..(px + 1) * taps];
+            mac.mvm_row_into(row, window, &[], Mode::Regular, Grouping::Combined, &mut scratch);
+            out[px * c + ch] = scratch.psum(0, 0).q;
         }
     }
     out
@@ -401,6 +449,19 @@ mod tests {
     }
 
     #[test]
+    fn std_fcc_more_pixels_than_one_block() {
+        // 18x18 output = 324 pixels > PIXEL_BLOCK exercises block seams
+        let mut rng = Rng::new(90);
+        let (h, w, c, k, n) = (18, 18, 2, 3, 4);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, n * k * k * c), n, k * k * c);
+        let fcc = fcc_transform(&bank);
+        let got = exec_std_fcc(&input, h, w, c, &fcc, k, 1);
+        let want = fcc_oracle(&input, h, w, c, &fcc, k, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
     fn std_regular_matches_direct_conv() {
         let mut rng = Rng::new(93);
         let (h, w, c, k, n) = (4, 4, 2, 3, 5);
@@ -422,6 +483,28 @@ mod tests {
             exec_std_fcc(&input, h, w, c, &fcc, k, 2),
             fcc_oracle(&input, h, w, c, &fcc, k, 2)
         );
+    }
+
+    #[test]
+    fn window_sum_group_invariant() {
+        // the ΣI fed to the ARU depends only on the pixel window: the
+        // precomputed sums must equal a per-(pixel, group) recomputation
+        // for every group (regression test for the duplicated-reduction
+        // bug in the scalar executor)
+        let mut rng = Rng::new(89);
+        let (h, w, c, k) = (5, 4, 3, 3);
+        let input = rand_vec(&mut rng, h * w * c);
+        let l = k * k * c;
+        let (cols, oh, ow) = im2col(&input, h, w, c, k, 1);
+        let sums = window_sums(&cols, l);
+        assert_eq!(sums.len(), oh * ow);
+        let groups = 6; // any per-group recomputation must agree
+        for px in 0..oh * ow {
+            for _g in 0..groups {
+                let per_group: i64 = cols[px * l..(px + 1) * l].iter().map(|&x| x as i64).sum();
+                assert_eq!(per_group, sums[px], "ΣI drifted at pixel {px}");
+            }
+        }
     }
 
     fn dw_fcc_oracle(

@@ -38,21 +38,51 @@ const LOGIT_SCALE: f32 = 1.0 / 64.0;
 
 /// Dense signed-INT8 MVM: `x [b, l]` × `w [l, n]` → `[b, n]`, wrapping
 /// int32 accumulation (bit-exact vs the jax int32 oracle).
+///
+/// Register-blocked 4-column kernel: each output chunk keeps its four
+/// accumulators live across the whole `l` reduction (one store per
+/// output instead of one read-modify-write per `(l, n)` step), with
+/// zero activations skipped — the dense analogue of the fabric's
+/// zero-bit-plane skip.  Wrapping i32 adds commute, so the result is
+/// bit-identical to the naive loop for every input.  Used by both the
+/// dense (`pim_mac`) and FCC (`fcc_mvm_i32`) backend paths.
 pub fn mvm_i32(x: &[i32], w: &[i32], b: usize, l: usize, n: usize) -> Vec<i32> {
     assert_eq!(x.len(), b * l, "x shape mismatch");
     assert_eq!(w.len(), l * n, "w shape mismatch");
     let mut out = vec![0i32; b * n];
     for bi in 0..b {
-        let row = &mut out[bi * n..(bi + 1) * n];
-        for li in 0..l {
-            let xv = x[bi * l + li];
-            if xv == 0 {
-                continue;
+        let xrow = &x[bi * l..(bi + 1) * l];
+        let orow = &mut out[bi * n..(bi + 1) * n];
+        let mut chunks = orow.chunks_exact_mut(4);
+        let mut j = 0;
+        for chunk in &mut chunks {
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            for (li, &xv) in xrow.iter().enumerate() {
+                if xv == 0 {
+                    continue;
+                }
+                let wq = &w[li * n + j..li * n + j + 4];
+                a0 = a0.wrapping_add(xv.wrapping_mul(wq[0]));
+                a1 = a1.wrapping_add(xv.wrapping_mul(wq[1]));
+                a2 = a2.wrapping_add(xv.wrapping_mul(wq[2]));
+                a3 = a3.wrapping_add(xv.wrapping_mul(wq[3]));
             }
-            let wrow = &w[li * n..(li + 1) * n];
-            for j in 0..n {
-                row[j] = row[j].wrapping_add(xv.wrapping_mul(wrow[j]));
+            chunk[0] = a0;
+            chunk[1] = a1;
+            chunk[2] = a2;
+            chunk[3] = a3;
+            j += 4;
+        }
+        for (t, o) in chunks.into_remainder().iter_mut().enumerate() {
+            let col = j + t;
+            let mut acc = 0i32;
+            for (li, &xv) in xrow.iter().enumerate() {
+                if xv == 0 {
+                    continue;
+                }
+                acc = acc.wrapping_add(xv.wrapping_mul(w[li * n + col]));
             }
+            *o = acc;
         }
     }
     out
@@ -322,6 +352,45 @@ mod tests {
                 assert_eq!(got[bi * n + j] as i64, want);
             }
         }
+    }
+
+    #[test]
+    fn register_blocked_mvm_matches_naive_wrapping_loop() {
+        // the 4-column unroll (incl. the <4 remainder columns) must be
+        // bit-identical to the straightforward wrapping triple loop for
+        // random shapes — including n < 4 and values that overflow i32
+        use crate::util::prop::forall_explain;
+        forall_explain(
+            23,
+            100,
+            |r| {
+                let b = 1 + r.below(4) as usize;
+                let l = 1 + r.below(24) as usize;
+                let n = 1 + r.below(11) as usize;
+                let x: Vec<i32> = (0..b * l)
+                    .map(|_| if r.below(4) == 0 { 0 } else { r.int8() as i32 })
+                    .collect();
+                let w: Vec<i32> = (0..l * n).map(|_| r.int8() as i32).collect();
+                (b, l, n, x, w)
+            },
+            |(b, l, n, x, w)| {
+                let got = mvm_i32(x, w, *b, *l, *n);
+                let mut want = vec![0i32; b * n];
+                for bi in 0..*b {
+                    for j in 0..*n {
+                        for li in 0..*l {
+                            want[bi * n + j] = want[bi * n + j]
+                                .wrapping_add(x[bi * l + li].wrapping_mul(w[li * n + j]));
+                        }
+                    }
+                }
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("blocked kernel drifted for b={b} l={l} n={n}"))
+                }
+            },
+        );
     }
 
     #[test]

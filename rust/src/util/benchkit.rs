@@ -3,8 +3,17 @@
 //! `cargo bench` targets are plain `harness = false` binaries that call
 //! [`bench`]: warmup, then timed iterations with mean / min / max and
 //! iterations-per-second, printed in a stable, grep-friendly format.
+//!
+//! [`BenchSession`] wraps the same primitives with the bench binaries'
+//! shared CLI (`--json <path>` persists a `BENCH_*.json` artifact,
+//! `--quick` scales iteration counts down for CI smoke runs) so the
+//! repo's bench trajectory is machine-readable.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::Instant;
+
+use super::json::{to_string, Json};
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -60,6 +69,121 @@ pub fn report(name: &str, value: f64, unit: &str) {
     println!("value {name:<48} {value:>12.4} {unit}");
 }
 
+/// A recording wrapper over [`bench`]/[`report`] with the bench
+/// binaries' shared CLI.  Create with [`BenchSession::from_env`], run
+/// cases through [`BenchSession::bench`], then call
+/// [`BenchSession::finish`] to write the JSON artifact (if `--json
+/// <path>` was given).
+pub struct BenchSession {
+    name: String,
+    json_path: Option<PathBuf>,
+    quick: bool,
+    results: Vec<BenchResult>,
+    values: Vec<(String, f64, String)>,
+}
+
+impl BenchSession {
+    /// Parse `--json <path>` / `--quick` from the process arguments.
+    pub fn from_env(name: &str) -> Self {
+        Self::from_args(name, std::env::args().skip(1))
+    }
+
+    pub fn from_args<I: IntoIterator<Item = String>>(name: &str, args: I) -> Self {
+        let args: Vec<String> = args.into_iter().collect();
+        let mut json_path = None;
+        let mut quick = false;
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--json" => {
+                    i += 1;
+                    let p = args.get(i).expect("--json needs a path argument");
+                    json_path = Some(PathBuf::from(p.as_str()));
+                }
+                "--quick" => quick = true,
+                // `cargo bench` appends `--bench` to harness=false
+                // targets; accept and ignore it (as criterion does)
+                "--bench" => {}
+                other => panic!("unknown bench flag {other:?} (expected --json <path> / --quick)"),
+            }
+            i += 1;
+        }
+        BenchSession {
+            name: name.to_string(),
+            json_path,
+            quick,
+            results: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// `--quick` smoke mode (tiny iteration counts, timings untrusted).
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Scale a full iteration count down for `--quick` runs.
+    pub fn iters(&self, full: u32) -> u32 {
+        if self.quick {
+            (full / 100).max(1)
+        } else {
+            full
+        }
+    }
+
+    /// Run and record one benchmark case (`iters` is the full count;
+    /// `--quick` scaling is applied here).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: u32, iters: u32, f: F) -> BenchResult {
+        let warmup = if self.quick { warmup.min(1) } else { warmup };
+        let r = bench(name, warmup, self.iters(iters), f);
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Record a derived scalar alongside the timings.
+    pub fn report(&mut self, name: &str, value: f64, unit: &str) {
+        report(name, value, unit);
+        self.values.push((name.to_string(), value, unit.to_string()));
+    }
+
+    /// Render the session as a JSON document (`ddc-pim-bench-v1`).
+    pub fn to_json(&self) -> Json {
+        let mut results = BTreeMap::new();
+        for r in &self.results {
+            let mut m = BTreeMap::new();
+            m.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+            m.insert("min_ns".to_string(), Json::Num(r.min_ns));
+            m.insert("max_ns".to_string(), Json::Num(r.max_ns));
+            m.insert("iters".to_string(), Json::Num(r.iters as f64));
+            results.insert(r.name.clone(), Json::Obj(m));
+        }
+        let mut values = BTreeMap::new();
+        for (name, value, unit) in &self.values {
+            let mut m = BTreeMap::new();
+            m.insert("value".to_string(), Json::Num(*value));
+            m.insert("unit".to_string(), Json::Str(unit.clone()));
+            values.insert(name.clone(), Json::Obj(m));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("schema".to_string(), Json::Str("ddc-pim-bench-v1".to_string()));
+        top.insert("bench".to_string(), Json::Str(self.name.clone()));
+        top.insert("quick".to_string(), Json::Bool(self.quick));
+        top.insert("results".to_string(), Json::Obj(results));
+        top.insert("values".to_string(), Json::Obj(values));
+        Json::Obj(top)
+    }
+
+    /// Write the JSON artifact if `--json` was given; call last.
+    pub fn finish(&self) {
+        if let Some(path) = &self.json_path {
+            let doc = to_string(&self.to_json()) + "\n";
+            std::fs::write(path, doc)
+                .unwrap_or_else(|e| panic!("writing bench json {}: {e}", path.display()));
+            println!("wrote {}", path.display());
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,5 +196,66 @@ mod tests {
         assert_eq!(r.iters, 10);
         assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
         assert!(r.per_sec() > 0.0);
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn session_parses_flags() {
+        let s = BenchSession::from_args("t", args(&[]));
+        assert!(!s.quick());
+        assert_eq!(s.iters(2000), 2000);
+        let s = BenchSession::from_args("t", args(&["--quick", "--json", "out.json"]));
+        assert!(s.quick());
+        assert_eq!(s.iters(2000), 20);
+        assert_eq!(s.iters(50), 1); // never scales to zero
+        assert_eq!(s.json_path.as_deref(), Some(std::path::Path::new("out.json")));
+        // `cargo bench` always appends --bench to harness=false targets
+        let s = BenchSession::from_args("t", args(&["--bench", "--json", "b.json"]));
+        assert!(!s.quick());
+        assert!(s.json_path.is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown bench flag")]
+    fn session_rejects_unknown_flags() {
+        BenchSession::from_args("t", args(&["--frobnicate"]));
+    }
+
+    #[test]
+    fn session_json_roundtrips() {
+        let mut s = BenchSession::from_args("fabric", args(&["--quick"]));
+        s.bench("case.a", 0, 100, || {
+            std::hint::black_box(2 + 2);
+        });
+        s.report("case.a.speedup", 6.25, "x");
+        let doc = to_string(&s.to_json());
+        let v = Json::parse(&doc).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("ddc-pim-bench-v1"));
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("fabric"));
+        assert_eq!(v.get("quick").unwrap().as_bool(), Some(true));
+        let case = v.get("results").unwrap().get("case.a").unwrap();
+        assert!(case.get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(case.get("iters").unwrap().as_i64(), Some(1)); // 100/100
+        let val = v.get("values").unwrap().get("case.a.speedup").unwrap();
+        assert_eq!(val.get("value").unwrap().as_f64(), Some(6.25));
+        assert_eq!(val.get("unit").unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    fn session_finish_writes_file() {
+        let path = std::env::temp_dir().join("ddc_pim_benchkit_test.json");
+        let path_s = path.to_string_lossy().to_string();
+        let mut s = BenchSession::from_args("t", args(&["--json", &path_s, "--quick"]));
+        s.bench("w", 0, 100, || {
+            std::hint::black_box(1);
+        });
+        s.finish();
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let v = Json::parse(body.trim()).unwrap();
+        assert!(v.get("results").unwrap().get("w").is_some());
     }
 }
