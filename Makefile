@@ -1,4 +1,4 @@
-.PHONY: artifacts accuracy goldens test test-rust test-python bench bench-smoke
+.PHONY: artifacts accuracy goldens test test-rust test-python bench bench-smoke bench-diff
 
 # AOT-lower the L2 model + L1 kernels to HLO text + goldens (needs jax)
 artifacts:
@@ -21,13 +21,26 @@ test-python:
 test: test-rust test-python
 
 # populate the bench trajectory: BENCH_*.json at the repo root
-# (mean/min/max ns per named hot path; see DESIGN.md §7)
+# (mean/min/max ns per named hot path; see DESIGN.md §7).
+# cargo runs bench binaries with cwd = the package root (rust/), so the
+# --json paths are ../-prefixed to land at the repo root.
 bench:
 	cargo build --release --benches
-	cargo bench --bench pim_fabric -- --json BENCH_pim_fabric.json
-	cargo bench --bench fig13_speedup -- --json BENCH_fig13.json
+	cargo bench --bench pim_fabric -- --json ../BENCH_pim_fabric.json
+	cargo bench --bench fig13_speedup -- --json ../BENCH_fig13.json
 
 # tiny-iteration executor-regression run (what CI's bench-smoke job does)
 bench-smoke:
 	cargo build --release --benches
-	cargo bench --bench pim_fabric -- --quick --json BENCH_pim_fabric.json
+	cargo bench --bench pim_fabric -- --quick --json ../BENCH_pim_fabric.json
+
+# bench trajectory gate: run a fresh full pim_fabric pass and diff it
+# against the checked-in baseline; fails on >10% mean regressions.
+# NOTE: bench-diff hard-rejects baselines carrying "estimated": true or
+# "quick": true — the PR 2 baseline is an analytical estimate, so this
+# target fails (by design) until a toolchain host replaces it via
+# `make bench`.
+bench-diff:
+	cargo build --release --benches --bin bench-diff
+	cargo bench --bench pim_fabric -- --json ../BENCH_pim_fabric.new.json
+	cargo run --release --bin bench-diff -- BENCH_pim_fabric.json BENCH_pim_fabric.new.json --max-regress 10

@@ -16,9 +16,9 @@
 use std::time::Instant;
 
 use ddc_pim::config::{ArchConfig, SimConfig};
-use ddc_pim::coordinator::{BatchPolicy, InferenceService, IMG_ELEMS};
+use ddc_pim::coordinator::{BatchPolicy, InferenceService, IMG_ELEMS, NUM_CLASSES};
 use ddc_pim::model::zoo;
-use ddc_pim::runtime::{create_backend, verify_kernel_oracles, Backend, BackendKind};
+use ddc_pim::runtime::{create_backend, verify_kernel_oracles, Backend, BackendKind, Session};
 use ddc_pim::sim::simulate_network;
 use ddc_pim::util::rng::Rng;
 
@@ -41,6 +41,18 @@ fn main() -> anyhow::Result<()> {
         // goldens are replayed by `ddc-pim selfcheck` instead.
         println!("kernel oracles: skipped ({} executes fixed AOT shapes)", backend.name());
     }
+
+    // the plan/execute split: prepare once (weights resident), then
+    // run batches into a caller-owned buffer — zero steady-state
+    // allocation (this is exactly what the service worker does)
+    let mut session = backend.prepare()?;
+    let mut rng0 = Rng::new(7);
+    let warm: Vec<f32> = (0..2 * IMG_ELEMS).map(|_| rng0.normal() as f32).collect();
+    let mut warm_out = vec![0f32; 2 * NUM_CLASSES];
+    session.infer_batch_into(&warm, 2, &mut warm_out)?;
+    session.infer_batch_into(&warm, 2, &mut warm_out)?;
+    println!("session: prepared once, 2 batches executed into a reused buffer");
+    drop(session);
     drop(backend); // the service owns its own backend thread
 
     // ---- 2: serve a batch of requests -------------------------------

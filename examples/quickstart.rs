@@ -10,7 +10,7 @@
 //!     cargo run --release --example quickstart
 
 use ddc_pim::fcc::{fcc_transform, is_bitwise_complementary, FilterBank};
-use ddc_pim::mapping::exec::exec_std_fcc;
+use ddc_pim::mapping::exec::{exec_std_fcc, ExecCtx, PlannedConv};
 use ddc_pim::mapping::im2col::direct_conv;
 use ddc_pim::util::rng::Rng;
 
@@ -61,5 +61,23 @@ fn main() {
     println!(
         "functional check OK: {} outputs from half the stored weights match direct conv",
         got.len()
+    );
+
+    // 5. serving shape of the same computation: plan once (weights
+    //    written into SRAM exactly once), execute many — repeat runs
+    //    reuse one ExecCtx and allocate nothing
+    let plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+    let mut ctx = ExecCtx::new();
+    let mut out = vec![0i64; plan.out_len()];
+    let writes = plan.weight_writes();
+    for _ in 0..3 {
+        plan.execute(&input, &mut ctx, &mut out);
+        assert_eq!(out, want);
+    }
+    assert_eq!(plan.weight_writes(), writes, "execute never rewrites weights");
+    println!(
+        "plan/execute OK: {} load pass(es), {} weight writes at plan time, 0 during execute",
+        plan.load_passes(),
+        writes
     );
 }

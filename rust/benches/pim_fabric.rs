@@ -11,7 +11,7 @@ use ddc_pim::arch::lpu::Mode;
 use ddc_pim::arch::pim_macro::{MvmScratch, PimMacro};
 use ddc_pim::arch::reconfig::Grouping;
 use ddc_pim::fcc::{fcc_transform, FilterBank};
-use ddc_pim::mapping::exec::exec_std_fcc;
+use ddc_pim::mapping::exec::{exec_std_fcc, ExecCtx, PlannedConv};
 use ddc_pim::runtime::reference::mvm_i32;
 use ddc_pim::util::benchkit::BenchSession;
 use ddc_pim::util::rng::Rng;
@@ -75,9 +75,24 @@ fn main() {
         k * k * c,
     );
     let fcc = fcc_transform(&bank);
-    s.bench("exec_std_fcc.6x6x8.k3.n8", 1, 10, || {
+    let one_shot = s.bench("exec_std_fcc.6x6x8.k3.n8", 1, 10, || {
         std::hint::black_box(exec_std_fcc(&input, h, w, c, &fcc, k, 1));
     });
+
+    // the same layer on the plan/execute split: weights written once at
+    // plan time, execute reuses one ExecCtx (the session hot path)
+    let plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+    let mut ctx = ExecCtx::new();
+    let mut planned_out = vec![0i64; plan.out_len()];
+    let planned = s.bench("planned_conv.execute.6x6x8.k3.n8", 1, 10, || {
+        plan.execute(&input, &mut ctx, &mut planned_out);
+        std::hint::black_box(planned_out[0]);
+    });
+    s.report(
+        "planned_conv.execute.amortization_vs_one_shot",
+        one_shot.mean_ns / planned.mean_ns,
+        "x",
+    );
 
     // the dense runtime kernel (register-blocked 4-column unroll)
     let (mb, ml, mn) = (16, 128, 128);

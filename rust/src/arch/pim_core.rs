@@ -30,6 +30,7 @@ pub struct PimCore {
     planes: WeightPlanes,
     rows: usize,
     dbmus: usize,
+    weight_writes: u64,
 }
 
 impl PimCore {
@@ -46,12 +47,24 @@ impl PimCore {
             planes: WeightPlanes::new(compartments, rows, slots, WEIGHT_BITS),
             rows,
             dbmus,
+            weight_writes: 0,
         }
     }
 
     /// Paper geometry: 32 compartments x 64 rows x 16 columns.
+    /// (Constants exposed so planners can size pass schedules without
+    /// building a throwaway cell array.)
+    pub const PAPER_COMPARTMENTS: usize = 32;
+    pub const PAPER_ROWS: usize = 64;
+    pub const PAPER_DBMUS: usize = 16;
+
+    /// A core at the paper geometry.
     pub fn paper() -> Self {
-        Self::new(32, 64, 16)
+        Self::new(
+            Self::PAPER_COMPARTMENTS,
+            Self::PAPER_ROWS,
+            Self::PAPER_DBMUS,
+        )
     }
 
     pub fn num_compartments(&self) -> usize {
@@ -72,6 +85,15 @@ impl PimCore {
     pub fn write_weight(&mut self, cmp: usize, row: usize, slot: usize, w: i32) {
         self.compartments[cmp].write_weight8(row, slot, w);
         self.planes.record(cmp, row, slot, w);
+        self.weight_writes += 1;
+    }
+
+    /// Total normal-SRAM weight writes since construction.  The planned
+    /// executors expose this so tests can assert that a session writes
+    /// its weights exactly once (at plan-build time) and never again on
+    /// the `&self` execute path.
+    pub fn weight_writes(&self) -> u64 {
+        self.weight_writes
     }
 
     /// Read back (Q side) — test/debug path.

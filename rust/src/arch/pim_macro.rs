@@ -149,6 +149,12 @@ impl PimMacro {
         self.core.write_weight(cmp, row, slot, w);
     }
 
+    /// Total weight writes this macro has performed (see
+    /// [`super::pim_core::PimCore::weight_writes`]).
+    pub fn weight_writes(&self) -> u64 {
+        self.core.weight_writes()
+    }
+
     /// Full bit-serial MVM over one activated row, into caller scratch.
     ///
     /// * `inputs_p[cmp]` / `inputs_n[cmp]` — signed INT8 vector elements

@@ -1,0 +1,323 @@
+//! `bench-diff` — the bench-trajectory gate (ROADMAP "Bench trajectory
+//! automation").
+//!
+//! Diffs two `ddc-pim-bench-v1` JSON files (see `util/benchkit`) and
+//! fails when any shared case's `mean_ns` regressed by more than the
+//! threshold.  Files carrying `"estimated": true` or `"quick": true`
+//! are **hard-rejected**: projected or smoke-run timings must never
+//! gate regressions — regenerate the baseline with `make bench` on a
+//! toolchain host first.
+//!
+//!     bench-diff <baseline.json> <candidate.json> [--max-regress PCT]
+//!     bench-diff --self-check
+//!
+//! Exit codes: 0 ok, 1 regression found, 2 unusable input (unfit
+//! baseline/candidate, bad schema, usage error).
+
+use ddc_pim::util::json::Json;
+
+/// Default regression threshold (percent increase of `mean_ns`).
+const DEFAULT_MAX_REGRESS_PCT: f64 = 10.0;
+
+/// One compared bench case.
+#[derive(Debug, Clone, PartialEq)]
+struct DiffLine {
+    name: String,
+    base_ns: f64,
+    new_ns: f64,
+    /// Percent change of mean_ns (positive = slower).
+    delta_pct: f64,
+}
+
+/// Reject non-`ddc-pim-bench-v1` documents and any document whose
+/// timings are not trustworthy gates (`estimated`/`quick`).
+fn check_fit(doc: &Json, role: &str) -> Result<(), String> {
+    match doc.get("schema").and_then(Json::as_str) {
+        Some("ddc-pim-bench-v1") => {}
+        other => return Err(format!("{role}: unsupported schema {other:?}")),
+    }
+    for key in ["estimated", "quick"] {
+        if doc.get(key).and_then(Json::as_bool) == Some(true) {
+            return Err(format!(
+                "{role}: carries \"{key}\": true — projected or smoke-run timings must \
+                 never gate regressions; regenerate with `make bench` on a toolchain host"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Compare the `results` maps case by case (cases present in both).
+fn diff(base: &Json, new: &Json) -> Result<Vec<DiffLine>, String> {
+    let bres = base
+        .get("results")
+        .and_then(Json::as_obj)
+        .ok_or("baseline: missing results object")?;
+    let nres = new
+        .get("results")
+        .and_then(Json::as_obj)
+        .ok_or("candidate: missing results object")?;
+    let mut lines = Vec::new();
+    for (name, bcase) in bres {
+        let Some(ncase) = nres.get(name) else {
+            continue; // dropped case: reported by the caller
+        };
+        let base_ns = bcase
+            .get("mean_ns")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("baseline: {name}: missing mean_ns"))?;
+        let new_ns = ncase
+            .get("mean_ns")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("candidate: {name}: missing mean_ns"))?;
+        // a zero/negative/NaN mean on either side is a broken
+        // measurement, not a result — reject, never "pass"
+        if !base_ns.is_finite() || base_ns <= 0.0 {
+            return Err(format!("baseline: {name}: unusable mean_ns {base_ns}"));
+        }
+        if !new_ns.is_finite() || new_ns <= 0.0 {
+            return Err(format!("candidate: {name}: unusable mean_ns {new_ns}"));
+        }
+        lines.push(DiffLine {
+            name: name.clone(),
+            base_ns,
+            new_ns,
+            delta_pct: 100.0 * (new_ns - base_ns) / base_ns,
+        });
+    }
+    Ok(lines)
+}
+
+/// Case names present in `a.results` but absent from `b.results`.
+fn missing_cases(a: &Json, b: &Json) -> Vec<String> {
+    let ares = a.get("results").and_then(Json::as_obj);
+    let bres = b.get("results").and_then(Json::as_obj);
+    match (ares, bres) {
+        (Some(am), Some(bm)) => am.keys().filter(|k| !bm.contains_key(*k)).cloned().collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// The full gate on parsed documents: fit checks, diff, threshold.
+/// Returns the offending lines on regression.
+fn gate(base: &Json, new: &Json, max_regress_pct: f64) -> Result<Vec<DiffLine>, String> {
+    check_fit(base, "baseline")?;
+    check_fit(new, "candidate")?;
+    let lines = diff(base, new)?;
+    Ok(lines
+        .into_iter()
+        .filter(|l| l.delta_pct > max_regress_pct)
+        .collect())
+}
+
+fn run_files(base_path: &str, new_path: &str, max_regress_pct: f64) -> i32 {
+    let load = |path: &str| -> Result<Json, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        Json::parse(text.trim()).map_err(|e| format!("parsing {path}: {e}"))
+    };
+    let (base, new) = match (load(base_path), load(new_path)) {
+        (Ok(b), Ok(n)) => (b, n),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench-diff: {e}");
+            return 2;
+        }
+    };
+    if let Err(e) = check_fit(&base, &format!("baseline {base_path}")) {
+        eprintln!("bench-diff: {e}");
+        return 2;
+    }
+    if let Err(e) = check_fit(&new, &format!("candidate {new_path}")) {
+        eprintln!("bench-diff: {e}");
+        return 2;
+    }
+    let lines = match diff(&base, &new) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("bench-diff: {e}");
+            return 2;
+        }
+    };
+    for l in &lines {
+        println!(
+            "diff {:<48} {:>12.1} -> {:>12.1} ns/iter ({:+.1}%)",
+            l.name, l.base_ns, l.new_ns, l.delta_pct
+        );
+    }
+    for name in missing_cases(&base, &new) {
+        println!("note: case {name} missing from candidate (dropped?)");
+    }
+    for name in missing_cases(&new, &base) {
+        println!("note: case {name} is new (no baseline)");
+    }
+    let regressions: Vec<&DiffLine> =
+        lines.iter().filter(|l| l.delta_pct > max_regress_pct).collect();
+    if regressions.is_empty() {
+        println!(
+            "bench-diff OK: {} case(s) within {max_regress_pct}% of baseline",
+            lines.len()
+        );
+        0
+    } else {
+        for l in &regressions {
+            eprintln!(
+                "REGRESSION {:<48} {:+.1}% (> {max_regress_pct}%)",
+                l.name, l.delta_pct
+            );
+        }
+        eprintln!("bench-diff: {} regression(s)", regressions.len());
+        1
+    }
+}
+
+/// Fixture documents for the self-check (and the unit tests).
+fn fixture(schema: &str, flags: &str, cases: &[(&str, f64)]) -> Json {
+    let results: Vec<String> = cases
+        .iter()
+        .map(|(name, ns)| format!("\"{name}\": {{\"mean_ns\": {ns}, \"iters\": 100}}"))
+        .collect();
+    let doc = format!(
+        "{{\"schema\": \"{schema}\"{flags}, \"results\": {{{}}}}}",
+        results.join(", ")
+    );
+    Json::parse(&doc).expect("fixture json")
+}
+
+/// Prove the gate's reject/flag behavior on synthetic documents —
+/// run by CI so the reject-estimated contract can never silently rot.
+fn self_check() -> Result<(), String> {
+    let clean = fixture("ddc-pim-bench-v1", "", &[("case.a", 100.0), ("case.b", 50.0)]);
+    let slower = fixture("ddc-pim-bench-v1", "", &[("case.a", 115.0), ("case.b", 52.0)]);
+    let estimated = fixture("ddc-pim-bench-v1", ", \"estimated\": true", &[("case.a", 100.0)]);
+    let quick = fixture("ddc-pim-bench-v1", ", \"quick\": true", &[("case.a", 100.0)]);
+    let alien = fixture("other-schema", "", &[("case.a", 100.0)]);
+
+    // 1. estimated baselines are hard-rejected
+    if gate(&estimated, &clean, 10.0).is_ok() {
+        return Err("estimated baseline was accepted".into());
+    }
+    // 2. quick (smoke-run) documents are hard-rejected on either side
+    if gate(&clean, &quick, 10.0).is_ok() {
+        return Err("quick candidate was accepted".into());
+    }
+    if gate(&quick, &clean, 10.0).is_ok() {
+        return Err("quick baseline was accepted".into());
+    }
+    // 3. unknown schemas are rejected
+    if gate(&alien, &clean, 10.0).is_ok() {
+        return Err("unknown schema was accepted".into());
+    }
+    // 4. a >10% regression is flagged, smaller drift is not
+    let flagged = gate(&clean, &slower, 10.0)?;
+    if flagged.len() != 1 || flagged[0].name != "case.a" {
+        return Err(format!("expected exactly case.a flagged, got {flagged:?}"));
+    }
+    if !gate(&clean, &slower, 20.0)?.is_empty() {
+        return Err("15% drift flagged at a 20% threshold".into());
+    }
+    // 5. identical runs pass clean
+    if !gate(&clean, &clean, 10.0)?.is_empty() {
+        return Err("identical runs flagged".into());
+    }
+    // 6. a broken candidate measurement (mean_ns <= 0) is rejected,
+    //    not reported as a miraculous speedup
+    let broken = fixture("ddc-pim-bench-v1", "", &[("case.a", 0.0), ("case.b", 52.0)]);
+    if gate(&clean, &broken, 10.0).is_ok() {
+        return Err("zero-mean candidate was accepted".into());
+    }
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--self-check") {
+        match self_check() {
+            Ok(()) => {
+                println!("bench-diff self-check OK (estimated/quick rejection + threshold gate)");
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("bench-diff self-check FAILED: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    let mut paths = Vec::new();
+    let mut max_regress = DEFAULT_MAX_REGRESS_PCT;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--max-regress" => {
+                i += 1;
+                max_regress = args
+                    .get(i)
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or_else(|| {
+                        eprintln!("bench-diff: --max-regress needs a numeric percent");
+                        std::process::exit(2);
+                    });
+            }
+            other if !other.starts_with("--") => paths.push(other.to_string()),
+            other => {
+                eprintln!("bench-diff: unknown flag {other:?}");
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+    if paths.len() != 2 {
+        eprintln!(
+            "usage: bench-diff <baseline.json> <candidate.json> [--max-regress PCT]\n\
+             \n       bench-diff --self-check"
+        );
+        std::process::exit(2);
+    }
+    std::process::exit(run_files(&paths[0], &paths[1], max_regress));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_check_passes() {
+        self_check().expect("bench-diff self-check");
+    }
+
+    #[test]
+    fn estimated_and_quick_are_rejected() {
+        let clean = fixture("ddc-pim-bench-v1", "", &[("c", 10.0)]);
+        for flag in ["\"estimated\": true", "\"quick\": true"] {
+            let bad = fixture("ddc-pim-bench-v1", &format!(", {flag}"), &[("c", 10.0)]);
+            assert!(gate(&bad, &clean, 10.0).is_err(), "{flag} baseline accepted");
+            assert!(gate(&clean, &bad, 10.0).is_err(), "{flag} candidate accepted");
+        }
+        // explicit false flags are fine
+        let ok = fixture(
+            "ddc-pim-bench-v1",
+            ", \"estimated\": false, \"quick\": false",
+            &[("c", 10.0)],
+        );
+        assert!(gate(&ok, &clean, 10.0).is_ok());
+    }
+
+    #[test]
+    fn threshold_is_exclusive_and_signed() {
+        let base = fixture("ddc-pim-bench-v1", "", &[("c", 100.0), ("faster", 100.0)]);
+        let new = fixture("ddc-pim-bench-v1", "", &[("c", 110.0), ("faster", 10.0)]);
+        // exactly +10% is not > 10%; a 10x speedup never trips the gate
+        assert!(gate(&base, &new, 10.0).unwrap().is_empty());
+        let flagged = gate(&base, &new, 9.9).unwrap();
+        assert_eq!(flagged.len(), 1);
+        assert_eq!(flagged[0].name, "c");
+    }
+
+    #[test]
+    fn disjoint_cases_are_noted_not_fatal() {
+        let base = fixture("ddc-pim-bench-v1", "", &[("old", 10.0), ("both", 10.0)]);
+        let new = fixture("ddc-pim-bench-v1", "", &[("new", 10.0), ("both", 10.0)]);
+        assert_eq!(missing_cases(&base, &new), vec!["old".to_string()]);
+        assert_eq!(missing_cases(&new, &base), vec!["new".to_string()]);
+        assert_eq!(gate(&base, &new, 10.0).unwrap(), vec![]);
+    }
+}

@@ -72,10 +72,21 @@ impl<T> Batcher<T> {
         }
     }
 
-    /// Cut a batch of up to `max_batch` items (FIFO).
-    pub fn cut(&mut self) -> Vec<T> {
+    /// Cut a batch of up to `max_batch` items (FIFO) into a caller-owned
+    /// buffer: `sink` is cleared and refilled, so a worker reusing one
+    /// sink across flushes allocates nothing on the steady-state path.
+    pub fn cut_into(&mut self, sink: &mut Vec<T>) {
         let n = self.queue.len().min(self.policy.max_batch);
-        self.queue.drain(..n).map(|p| p.item).collect()
+        sink.clear();
+        sink.extend(self.queue.drain(..n).map(|p| p.item));
+    }
+
+    /// Cut a batch of up to `max_batch` items (FIFO).  Allocating
+    /// wrapper over [`Batcher::cut_into`].
+    pub fn cut(&mut self) -> Vec<T> {
+        let mut out = Vec::new();
+        self.cut_into(&mut out);
+        out
     }
 }
 
@@ -117,6 +128,21 @@ mod tests {
         assert_eq!(b.cut(), vec![0, 1]);
         assert_eq!(b.cut(), vec![2, 3]);
         assert_eq!(b.cut(), vec![4]);
+    }
+
+    #[test]
+    fn cut_into_reuses_and_overwrites_the_sink() {
+        let mut b = Batcher::new(policy(2, 0));
+        let mut sink = vec![99, 98, 97];
+        for i in 0..3 {
+            b.push(i);
+        }
+        b.cut_into(&mut sink);
+        assert_eq!(sink, vec![0, 1], "stale sink contents must be dropped");
+        b.cut_into(&mut sink);
+        assert_eq!(sink, vec![2]);
+        b.cut_into(&mut sink);
+        assert!(sink.is_empty());
     }
 
     #[test]

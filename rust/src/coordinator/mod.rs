@@ -3,13 +3,17 @@
 //! * [`batcher`] — dynamic request batching (full batches ride the wide
 //!   executable, stragglers are padded);
 //! * [`scheduler`] — prefetch-aware layer timeline;
-//! * [`service`] — the threaded request loop that owns the execution
-//!   [`crate::runtime::Backend`] (reference by default, PJRT/AOT
-//!   artifacts behind the `pjrt` feature).
+//! * [`service`] — the threaded request loop that prepares one
+//!   [`crate::runtime::Session`] (weights resident for the worker's
+//!   lifetime; reference by default, PJRT/AOT artifacts behind the
+//!   `pjrt` feature) and executes batches through it zero-alloc.
 
 pub mod batcher;
 pub mod scheduler;
 pub mod service;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use service::{InferenceResult, InferenceService, ServiceStats, IMG_ELEMS, NUM_CLASSES};
+// shape constants come straight from the runtime (single definition);
+// re-exported here for the service's callers
+pub use crate::runtime::{IMG_ELEMS, NUM_CLASSES};
+pub use service::{InferenceResult, InferenceService, ServiceStats};

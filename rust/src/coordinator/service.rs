@@ -1,14 +1,23 @@
-//! Inference service: the request loop that owns the execution backend.
+//! Inference service: the request loop that owns the execution session.
 //!
-//! A dedicated worker thread owns the [`Backend`] (PJRT handles are not
-//! `Send`-safe by contract, so the backend is constructed inside the
-//! thread and never leaves it).  Clients submit CIFAR-shaped images over
-//! a channel; the batcher groups them; the backend executes the batch
+//! A dedicated worker thread owns the [`Session`] (PJRT handles are not
+//! `Send`-safe by contract, so the backend is constructed — and its
+//! session prepared — inside the thread and never leaves it).  Clients
+//! submit CIFAR-shaped images over a channel; the batcher groups them;
+//! the session executes the whole batch with a real batch dimension
 //! (the PJRT backend pads stragglers up to its wide executable, the
-//! reference backend takes any batch natively).  Alongside the
-//! functional result, each request is annotated with the *simulated*
-//! DDC-PIM latency of the model so the serving path reports both
-//! wall-clock and modelled-hardware numbers.
+//! reference backend folds the batch into its MVM row dimension).
+//!
+//! Weights are resident for the worker's lifetime: the backend is
+//! prepared exactly once, and every per-batch buffer (the pending-cut
+//! sink, the packed input, the logits) is persistent, so the
+//! steady-state execute path performs no per-batch heap allocation.
+//! (The per-request `mpsc` response send is the one remaining
+//! allocation, and the response itself is client-owned by design.)
+//!
+//! Alongside the functional result, each request is annotated with the
+//! *simulated* DDC-PIM latency of the model so the serving path reports
+//! both wall-clock and modelled-hardware numbers.
 
 use std::sync::mpsc;
 use std::thread::{self, JoinHandle};
@@ -19,12 +28,10 @@ use anyhow::Result;
 use crate::config::{ArchConfig, SimConfig};
 use crate::metrics::LatencyHistogram;
 use crate::model::zoo;
-use crate::runtime::{create_backend, Backend, BackendKind};
+use crate::runtime::{Backend, BackendKind, BackendSpec, Session, IMG_ELEMS, NUM_CLASSES};
 use crate::sim::simulate_network;
 
 use super::batcher::{BatchPolicy, Batcher};
-
-pub use crate::runtime::{IMG_ELEMS, NUM_CLASSES};
 
 /// One inference request.
 struct Request {
@@ -36,7 +43,8 @@ struct Request {
 /// The answer a client gets back.
 #[derive(Debug, Clone)]
 pub struct InferenceResult {
-    pub logits: Vec<f32>,
+    /// Classifier logits (fixed-size: no per-request heap allocation).
+    pub logits: [f32; NUM_CLASSES],
     pub argmax: usize,
     /// Wall-clock service latency.
     pub latency: Duration,
@@ -103,8 +111,18 @@ impl InferenceService {
         artifact_dir: String,
         policy: BatchPolicy,
     ) -> InferenceService {
+        Self::start_spec(BackendSpec::new(kind), artifact_dir, policy)
+    }
+
+    /// Start the worker thread with a full backend spec (kind + knobs
+    /// such as the reference backend's fabric choice).
+    pub fn start_spec(
+        spec: BackendSpec,
+        artifact_dir: String,
+        policy: BatchPolicy,
+    ) -> InferenceService {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let worker = thread::spawn(move || worker_loop(kind, artifact_dir, policy, rx));
+        let worker = thread::spawn(move || worker_loop(spec, artifact_dir, policy, rx));
         InferenceService {
             tx,
             worker: Some(worker),
@@ -156,32 +174,52 @@ impl Drop for InferenceService {
     }
 }
 
+/// NaN-robust argmax over a logit slice: `f32::total_cmp` gives NaN a
+/// fixed place in the order (positive NaN above +inf) instead of
+/// panicking mid-batch — a single NaN logit must never kill the worker
+/// thread.
+fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(k, _)| k)
+        .unwrap_or(0)
+}
+
 fn worker_loop(
-    kind: BackendKind,
+    spec: BackendSpec,
     artifact_dir: String,
     policy: BatchPolicy,
     rx: mpsc::Receiver<Msg>,
 ) {
-    let mut backend = match create_backend(kind, &artifact_dir) {
-        Ok(b) => b,
-        Err(e) => {
-            // drain: fail every request with the init error; exit on
-            // Shutdown (Drop joins this thread, so it must terminate)
-            for msg in rx {
-                match msg {
-                    Msg::Infer(req) => {
-                        let _ = req.resp.send(Err(format!("backend init failed: {e:#}")));
-                    }
-                    Msg::Stats(stx) => {
-                        let _ = stx.send(ServiceStats::default());
-                    }
-                    Msg::Shutdown => break,
+    // drain helper: fail every request with an init error; exit on
+    // Shutdown (Drop joins this thread, so it must terminate)
+    let drain_with_error = |rx: mpsc::Receiver<Msg>, err: String| {
+        for msg in rx {
+            match msg {
+                Msg::Infer(req) => {
+                    let _ = req.resp.send(Err(err.clone()));
                 }
+                Msg::Stats(stx) => {
+                    let _ = stx.send(ServiceStats::default());
+                }
+                Msg::Shutdown => break,
             }
-            return;
         }
     };
+    let backend = match spec.create(&artifact_dir) {
+        Ok(b) => b,
+        Err(e) => return drain_with_error(rx, format!("backend init failed: {e:#}")),
+    };
     let backend_name = backend.name();
+    // prepare once: weights become resident for the worker's lifetime
+    let mut session = match backend.prepare() {
+        Ok(s) => s,
+        Err(e) => return drain_with_error(rx, format!("session prepare failed: {e:#}")),
+    };
+    drop(backend); // the session owns everything execution needs
+
     // modelled hardware latency (once; amortized per batch below)
     let sim_ms = simulate_network(
         &zoo::mobilenet_v2(),
@@ -193,6 +231,12 @@ fn worker_loop(
     let mut batcher: Batcher<Request> = Batcher::new(policy);
     let mut stats = ServiceStats::default();
     let mut open = true;
+    // persistent per-batch buffers: the cut sink, the packed input and
+    // the logits live for the worker's lifetime, so the steady-state
+    // path below allocates nothing per batch
+    let mut pending: Vec<Request> = Vec::new();
+    let mut input_buf: Vec<f32> = Vec::new();
+    let mut logits_buf: Vec<f32> = Vec::new();
 
     while open || !batcher.is_empty() {
         // pull at least one message (with timeout so timed flushes fire)
@@ -223,21 +267,27 @@ fn worker_loop(
         if !batcher.should_flush(Instant::now()) && open {
             continue;
         }
-        let batch = batcher.cut();
-        let bsize = batch.len();
+        batcher.cut_into(&mut pending);
+        let bsize = pending.len();
         stats.batches += 1;
-        let result = run_batch(backend.as_mut(), &batch);
-        match result {
-            Ok(all_logits) => {
-                for (i, req) in batch.into_iter().enumerate() {
-                    let logits =
-                        all_logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].to_vec();
-                    let argmax = logits
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(k, _)| k)
-                        .unwrap_or(0);
+        // pack the cut directly into the persistent input buffer (each
+        // byte written exactly once; capacity is retained across cuts)
+        input_buf.clear();
+        for req in &pending {
+            // submit() already rejected malformed inputs; a violation
+            // here is a programming error, and must never fail
+            // co-batched requests (the no-poison invariant)
+            debug_assert_eq!(req.input.len(), IMG_ELEMS, "unvalidated request reached batcher");
+            input_buf.extend_from_slice(&req.input);
+        }
+        debug_assert_eq!(input_buf.len(), bsize * IMG_ELEMS);
+        logits_buf.clear();
+        logits_buf.resize(bsize * NUM_CLASSES, 0.0);
+        match session.infer_batch_into(&input_buf, bsize, &mut logits_buf) {
+            Ok(()) => {
+                for (i, req) in pending.drain(..).enumerate() {
+                    let mut logits = [0f32; NUM_CLASSES];
+                    logits.copy_from_slice(&logits_buf[i * NUM_CLASSES..(i + 1) * NUM_CLASSES]);
                     let latency = req.submitted.elapsed();
                     stats.requests += 1;
                     stats.total_latency += latency;
@@ -245,7 +295,7 @@ fn worker_loop(
                     stats.latency_hist.record(latency);
                     let _ = req.resp.send(Ok(InferenceResult {
                         logits,
-                        argmax,
+                        argmax: argmax(&logits),
                         latency,
                         batch_size: bsize,
                         simulated_ms: sim_ms / bsize as f64,
@@ -255,7 +305,7 @@ fn worker_loop(
             }
             Err(e) => {
                 let msg = format!("batch execution failed: {e:#}");
-                for req in batch {
+                for req in pending.drain(..) {
                     let _ = req.resp.send(Err(msg.clone()));
                 }
             }
@@ -263,21 +313,10 @@ fn worker_loop(
     }
 }
 
-fn run_batch(backend: &mut dyn Backend, batch: &[Request]) -> Result<Vec<f32>> {
-    let mut input = vec![0f32; batch.len() * IMG_ELEMS];
-    for (i, req) in batch.iter().enumerate() {
-        // submit() already rejected malformed inputs; a violation here
-        // is a programming error, and must never fail co-batched
-        // requests (the no-poison invariant)
-        debug_assert_eq!(req.input.len(), IMG_ELEMS, "unvalidated request reached batcher");
-        input[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].copy_from_slice(&req.input);
-    }
-    backend.infer_batch(&input, batch.len())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::FabricChoice;
 
     #[test]
     fn serves_without_artifacts_via_reference_backend() {
@@ -302,5 +341,40 @@ mod tests {
             BatchPolicy::default(),
         );
         assert!(svc.infer(vec![0.1; IMG_ELEMS]).is_ok());
+    }
+
+    #[test]
+    fn bitsliced_fabric_spec_serves_identical_logits() {
+        let dense = InferenceService::start_with(
+            BackendKind::Reference,
+            "/nonexistent".into(),
+            BatchPolicy::default(),
+        );
+        let fabric = InferenceService::start_spec(
+            BackendSpec {
+                kind: BackendKind::Reference,
+                fabric: FabricChoice::BitSliced,
+            },
+            "/nonexistent".into(),
+            BatchPolicy::default(),
+        );
+        let img = vec![0.3f32; IMG_ELEMS];
+        let a = dense.infer(img.clone()).expect("dense");
+        let b = fabric.infer(img).expect("fabric");
+        // at these layer sizes the i32 kernels cannot overflow, so the
+        // bit-sliced macro path and the dense kernel agree exactly
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn argmax_survives_nan_logits() {
+        // regression: partial_cmp().unwrap() panicked (and killed the
+        // worker thread) on any NaN logit.  In the total order positive
+        // NaN sits above +inf, so a NaN deterministically wins.
+        assert_eq!(argmax(&[f32::NAN, 1.0, 0.5]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN, f32::NAN]), 2);
+        assert_eq!(argmax(&[0.0, f32::NEG_INFINITY, 3.0, f32::NAN]), 3);
+        assert_eq!(argmax(&[0.5, 1.0, 0.25]), 1);
+        assert_eq!(argmax(&[]), 0);
     }
 }

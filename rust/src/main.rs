@@ -23,8 +23,8 @@ use ddc_pim::coordinator::{BatchPolicy, InferenceService};
 use ddc_pim::model::zoo;
 use ddc_pim::report::{render_named, ReportCtx};
 use ddc_pim::runtime::{
-    artifacts, create_backend, verify_kernel_oracles, Backend, BackendKind, IMG_ELEMS,
-    NUM_CLASSES,
+    artifacts, verify_kernel_oracles, Backend, BackendKind, BackendSpec, FabricChoice,
+    IMG_ELEMS, NUM_CLASSES,
 };
 use ddc_pim::sim::simulate_network;
 use ddc_pim::util::rng::Rng;
@@ -68,20 +68,34 @@ fn run(args: &[String]) -> i32 {
         .unwrap_or_else(|| "artifacts".to_string());
     let backend_kind = match flags.get("backend") {
         None => BackendKind::Auto,
-        Some(v) => match BackendKind::parse(v) {
-            Some(k) => k,
-            None => {
-                eprintln!("unknown backend {v:?}; have: auto, reference, pjrt");
+        Some(v) => match v.parse::<BackendKind>() {
+            Ok(k) => k,
+            Err(e) => {
+                eprintln!("{e}");
                 return 2;
             }
         },
+    };
+    let fabric = match flags.get("fabric") {
+        None => FabricChoice::default(),
+        Some(v) => match v.parse::<FabricChoice>() {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
+    let spec = BackendSpec {
+        kind: backend_kind,
+        fabric,
     };
     match pos.first().map(String::as_str) {
         Some("info") => cmd_info(),
         Some("simulate") => cmd_simulate(&flags),
         Some("report") => cmd_report(pos.get(1).map(String::as_str), &artifact_dir),
-        Some("selfcheck") => cmd_selfcheck(&artifact_dir, backend_kind),
-        Some("serve") => cmd_serve(&flags, &artifact_dir, backend_kind),
+        Some("selfcheck") => cmd_selfcheck(&artifact_dir, spec),
+        Some("serve") => cmd_serve(&flags, &artifact_dir, spec),
         _ => {
             eprintln!(
                 "usage: ddc-pim <info|simulate|report|selfcheck|serve> [flags]\n\
@@ -90,6 +104,7 @@ fn run(args: &[String]) -> i32 {
                  \n  serve [--requests N] [--batch N]\
                  \n  flags: --artifacts <dir>  (default: artifacts)\
                  \n         --backend <auto|reference|pjrt>  (default: auto)\
+                 \n         --fabric <dense|bitsliced>  (reference conv path; default: dense)\
                  \n  models: {}",
                 zoo::ALL_MODELS.join(", ")
             );
@@ -222,9 +237,9 @@ fn check(failures: &mut u32, name: &str, result: anyhow::Result<()>) {
     }
 }
 
-fn cmd_selfcheck(artifact_dir: &str, kind: BackendKind) -> i32 {
+fn cmd_selfcheck(artifact_dir: &str, spec: BackendSpec) -> i32 {
     println!("selfcheck: artifact dir = {artifact_dir}");
-    let mut backend = match create_backend(kind, artifact_dir) {
+    let mut backend = match spec.create(artifact_dir) {
         Ok(b) => b,
         Err(e) => {
             eprintln!("FAIL: backend: {e:#}");
@@ -344,7 +359,7 @@ fn replay_goldens(
     }
 }
 
-fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, kind: BackendKind) -> i32 {
+fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendSpec) -> i32 {
     let n: usize = flags
         .get("requests")
         .and_then(|v| v.parse().ok())
@@ -354,7 +369,7 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, kind: BackendK
         max_batch,
         ..Default::default()
     };
-    let svc = InferenceService::start_with(kind, artifact_dir.to_string(), policy);
+    let svc = InferenceService::start_spec(spec, artifact_dir.to_string(), policy);
     let mut rng = Rng::new(7);
     let start = std::time::Instant::now();
     let rxs: Vec<_> = (0..n)

@@ -7,46 +7,734 @@
 //! *full* (biased-comp) filter bank, even though only half the filters
 //! were ever written into the array.
 //!
-//! Hot-loop discipline (§Performance architecture in DESIGN.md): each
-//! executor owns one [`MvmScratch`] for the whole layer, per-pixel
-//! window sums are computed once at im2col time (they are group- and
-//! pass-invariant), tile inputs are streamed as im2col slices (the
-//! macro zero-extends short tails), and pixels are processed in
-//! [`PIXEL_BLOCK`]-sized runs per loaded row so a weight pass streams
-//! activations cache-friendly.  No allocation happens inside the
-//! per-pixel loops.
+//! # Plan/execute lifecycle
+//!
+//! The paper's whole point is that weight residency is precious, so the
+//! executor is split in two phases (DESIGN.md §Plan/execute lifecycle):
+//!
+//! * **plan** — [`PlannedConv`] / [`PlannedDwConv`] are built once per
+//!   layer.  Building runs every weight-load pass: each pass owns a
+//!   [`PimMacro`] with its filter group resident, so SRAM weights are
+//!   written exactly once per layer per session (testable via
+//!   [`PlannedConv::weight_writes`]).
+//! * **execute** — `execute(&self, input, &mut ExecCtx, &mut out)`
+//!   streams one input through the resident weights.  It takes `&self`,
+//!   so it *cannot* write weights, and per-thread [`ExecCtx`] clones
+//!   will allow pixel-block parallelism (ROADMAP) without touching the
+//!   plan.
+//!
+//! All reusable buffers (im2col columns, window sums, [`MvmScratch`],
+//! pixel-block psums) live in the caller-owned [`ExecCtx`]; after the
+//! first execute at a given shape, execute performs no heap allocation.
+//!
+//! Hot-loop discipline (§Performance architecture in DESIGN.md):
+//! per-pixel window sums are computed once at im2col time (they are
+//! group- and pass-invariant), tile inputs are streamed as im2col slices
+//! (the macro zero-extends short tails), and pixels are processed in
+//! [`PIXEL_BLOCK`]-sized runs per resident row so a weight pass streams
+//! activations cache-friendly.
+//!
+//! The original one-shot entry points ([`exec_std_fcc`] & friends) are
+//! thin wrappers — plan, execute once, return — so callers migrate
+//! without semantic drift.
 
 use crate::arch::lpu::Mode;
 use crate::arch::merge::aru_recover;
+use crate::arch::pim_core::{PimCore, WEIGHT_BITS};
 use crate::arch::pim_macro::{MvmScratch, PimMacro};
 use crate::arch::reconfig::Grouping;
 use crate::fcc::FccWeights;
 
-use super::im2col::{im2col, im2col_channel};
+use super::im2col::{im2col_channel_into, im2col_into, out_dims};
 
-/// Pixels streamed per loaded (row, slot) pass: the row's bit-planes
+/// Pixels streamed per resident (row, slot) pass: the row's bit-planes
 /// stay register/L1-hot while this many activation windows flow past.
 const PIXEL_BLOCK: usize = 64;
 
-/// Per-pixel window sums (the ΣI the pre-process unit feeds the ARU),
-/// computed once over the im2col matrix `cols` (`[P, l]` row-major).
+/// Geometry of the paper macro — `(compartments, slots, rows)` — read
+/// from the constants so planners can size their pass schedules without
+/// constructing a throwaway cell array.
+fn paper_geometry() -> (usize, usize, usize) {
+    (
+        PimCore::PAPER_COMPARTMENTS,
+        PimCore::PAPER_DBMUS / WEIGHT_BITS,
+        PimCore::PAPER_ROWS,
+    )
+}
+
+/// Caller-owned scratch for the planned executors: every buffer the
+/// per-pixel loops touch, reused across `execute` calls (and across
+/// plans — buffers are re-sized, never assumed clean).  One `ExecCtx`
+/// per executor thread; `execute` borrows it mutably while the plan
+/// itself stays shared.
+#[derive(Debug, Clone, Default)]
+pub struct ExecCtx {
+    /// im2col matrix `[P, L]` of the current input.
+    cols: Vec<i32>,
+    /// Per-pixel window sums (ΣI for the ARU), std path.
+    win_sums: Vec<i64>,
+    /// Bit-serial row scratch (psums + packed input planes).
+    scratch: MvmScratch,
+    /// Per-(pixel-in-block, slot) psum accumulators.
+    blk: Vec<(i64, i64)>,
+    /// Per-channel dw windows, flattened `[C][P, K*K]`.
+    dw_windows: Vec<i32>,
+    /// Per-channel dw window sums, flattened `[C][P]`.
+    dw_sums: Vec<i64>,
+    /// Reconfig-mode stage input staging (INP broadcast).
+    inp: Vec<i32>,
+    /// Reconfig-mode stage input staging (INN broadcast).
+    inn: Vec<i32>,
+}
+
+impl ExecCtx {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Per-pixel window sums (the ΣI the pre-process unit feeds the ARU)
+/// over the im2col matrix `cols` (`[P, l]` row-major), into a reusable
+/// buffer.
 ///
 /// The sum depends only on the pixel window — not on the filter group
 /// or the weight-reload pass — so the executors compute it here exactly
 /// once instead of re-reducing the window inside the (pass, group,
 /// pixel) loops as the scalar executor did.
-pub fn window_sums(cols: &[i32], l: usize) -> Vec<i64> {
+pub fn window_sums_into(out: &mut Vec<i64>, cols: &[i32], l: usize) {
     assert!(l > 0 && cols.len() % l == 0, "im2col shape mismatch");
-    cols.chunks_exact(l)
-        .map(|w| w.iter().map(|&x| x as i64).sum())
-        .collect()
+    // resize only (no clear): every element is overwritten below
+    out.resize(cols.len() / l, 0);
+    for (dst, wdw) in out.iter_mut().zip(cols.chunks_exact(l)) {
+        *dst = wdw.iter().map(|&x| x as i64).sum();
+    }
 }
 
-/// std/pw-conv in double computing mode with FCC weights (paper Fig. 10).
-///
-/// Only the even comp filters are loaded; INP and INN carry the same
-/// vector-wise input; the ARU recovers both twins of every pair.
-/// Returns `[P, N]` i64 outputs equal to conv with the biased-comp bank.
+/// Allocating wrapper over [`window_sums_into`].
+pub fn window_sums(cols: &[i32], l: usize) -> Vec<i64> {
+    let mut out = Vec::new();
+    window_sums_into(&mut out, cols, l);
+    out
+}
+
+/// One weight-reload pass of a std/pw plan: the filter groups
+/// `[g0, g1)` resident in their own macro.
+#[derive(Debug, Clone)]
+struct StdPass {
+    mac: PimMacro,
+    g0: usize,
+    g1: usize,
+}
+
+/// Which std/pw mapping the plan executes.
+#[derive(Debug, Clone)]
+enum StdKind {
+    /// FCC double-computing mode (paper Fig. 10): only even comp
+    /// filters resident, INP == INN, ARU recovers both twins per pair.
+    Fcc { means: Vec<i32> },
+    /// Regular computing mode (PIM baseline): full bank resident, Q
+    /// path only, ARU bypassed.
+    Regular,
+}
+
+/// A std/pw-conv layer planned onto the macro: weights resident, pass
+/// schedule and tile geometry precomputed.  Build once with
+/// [`PlannedConv::std_fcc`] / [`PlannedConv::std_regular`], then call
+/// [`PlannedConv::execute`] per input.
+#[derive(Debug, Clone)]
+pub struct PlannedConv {
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    oh: usize,
+    ow: usize,
+    /// Output channels (for Fcc, both twins of every stored pair).
+    n: usize,
+    l: usize,
+    cmp: usize,
+    slots: usize,
+    l_tiles: usize,
+    passes: Vec<StdPass>,
+    kind: StdKind,
+}
+
+impl PlannedConv {
+    /// Plan a std/pw-conv in double computing mode with FCC weights:
+    /// only the even comp filters are written (normal SRAM mode), once,
+    /// here.
+    pub fn std_fcc(
+        h: usize,
+        w: usize,
+        c: usize,
+        fcc: &FccWeights,
+        k: usize,
+        stride: usize,
+    ) -> PlannedConv {
+        let l = k * k * c;
+        assert_eq!(fcc.comp.l, l, "filter length mismatch");
+        let n = fcc.comp.n;
+        let pairs = n / 2;
+        let (cmp, slots, rows) = paper_geometry();
+        let l_tiles = l.div_ceil(cmp);
+        let groups = pairs.div_ceil(slots);
+        let groups_per_pass = (rows / l_tiles).max(1);
+        let mut passes = Vec::new();
+        let mut g0 = 0;
+        while g0 < groups {
+            let g1 = (g0 + groups_per_pass).min(groups);
+            // load pass: write even comp filters (normal SRAM mode)
+            let mut mac = PimMacro::paper();
+            for g in g0..g1 {
+                for ti in 0..l_tiles {
+                    let row = (g - g0) * l_tiles + ti;
+                    for cc in 0..cmp {
+                        let li = ti * cmp + cc;
+                        for s in 0..slots {
+                            let p = g * slots + s; // stored pair index
+                            let wv = if p < pairs && li < l {
+                                fcc.comp.filter(2 * p)[li]
+                            } else {
+                                0
+                            };
+                            mac.load_weight(cc, row, s, wv);
+                        }
+                    }
+                }
+            }
+            passes.push(StdPass { mac, g0, g1 });
+            g0 = g1;
+        }
+        let (oh, ow) = out_dims(h, w, stride);
+        PlannedConv {
+            h,
+            w,
+            c,
+            k,
+            stride,
+            oh,
+            ow,
+            n,
+            l,
+            cmp,
+            slots,
+            l_tiles,
+            passes,
+            kind: StdKind::Fcc {
+                means: fcc.means.clone(),
+            },
+        }
+    }
+
+    /// Plan a std/pw-conv in regular computing mode (PIM baseline):
+    /// the full `[N, L]` filter bank is written.
+    pub fn std_regular(
+        h: usize,
+        w: usize,
+        c: usize,
+        filters: &[i32], // [N, L]
+        n: usize,
+        k: usize,
+        stride: usize,
+    ) -> PlannedConv {
+        let l = k * k * c;
+        assert_eq!(filters.len(), n * l, "filter bank shape mismatch");
+        let (cmp, slots, rows) = paper_geometry();
+        let l_tiles = l.div_ceil(cmp);
+        let groups = n.div_ceil(slots);
+        let groups_per_pass = (rows / l_tiles).max(1);
+        let mut passes = Vec::new();
+        let mut g0 = 0;
+        while g0 < groups {
+            let g1 = (g0 + groups_per_pass).min(groups);
+            let mut mac = PimMacro::paper();
+            for g in g0..g1 {
+                for ti in 0..l_tiles {
+                    let row = (g - g0) * l_tiles + ti;
+                    for cc in 0..cmp {
+                        let li = ti * cmp + cc;
+                        for s in 0..slots {
+                            let f = g * slots + s;
+                            let wv = if f < n && li < l { filters[f * l + li] } else { 0 };
+                            mac.load_weight(cc, row, s, wv);
+                        }
+                    }
+                }
+            }
+            passes.push(StdPass { mac, g0, g1 });
+            g0 = g1;
+        }
+        let (oh, ow) = out_dims(h, w, stride);
+        PlannedConv {
+            h,
+            w,
+            c,
+            k,
+            stride,
+            oh,
+            ow,
+            n,
+            l,
+            cmp,
+            slots,
+            l_tiles,
+            passes,
+            kind: StdKind::Regular,
+        }
+    }
+
+    /// Output spatial dims `(oh, ow)`.
+    pub fn out_dims(&self) -> (usize, usize) {
+        (self.oh, self.ow)
+    }
+
+    /// Output channel count.
+    pub fn out_channels(&self) -> usize {
+        self.n
+    }
+
+    /// `execute` output length (`oh * ow * n`).
+    pub fn out_len(&self) -> usize {
+        self.oh * self.ow * self.n
+    }
+
+    /// Weight-reload passes this plan performed at build time.
+    pub fn load_passes(&self) -> usize {
+        self.passes.len()
+    }
+
+    /// Total SRAM weight writes across all passes — constant for the
+    /// plan's lifetime, because `execute` takes `&self` and cannot
+    /// touch the write path (the residency invariant, asserted by the
+    /// session tests).
+    pub fn weight_writes(&self) -> u64 {
+        self.passes.iter().map(|p| p.mac.weight_writes()).sum()
+    }
+
+    /// Run one `[H, W, C]` input through the resident weights into a
+    /// caller-owned `[P, N]` i64 output.  Allocation-free once `ctx`
+    /// has grown to this plan's shape.
+    pub fn execute(&self, input: &[i32], ctx: &mut ExecCtx, out: &mut [i64]) {
+        assert_eq!(input.len(), self.h * self.w * self.c, "input shape mismatch");
+        assert_eq!(out.len(), self.out_len(), "output shape mismatch");
+        let pixels = self.oh * self.ow;
+        // resize only (no clear): im2col_into overwrites the whole
+        // buffer, so a second memset here would be pure waste
+        ctx.cols.resize(pixels * self.l, 0);
+        im2col_into(&mut ctx.cols, input, self.h, self.w, self.c, self.k, self.stride);
+        if matches!(self.kind, StdKind::Fcc { .. }) {
+            window_sums_into(&mut ctx.win_sums, &ctx.cols, self.l);
+        }
+        out.fill(0);
+        let is_fcc = matches!(self.kind, StdKind::Fcc { .. });
+        let mode = if is_fcc { Mode::Double } else { Mode::Regular };
+        for pass in &self.passes {
+            // compute pass: stream pixel blocks (weight stationary)
+            let mut pb0 = 0;
+            while pb0 < pixels {
+                let pb1 = (pb0 + PIXEL_BLOCK).min(pixels);
+                for g in pass.g0..pass.g1 {
+                    ctx.blk.clear();
+                    ctx.blk.resize((pb1 - pb0) * self.slots, (0i64, 0i64));
+                    for ti in 0..self.l_tiles {
+                        let row = (g - pass.g0) * self.l_tiles + ti;
+                        let lo = ti * self.cmp;
+                        let hi = ((ti + 1) * self.cmp).min(self.l);
+                        for px in pb0..pb1 {
+                            let tile = &ctx.cols[px * self.l + lo..px * self.l + hi];
+                            // FCC double mode drives INP and INN with
+                            // the same vector-wise input; regular mode
+                            // leaves the Q̄ path dark
+                            let inn: &[i32] = if is_fcc { tile } else { &[] };
+                            pass.mac.mvm_row_into(
+                                row,
+                                tile,
+                                inn,
+                                mode,
+                                Grouping::Combined,
+                                &mut ctx.scratch,
+                            );
+                            let base = (px - pb0) * self.slots;
+                            for s in 0..self.slots {
+                                let ps = ctx.scratch.psum(0, s);
+                                ctx.blk[base + s].0 += ps.q;
+                                ctx.blk[base + s].1 += ps.qbar;
+                            }
+                        }
+                    }
+                    match &self.kind {
+                        StdKind::Fcc { means } => {
+                            let pairs = self.n / 2;
+                            for px in pb0..pb1 {
+                                let base = (px - pb0) * self.slots;
+                                for s in 0..self.slots {
+                                    let p = g * self.slots + s;
+                                    if p >= pairs {
+                                        continue;
+                                    }
+                                    let m = means[p] as i64;
+                                    let (q, qbar) = ctx.blk[base + s];
+                                    let (even, odd) = aru_recover(
+                                        q,
+                                        qbar,
+                                        ctx.win_sums[px],
+                                        ctx.win_sums[px],
+                                        m,
+                                    );
+                                    out[px * self.n + 2 * p] = even;
+                                    out[px * self.n + 2 * p + 1] = odd;
+                                }
+                            }
+                        }
+                        StdKind::Regular => {
+                            for px in pb0..pb1 {
+                                let base = (px - pb0) * self.slots;
+                                for s in 0..self.slots {
+                                    let f = g * self.slots + s;
+                                    if f < self.n {
+                                        out[px * self.n + f] = ctx.blk[base + s].0;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                pb0 = pb1;
+            }
+        }
+    }
+}
+
+/// One weight-reload pass of a dw plan: mapping units `[u0, u1)` (pairs
+/// in DBIS mode, row-groups in reconfig mode, channels in regular mode)
+/// resident in their own macro, unit `u` at row `u - u0`.
+#[derive(Debug, Clone)]
+struct DwPass {
+    mac: PimMacro,
+    u0: usize,
+    u1: usize,
+}
+
+/// Which dw mapping the plan executes.
+#[derive(Debug, Clone)]
+enum DwKind {
+    /// FCC + DBIS (+ optionally the reconfigurable unit's
+    /// split-grouping / padded mapping, paper Fig. 11).
+    Fcc { means: Vec<i32>, reconfig: bool },
+    /// Regular computing baseline: one channel per row-step.
+    Regular,
+}
+
+/// A dw-conv layer planned onto the macro.  Build once with
+/// [`PlannedDwConv::fcc`] / [`PlannedDwConv::regular`], then call
+/// [`PlannedDwConv::execute`] per input.
+#[derive(Debug, Clone)]
+pub struct PlannedDwConv {
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    oh: usize,
+    ow: usize,
+    taps: usize,
+    cmp: usize,
+    passes: Vec<DwPass>,
+    kind: DwKind,
+}
+
+impl PlannedDwConv {
+    /// Plan a dw-conv with FCC + DBIS.  With `reconfig` and `2*k*k`
+    /// taps fitting the compartment count, the reconfigurable unit's
+    /// split mapping packs two pairs per row half (paper Fig. 11);
+    /// otherwise the DBIS-only one-pair-per-row mapping is planned.
+    pub fn fcc(
+        h: usize,
+        w: usize,
+        c: usize,
+        fcc: &FccWeights, // [C, K*K] comp filters, channel pairs
+        k: usize,
+        stride: usize,
+        reconfig: bool,
+    ) -> PlannedDwConv {
+        let taps = k * k;
+        assert_eq!(fcc.comp.l, taps, "filter length mismatch");
+        assert_eq!(fcc.comp.n, c, "channel count mismatch");
+        let pairs = c / 2;
+        let (cmp, _, rows) = paper_geometry();
+        let reconfig = reconfig && 2 * taps <= cmp;
+        let mut passes = Vec::new();
+        if reconfig {
+            // 4 pairs per stored row: (half 0 slot 0, half 0 slot 1,
+            // half 1 slot 0, half 1 slot 1)
+            let half = cmp / 2;
+            let row_groups = pairs.div_ceil(4);
+            let mut u0 = 0;
+            while u0 < row_groups {
+                let u1 = (u0 + rows).min(row_groups);
+                let mut mac = PimMacro::paper();
+                for rg in u0..u1 {
+                    let row = rg - u0;
+                    for cc in 0..cmp {
+                        for s in 0..2 {
+                            let (ghalf, off) = if cc < half { (0, cc) } else { (1, cc - half) };
+                            // layout: stage s selects slot s; half 0
+                            // computes pair (4rg+2s), half 1 (4rg+2s+1)
+                            let p = rg * 4 + 2 * s + ghalf;
+                            let wv = if p < pairs && off < taps {
+                                fcc.comp.filter(2 * p)[off]
+                            } else {
+                                0
+                            };
+                            mac.load_weight(cc, row, s, wv);
+                        }
+                    }
+                }
+                passes.push(DwPass { mac, u0, u1 });
+                u0 = u1;
+            }
+        } else {
+            // DBIS-only: one pair per row-step in compartments 0..taps
+            let mut u0 = 0;
+            while u0 < pairs {
+                let u1 = (u0 + rows).min(pairs);
+                let mut mac = PimMacro::paper();
+                for p in u0..u1 {
+                    let row = p - u0;
+                    for cc in 0..taps.min(cmp) {
+                        mac.load_weight(cc, row, 0, fcc.comp.filter(2 * p)[cc]);
+                    }
+                }
+                passes.push(DwPass { mac, u0, u1 });
+                u0 = u1;
+            }
+        }
+        let (oh, ow) = out_dims(h, w, stride);
+        PlannedDwConv {
+            h,
+            w,
+            c,
+            k,
+            stride,
+            oh,
+            ow,
+            taps,
+            cmp,
+            passes,
+            kind: DwKind::Fcc {
+                means: fcc.means.clone(),
+                reconfig,
+            },
+        }
+    }
+
+    /// Plan a dw-conv baseline: one channel per row-step, regular mode.
+    pub fn regular(
+        h: usize,
+        w: usize,
+        c: usize,
+        filters: &[i32], // [C, K*K]
+        k: usize,
+        stride: usize,
+    ) -> PlannedDwConv {
+        let taps = k * k;
+        assert_eq!(filters.len(), c * taps, "filter bank shape mismatch");
+        let (cmp, _, rows) = paper_geometry();
+        let mut passes = Vec::new();
+        let mut u0 = 0;
+        while u0 < c {
+            let u1 = (u0 + rows).min(c);
+            let mut mac = PimMacro::paper();
+            for ch in u0..u1 {
+                let row = ch - u0;
+                for cc in 0..taps.min(cmp) {
+                    mac.load_weight(cc, row, 0, filters[ch * taps + cc]);
+                }
+            }
+            passes.push(DwPass { mac, u0, u1 });
+            u0 = u1;
+        }
+        let (oh, ow) = out_dims(h, w, stride);
+        PlannedDwConv {
+            h,
+            w,
+            c,
+            k,
+            stride,
+            oh,
+            ow,
+            taps,
+            cmp,
+            passes,
+            kind: DwKind::Regular,
+        }
+    }
+
+    /// Output spatial dims `(oh, ow)`.
+    pub fn out_dims(&self) -> (usize, usize) {
+        (self.oh, self.ow)
+    }
+
+    /// `execute` output length (`oh * ow * c`).
+    pub fn out_len(&self) -> usize {
+        self.oh * self.ow * self.c
+    }
+
+    /// Weight-reload passes this plan performed at build time.
+    pub fn load_passes(&self) -> usize {
+        self.passes.len()
+    }
+
+    /// Total SRAM weight writes across all passes (constant after
+    /// build — see [`PlannedConv::weight_writes`]).
+    pub fn weight_writes(&self) -> u64 {
+        self.passes.iter().map(|p| p.mac.weight_writes()).sum()
+    }
+
+    /// Run one `[H, W, C]` input through the resident weights into a
+    /// caller-owned `[P, C]` i64 output.  Allocation-free once `ctx`
+    /// has grown to this plan's shape.
+    pub fn execute(&self, input: &[i32], ctx: &mut ExecCtx, out: &mut [i64]) {
+        assert_eq!(input.len(), self.h * self.w * self.c, "input shape mismatch");
+        assert_eq!(out.len(), self.out_len(), "output shape mismatch");
+        let (pixels, taps, c) = (self.oh * self.ow, self.taps, self.c);
+        // per-channel im2col windows + their pixel sums (ΣI per stream);
+        // resize only — every chunk/element is overwritten below
+        ctx.dw_windows.resize(c * pixels * taps, 0);
+        for ch in 0..c {
+            im2col_channel_into(
+                &mut ctx.dw_windows[ch * pixels * taps..(ch + 1) * pixels * taps],
+                input,
+                self.h,
+                self.w,
+                c,
+                ch,
+                self.k,
+                self.stride,
+            );
+        }
+        if matches!(self.kind, DwKind::Fcc { .. }) {
+            // one ΣI per (channel, pixel) window — same reduction as the
+            // std path, flattened `[C][P]`
+            window_sums_into(&mut ctx.dw_sums, &ctx.dw_windows, taps);
+        }
+        out.fill(0);
+        match &self.kind {
+            DwKind::Fcc { means, reconfig } if *reconfig => {
+                self.execute_fcc_reconfig(means, ctx, out)
+            }
+            DwKind::Fcc { means, .. } => self.execute_fcc_dbis(means, ctx, out),
+            DwKind::Regular => self.execute_regular(ctx, out),
+        }
+    }
+
+    fn execute_fcc_dbis(&self, means: &[i32], ctx: &mut ExecCtx, out: &mut [i64]) {
+        let (pixels, taps, c) = (self.oh * self.ow, self.taps, self.c);
+        for pass in &self.passes {
+            for p in pass.u0..pass.u1 {
+                let row = p - pass.u0;
+                let m = means[p] as i64;
+                for px in 0..pixels {
+                    let we = &ctx.dw_windows[(2 * p) * pixels * taps + px * taps..][..taps];
+                    let wo = &ctx.dw_windows[(2 * p + 1) * pixels * taps + px * taps..][..taps];
+                    pass.mac.mvm_row_into(
+                        row,
+                        we,
+                        wo,
+                        Mode::Double,
+                        Grouping::Combined,
+                        &mut ctx.scratch,
+                    );
+                    let ps = ctx.scratch.psum(0, 0);
+                    let sp = ctx.dw_sums[(2 * p) * pixels + px];
+                    let sn = ctx.dw_sums[(2 * p + 1) * pixels + px];
+                    let (even, odd) = aru_recover(ps.q, ps.qbar, sp, sn, m);
+                    out[px * c + 2 * p] = even;
+                    out[px * c + 2 * p + 1] = odd;
+                }
+            }
+        }
+    }
+
+    fn execute_fcc_reconfig(&self, means: &[i32], ctx: &mut ExecCtx, out: &mut [i64]) {
+        let (pixels, taps, c) = (self.oh * self.ow, self.taps, self.c);
+        let pairs = c / 2;
+        let half = self.cmp / 2;
+        for pass in &self.passes {
+            for rg in pass.u0..pass.u1 {
+                let row = rg - pass.u0;
+                for px in 0..pixels {
+                    // two stages, alternating slots
+                    for s in 0..2 {
+                        let pa = rg * 4 + 2 * s; // half 0 pair
+                        let pb = rg * 4 + 2 * s + 1; // half 1 pair
+                        ctx.inp.clear();
+                        ctx.inp.resize(self.cmp, 0);
+                        ctx.inn.clear();
+                        ctx.inn.resize(self.cmp, 0);
+                        for (half_id, p) in [(0usize, pa), (1usize, pb)] {
+                            if p >= pairs {
+                                continue;
+                            }
+                            for t in 0..taps {
+                                let ccx = half_id * half + t;
+                                ctx.inp[ccx] =
+                                    ctx.dw_windows[(2 * p) * pixels * taps + px * taps + t];
+                                ctx.inn[ccx] =
+                                    ctx.dw_windows[(2 * p + 1) * pixels * taps + px * taps + t];
+                            }
+                        }
+                        pass.mac.mvm_row_into(
+                            row,
+                            &ctx.inp,
+                            &ctx.inn,
+                            Mode::Double,
+                            Grouping::Split,
+                            &mut ctx.scratch,
+                        );
+                        for (ghalf, p) in [(0usize, pa), (1usize, pb)] {
+                            if p >= pairs {
+                                continue;
+                            }
+                            let m = means[p] as i64;
+                            let sp = ctx.dw_sums[(2 * p) * pixels + px];
+                            let sn = ctx.dw_sums[(2 * p + 1) * pixels + px];
+                            let ps = ctx.scratch.psum(ghalf, s);
+                            let (even, odd) = aru_recover(ps.q, ps.qbar, sp, sn, m);
+                            out[px * c + 2 * p] = even;
+                            out[px * c + 2 * p + 1] = odd;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn execute_regular(&self, ctx: &mut ExecCtx, out: &mut [i64]) {
+        let (pixels, taps, c) = (self.oh * self.ow, self.taps, self.c);
+        for pass in &self.passes {
+            for ch in pass.u0..pass.u1 {
+                let row = ch - pass.u0;
+                for px in 0..pixels {
+                    let window = &ctx.dw_windows[ch * pixels * taps + px * taps..][..taps];
+                    pass.mac.mvm_row_into(
+                        row,
+                        window,
+                        &[],
+                        Mode::Regular,
+                        Grouping::Combined,
+                        &mut ctx.scratch,
+                    );
+                    out[px * c + ch] = ctx.scratch.psum(0, 0).q;
+                }
+            }
+        }
+    }
+}
+
+/// std/pw-conv in double computing mode with FCC weights (paper
+/// Fig. 10) — one-shot wrapper: plan, execute once, return `[P, N]`.
 pub fn exec_std_fcc(
     input: &[i32],
     h: usize,
@@ -56,101 +744,15 @@ pub fn exec_std_fcc(
     k: usize,
     stride: usize,
 ) -> Vec<i64> {
-    let l = k * k * c;
-    assert_eq!(fcc.comp.l, l, "filter length mismatch");
-    let n = fcc.comp.n;
-    let pairs = n / 2;
-    let (cols, oh, ow) = im2col(input, h, w, c, k, stride);
-    let pixels = oh * ow;
-    let win_sums = window_sums(&cols, l);
-
-    let mut mac = PimMacro::paper();
-    let cmp = mac.core.num_compartments();
-    let slots = mac.core.slots();
-    let rows = mac.core.rows();
-    let l_tiles = l.div_ceil(cmp);
-    let groups = pairs.div_ceil(slots);
-
-    let mut out = vec![0i64; pixels * n];
-    let mut scratch = MvmScratch::new();
-    // per-(pixel-in-block, slot) psum accumulators, reused across blocks
-    let mut blk = Vec::new();
-    // iterate groups in row-capacity chunks (weight reload passes)
-    let groups_per_pass = (rows / l_tiles).max(1);
-    let mut g0 = 0;
-    while g0 < groups {
-        let g1 = (g0 + groups_per_pass).min(groups);
-        // ---- load pass: write even comp filters (normal SRAM mode)
-        for g in g0..g1 {
-            for ti in 0..l_tiles {
-                let row = (g - g0) * l_tiles + ti;
-                for cc in 0..cmp {
-                    let li = ti * cmp + cc;
-                    for s in 0..slots {
-                        let p = g * slots + s; // stored pair index
-                        let wv = if p < pairs && li < l {
-                            fcc.comp.filter(2 * p)[li]
-                        } else {
-                            0
-                        };
-                        mac.load_weight(cc, row, s, wv);
-                    }
-                }
-            }
-        }
-        // ---- compute pass: stream pixel blocks (weight stationary)
-        let mut pb0 = 0;
-        while pb0 < pixels {
-            let pb1 = (pb0 + PIXEL_BLOCK).min(pixels);
-            for g in g0..g1 {
-                blk.clear();
-                blk.resize((pb1 - pb0) * slots, (0i64, 0i64));
-                for ti in 0..l_tiles {
-                    let row = (g - g0) * l_tiles + ti;
-                    let lo = ti * cmp;
-                    let hi = ((ti + 1) * cmp).min(l);
-                    for px in pb0..pb1 {
-                        let tile = &cols[px * l + lo..px * l + hi];
-                        mac.mvm_row_into(
-                            row,
-                            tile,
-                            tile,
-                            Mode::Double,
-                            Grouping::Combined,
-                            &mut scratch,
-                        );
-                        let base = (px - pb0) * slots;
-                        for s in 0..slots {
-                            let ps = scratch.psum(0, s);
-                            blk[base + s].0 += ps.q;
-                            blk[base + s].1 += ps.qbar;
-                        }
-                    }
-                }
-                for px in pb0..pb1 {
-                    let base = (px - pb0) * slots;
-                    for s in 0..slots {
-                        let p = g * slots + s;
-                        if p >= pairs {
-                            continue;
-                        }
-                        let m = fcc.means[p] as i64;
-                        let (q, qbar) = blk[base + s];
-                        let (even, odd) = aru_recover(q, qbar, win_sums[px], win_sums[px], m);
-                        out[px * n + 2 * p] = even;
-                        out[px * n + 2 * p + 1] = odd;
-                    }
-                }
-            }
-            pb0 = pb1;
-        }
-        g0 = g1;
-    }
+    let plan = PlannedConv::std_fcc(h, w, c, fcc, k, stride);
+    let mut ctx = ExecCtx::new();
+    let mut out = vec![0i64; plan.out_len()];
+    plan.execute(input, &mut ctx, &mut out);
     out
 }
 
-/// std/pw-conv in regular computing mode (PIM baseline): full filter
-/// bank loaded, Q path only, ARU bypassed.
+/// std/pw-conv in regular computing mode (PIM baseline) — one-shot
+/// wrapper over [`PlannedConv::std_regular`].
 pub fn exec_std_regular(
     input: &[i32],
     h: usize,
@@ -161,89 +763,16 @@ pub fn exec_std_regular(
     k: usize,
     stride: usize,
 ) -> Vec<i64> {
-    let l = k * k * c;
-    let (cols, oh, ow) = im2col(input, h, w, c, k, stride);
-    let pixels = oh * ow;
-
-    let mut mac = PimMacro::paper();
-    let cmp = mac.core.num_compartments();
-    let slots = mac.core.slots();
-    let rows = mac.core.rows();
-    let l_tiles = l.div_ceil(cmp);
-    let groups = n.div_ceil(slots);
-    let groups_per_pass = (rows / l_tiles).max(1);
-
-    let mut out = vec![0i64; pixels * n];
-    let mut scratch = MvmScratch::new();
-    let mut blk = Vec::new();
-    let mut g0 = 0;
-    while g0 < groups {
-        let g1 = (g0 + groups_per_pass).min(groups);
-        for g in g0..g1 {
-            for ti in 0..l_tiles {
-                let row = (g - g0) * l_tiles + ti;
-                for cc in 0..cmp {
-                    let li = ti * cmp + cc;
-                    for s in 0..slots {
-                        let f = g * slots + s;
-                        let wv = if f < n && li < l { filters[f * l + li] } else { 0 };
-                        mac.load_weight(cc, row, s, wv);
-                    }
-                }
-            }
-        }
-        let mut pb0 = 0;
-        while pb0 < pixels {
-            let pb1 = (pb0 + PIXEL_BLOCK).min(pixels);
-            for g in g0..g1 {
-                blk.clear();
-                blk.resize((pb1 - pb0) * slots, 0i64);
-                for ti in 0..l_tiles {
-                    let row = (g - g0) * l_tiles + ti;
-                    let lo = ti * cmp;
-                    let hi = ((ti + 1) * cmp).min(l);
-                    for px in pb0..pb1 {
-                        let tile = &cols[px * l + lo..px * l + hi];
-                        mac.mvm_row_into(
-                            row,
-                            tile,
-                            &[],
-                            Mode::Regular,
-                            Grouping::Combined,
-                            &mut scratch,
-                        );
-                        let base = (px - pb0) * slots;
-                        for s in 0..slots {
-                            blk[base + s] += scratch.psum(0, s).q;
-                        }
-                    }
-                }
-                for px in pb0..pb1 {
-                    let base = (px - pb0) * slots;
-                    for s in 0..slots {
-                        let f = g * slots + s;
-                        if f < n {
-                            out[px * n + f] = blk[base + s];
-                        }
-                    }
-                }
-            }
-            pb0 = pb1;
-        }
-        g0 = g1;
-    }
+    let plan = PlannedConv::std_regular(h, w, c, filters, n, k, stride);
+    let mut ctx = ExecCtx::new();
+    let mut out = vec![0i64; plan.out_len()];
+    plan.execute(input, &mut ctx, &mut out);
     out
 }
 
 /// dw-conv with FCC + DBIS (+ optionally the reconfigurable unit's
-/// split-grouping / padded mapping, paper Fig. 11).
-///
-/// * `reconfig = false` — one channel *pair* per row-step: the stored
-///   even comp filter occupies compartments `0..k*k`; INP carries the
-///   even channel's window, INN the odd channel's (parallelism 9x1x16).
-/// * `reconfig = true` — two pairs per row-step: pair A in compartments
-///   `0..k*k`, pair B in `16..16+k*k`, two alternating stages over the
-///   two weight slots (parallelism 18x1x16; 8 channels per stored row).
+/// split-grouping / padded mapping, paper Fig. 11) — one-shot wrapper
+/// over [`PlannedDwConv::fcc`].
 pub fn exec_dw_fcc(
     input: &[i32],
     h: usize,
@@ -254,108 +783,15 @@ pub fn exec_dw_fcc(
     stride: usize,
     reconfig: bool,
 ) -> Vec<i64> {
-    let taps = k * k;
-    assert_eq!(fcc.comp.l, taps);
-    assert_eq!(fcc.comp.n, c);
-    let pairs = c / 2;
-    let oh = h.div_ceil(stride);
-    let ow = w.div_ceil(stride);
-    let pixels = oh * ow;
-
-    // per-channel im2col windows + their pixel sums (ΣI per stream)
-    let windows: Vec<Vec<i32>> = (0..c)
-        .map(|ch| im2col_channel(input, h, w, c, ch, k, stride).0)
-        .collect();
-    let win_sums: Vec<Vec<i64>> = windows.iter().map(|wn| window_sums(wn, taps)).collect();
-
-    let mut mac = PimMacro::paper();
-    let cmp = mac.core.num_compartments();
-    let mut scratch = MvmScratch::new();
-    let mut out = vec![0i64; pixels * c];
-
-    if reconfig && 2 * taps <= cmp {
-        // 4 pairs per stored row: (g0 slot0, g0 slot1, g1 slot0, g1 slot1)
-        let half = cmp / 2;
-        let row_groups = pairs.div_ceil(4);
-        let mut inp = vec![0i32; cmp];
-        let mut inn = vec![0i32; cmp];
-        for rg in 0..row_groups {
-            let row = rg % mac.core.rows();
-            // load: group half g in {0,1}, slot s in {0,1}
-            for cc in 0..cmp {
-                for s in 0..2 {
-                    let (ghalf, off) = if cc < half { (0, cc) } else { (1, cc - half) };
-                    // layout: stage s selects slot s; half 0 computes
-                    // pair (4rg+2s), half 1 pair (4rg+2s+1)
-                    let p = rg * 4 + 2 * s + ghalf;
-                    let wv = if p < pairs && off < taps {
-                        fcc.comp.filter(2 * p)[off]
-                    } else {
-                        0
-                    };
-                    mac.load_weight(cc, row, s, wv);
-                }
-            }
-            for px in 0..pixels {
-                // two stages, alternating slots
-                for s in 0..2 {
-                    let pa = rg * 4 + 2 * s; // half 0 pair
-                    let pb = rg * 4 + 2 * s + 1; // half 1 pair
-                    inp.fill(0);
-                    inn.fill(0);
-                    for (half_id, p) in [(0usize, pa), (1usize, pb)] {
-                        if p >= pairs {
-                            continue;
-                        }
-                        for t in 0..taps {
-                            let ccx = half_id * half + t;
-                            inp[ccx] = windows[2 * p][px * taps + t];
-                            inn[ccx] = windows[2 * p + 1][px * taps + t];
-                        }
-                    }
-                    mac.mvm_row_into(row, &inp, &inn, Mode::Double, Grouping::Split, &mut scratch);
-                    for (ghalf, p) in [(0usize, pa), (1usize, pb)] {
-                        if p >= pairs {
-                            continue;
-                        }
-                        let m = fcc.means[p] as i64;
-                        let sp = win_sums[2 * p][px];
-                        let sn = win_sums[2 * p + 1][px];
-                        let ps = scratch.psum(ghalf, s);
-                        let (even, odd) = aru_recover(ps.q, ps.qbar, sp, sn, m);
-                        out[px * c + 2 * p] = even;
-                        out[px * c + 2 * p + 1] = odd;
-                    }
-                }
-            }
-        }
-    } else {
-        // DBIS-only: one pair per row-step in compartments 0..taps
-        for p in 0..pairs {
-            let row = p % mac.core.rows();
-            for cc in 0..cmp {
-                let wv = if cc < taps { fcc.comp.filter(2 * p)[cc] } else { 0 };
-                mac.load_weight(cc, row, 0, wv);
-                mac.load_weight(cc, row, 1, 0);
-            }
-            let m = fcc.means[p] as i64;
-            for px in 0..pixels {
-                let inp = &windows[2 * p][px * taps..(px + 1) * taps];
-                let inn = &windows[2 * p + 1][px * taps..(px + 1) * taps];
-                mac.mvm_row_into(row, inp, inn, Mode::Double, Grouping::Combined, &mut scratch);
-                let ps = scratch.psum(0, 0);
-                let sp = win_sums[2 * p][px];
-                let sn = win_sums[2 * p + 1][px];
-                let (even, odd) = aru_recover(ps.q, ps.qbar, sp, sn, m);
-                out[px * c + 2 * p] = even;
-                out[px * c + 2 * p + 1] = odd;
-            }
-        }
-    }
+    let plan = PlannedDwConv::fcc(h, w, c, fcc, k, stride, reconfig);
+    let mut ctx = ExecCtx::new();
+    let mut out = vec![0i64; plan.out_len()];
+    plan.execute(input, &mut ctx, &mut out);
     out
 }
 
-/// dw-conv baseline: one channel per row-step, regular mode.
+/// dw-conv baseline: one channel per row-step, regular mode — one-shot
+/// wrapper over [`PlannedDwConv::regular`].
 pub fn exec_dw_regular(
     input: &[i32],
     h: usize,
@@ -365,28 +801,10 @@ pub fn exec_dw_regular(
     k: usize,
     stride: usize,
 ) -> Vec<i64> {
-    let taps = k * k;
-    let oh = h.div_ceil(stride);
-    let ow = w.div_ceil(stride);
-    let pixels = oh * ow;
-    let mut mac = PimMacro::paper();
-    let cmp = mac.core.num_compartments();
-    let mut scratch = MvmScratch::new();
-    let mut out = vec![0i64; pixels * c];
-    for ch in 0..c {
-        let row = ch % mac.core.rows();
-        for cc in 0..cmp {
-            let wv = if cc < taps { filters[ch * taps + cc] } else { 0 };
-            mac.load_weight(cc, row, 0, wv);
-            mac.load_weight(cc, row, 1, 0);
-        }
-        let (win, _, _) = im2col_channel(input, h, w, c, ch, k, stride);
-        for px in 0..pixels {
-            let window = &win[px * taps..(px + 1) * taps];
-            mac.mvm_row_into(row, window, &[], Mode::Regular, Grouping::Combined, &mut scratch);
-            out[px * c + ch] = scratch.psum(0, 0).q;
-        }
-    }
+    let plan = PlannedDwConv::regular(h, w, c, filters, k, stride);
+    let mut ctx = ExecCtx::new();
+    let mut out = vec![0i64; plan.out_len()];
+    plan.execute(input, &mut ctx, &mut out);
     out
 }
 
@@ -394,7 +812,7 @@ pub fn exec_dw_regular(
 mod tests {
     use super::*;
     use crate::fcc::{fcc_transform, FilterBank};
-    use crate::mapping::im2col::{direct_conv, direct_dwconv};
+    use crate::mapping::im2col::{direct_conv, direct_dwconv, im2col};
     use crate::util::rng::Rng;
 
     fn rand_vec(rng: &mut Rng, n: usize) -> Vec<i32> {
@@ -578,7 +996,7 @@ mod tests {
     #[test]
     fn dw_5x5_falls_back_to_dbis() {
         // 5x5 taps don't fit twice -> reconfig path must still be correct
-        // via the DBIS fallback inside exec_dw_fcc
+        // via the DBIS fallback inside PlannedDwConv::fcc
         let mut rng = Rng::new(99);
         let (h, w, c, k) = (5, 5, 4, 5);
         let input = rand_vec(&mut rng, h * w * c);
@@ -587,5 +1005,79 @@ mod tests {
         let got = exec_dw_fcc(&input, h, w, c, &fcc, k, 1, true);
         let want = dw_fcc_oracle(&input, h, w, c, &fcc, k, 1);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn paper_geometry_matches_the_built_macro() {
+        // the const-based planner geometry must never drift from the
+        // macro the passes actually build
+        let mac = PimMacro::paper();
+        assert_eq!(
+            paper_geometry(),
+            (mac.core.num_compartments(), mac.core.slots(), mac.core.rows())
+        );
+    }
+
+    #[test]
+    fn planned_execute_is_repeatable_with_shared_ctx() {
+        // one ExecCtx serves many plans and many executes: results must
+        // not depend on what the buffers held before
+        let mut rng = Rng::new(100);
+        let (h, w, c, k, n) = (4, 4, 3, 3, 8);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, n * k * k * c), n, k * k * c);
+        let fcc = fcc_transform(&bank);
+        let std_plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+        let dw_filters = rand_vec(&mut rng, (c + 1) * k * k);
+        let dw_plan = PlannedDwConv::regular(h, w, c + 1, &dw_filters, k, 1);
+        let dw_input = rand_vec(&mut rng, h * w * (c + 1));
+
+        let mut ctx = ExecCtx::new();
+        let mut std_out = vec![0i64; std_plan.out_len()];
+        let mut dw_out = vec![0i64; dw_plan.out_len()];
+        std_plan.execute(&input, &mut ctx, &mut std_out);
+        let first = std_out.clone();
+        dw_plan.execute(&dw_input, &mut ctx, &mut dw_out); // dirty the ctx
+        std_plan.execute(&input, &mut ctx, &mut std_out);
+        assert_eq!(std_out, first, "ctx reuse leaked state between plans");
+        assert_eq!(first, fcc_oracle(&input, h, w, c, &fcc, k, 1));
+    }
+
+    #[test]
+    fn planned_weights_written_once() {
+        // the residency invariant: building the plan performs every
+        // SRAM weight write; execute (&self) performs none
+        let mut rng = Rng::new(101);
+        let (h, w, c, k, n) = (3, 3, 40, 1, 12);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, n * c), n, c);
+        let fcc = fcc_transform(&bank);
+        let plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+        assert!(plan.load_passes() >= 1);
+        let written = plan.weight_writes();
+        assert!(written > 0, "plan build must write weights");
+        let mut ctx = ExecCtx::new();
+        let mut out = vec![0i64; plan.out_len()];
+        for _ in 0..3 {
+            plan.execute(&input, &mut ctx, &mut out);
+        }
+        assert_eq!(plan.weight_writes(), written, "execute must not write weights");
+    }
+
+    #[test]
+    fn planned_multipass_splits_groups() {
+        // l_tiles = 2 (l = 40 > 32 compartments), 33 groups vs 64 rows
+        // -> 32 groups/pass -> 2 passes; outputs must still be exact
+        let mut rng = Rng::new(102);
+        let (h, w, c, k, n) = (2, 2, 40, 1, 132);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, n * c), n, c);
+        let fcc = fcc_transform(&bank);
+        let plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+        assert!(plan.load_passes() >= 2, "shape was meant to force a reload pass");
+        let mut ctx = ExecCtx::new();
+        let mut out = vec![0i64; plan.out_len()];
+        plan.execute(&input, &mut ctx, &mut out);
+        assert_eq!(out, fcc_oracle(&input, h, w, c, &fcc, k, 1));
     }
 }

@@ -4,22 +4,30 @@
 //! Feature maps are `[H, W, C]` row-major (HWC); filters are `[N, L]`
 //! with `L = K*K*C` in `(ky, kx, c)` order — matching the python side.
 
-/// SAME-padding im2col: returns `[P, L]` where `P = out_h * out_w`,
-/// `L = k*k*c`.  Out-of-bounds taps read 0.
-pub fn im2col(
+/// SAME-padding im2col output shape for an `[H, W]` input.
+pub fn out_dims(h: usize, w: usize, stride: usize) -> (usize, usize) {
+    (h.div_ceil(stride), w.div_ceil(stride))
+}
+
+/// SAME-padding im2col into a caller-owned `[P, L]` buffer
+/// (`P = out_h * out_w`, `L = k*k*c`; `out.len()` must match exactly).
+/// Out-of-bounds taps read 0.  The zero-allocation twin of [`im2col`],
+/// used by the planned executors' hot path.
+pub fn im2col_into(
+    out: &mut [i32],
     input: &[i32],
     h: usize,
     w: usize,
     c: usize,
     k: usize,
     stride: usize,
-) -> (Vec<i32>, usize, usize) {
+) -> (usize, usize) {
     assert_eq!(input.len(), h * w * c, "input shape mismatch");
-    let oh = h.div_ceil(stride);
-    let ow = w.div_ceil(stride);
+    let (oh, ow) = out_dims(h, w, stride);
     let pad = (k - 1) / 2;
     let l = k * k * c;
-    let mut out = vec![0i32; oh * ow * l];
+    assert_eq!(out.len(), oh * ow * l, "im2col output shape mismatch");
+    out.fill(0);
     for oy in 0..oh {
         for ox in 0..ow {
             let base = (oy * ow + ox) * l;
@@ -37,12 +45,30 @@ pub fn im2col(
             }
         }
     }
+    (oh, ow)
+}
+
+/// SAME-padding im2col: returns `[P, L]` where `P = out_h * out_w`,
+/// `L = k*k*c`.  Out-of-bounds taps read 0.  Allocating convenience
+/// wrapper over [`im2col_into`].
+pub fn im2col(
+    input: &[i32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+) -> (Vec<i32>, usize, usize) {
+    let (oh, ow) = out_dims(h, w, stride);
+    let mut out = vec![0i32; oh * ow * k * k * c];
+    im2col_into(&mut out, input, h, w, c, k, stride);
     (out, oh, ow)
 }
 
-/// Per-channel im2col for depthwise conv: returns `[P, K*K]` windows of
-/// channel `ch` only.
-pub fn im2col_channel(
+/// Per-channel im2col for depthwise conv, into a caller-owned
+/// `[P, K*K]` buffer holding the windows of channel `ch` only.
+pub fn im2col_channel_into(
+    out: &mut [i32],
     input: &[i32],
     h: usize,
     w: usize,
@@ -50,12 +76,13 @@ pub fn im2col_channel(
     ch: usize,
     k: usize,
     stride: usize,
-) -> (Vec<i32>, usize, usize) {
-    let oh = h.div_ceil(stride);
-    let ow = w.div_ceil(stride);
+) -> (usize, usize) {
+    assert_eq!(input.len(), h * w * c, "input shape mismatch");
+    let (oh, ow) = out_dims(h, w, stride);
     let pad = (k - 1) / 2;
     let l = k * k;
-    let mut out = vec![0i32; oh * ow * l];
+    assert_eq!(out.len(), oh * ow * l, "im2col output shape mismatch");
+    out.fill(0);
     for oy in 0..oh {
         for ox in 0..ow {
             let base = (oy * ow + ox) * l;
@@ -71,6 +98,23 @@ pub fn im2col_channel(
             }
         }
     }
+    (oh, ow)
+}
+
+/// Per-channel im2col for depthwise conv: returns `[P, K*K]` windows of
+/// channel `ch` only.  Allocating wrapper over [`im2col_channel_into`].
+pub fn im2col_channel(
+    input: &[i32],
+    h: usize,
+    w: usize,
+    c: usize,
+    ch: usize,
+    k: usize,
+    stride: usize,
+) -> (Vec<i32>, usize, usize) {
+    let (oh, ow) = out_dims(h, w, stride);
+    let mut out = vec![0i32; oh * ow * k * k];
+    im2col_channel_into(&mut out, input, h, w, c, ch, k, stride);
     (out, oh, ow)
 }
 
@@ -177,6 +221,23 @@ mod tests {
         let dw = direct_dwconv(&input, h, w, c, &dwf, k, 1);
         let st = direct_conv(&input, h, w, c, &stdf, c, k, 1);
         assert_eq!(dw, st);
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        // the zero-alloc twins must fully overwrite a reused buffer,
+        // including the zero-padding taps a previous call left behind
+        let mut rng = Rng::new(83);
+        let (h, w, c, k) = (4, 3, 2, 3);
+        let input: Vec<i32> = (0..h * w * c).map(|_| rng.int8() as i32).collect();
+        let (want, oh, ow) = im2col(&input, h, w, c, k, 1);
+        let mut buf = vec![i32::MAX; oh * ow * k * k * c];
+        assert_eq!(im2col_into(&mut buf, &input, h, w, c, k, 1), (oh, ow));
+        assert_eq!(buf, want);
+        let (want_ch, _, _) = im2col_channel(&input, h, w, c, 1, k, 1);
+        let mut chbuf = vec![i32::MIN; oh * ow * k * k];
+        im2col_channel_into(&mut chbuf, &input, h, w, c, 1, k, 1);
+        assert_eq!(chbuf, want_ch);
     }
 
     #[test]

@@ -5,12 +5,14 @@
 //!   executor and the AOT model.
 //! * [`plan`] — the per-layer cycle/resource plan the timing engine and
 //!   the ISA generator consume.
-//! * [`exec`] — functional executor: runs a whole conv layer through the
-//!   bit-true [`crate::arch::pim_macro::PimMacro`] and recovers outputs
-//!   via the ARU; verified against the direct-conv oracle.
+//! * [`exec`] — functional executor: plans a conv layer onto the
+//!   bit-true [`crate::arch::pim_macro::PimMacro`] (weights written
+//!   once) and executes inputs through the resident weights, recovering
+//!   outputs via the ARU; verified against the direct-conv oracle.
 
 pub mod exec;
 pub mod im2col;
 pub mod plan;
 
+pub use exec::{ExecCtx, PlannedConv, PlannedDwConv};
 pub use plan::{plan_layer, plan_network, LayerPlan, PlanKind};

@@ -1,11 +1,22 @@
-//! The [`Backend`] trait: one interface for every way this system can
-//! execute a network, plus the factory that selects an implementation.
+//! The [`Backend`]/[`Session`] pair: one interface for every way this
+//! system can execute a network, plus the factory that selects an
+//! implementation.
 //!
-//! The contract is deliberately small — a batched float classifier for
-//! the serving path and the two integer L1 kernels for golden replay —
-//! so a backend can be a pure-Rust interpreter, a PJRT executable, or
-//! anything future PRs add (sharded, remote, ...), without the
-//! coordinator knowing the difference.
+//! The execution surface is a **prepare → execute** lifecycle: a
+//! [`Backend`] holds the model definition (weights, artifacts) and
+//! [`Backend::prepare`] builds a [`Session`] in which those weights are
+//! *resident* — the reference backend plans its layer stack onto
+//! preallocated buffers (and, behind [`FabricChoice::BitSliced`], onto
+//! the bit-sliced PIM fabric with SRAM weights written exactly once);
+//! the PJRT backend loads/compiles its executables.  Steady-state
+//! serving calls [`Session::infer_batch_into`] with caller-owned
+//! output and performs no per-batch heap allocation.
+//!
+//! The one-shot [`Backend::infer_batch`] remains as a thin wrapper
+//! (prepare + single execute), so existing callers keep working.  The
+//! two integer L1 kernels stay on [`Backend`] for golden replay.
+
+use std::str::FromStr;
 
 use anyhow::Result;
 
@@ -14,6 +25,29 @@ pub const IMG_ELEMS: usize = 32 * 32 * 3;
 
 /// Number of classifier outputs.
 pub const NUM_CLASSES: usize = 10;
+
+/// A prepared execution session: weights resident, buffers owned.
+///
+/// Sessions are stateful scratch holders, not model owners — dropping a
+/// session never invalidates the backend, and a backend can prepare any
+/// number of sessions (e.g. one per worker thread).  Repeated
+/// [`Session::infer_batch_into`] calls are deterministic and
+/// byte-identical to the one-shot [`Backend::infer_batch`] path.
+pub trait Session {
+    /// Stable implementation name ("reference", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// Classify a batch of CIFAR images into a caller-owned buffer:
+    /// `x.len() == batch * IMG_ELEMS`,
+    /// `out.len() == batch * NUM_CLASSES`.
+    ///
+    /// Implementations reuse internal buffers across calls; the
+    /// reference session guarantees zero heap allocation after the
+    /// first call at a given batch size (asserted by
+    /// `tests/alloc_steady_state.rs`).  The PJRT session reuses its
+    /// staging buffer but its runtime allocates result literals.
+    fn infer_batch_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()>;
+}
 
 /// An inference executor.
 ///
@@ -33,9 +67,21 @@ pub trait Backend {
         false
     }
 
+    /// Build a [`Session`] with this backend's weights resident: the
+    /// load-once half of the load-once/execute-many split.
+    fn prepare(&self) -> Result<Box<dyn Session>>;
+
     /// Classify a batch of CIFAR images: `x.len() == batch * IMG_ELEMS`,
     /// returns `batch * NUM_CLASSES` logits.
-    fn infer_batch(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>>;
+    ///
+    /// One-shot convenience: prepares a fresh session and executes it
+    /// once.  Serving paths should hold a [`Session`] instead.
+    fn infer_batch(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let mut session = self.prepare()?;
+        let mut out = vec![0f32; batch * NUM_CLASSES];
+        session.infer_batch_into(x, batch, &mut out)?;
+        Ok(out)
+    }
 
     /// FCC matrix-vector kernel with ARU recovery (paper Eq. 7, the
     /// `fcc_mvm_ref` oracle): `x [b, l]`, `w_even [l, half]`, `m [half]`
@@ -74,49 +120,113 @@ pub enum BackendKind {
     Pjrt,
 }
 
-impl BackendKind {
-    /// Parse a CLI flag value.
-    pub fn parse(s: &str) -> Option<BackendKind> {
+impl FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<BackendKind, String> {
         match s {
-            "auto" => Some(BackendKind::Auto),
-            "reference" | "ref" => Some(BackendKind::Reference),
-            "pjrt" => Some(BackendKind::Pjrt),
-            _ => None,
+            "auto" => Ok(BackendKind::Auto),
+            "reference" | "ref" => Ok(BackendKind::Reference),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            _ => Err(format!("unknown backend {s:?}; have: auto, reference, pjrt")),
         }
     }
 }
 
-/// Construct a backend.  `artifact_dir` is only consulted by the PJRT
-/// path; the reference backend is hermetic.
-pub fn create_backend(kind: BackendKind, artifact_dir: &str) -> Result<Box<dyn Backend>> {
-    match kind {
-        BackendKind::Reference => Ok(Box::new(super::reference::ReferenceBackend::seeded(
-            super::reference::DEFAULT_SEED,
-        ))),
-        BackendKind::Pjrt => create_pjrt(artifact_dir),
-        BackendKind::Auto => {
-            #[cfg(feature = "pjrt")]
-            {
-                let has_artifacts = std::path::Path::new(artifact_dir)
-                    .join("model_b1.hlo.txt")
-                    .exists();
-                if has_artifacts {
-                    match create_pjrt(artifact_dir) {
-                        Ok(b) => return Ok(b),
-                        // artifacts exist but PJRT won't come up: fall
-                        // back, but say why — a silent fallback would
-                        // serve seeded random weights in place of the
-                        // trained model with no explanation.
-                        Err(e) => eprintln!(
-                            "warning: artifacts present in {artifact_dir} but PJRT backend \
-                             failed ({e:#}); falling back to the reference backend"
-                        ),
-                    }
-                }
-            }
-            create_backend(BackendKind::Reference, artifact_dir)
+impl BackendKind {
+    /// Parse a CLI flag value (shim over the [`FromStr`] impl).
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        s.parse().ok()
+    }
+}
+
+/// Which conv-layer execution fabric the reference backend plans onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FabricChoice {
+    /// The dense `fcc_mvm` reference kernel (default: bit-true against
+    /// the python oracles and the checked-in goldens).
+    #[default]
+    DenseReference,
+    /// The bit-sliced functional PIM fabric
+    /// ([`crate::mapping::PlannedConv`]): the serving path runs through
+    /// the word-parallel bit-plane macro model with SRAM weights
+    /// written once per session.
+    BitSliced,
+}
+
+impl FromStr for FabricChoice {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<FabricChoice, String> {
+        match s {
+            "dense" | "reference" => Ok(FabricChoice::DenseReference),
+            "bitsliced" | "fabric" => Ok(FabricChoice::BitSliced),
+            _ => Err(format!("unknown fabric {s:?}; have: dense, bitsliced")),
         }
     }
+}
+
+/// Full backend selection: kind plus the knobs individual backends
+/// consult (`fabric` applies to the reference backend only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BackendSpec {
+    pub kind: BackendKind,
+    pub fabric: FabricChoice,
+}
+
+impl BackendSpec {
+    pub fn new(kind: BackendKind) -> BackendSpec {
+        BackendSpec {
+            kind,
+            ..Default::default()
+        }
+    }
+
+    /// Construct the backend this spec describes.  `artifact_dir` is
+    /// only consulted by the PJRT path; the reference backend is
+    /// hermetic.
+    pub fn create(&self, artifact_dir: &str) -> Result<Box<dyn Backend>> {
+        match self.kind {
+            BackendKind::Reference => Ok(Box::new(
+                super::reference::ReferenceBackend::seeded_with(
+                    super::reference::DEFAULT_SEED,
+                    self.fabric,
+                ),
+            )),
+            BackendKind::Pjrt => create_pjrt(artifact_dir),
+            BackendKind::Auto => {
+                #[cfg(feature = "pjrt")]
+                {
+                    let has_artifacts = std::path::Path::new(artifact_dir)
+                        .join("model_b1.hlo.txt")
+                        .exists();
+                    if has_artifacts {
+                        match create_pjrt(artifact_dir) {
+                            Ok(b) => return Ok(b),
+                            // artifacts exist but PJRT won't come up: fall
+                            // back, but say why — a silent fallback would
+                            // serve seeded random weights in place of the
+                            // trained model with no explanation.
+                            Err(e) => eprintln!(
+                                "warning: artifacts present in {artifact_dir} but PJRT backend \
+                                 failed ({e:#}); falling back to the reference backend"
+                            ),
+                        }
+                    }
+                }
+                BackendSpec {
+                    kind: BackendKind::Reference,
+                    ..*self
+                }
+                .create(artifact_dir)
+            }
+        }
+    }
+}
+
+/// Construct a backend with default knobs (see [`BackendSpec`]).
+pub fn create_backend(kind: BackendKind, artifact_dir: &str) -> Result<Box<dyn Backend>> {
+    BackendSpec::new(kind).create(artifact_dir)
 }
 
 /// Verify a backend's integer kernels against the L1 oracle semantics
@@ -179,6 +289,17 @@ mod tests {
         assert_eq!(BackendKind::parse("ref"), Some(BackendKind::Reference));
         assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
         assert_eq!(BackendKind::parse("tpu"), None);
+        // the FromStr impl is the source of truth; the shim delegates
+        assert_eq!("pjrt".parse(), Ok(BackendKind::Pjrt));
+        assert!("tpu".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn parse_fabrics() {
+        assert_eq!("dense".parse(), Ok(FabricChoice::DenseReference));
+        assert_eq!("bitsliced".parse(), Ok(FabricChoice::BitSliced));
+        assert_eq!("fabric".parse(), Ok(FabricChoice::BitSliced));
+        assert!("analog".parse::<FabricChoice>().is_err());
     }
 
     #[test]
@@ -191,6 +312,18 @@ mod tests {
     fn reference_always_constructs() {
         let mut b = create_backend(BackendKind::Reference, "/nonexistent").expect("backend");
         let img = vec![0.0f32; IMG_ELEMS];
+        let out = b.infer_batch(&img, 1).expect("infer");
+        assert_eq!(out.len(), NUM_CLASSES);
+    }
+
+    #[test]
+    fn spec_selects_the_bitsliced_fabric() {
+        let spec = BackendSpec {
+            kind: BackendKind::Reference,
+            fabric: FabricChoice::BitSliced,
+        };
+        let mut b = spec.create("/nonexistent").expect("backend");
+        let img = vec![0.25f32; IMG_ELEMS];
         let out = b.infer_batch(&img, 1).expect("infer");
         assert_eq!(out.len(), NUM_CLASSES);
     }

@@ -18,10 +18,21 @@
 //!   both backends (golden replay works on either: the kernels carry
 //!   their shapes).
 //!
+//! Execution follows a **prepare → execute** lifecycle
+//! (DESIGN.md §Plan/execute lifecycle): [`Backend::prepare`] builds a
+//! [`Session`] with the weights resident (the reference backend plans
+//! its layer stack once; PJRT loads its executables), and
+//! [`Session::infer_batch_into`] executes batches into caller-owned
+//! buffers with zero steady-state allocation.  The one-shot
+//! [`Backend::infer_batch`] remains as a prepare-plus-single-execute
+//! wrapper.
+//!
 //! [`create_backend`] picks the implementation: `Auto` prefers PJRT when
 //! the feature is on and artifacts exist, and falls back to the
 //! reference backend otherwise, so every caller (service, CLI,
-//! examples, tests) works on a clean checkout.
+//! examples, tests) works on a clean checkout.  [`BackendSpec`] carries
+//! the extra knobs (e.g. [`FabricChoice`]: whether the reference
+//! backend's convs run on the dense kernel or the bit-sliced fabric).
 
 pub mod artifacts;
 pub mod backend;
@@ -31,9 +42,10 @@ pub mod reference;
 pub mod pjrt;
 
 pub use backend::{
-    create_backend, verify_kernel_oracles, Backend, BackendKind, IMG_ELEMS, NUM_CLASSES,
+    create_backend, verify_kernel_oracles, Backend, BackendKind, BackendSpec, FabricChoice,
+    Session, IMG_ELEMS, NUM_CLASSES,
 };
-pub use reference::ReferenceBackend;
+pub use reference::{ReferenceBackend, ReferenceSession};
 
 #[cfg(feature = "pjrt")]
-pub use pjrt::{Executable, PjrtBackend, Runtime};
+pub use pjrt::{Executable, PjrtBackend, PjrtSession, Runtime};

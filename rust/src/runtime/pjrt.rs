@@ -16,7 +16,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use super::artifacts;
-use super::backend::{Backend, IMG_ELEMS, NUM_CLASSES};
+use super::backend::{Backend, Session, IMG_ELEMS, NUM_CLASSES};
 
 /// Batch size of the wide model artifact (`model_b8`).
 const WIDE_BATCH: usize = 8;
@@ -185,35 +185,105 @@ impl PjrtBackend {
     }
 }
 
+/// Execute a batch over the fixed (b1, b8) executable set: pad each
+/// [`chunk_plan`] step into `staging`, run it, copy the real rows into
+/// `out` — the single implementation behind both the session and the
+/// one-shot backend path.
+fn run_chunked(
+    rt: &mut Runtime,
+    weights: &artifacts::ModelWeights,
+    x: &[f32],
+    batch: usize,
+    staging: &mut Vec<f32>,
+    out: &mut [f32],
+) -> Result<()> {
+    anyhow::ensure!(
+        x.len() == batch * IMG_ELEMS,
+        "bad input length {} (want {})",
+        x.len(),
+        batch * IMG_ELEMS
+    );
+    anyhow::ensure!(
+        out.len() == batch * NUM_CLASSES,
+        "bad output length {} (want {})",
+        out.len(),
+        batch * NUM_CLASSES
+    );
+    // only b1/b8 artifacts exist: single-image chunks ride the narrow
+    // executable, everything else is zero-padded to the wide one and
+    // truncated on the way out.
+    for step in chunk_plan(batch) {
+        staging.clear();
+        staging.resize(step.padded * IMG_ELEMS, 0.0);
+        staging[..step.chunk * IMG_ELEMS].copy_from_slice(
+            &x[step.start * IMG_ELEMS..(step.start + step.chunk) * IMG_ELEMS],
+        );
+        let logits = rt.run_model(
+            step.artifact,
+            staging,
+            &[step.padded as i64, 32, 32, 3],
+            weights,
+        )?;
+        out[step.start * NUM_CLASSES..(step.start + step.chunk) * NUM_CLASSES]
+            .copy_from_slice(&logits[..step.chunk * NUM_CLASSES]);
+    }
+    Ok(())
+}
+
+/// A prepared PJRT session: its own runtime with the model executables
+/// loaded/compiled up front, plus a reusable padded staging buffer —
+/// the executable-loading half of the prepare/execute split.
+pub struct PjrtSession {
+    rt: Runtime,
+    weights: artifacts::ModelWeights,
+    staging: Vec<f32>,
+}
+
+impl Session for PjrtSession {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn infer_batch_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        run_chunked(
+            &mut self.rt,
+            &self.weights,
+            x,
+            batch,
+            &mut self.staging,
+            out,
+        )
+    }
+}
+
 impl Backend for PjrtBackend {
     fn name(&self) -> &'static str {
         "pjrt"
     }
 
-    fn infer_batch(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
-        anyhow::ensure!(
-            x.len() == batch * IMG_ELEMS,
-            "bad input length {} (want {})",
-            x.len(),
-            batch * IMG_ELEMS
-        );
-        // only b1/b8 artifacts exist: single-image chunks ride the
-        // narrow executable, everything else is zero-padded to the wide
-        // one and truncated on the way out.
-        let mut out = Vec::with_capacity(batch * NUM_CLASSES);
-        for step in chunk_plan(batch) {
-            let mut input = vec![0f32; step.padded * IMG_ELEMS];
-            input[..step.chunk * IMG_ELEMS].copy_from_slice(
-                &x[step.start * IMG_ELEMS..(step.start + step.chunk) * IMG_ELEMS],
-            );
-            let logits = self.rt.run_model(
-                step.artifact,
-                &input,
-                &[step.padded as i64, 32, 32, 3],
-                &self.weights,
-            )?;
-            out.extend_from_slice(&logits[..step.chunk * NUM_CLASSES]);
+    fn prepare(&self) -> Result<Box<dyn Session>> {
+        // a session owns its own runtime (PJRT handles are not shared
+        // across owners); compile the model executables now so the
+        // execute path never compiles lazily
+        let mut rt = Runtime::cpu(self.rt.artifact_dir())?;
+        for name in ["model_b1", "model_b8"] {
+            if rt.has_artifact(name) {
+                rt.load(name)?;
+            }
         }
+        Ok(Box::new(PjrtSession {
+            rt,
+            weights: self.weights.clone(),
+            staging: Vec::new(),
+        }))
+    }
+
+    fn infer_batch(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        // one-shot override: reuse this backend's compile cache instead
+        // of preparing (and recompiling in) a fresh session per call
+        let mut out = vec![0f32; batch * NUM_CLASSES];
+        let mut staging = Vec::new();
+        run_chunked(&mut self.rt, &self.weights, x, batch, &mut staging, &mut out)?;
         Ok(out)
     }
 

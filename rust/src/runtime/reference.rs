@@ -18,14 +18,27 @@
 //! forward pass exercises symmetrize → complementize → decompose →
 //! Eq. 7 recovery end to end — hermetically, on any host.  This is the
 //! backend CI runs; PJRT is the opt-in artifact path.
+//!
+//! # Sessions
+//!
+//! [`ReferenceBackend::prepare`] plans the layer stack once into a
+//! [`ReferenceSession`]: per-layer execution forms are chosen up front
+//! ([`FabricChoice::DenseReference`] keeps the `fcc_mvm` kernel;
+//! [`FabricChoice::BitSliced`] plans each conv onto the functional PIM
+//! fabric via [`PlannedConv`], writing SRAM weights exactly once), and
+//! every buffer the forward pass touches is owned by the session.
+//! [`Session::infer_batch_into`] then executes whole batches with the
+//! batch folded into the MVM row dimension and — after the first call
+//! at a given batch size — zero heap allocation.
 
 use anyhow::{ensure, Result};
 
-use crate::fcc::{fcc_transform, FilterBank};
-use crate::mapping::im2col::im2col;
+use crate::fcc::{fcc_transform, FccWeights, FilterBank};
+use crate::mapping::exec::{ExecCtx, PlannedConv};
+use crate::mapping::im2col::{im2col_into, out_dims};
 use crate::util::rng::Rng;
 
-use super::backend::{Backend, IMG_ELEMS, NUM_CLASSES};
+use super::backend::{Backend, FabricChoice, Session, IMG_ELEMS, NUM_CLASSES};
 
 /// Default weight seed (recorded so runs are replayable).
 pub const DEFAULT_SEED: u64 = 0xDDC0;
@@ -36,20 +49,20 @@ const INPUT_SCALE: f32 = 32.0;
 /// Logit de-quantization scale (arbitrary but fixed).
 const LOGIT_SCALE: f32 = 1.0 / 64.0;
 
-/// Dense signed-INT8 MVM: `x [b, l]` × `w [l, n]` → `[b, n]`, wrapping
-/// int32 accumulation (bit-exact vs the jax int32 oracle).
+/// Dense signed-INT8 MVM into a caller-owned `[b, n]` buffer: the
+/// zero-allocation twin of [`mvm_i32`], wrapping int32 accumulation
+/// (bit-exact vs the jax int32 oracle).
 ///
 /// Register-blocked 4-column kernel: each output chunk keeps its four
 /// accumulators live across the whole `l` reduction (one store per
 /// output instead of one read-modify-write per `(l, n)` step), with
 /// zero activations skipped — the dense analogue of the fabric's
 /// zero-bit-plane skip.  Wrapping i32 adds commute, so the result is
-/// bit-identical to the naive loop for every input.  Used by both the
-/// dense (`pim_mac`) and FCC (`fcc_mvm_i32`) backend paths.
-pub fn mvm_i32(x: &[i32], w: &[i32], b: usize, l: usize, n: usize) -> Vec<i32> {
+/// bit-identical to the naive loop for every input.
+pub fn mvm_i32_into(out: &mut [i32], x: &[i32], w: &[i32], b: usize, l: usize, n: usize) {
     assert_eq!(x.len(), b * l, "x shape mismatch");
     assert_eq!(w.len(), l * n, "w shape mismatch");
-    let mut out = vec![0i32; b * n];
+    assert_eq!(out.len(), b * n, "out shape mismatch");
     for bi in 0..b {
         let xrow = &x[bi * l..(bi + 1) * l];
         let orow = &mut out[bi * n..(bi + 1) * n];
@@ -85,23 +98,32 @@ pub fn mvm_i32(x: &[i32], w: &[i32], b: usize, l: usize, n: usize) -> Vec<i32> {
             *o = acc;
         }
     }
+}
+
+/// Dense signed-INT8 MVM: `x [b, l]` × `w [l, n]` → `[b, n]`.
+/// Allocating wrapper over [`mvm_i32_into`].
+pub fn mvm_i32(x: &[i32], w: &[i32], b: usize, l: usize, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; b * n];
+    mvm_i32_into(&mut out, x, w, b, l, n);
     out
 }
 
-/// FCC MVM with ARU recovery (paper Eq. 7 / `fcc_mvm_ref`):
-/// `x [b, l]` × `w_even [l, half]` with means `m [half]` →
-/// `[b, 2*half]`, channels interleaved `(even, odd, ...)`.
-pub fn fcc_mvm_i32(
+/// FCC MVM with ARU recovery into caller-owned buffers: `out` is the
+/// `[b, 2*half]` interleaved result, `psum` the `[b, half]` stored-path
+/// partial sums (scratch the caller keeps to avoid allocation).
+pub fn fcc_mvm_into(
+    out: &mut [i32],
+    psum: &mut [i32],
     x: &[i32],
     w_even: &[i32],
     m: &[i32],
     b: usize,
     l: usize,
     half: usize,
-) -> Vec<i32> {
+) {
     assert_eq!(m.len(), half, "m shape mismatch");
-    let psum = mvm_i32(x, w_even, b, l, half);
-    let mut out = vec![0i32; b * 2 * half];
+    assert_eq!(out.len(), b * 2 * half, "out shape mismatch");
+    mvm_i32_into(psum, x, w_even, b, l, half);
     for bi in 0..b {
         let si: i32 = x[bi * l..(bi + 1) * l]
             .iter()
@@ -114,22 +136,38 @@ pub fn fcc_mvm_i32(
             out[bi * 2 * half + 2 * p + 1] = odd;
         }
     }
+}
+
+/// FCC MVM with ARU recovery (paper Eq. 7 / `fcc_mvm_ref`):
+/// `x [b, l]` × `w_even [l, half]` with means `m [half]` →
+/// `[b, 2*half]`, channels interleaved `(even, odd, ...)`.  Allocating
+/// wrapper over [`fcc_mvm_into`].
+pub fn fcc_mvm_i32(
+    x: &[i32],
+    w_even: &[i32],
+    m: &[i32],
+    b: usize,
+    l: usize,
+    half: usize,
+) -> Vec<i32> {
+    let mut out = vec![0i32; b * 2 * half];
+    let mut psum = vec![0i32; b * half];
+    fcc_mvm_into(&mut out, &mut psum, x, w_even, m, b, l, half);
     out
 }
 
-/// One layer of the reference network.
+/// One layer of the reference network (model definition — execution
+/// forms are planned per session).
 enum RefLayer {
-    /// FCC conv: only the even comp filters are stored (column-major
-    /// `[L, cout/2]`); the forward pass runs [`fcc_mvm_i32`] per pixel
-    /// window, so the model path executes the *same* Eq. 7 kernel the
-    /// goldens pin down.  ReLU after requantization.
+    /// FCC conv: deployable [`FccWeights`] (only the even comp filters
+    /// are ever resident at execution time).  ReLU after
+    /// requantization.
     ConvFcc {
         k: usize,
         cin: usize,
         cout: usize,
         stride: usize,
-        w_even_cols: Vec<i32>,
-        means: Vec<i32>,
+        fcc: FccWeights,
         /// Requantization right-shift back to the INT8 activation grid.
         shift: u32,
     },
@@ -141,10 +179,11 @@ enum RefLayer {
     Fc { cin: usize, cout: usize, w: Vec<i32> },
 }
 
-/// Pure-Rust backend executing the seeded quantized network.
+/// Pure-Rust backend holding the seeded quantized network definition.
 pub struct ReferenceBackend {
     layers: Vec<RefLayer>,
     seed: u64,
+    fabric: FabricChoice,
 }
 
 impl ReferenceBackend {
@@ -153,6 +192,11 @@ impl ReferenceBackend {
     /// fc(32→10).  Both conv layers have an even filter count, so the
     /// whole conv stack runs in double-computing mode.
     pub fn seeded(seed: u64) -> ReferenceBackend {
+        Self::seeded_with(seed, FabricChoice::default())
+    }
+
+    /// Like [`ReferenceBackend::seeded`], with an explicit conv fabric.
+    pub fn seeded_with(seed: u64, fabric: FabricChoice) -> ReferenceBackend {
         let mut rng = Rng::new(seed);
         let conv = |rng: &mut Rng, k: usize, cin: usize, cout: usize, shift: u32| {
             let l = k * k * cin;
@@ -161,14 +205,12 @@ impl ReferenceBackend {
                 cout,
                 l,
             );
-            let fcc = fcc_transform(&bank);
             RefLayer::ConvFcc {
                 k,
                 cin,
                 cout,
                 stride: 1,
-                w_even_cols: fcc.stored_even_cols(),
-                means: fcc.means,
+                fcc: fcc_transform(&bank),
                 shift,
             }
         };
@@ -182,6 +224,7 @@ impl ReferenceBackend {
         ReferenceBackend {
             layers: vec![c1, RefLayer::Pool2, c2, RefLayer::Pool2, RefLayer::Gap, fc],
             seed,
+            fabric,
         }
     }
 
@@ -189,14 +232,199 @@ impl ReferenceBackend {
         self.seed
     }
 
-    /// Forward one quantized image (`[32, 32, 3]` HWC INT8 codes) to
-    /// integer logit accumulators.
-    fn forward_image(&self, img: &[i32]) -> Vec<i64> {
-        let (mut data, mut h, mut w, mut c) = (img.to_vec(), 32usize, 32usize, 3usize);
-        let mut logits = Vec::new();
-        for layer in &self.layers {
+    pub fn fabric(&self) -> FabricChoice {
+        self.fabric
+    }
+
+    /// Plan the layer stack into a concrete [`ReferenceSession`]
+    /// without boxing (test/bench convenience; [`Backend::prepare`]
+    /// wraps this).
+    pub fn plan(&self) -> Result<ReferenceSession> {
+        ReferenceSession::plan(&self.layers, self.fabric)
+    }
+}
+
+/// One planned layer: the execution form chosen at prepare time.
+enum SessionLayer {
+    /// FCC conv on the dense reference kernel (`fcc_mvm`), batch folded
+    /// into the MVM row dimension.
+    ConvDense {
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        /// Stored even comp filters, column-major `[L, cout/2]`.
+        w_even_cols: Vec<i32>,
+        means: Vec<i32>,
+        shift: u32,
+    },
+    /// FCC conv on the bit-sliced functional fabric: weights resident
+    /// in the planned macro(s), written once at prepare time.
+    ConvFabric { plan: PlannedConv, shift: u32 },
+    Pool2,
+    Gap,
+    Fc { cin: usize, cout: usize, w: Vec<i32> },
+}
+
+/// A prepared reference session: planned layer stack + every buffer the
+/// forward pass touches.  See the module docs for the allocation
+/// contract.
+pub struct ReferenceSession {
+    layers: Vec<SessionLayer>,
+    /// Current activations, `[batch, H, W, C]` flattened.
+    act: Vec<i32>,
+    /// Next-layer activations (ping-pong partner of `act`).
+    act_next: Vec<i32>,
+    /// im2col staging, `[batch * P, L]`.
+    cols: Vec<i32>,
+    /// Dense conv raw accumulators, `[batch * P, cout]`.
+    raw: Vec<i32>,
+    /// Dense FCC stored-path partial sums, `[batch * P, cout/2]`.
+    psum: Vec<i32>,
+    /// Fabric conv raw accumulators for one image, `[P, cout]`.
+    out64: Vec<i64>,
+    /// Fabric executor scratch.
+    ctx: ExecCtx,
+}
+
+impl ReferenceSession {
+    fn plan(layers: &[RefLayer], fabric: FabricChoice) -> Result<ReferenceSession> {
+        let mut planned = Vec::with_capacity(layers.len());
+        // walk the activation dims so fabric plans know their geometry
+        let (mut h, mut w, mut c) = (32usize, 32usize, 3usize);
+        let mut head_cout = None;
+        for layer in layers {
             match layer {
                 RefLayer::ConvFcc {
+                    k,
+                    cin,
+                    cout,
+                    stride,
+                    fcc,
+                    shift,
+                } => {
+                    ensure!(c == *cin, "layer stack dim mismatch: {} != {}", c, cin);
+                    planned.push(match fabric {
+                        FabricChoice::DenseReference => SessionLayer::ConvDense {
+                            k: *k,
+                            cin: *cin,
+                            cout: *cout,
+                            stride: *stride,
+                            w_even_cols: fcc.stored_even_cols(),
+                            means: fcc.means.clone(),
+                            shift: *shift,
+                        },
+                        FabricChoice::BitSliced => SessionLayer::ConvFabric {
+                            plan: PlannedConv::std_fcc(h, w, *cin, fcc, *k, *stride),
+                            shift: *shift,
+                        },
+                    });
+                    let (oh, ow) = out_dims(h, w, *stride);
+                    h = oh;
+                    w = ow;
+                    c = *cout;
+                }
+                RefLayer::Pool2 => {
+                    planned.push(SessionLayer::Pool2);
+                    h /= 2;
+                    w /= 2;
+                }
+                RefLayer::Gap => {
+                    planned.push(SessionLayer::Gap);
+                    h = 1;
+                    w = 1;
+                }
+                RefLayer::Fc { cin, cout, w: fw } => {
+                    ensure!(c == *cin, "fc input dim mismatch: {} != {}", c, cin);
+                    ensure!(
+                        *cout == NUM_CLASSES,
+                        "classifier head must emit {NUM_CLASSES} classes, got {cout}"
+                    );
+                    head_cout = Some(*cout);
+                    planned.push(SessionLayer::Fc {
+                        cin: *cin,
+                        cout: *cout,
+                        w: fw.clone(),
+                    });
+                }
+            }
+        }
+        ensure!(head_cout.is_some(), "classifier head missing");
+        Ok(ReferenceSession {
+            layers: planned,
+            act: Vec::new(),
+            act_next: Vec::new(),
+            cols: Vec::new(),
+            raw: Vec::new(),
+            psum: Vec::new(),
+            out64: Vec::new(),
+            ctx: ExecCtx::new(),
+        })
+    }
+
+    /// Sum of SRAM weight writes across all fabric-planned layers
+    /// (0 on the dense path) — constant for the session's lifetime.
+    pub fn fabric_weight_writes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                SessionLayer::ConvFabric { plan, .. } => plan.weight_writes(),
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Requantize an accumulator back to the INT8 activation grid and ReLU.
+fn requant_relu(v: i64, shift: u32) -> i32 {
+    ((v >> shift).clamp(-128, 127) as i32).max(0)
+}
+
+impl Session for ReferenceSession {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn infer_batch_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        ensure!(
+            x.len() == batch * IMG_ELEMS,
+            "bad input length {} (want {} = {batch} x {IMG_ELEMS})",
+            x.len(),
+            batch * IMG_ELEMS
+        );
+        ensure!(
+            out.len() == batch * NUM_CLASSES,
+            "bad output length {} (want {} = {batch} x {NUM_CLASSES})",
+            out.len(),
+            batch * NUM_CLASSES
+        );
+        if batch == 0 {
+            return Ok(());
+        }
+        // split the borrow so layer refs and buffers coexist
+        let Self {
+            layers,
+            act,
+            act_next,
+            cols,
+            raw,
+            psum,
+            out64,
+            ctx,
+        } = self;
+        // quantize the whole batch onto the INT8 activation grid.
+        // Throughout this pass, staging buffers are resize()d without
+        // clear(): each consumer overwrites every element, so the extra
+        // memset a clear+resize pair implies would be pure waste (only
+        // buffers that accumulate — none here — need zeroing).
+        act.resize(batch * IMG_ELEMS, 0);
+        for (dst, &v) in act.iter_mut().zip(x) {
+            *dst = ((v * INPUT_SCALE).round() as i32).clamp(-128, 127);
+        }
+        let (mut h, mut w, mut c) = (32usize, 32usize, 3usize);
+        for layer in layers.iter() {
+            match layer {
+                SessionLayer::ConvDense {
                     k,
                     cin,
                     cout,
@@ -207,72 +435,114 @@ impl ReferenceBackend {
                 } => {
                     debug_assert_eq!(c, *cin);
                     let l = k * k * cin;
-                    let (cols, oh, ow) = im2col(&data, h, w, c, *k, *stride);
-                    // every pixel window is one row of the FCC MVM
-                    // kernel — the exact oracle the goldens replay
-                    // (interleaved even/odd channel order)
-                    let raw = fcc_mvm_i32(&cols, w_even_cols, means, oh * ow, l, cout / 2);
-                    data = raw
-                        .iter()
-                        .map(|&v| requant_relu(v as i64, *shift))
-                        .collect();
+                    let (oh, ow) = out_dims(h, w, *stride);
+                    let pixels = oh * ow;
+                    // every pixel window of every image is one row of
+                    // the FCC MVM kernel — the exact oracle the goldens
+                    // replay, with the batch folded into the row dim
+                    cols.resize(batch * pixels * l, 0);
+                    for bi in 0..batch {
+                        im2col_into(
+                            &mut cols[bi * pixels * l..(bi + 1) * pixels * l],
+                            &act[bi * h * w * c..(bi + 1) * h * w * c],
+                            h,
+                            w,
+                            c,
+                            *k,
+                            *stride,
+                        );
+                    }
+                    let half = cout / 2;
+                    let rows = batch * pixels;
+                    raw.resize(rows * cout, 0);
+                    psum.resize(rows * half, 0);
+                    fcc_mvm_into(raw, psum, cols.as_slice(), w_even_cols, means, rows, l, half);
+                    act_next.resize(rows * cout, 0);
+                    for (dst, &v) in act_next.iter_mut().zip(raw.iter()) {
+                        *dst = requant_relu(v as i64, *shift);
+                    }
+                    std::mem::swap(act, act_next);
                     h = oh;
                     w = ow;
                     c = *cout;
                 }
-                RefLayer::Pool2 => {
+                SessionLayer::ConvFabric { plan, shift } => {
+                    let (oh, ow) = plan.out_dims();
+                    let pixels = oh * ow;
+                    let cout = plan.out_channels();
+                    act_next.resize(batch * pixels * cout, 0);
+                    out64.resize(pixels * cout, 0); // execute fills it
+                    for bi in 0..batch {
+                        plan.execute(&act[bi * h * w * c..(bi + 1) * h * w * c], ctx, out64);
+                        for (dst, &v) in act_next[bi * pixels * cout..(bi + 1) * pixels * cout]
+                            .iter_mut()
+                            .zip(out64.iter())
+                        {
+                            *dst = requant_relu(v, *shift);
+                        }
+                    }
+                    std::mem::swap(act, act_next);
+                    h = oh;
+                    w = ow;
+                    c = cout;
+                }
+                SessionLayer::Pool2 => {
                     let (oh, ow) = (h / 2, w / 2);
-                    let mut out = vec![0i32; oh * ow * c];
-                    for oy in 0..oh {
-                        for ox in 0..ow {
-                            for ch in 0..c {
-                                let mut s = 0i32;
-                                for dy in 0..2 {
-                                    for dx in 0..2 {
-                                        s += data[((2 * oy + dy) * w + 2 * ox + dx) * c + ch];
+                    act_next.resize(batch * oh * ow * c, 0);
+                    for bi in 0..batch {
+                        let src = &act[bi * h * w * c..(bi + 1) * h * w * c];
+                        let dst = &mut act_next[bi * oh * ow * c..(bi + 1) * oh * ow * c];
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                for ch in 0..c {
+                                    let mut s = 0i32;
+                                    for dy in 0..2 {
+                                        for dx in 0..2 {
+                                            s += src[((2 * oy + dy) * w + 2 * ox + dx) * c + ch];
+                                        }
                                     }
+                                    dst[(oy * ow + ox) * c + ch] = s.div_euclid(4);
                                 }
-                                out[(oy * ow + ox) * c + ch] = s.div_euclid(4);
                             }
                         }
                     }
-                    data = out;
+                    std::mem::swap(act, act_next);
                     h = oh;
                     w = ow;
                 }
-                RefLayer::Gap => {
+                SessionLayer::Gap => {
                     let px = (h * w) as i64;
-                    let mut out = vec![0i32; c];
-                    for ch in 0..c {
-                        let mut s = 0i64;
-                        for p in 0..h * w {
-                            s += data[p * c + ch] as i64;
+                    act_next.resize(batch * c, 0);
+                    for bi in 0..batch {
+                        let src = &act[bi * h * w * c..(bi + 1) * h * w * c];
+                        for ch in 0..c {
+                            let mut s = 0i64;
+                            for p in 0..h * w {
+                                s += src[p * c + ch] as i64;
+                            }
+                            act_next[bi * c + ch] = (s / px) as i32;
                         }
-                        out[ch] = (s / px) as i32;
                     }
-                    data = out;
+                    std::mem::swap(act, act_next);
                     h = 1;
                     w = 1;
                 }
-                RefLayer::Fc { cin, cout, w: fw } => {
-                    debug_assert_eq!(data.len(), *cin);
-                    logits = (0..*cout)
-                        .map(|o| {
-                            (0..*cin)
-                                .map(|i| data[i] as i64 * fw[o * cin + i] as i64)
-                                .sum()
-                        })
-                        .collect();
+                SessionLayer::Fc { cin, cout, w: fw } => {
+                    debug_assert_eq!(c, *cin);
+                    for bi in 0..batch {
+                        let xrow = &act[bi * cin..(bi + 1) * cin];
+                        for o in 0..*cout {
+                            let logit: i64 = (0..*cin)
+                                .map(|i| xrow[i] as i64 * fw[o * cin + i] as i64)
+                                .sum();
+                            out[bi * NUM_CLASSES + o] = logit as f32 * LOGIT_SCALE;
+                        }
+                    }
                 }
             }
         }
-        logits
+        Ok(())
     }
-}
-
-/// Requantize an accumulator back to the INT8 activation grid and ReLU.
-fn requant_relu(v: i64, shift: u32) -> i32 {
-    ((v >> shift).clamp(-128, 127) as i32).max(0)
 }
 
 impl Backend for ReferenceBackend {
@@ -284,24 +554,8 @@ impl Backend for ReferenceBackend {
         true
     }
 
-    fn infer_batch(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
-        ensure!(
-            x.len() == batch * IMG_ELEMS,
-            "bad input length {} (want {} = {batch} x {IMG_ELEMS})",
-            x.len(),
-            batch * IMG_ELEMS
-        );
-        let mut out = Vec::with_capacity(batch * NUM_CLASSES);
-        for bi in 0..batch {
-            let img: Vec<i32> = x[bi * IMG_ELEMS..(bi + 1) * IMG_ELEMS]
-                .iter()
-                .map(|&v| ((v * INPUT_SCALE).round() as i32).clamp(-128, 127))
-                .collect();
-            let logits = self.forward_image(&img);
-            ensure!(logits.len() == NUM_CLASSES, "classifier head missing");
-            out.extend(logits.iter().map(|&a| a as f32 * LOGIT_SCALE));
-        }
-        Ok(out)
+    fn prepare(&self) -> Result<Box<dyn Session>> {
+        Ok(Box::new(self.plan()?))
     }
 
     fn fcc_mvm(
@@ -449,11 +703,34 @@ mod tests {
     }
 
     #[test]
+    fn session_rejects_bad_output_length() {
+        let be = ReferenceBackend::seeded(DEFAULT_SEED);
+        let mut s = be.plan().unwrap();
+        let img = vec![0.0f32; IMG_ELEMS];
+        let mut short = vec![0f32; NUM_CLASSES - 1];
+        assert!(s.infer_batch_into(&img, 1, &mut short).is_err());
+    }
+
+    #[test]
     fn logits_depend_on_input() {
         let mut be = ReferenceBackend::seeded(DEFAULT_SEED);
         let mut rng = Rng::new(13);
         let a: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect();
         let b: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect();
         assert_ne!(be.infer_batch(&a, 1).unwrap(), be.infer_batch(&b, 1).unwrap());
+    }
+
+    #[test]
+    fn fabric_session_resides_weights_once() {
+        let be = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced);
+        let session = be.plan().unwrap();
+        let written = session.fabric_weight_writes();
+        assert!(written > 0, "bitsliced plan must write conv weights");
+        let mut s = session;
+        let img = vec![0.5f32; IMG_ELEMS];
+        let mut out = vec![0f32; NUM_CLASSES];
+        s.infer_batch_into(&img, 1, &mut out).unwrap();
+        s.infer_batch_into(&img, 1, &mut out).unwrap();
+        assert_eq!(s.fabric_weight_writes(), written, "execute wrote weights");
     }
 }

@@ -1,0 +1,203 @@
+//! Integration: the plan/execute session lifecycle (PR 3 tentpole).
+//!
+//! Pins the two contracts the redesign introduced:
+//!
+//! * **No semantic drift** — a prepared [`Session`] is deterministic
+//!   across repeated `infer_batch_into` calls and byte-identical to the
+//!   one-shot `Backend::infer_batch` path; the planned executors
+//!   ([`PlannedConv`]/[`PlannedDwConv`]) reproduce the `exec_*`-era
+//!   outputs across Regular/Double × Combined/Split mappings (seeded,
+//!   vs the direct-conv oracles).
+//! * **Weight residency** — planning writes SRAM weights exactly once;
+//!   the `&self` execute path never writes again (asserted via the
+//!   weight-write counters).
+
+use ddc_pim::fcc::{fcc_transform, recompose, FilterBank};
+use ddc_pim::mapping::exec::{
+    exec_dw_fcc, exec_dw_regular, exec_std_fcc, exec_std_regular, ExecCtx, PlannedConv,
+    PlannedDwConv,
+};
+use ddc_pim::mapping::im2col::{direct_conv, direct_dwconv};
+use ddc_pim::runtime::{
+    reference::{ReferenceBackend, DEFAULT_SEED},
+    Backend, FabricChoice, Session, IMG_ELEMS, NUM_CLASSES,
+};
+use ddc_pim::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.int8() as i32).collect()
+}
+
+fn image(rng: &mut Rng) -> Vec<f32> {
+    (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn session_is_byte_identical_to_one_shot_path() {
+    let mut backend = ReferenceBackend::seeded(DEFAULT_SEED);
+    let mut rng = Rng::new(31);
+    let batch = 5;
+    let x: Vec<f32> = (0..batch).flat_map(|_| image(&mut rng)).collect();
+    let one_shot = backend.infer_batch(&x, batch).expect("one-shot");
+    let mut session = backend.prepare().expect("prepare");
+    let mut out = vec![0f32; batch * NUM_CLASSES];
+    session.infer_batch_into(&x, batch, &mut out).expect("session");
+    assert_eq!(out, one_shot, "session drifted from the one-shot path");
+}
+
+#[test]
+fn repeated_session_calls_are_deterministic() {
+    let backend = ReferenceBackend::seeded(DEFAULT_SEED);
+    let mut session = backend.prepare().expect("prepare");
+    let mut rng = Rng::new(32);
+    let a = image(&mut rng);
+    let b = image(&mut rng);
+    let mut la1 = vec![0f32; NUM_CLASSES];
+    let mut lb = vec![0f32; NUM_CLASSES];
+    let mut la2 = vec![0f32; NUM_CLASSES];
+    session.infer_batch_into(&a, 1, &mut la1).expect("a#1");
+    session.infer_batch_into(&b, 1, &mut lb).expect("b");
+    session.infer_batch_into(&a, 1, &mut la2).expect("a#2");
+    assert_eq!(la1, la2, "interleaved inputs leaked state between calls");
+    assert_ne!(la1, lb, "logits insensitive to input");
+}
+
+#[test]
+fn session_batch_equals_per_image_calls() {
+    // the real batch dimension must not change per-image results
+    let backend = ReferenceBackend::seeded(DEFAULT_SEED);
+    let mut session = backend.prepare().expect("prepare");
+    let mut rng = Rng::new(33);
+    let batch = 3;
+    let imgs: Vec<Vec<f32>> = (0..batch).map(|_| image(&mut rng)).collect();
+    let x: Vec<f32> = imgs.iter().flatten().copied().collect();
+    let mut batched = vec![0f32; batch * NUM_CLASSES];
+    session.infer_batch_into(&x, batch, &mut batched).expect("batched");
+    for (i, img) in imgs.iter().enumerate() {
+        let mut single = vec![0f32; NUM_CLASSES];
+        session.infer_batch_into(img, 1, &mut single).expect("single");
+        assert_eq!(
+            &batched[i * NUM_CLASSES..(i + 1) * NUM_CLASSES],
+            single.as_slice(),
+            "batch row {i} differs from its single-image run"
+        );
+    }
+}
+
+#[test]
+fn bitsliced_fabric_session_matches_dense_reference() {
+    // the serving path on the bit-sliced fabric must agree exactly with
+    // the dense fcc_mvm kernel (no i32 overflow at these layer sizes)
+    let dense = ReferenceBackend::seeded(DEFAULT_SEED);
+    let fabric = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced);
+    let mut ds = dense.prepare().expect("dense prepare");
+    let mut fs = fabric.prepare().expect("fabric prepare");
+    let mut rng = Rng::new(34);
+    let batch = 2;
+    let x: Vec<f32> = (0..batch).flat_map(|_| image(&mut rng)).collect();
+    let mut dout = vec![0f32; batch * NUM_CLASSES];
+    let mut fout = vec![0f32; batch * NUM_CLASSES];
+    ds.infer_batch_into(&x, batch, &mut dout).expect("dense");
+    fs.infer_batch_into(&x, batch, &mut fout).expect("fabric");
+    assert_eq!(dout, fout, "bit-sliced fabric drifted from the dense kernel");
+}
+
+#[test]
+fn fabric_session_writes_weights_once() {
+    let backend = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced);
+    let mut session = backend.plan().expect("plan");
+    let written = session.fabric_weight_writes();
+    assert!(written > 0, "bitsliced planning must write conv weights");
+    let mut rng = Rng::new(35);
+    let img = image(&mut rng);
+    let mut out = vec![0f32; NUM_CLASSES];
+    for _ in 0..3 {
+        session.infer_batch_into(&img, 1, &mut out).expect("infer");
+    }
+    assert_eq!(
+        session.fabric_weight_writes(),
+        written,
+        "execute path wrote SRAM weights"
+    );
+}
+
+/// Seeded pins of every planned mapping against its direct-conv
+/// oracle, with ONE shared ExecCtx across all plans and repeated
+/// executes — Regular/Double × Combined/Split coverage:
+///
+/// * std regular — Regular mode, Combined grouping
+/// * std FCC — Double mode, Combined grouping
+/// * dw FCC (DBIS) — Double mode, Combined grouping, per-pair rows
+/// * dw FCC (reconfig) — Double mode, Split grouping, two stages
+/// * dw regular — Regular mode, Combined grouping
+#[test]
+fn planned_executors_pin_exec_era_outputs() {
+    let mut rng = Rng::new(0x5E55_10);
+    let mut ctx = ExecCtx::new();
+    let (h, w) = (5, 4);
+
+    // std paths
+    let (c, k, n) = (3, 3, 8);
+    let input = rand_vec(&mut rng, h * w * c);
+    let l = k * k * c;
+    let bank = FilterBank::new(rand_vec(&mut rng, n * l), n, l);
+    let fcc = fcc_transform(&bank);
+
+    let plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+    let mut out = vec![0i64; plan.out_len()];
+    for round in 0..2 {
+        plan.execute(&input, &mut ctx, &mut out);
+        let oracle = direct_conv(&input, h, w, c, &recompose(&fcc).data, n, k, 1);
+        assert_eq!(out, oracle, "std_fcc drifted (round {round})");
+        assert_eq!(out, exec_std_fcc(&input, h, w, c, &fcc, k, 1));
+    }
+
+    let plan = PlannedConv::std_regular(h, w, c, &bank.data, n, k, 1);
+    let mut out = vec![0i64; plan.out_len()];
+    plan.execute(&input, &mut ctx, &mut out);
+    assert_eq!(out, direct_conv(&input, h, w, c, &bank.data, n, k, 1));
+    assert_eq!(out, exec_std_regular(&input, h, w, c, &bank.data, n, k, 1));
+
+    // dw paths (even channel count for the FCC pairs)
+    let c = 10;
+    let dw_input = rand_vec(&mut rng, h * w * c);
+    let dw_bank = FilterBank::new(rand_vec(&mut rng, c * k * k), c, k * k);
+    let dw_fcc = fcc_transform(&dw_bank);
+
+    for reconfig in [false, true] {
+        let plan = PlannedDwConv::fcc(h, w, c, &dw_fcc, k, 1, reconfig);
+        let mut out = vec![0i64; plan.out_len()];
+        plan.execute(&dw_input, &mut ctx, &mut out);
+        let oracle = direct_dwconv(&dw_input, h, w, c, &recompose(&dw_fcc).data, k, 1);
+        assert_eq!(out, oracle, "dw_fcc reconfig={reconfig} drifted");
+        assert_eq!(out, exec_dw_fcc(&dw_input, h, w, c, &dw_fcc, k, 1, reconfig));
+    }
+
+    let plan = PlannedDwConv::regular(h, w, c, &dw_bank.data, k, 1);
+    let mut out = vec![0i64; plan.out_len()];
+    plan.execute(&dw_input, &mut ctx, &mut out);
+    assert_eq!(out, direct_dwconv(&dw_input, h, w, c, &dw_bank.data, k, 1));
+    assert_eq!(out, exec_dw_regular(&dw_input, h, w, c, &dw_bank.data, k, 1));
+}
+
+#[test]
+fn planned_dw_residency_and_multipass() {
+    // enough channels to overflow one pass worth of rows (64) on the
+    // DBIS path: 160 channels = 80 pairs -> 2 passes of <= 64 rows
+    let mut rng = Rng::new(0x5E55_11);
+    let (h, w, c, k) = (2, 2, 160, 3);
+    let input = rand_vec(&mut rng, h * w * c);
+    let bank = FilterBank::new(rand_vec(&mut rng, c * k * k), c, k * k);
+    let fcc = fcc_transform(&bank);
+    let plan = PlannedDwConv::fcc(h, w, c, &fcc, k, 1, false);
+    assert!(plan.load_passes() >= 2, "80 pairs must not fit one 64-row pass");
+    let written = plan.weight_writes();
+    assert!(written > 0);
+    let mut ctx = ExecCtx::new();
+    let mut out = vec![0i64; plan.out_len()];
+    for _ in 0..2 {
+        plan.execute(&input, &mut ctx, &mut out);
+    }
+    assert_eq!(plan.weight_writes(), written, "execute wrote weights");
+    assert_eq!(out, direct_dwconv(&input, h, w, c, &recompose(&fcc).data, k, 1));
+}
