@@ -36,10 +36,10 @@ bench-smoke:
 
 # bench trajectory gate: run a fresh full pim_fabric pass and diff it
 # against the checked-in baseline; fails on >10% mean regressions.
-# NOTE: bench-diff hard-rejects baselines carrying "estimated": true or
-# "quick": true — the PR 2 baseline is an analytical estimate, so this
-# target fails (by design) until a toolchain host replaces it via
-# `make bench`.
+# Exit codes: 0 ok, 1 regression, 2 usage/structural error, 3 baseline
+# unfit (carries "estimated"/"quick": true — regenerate via `make
+# bench` on a toolchain host and commit the result; CI's bench gate
+# step fails loudly on exit 3 instead of silently skipping).
 bench-diff:
 	cargo build --release --benches --bin bench-diff
 	cargo bench --bench pim_fabric -- --json ../BENCH_pim_fabric.new.json

@@ -11,7 +11,7 @@ use ddc_pim::arch::lpu::Mode;
 use ddc_pim::arch::pim_macro::{MvmScratch, PimMacro};
 use ddc_pim::arch::reconfig::Grouping;
 use ddc_pim::fcc::{fcc_transform, FilterBank};
-use ddc_pim::mapping::exec::{exec_std_fcc, ExecCtx, PlannedConv};
+use ddc_pim::mapping::exec::{exec_std_fcc, ExecCtx, ExecPool, PlannedConv};
 use ddc_pim::runtime::reference::mvm_i32;
 use ddc_pim::util::benchkit::BenchSession;
 use ddc_pim::util::rng::Rng;
@@ -91,6 +91,51 @@ fn main() {
     s.report(
         "planned_conv.execute.amortization_vs_one_shot",
         one_shot.mean_ns / planned.mean_ns,
+        "x",
+    );
+
+    // the parallel executor on a layer with enough pixel blocks to
+    // shard (256 pixels = 4 blocks): same resident weights, work units
+    // stolen across pool lanes.  t1 runs the serial block walk, so the
+    // t4 ratio is the host-parallel speedup on this machine.
+    let (bh, bw, bc, bk, bn) = (18, 18, 8, 3, 8);
+    let binput: Vec<i32> = (0..bh * bw * bc).map(|_| rng.int8() as i32).collect();
+    let bbank = FilterBank::new(
+        (0..bn * bk * bk * bc).map(|_| rng.int8() as i32).collect(),
+        bn,
+        bk * bk * bc,
+    );
+    let bfcc = fcc_transform(&bbank);
+    let bplan = PlannedConv::std_fcc(bh, bw, bc, &bfcc, bk, 1);
+    let mut bout = vec![0i64; bplan.out_len()];
+    let mut pool1 = ExecPool::new(1);
+    let par1 = s.bench("planned_conv.execute_par.t1.18x18x8.k3.n8", 1, 10, || {
+        bplan.execute_par(&binput, &mut pool1, &mut bout);
+        std::hint::black_box(bout[0]);
+    });
+    let mut pool4 = ExecPool::new(4);
+    let par4 = s.bench("planned_conv.execute_par.t4.18x18x8.k3.n8", 1, 10, || {
+        bplan.execute_par(&binput, &mut pool4, &mut bout);
+        std::hint::black_box(bout[0]);
+    });
+    s.report(
+        "planned_conv.execute_par.t4_speedup_vs_t1",
+        par1.mean_ns / par4.mean_ns,
+        "x",
+    );
+
+    // session batching: 8 images streamed through one resident weight
+    // pass (batch folded into the pixel dimension), 4 pool lanes
+    let batch = 8usize;
+    let batch_in: Vec<i32> = (0..batch * bh * bw * bc).map(|_| rng.int8() as i32).collect();
+    let mut batch_out = vec![0i64; batch * bplan.out_len()];
+    let b8 = s.bench("planned_conv.execute_batch_par.b8.t4.18x18x8.k3.n8", 1, 10, || {
+        bplan.execute_batch_par(&batch_in, batch, &mut pool4, &mut batch_out);
+        std::hint::black_box(batch_out[0]);
+    });
+    s.report(
+        "planned_conv.execute_batch_par.b8.amortization_vs_t1_serial",
+        par1.mean_ns * batch as f64 / b8.mean_ns,
         "x",
     );
 

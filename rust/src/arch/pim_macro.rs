@@ -69,6 +69,14 @@ impl MvmScratch {
         self.inn_planes.resize(input_bits, 0);
     }
 
+    /// Pre-grow to a geometry (same resize discipline as the internal
+    /// reset) so the *first* `mvm_row_into` call on a worker thread
+    /// performs no allocation — the parallel executors warm every
+    /// per-lane scratch on the caller thread before dispatching.
+    pub fn warm(&mut self, ngroups: usize, slots: usize, input_bits: usize) {
+        self.reset(ngroups, slots, input_bits);
+    }
+
     /// Result of the last `mvm_row_into` call for (group, slot).
     #[inline]
     pub fn psum(&self, group: usize, slot: usize) -> PsumPair {

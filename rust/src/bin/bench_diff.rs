@@ -11,13 +11,29 @@
 //!     bench-diff <baseline.json> <candidate.json> [--max-regress PCT]
 //!     bench-diff --self-check
 //!
-//! Exit codes: 0 ok, 1 regression found, 2 unusable input (unfit
-//! baseline/candidate, bad schema, usage error).
+//! Exit codes:
+//!
+//! * `0` — ok, no regression;
+//! * `1` — regression found (a shared case's `mean_ns` grew past the
+//!   threshold);
+//! * `2` — usage / structural error (bad flags, unreadable file, wrong
+//!   schema, missing `results`/`mean_ns`, non-finite means);
+//! * `3` — **document unfit to gate**: baseline or candidate carries
+//!   `"estimated": true` / `"quick": true`.  Distinct from `1` so CI
+//!   can tell "the code regressed" from "the checked-in baseline was
+//!   never a real measurement — regenerate it with `make bench`".
 
 use ddc_pim::util::json::Json;
 
 /// Default regression threshold (percent increase of `mean_ns`).
 const DEFAULT_MAX_REGRESS_PCT: f64 = 10.0;
+
+/// Exit code for regressions.
+const EXIT_REGRESSION: i32 = 1;
+/// Exit code for usage / structural errors.
+const EXIT_USAGE: i32 = 2;
+/// Exit code for estimated/quick documents (unfit to gate anything).
+const EXIT_UNFIT: i32 = 3;
 
 /// One compared bench case.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,19 +45,45 @@ struct DiffLine {
     delta_pct: f64,
 }
 
+/// Why a document cannot gate a diff: structurally broken (exit 2) vs
+/// carrying untrusted timings (exit 3 — regenerate the baseline).
+#[derive(Debug, Clone, PartialEq)]
+enum Unfit {
+    /// Wrong schema or malformed document.
+    Structural(String),
+    /// `"estimated": true` / `"quick": true` — timings are projections
+    /// or smoke runs, never gates.
+    Untrusted(String),
+}
+
+impl Unfit {
+    fn message(&self) -> &str {
+        match self {
+            Unfit::Structural(m) | Unfit::Untrusted(m) => m,
+        }
+    }
+
+    fn exit_code(&self) -> i32 {
+        match self {
+            Unfit::Structural(_) => EXIT_USAGE,
+            Unfit::Untrusted(_) => EXIT_UNFIT,
+        }
+    }
+}
+
 /// Reject non-`ddc-pim-bench-v1` documents and any document whose
 /// timings are not trustworthy gates (`estimated`/`quick`).
-fn check_fit(doc: &Json, role: &str) -> Result<(), String> {
+fn check_fit(doc: &Json, role: &str) -> Result<(), Unfit> {
     match doc.get("schema").and_then(Json::as_str) {
         Some("ddc-pim-bench-v1") => {}
-        other => return Err(format!("{role}: unsupported schema {other:?}")),
+        other => return Err(Unfit::Structural(format!("{role}: unsupported schema {other:?}"))),
     }
     for key in ["estimated", "quick"] {
         if doc.get(key).and_then(Json::as_bool) == Some(true) {
-            return Err(format!(
+            return Err(Unfit::Untrusted(format!(
                 "{role}: carries \"{key}\": true — projected or smoke-run timings must \
                  never gate regressions; regenerate with `make bench` on a toolchain host"
-            ));
+            )));
         }
     }
     Ok(())
@@ -101,8 +143,8 @@ fn missing_cases(a: &Json, b: &Json) -> Vec<String> {
 /// The full gate on parsed documents: fit checks, diff, threshold.
 /// Returns the offending lines on regression.
 fn gate(base: &Json, new: &Json, max_regress_pct: f64) -> Result<Vec<DiffLine>, String> {
-    check_fit(base, "baseline")?;
-    check_fit(new, "candidate")?;
+    check_fit(base, "baseline").map_err(|u| u.message().to_string())?;
+    check_fit(new, "candidate").map_err(|u| u.message().to_string())?;
     let lines = diff(base, new)?;
     Ok(lines
         .into_iter()
@@ -120,22 +162,22 @@ fn run_files(base_path: &str, new_path: &str, max_regress_pct: f64) -> i32 {
         (Ok(b), Ok(n)) => (b, n),
         (Err(e), _) | (_, Err(e)) => {
             eprintln!("bench-diff: {e}");
-            return 2;
+            return EXIT_USAGE;
         }
     };
-    if let Err(e) = check_fit(&base, &format!("baseline {base_path}")) {
-        eprintln!("bench-diff: {e}");
-        return 2;
+    if let Err(u) = check_fit(&base, &format!("baseline {base_path}")) {
+        eprintln!("bench-diff: {}", u.message());
+        return u.exit_code();
     }
-    if let Err(e) = check_fit(&new, &format!("candidate {new_path}")) {
-        eprintln!("bench-diff: {e}");
-        return 2;
+    if let Err(u) = check_fit(&new, &format!("candidate {new_path}")) {
+        eprintln!("bench-diff: {}", u.message());
+        return u.exit_code();
     }
     let lines = match diff(&base, &new) {
         Ok(l) => l,
         Err(e) => {
             eprintln!("bench-diff: {e}");
-            return 2;
+            return EXIT_USAGE;
         }
     };
     for l in &lines {
@@ -166,7 +208,7 @@ fn run_files(base_path: &str, new_path: &str, max_regress_pct: f64) -> i32 {
             );
         }
         eprintln!("bench-diff: {} regression(s)", regressions.len());
-        1
+        EXIT_REGRESSION
     }
 }
 
@@ -224,6 +266,21 @@ fn self_check() -> Result<(), String> {
     let broken = fixture("ddc-pim-bench-v1", "", &[("case.a", 0.0), ("case.b", 52.0)]);
     if gate(&clean, &broken, 10.0).is_ok() {
         return Err("zero-mean candidate was accepted".into());
+    }
+    // 7. exit-code classification: estimated/quick docs are "unfit"
+    //    (exit 3 — regenerate the baseline), structural breakage is a
+    //    usage error (exit 2); CI's gate step branches on this
+    match check_fit(&estimated, "baseline") {
+        Err(u) if u.exit_code() == EXIT_UNFIT => {}
+        other => return Err(format!("estimated doc misclassified: {other:?}")),
+    }
+    match check_fit(&quick, "candidate") {
+        Err(u) if u.exit_code() == EXIT_UNFIT => {}
+        other => return Err(format!("quick doc misclassified: {other:?}")),
+    }
+    match check_fit(&alien, "baseline") {
+        Err(u) if u.exit_code() == EXIT_USAGE => {}
+        other => return Err(format!("alien schema misclassified: {other:?}")),
     }
     Ok(())
 }
@@ -310,6 +367,37 @@ mod tests {
         let flagged = gate(&base, &new, 9.9).unwrap();
         assert_eq!(flagged.len(), 1);
         assert_eq!(flagged[0].name, "c");
+    }
+
+    #[test]
+    fn unfit_exit_code_is_distinct_from_regression_and_usage() {
+        assert_ne!(EXIT_UNFIT, EXIT_REGRESSION);
+        assert_ne!(EXIT_UNFIT, EXIT_USAGE);
+        let est = fixture("ddc-pim-bench-v1", ", \"estimated\": true", &[("c", 1.0)]);
+        assert_eq!(check_fit(&est, "b").unwrap_err().exit_code(), EXIT_UNFIT);
+        let alien = fixture("other-schema", "", &[("c", 1.0)]);
+        assert_eq!(check_fit(&alien, "b").unwrap_err().exit_code(), EXIT_USAGE);
+    }
+
+    #[test]
+    fn checked_in_baseline_parses_and_classifies() {
+        // cargo runs package tests with cwd = rust/, so the repo-root
+        // baseline sits one level up.  Either it is a real measured
+        // run (gate live) or it still carries estimated/quick and must
+        // classify as UNFIT — anything else means the gate can neither
+        // diff nor fail loudly.
+        let text = std::fs::read_to_string("../BENCH_pim_fabric.json")
+            .expect("checked-in BENCH_pim_fabric.json readable");
+        let doc = Json::parse(text.trim()).expect("baseline is valid JSON");
+        match check_fit(&doc, "baseline") {
+            Ok(()) => {} // real baseline: CI diffs it
+            Err(u) => assert_eq!(
+                u.exit_code(),
+                EXIT_UNFIT,
+                "baseline neither usable nor cleanly unfit: {}",
+                u.message()
+            ),
+        }
     }
 
     #[test]

@@ -72,6 +72,19 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// The instant at which the *oldest* queued item's `max_wait`
+    /// elapses — the moment [`Batcher::should_flush`] turns true for a
+    /// non-full queue.  `None` when the queue is empty (nothing will
+    /// ever become due, so a worker may block indefinitely).
+    ///
+    /// Workers should sleep exactly until this deadline instead of
+    /// polling on a fixed tick: a lone straggler then flushes the
+    /// moment its wait expires, never a tick later (and an idle queue
+    /// costs no wake-ups at all).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue.first().map(|p| p.arrived + self.policy.max_wait)
+    }
+
     /// Cut a batch of up to `max_batch` items (FIFO) into a caller-owned
     /// buffer: `sink` is cleared and refilled, so a worker reusing one
     /// sink across flushes allocates nothing on the steady-state path.
@@ -149,5 +162,39 @@ mod tests {
     fn empty_never_flushes() {
         let b: Batcher<i32> = Batcher::new(policy(1, 0));
         assert!(!b.should_flush(Instant::now()));
+        assert_eq!(b.next_deadline(), None);
+    }
+
+    #[test]
+    fn deadline_is_oldest_arrival_plus_max_wait() {
+        // mocked-clock check: the push happened inside [before, after],
+        // so the deadline must sit inside [before + w, after + w] — and
+        // should_flush must agree with it exactly
+        let w = Duration::from_millis(40);
+        let mut b = Batcher::new(policy(8, 40));
+        let before = Instant::now();
+        b.push(1);
+        let after = Instant::now();
+        let d = b.next_deadline().expect("deadline for a queued item");
+        assert!(d >= before + w, "deadline earlier than arrival + max_wait");
+        assert!(d <= after + w, "deadline later than arrival + max_wait");
+        assert!(b.should_flush(d), "not flushable at its own deadline");
+        assert!(!b.should_flush(before), "flushable before max_wait elapsed");
+        // a second, younger item must not move the deadline (the
+        // straggler guarantee is for the oldest request)
+        b.push(2);
+        assert_eq!(b.next_deadline(), Some(d));
+        // cutting the queue clears the deadline
+        b.cut();
+        assert_eq!(b.next_deadline(), None);
+    }
+
+    #[test]
+    fn zero_wait_deadline_is_immediately_due() {
+        let mut b = Batcher::new(policy(8, 0));
+        b.push(5);
+        let d = b.next_deadline().unwrap();
+        assert!(b.should_flush(d));
+        assert!(b.should_flush(Instant::now()));
     }
 }

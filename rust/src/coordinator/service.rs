@@ -3,10 +3,14 @@
 //! A dedicated worker thread owns the [`Session`] (PJRT handles are not
 //! `Send`-safe by contract, so the backend is constructed — and its
 //! session prepared — inside the thread and never leaves it).  Clients
-//! submit CIFAR-shaped images over a channel; the batcher groups them;
-//! the session executes the whole batch with a real batch dimension
-//! (the PJRT backend pads stragglers up to its wide executable, the
-//! reference backend folds the batch into its MVM row dimension).
+//! submit CIFAR-shaped images over a channel; the batcher groups them
+//! (the worker sleeps exactly to [`Batcher::next_deadline`], so a lone
+//! straggler flushes the moment its `max_wait` expires); the session
+//! executes the whole batch with a real batch dimension (the PJRT
+//! backend pads stragglers up to its wide executable, the reference
+//! backend folds the batch into its MVM row dimension — on the
+//! bit-sliced fabric through the session's parallel exec pool, width
+//! chosen by `BackendSpec::threads` / `--threads` / `DDC_THREADS`).
 //!
 //! Weights are resident for the worker's lifetime: the backend is
 //! prepared exactly once, and every per-batch buffer (the pending-cut
@@ -239,14 +243,28 @@ fn worker_loop(
     let mut logits_buf: Vec<f32> = Vec::new();
 
     while open || !batcher.is_empty() {
-        // pull at least one message (with timeout so timed flushes fire)
-        if open {
-            match rx.recv_timeout(Duration::from_millis(1)) {
+        // ingest until a batch is due.  An idle queue blocks on the
+        // channel outright (no wake-ups); a non-empty queue sleeps
+        // *exactly* to the oldest request's deadline, so a lone
+        // straggler flushes the moment its max_wait elapses — never a
+        // poll tick later (the fixed-tick loop this replaces stalled
+        // stragglers by up to a tick past the deadline, and burned a
+        // wake-up every tick while idle)
+        while open && !batcher.should_flush(Instant::now()) {
+            let msg = match batcher.next_deadline() {
+                // empty queue: nothing can ever become due
+                None => rx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected),
+                Some(deadline) => {
+                    rx.recv_timeout(deadline.saturating_duration_since(Instant::now()))
+                }
+            };
+            match msg {
                 Ok(Msg::Infer(r)) => batcher.push(r),
                 Ok(Msg::Stats(stx)) => {
                     let _ = stx.send(stats.clone());
                 }
                 Ok(Msg::Shutdown) => open = false,
+                // deadline hit: the loop condition cuts the batch now
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
             }
@@ -262,9 +280,6 @@ fn worker_loop(
             }
         }
         if batcher.is_empty() {
-            continue;
-        }
-        if !batcher.should_flush(Instant::now()) && open {
             continue;
         }
         batcher.cut_into(&mut pending);
@@ -354,6 +369,7 @@ mod tests {
             BackendSpec {
                 kind: BackendKind::Reference,
                 fabric: FabricChoice::BitSliced,
+                threads: 2,
             },
             "/nonexistent".into(),
             BatchPolicy::default(),
@@ -364,6 +380,40 @@ mod tests {
         // at these layer sizes the i32 kernels cannot overflow, so the
         // bit-sliced macro path and the dense kernel agree exactly
         assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn lone_straggler_is_served_at_its_deadline() {
+        // a single request in a wide-batch policy must be flushed by
+        // the deadline sleep (never stranded waiting for a full batch)
+        let svc = InferenceService::start_with(
+            BackendKind::Reference,
+            "/nonexistent".into(),
+            BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(10),
+            },
+        );
+        let r = svc.infer(vec![0.2; IMG_ELEMS]).expect("straggler served");
+        assert_eq!(r.batch_size, 1);
+    }
+
+    #[test]
+    fn queued_stragglers_drain_on_shutdown() {
+        // requests still queued when the service drops must be executed
+        // (drain path), not dropped on the floor
+        let svc = InferenceService::start_with(
+            BackendKind::Reference,
+            "/nonexistent".into(),
+            BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_secs(3600),
+            },
+        );
+        let rx = svc.submit(vec![0.1; IMG_ELEMS]);
+        drop(svc); // shutdown while the straggler is still queued
+        let r = rx.recv().expect("response after shutdown").expect("served");
+        assert_eq!(r.logits.len(), NUM_CLASSES);
     }
 
     #[test]

@@ -86,9 +86,20 @@ fn run(args: &[String]) -> i32 {
             }
         },
     };
+    let threads = match flags.get("threads") {
+        None => 0, // resolve via DDC_THREADS, then 1
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("--threads needs an integer >= 1, got {v:?}");
+                return 2;
+            }
+        },
+    };
     let spec = BackendSpec {
         kind: backend_kind,
         fabric,
+        threads,
     };
     match pos.first().map(String::as_str) {
         Some("info") => cmd_info(),
@@ -105,6 +116,7 @@ fn run(args: &[String]) -> i32 {
                  \n  flags: --artifacts <dir>  (default: artifacts)\
                  \n         --backend <auto|reference|pjrt>  (default: auto)\
                  \n         --fabric <dense|bitsliced>  (reference conv path; default: dense)\
+                 \n         --threads <N>  (bitsliced exec pool width; default: DDC_THREADS or 1)\
                  \n  models: {}",
                 zoo::ALL_MODELS.join(", ")
             );

@@ -19,9 +19,15 @@
 //!   [`PlannedConv::weight_writes`]).
 //! * **execute** — `execute(&self, input, &mut ExecCtx, &mut out)`
 //!   streams one input through the resident weights.  It takes `&self`,
-//!   so it *cannot* write weights, and per-thread [`ExecCtx`] clones
-//!   will allow pixel-block parallelism (ROADMAP) without touching the
-//!   plan.
+//!   so it *cannot* write weights, and per-lane [`ExecCtx`] clones let
+//!   [`PlannedConv::execute_par`] / [`PlannedDwConv::execute_par`]
+//!   shard the pixel blocks of every resident weight pass across an
+//!   [`ExecPool`] without touching the plan.  Every `(pass, block)`
+//!   unit writes a disjoint slice of `out` and reads only the shared
+//!   staging, so parallel results are byte-identical to the serial
+//!   path at every pool width — and `execute_batch_par` folds a whole
+//!   batch into the pixel dimension, streaming all images of a batch
+//!   through one resident pass (the session-batching path).
 //!
 //! All reusable buffers (im2col columns, window sums, [`MvmScratch`],
 //! pixel-block psums) live in the caller-owned [`ExecCtx`]; after the
@@ -44,6 +50,7 @@ use crate::arch::pim_core::{PimCore, WEIGHT_BITS};
 use crate::arch::pim_macro::{MvmScratch, PimMacro};
 use crate::arch::reconfig::Grouping;
 use crate::fcc::FccWeights;
+use crate::util::pool::{SharedMut, WorkPool};
 
 use super::im2col::{im2col_channel_into, im2col_into, out_dims};
 
@@ -90,6 +97,44 @@ pub struct ExecCtx {
 impl ExecCtx {
     pub fn new() -> Self {
         Self::default()
+    }
+}
+
+/// The host-parallel execution handle: a [`WorkPool`] plus the scratch
+/// it needs — one shared [`ExecCtx`] for the caller-staged read-only
+/// buffers (im2col columns, window sums) and one persistent per-lane
+/// [`ExecCtx`] clone for each pool lane's private psum/scratch
+/// buffers.  The per-lane contexts are kept warm across calls, so the
+/// zero-steady-state-allocation property of the serial path survives
+/// parallel dispatch (`tests/alloc_steady_state.rs`).
+///
+/// Width 1 spawns no threads and routes `execute_par` through exactly
+/// the serial block walk; widths > 1 are byte-identical to it because
+/// every work unit writes a disjoint output slice.
+pub struct ExecPool {
+    pool: WorkPool,
+    /// Caller-staged buffers shared read-only during dispatch.
+    shared: ExecCtx,
+    /// One private scratch per pool lane (`per.len() == width()`).
+    per: Vec<ExecCtx>,
+}
+
+impl ExecPool {
+    /// Build a pool of `threads` lanes (clamped to 1..=64 by the
+    /// underlying [`WorkPool`]; the caller thread is lane 0).
+    pub fn new(threads: usize) -> ExecPool {
+        let pool = WorkPool::new(threads);
+        let per = (0..pool.width()).map(|_| ExecCtx::new()).collect();
+        ExecPool {
+            pool,
+            shared: ExecCtx::new(),
+            per,
+        }
+    }
+
+    /// Total lanes, caller included.
+    pub fn width(&self) -> usize {
+        self.pool.width()
     }
 }
 
@@ -327,80 +372,203 @@ impl PlannedConv {
             window_sums_into(&mut ctx.win_sums, &ctx.cols, self.l);
         }
         out.fill(0);
-        let is_fcc = matches!(self.kind, StdKind::Fcc { .. });
-        let mode = if is_fcc { Mode::Double } else { Mode::Regular };
+        let out_ptr = SharedMut(out.as_mut_ptr());
+        let out_len = out.len();
         for pass in &self.passes {
             // compute pass: stream pixel blocks (weight stationary)
             let mut pb0 = 0;
             while pb0 < pixels {
                 let pb1 = (pb0 + PIXEL_BLOCK).min(pixels);
-                for g in pass.g0..pass.g1 {
-                    ctx.blk.clear();
-                    ctx.blk.resize((pb1 - pb0) * self.slots, (0i64, 0i64));
-                    for ti in 0..self.l_tiles {
-                        let row = (g - pass.g0) * self.l_tiles + ti;
-                        let lo = ti * self.cmp;
-                        let hi = ((ti + 1) * self.cmp).min(self.l);
-                        for px in pb0..pb1 {
-                            let tile = &ctx.cols[px * self.l + lo..px * self.l + hi];
-                            // FCC double mode drives INP and INN with
-                            // the same vector-wise input; regular mode
-                            // leaves the Q̄ path dark
-                            let inn: &[i32] = if is_fcc { tile } else { &[] };
-                            pass.mac.mvm_row_into(
-                                row,
-                                tile,
-                                inn,
-                                mode,
-                                Grouping::Combined,
-                                &mut ctx.scratch,
-                            );
-                            let base = (px - pb0) * self.slots;
-                            for s in 0..self.slots {
-                                let ps = ctx.scratch.psum(0, s);
-                                ctx.blk[base + s].0 += ps.q;
-                                ctx.blk[base + s].1 += ps.qbar;
-                            }
-                        }
+                self.run_std_block(
+                    pass,
+                    pb0,
+                    pb1,
+                    &ctx.cols,
+                    &ctx.win_sums,
+                    &mut ctx.blk,
+                    &mut ctx.scratch,
+                    out_ptr,
+                    out_len,
+                );
+                pb0 = pb1;
+            }
+        }
+    }
+
+    /// Parallel twin of [`PlannedConv::execute`]: shards the
+    /// [`PIXEL_BLOCK`] runs of every resident weight pass across the
+    /// pool's lanes.  Byte-identical to `execute` at every pool width
+    /// (each `(pass, block)` unit writes a disjoint slice of `out`).
+    pub fn execute_par(&self, input: &[i32], pool: &mut ExecPool, out: &mut [i64]) {
+        self.execute_batch_par(input, 1, pool, out)
+    }
+
+    /// Batched parallel execute: stream *all* images of a `[batch, H,
+    /// W, C]` batch through each resident weight pass (the software
+    /// analogue of the silicon's ping-pong input buffer), into a
+    /// caller-owned `[batch, P, N]` output.  The batch folds into the
+    /// pixel dimension — every pixel window is pass-independent — so
+    /// `batch × pixel` blocks form the parallel work units and the
+    /// result is byte-identical to `batch` serial `execute` calls.
+    /// Allocation-free once the pool's contexts have grown to shape.
+    pub fn execute_batch_par(
+        &self,
+        input: &[i32],
+        batch: usize,
+        pool: &mut ExecPool,
+        out: &mut [i64],
+    ) {
+        let img = self.h * self.w * self.c;
+        assert_eq!(input.len(), batch * img, "input shape mismatch");
+        assert_eq!(out.len(), batch * self.out_len(), "output shape mismatch");
+        if batch == 0 {
+            return;
+        }
+        let pixels = self.oh * self.ow;
+        let total = batch * pixels;
+        let ExecPool { pool: wp, shared, per } = pool;
+        // stage the whole batch's im2col + ΣI once on the caller; the
+        // workers treat these buffers as read-only
+        shared.cols.resize(total * self.l, 0);
+        for bi in 0..batch {
+            im2col_into(
+                &mut shared.cols[bi * pixels * self.l..(bi + 1) * pixels * self.l],
+                &input[bi * img..(bi + 1) * img],
+                self.h,
+                self.w,
+                self.c,
+                self.k,
+                self.stride,
+            );
+        }
+        if matches!(self.kind, StdKind::Fcc { .. }) {
+            window_sums_into(&mut shared.win_sums, &shared.cols, self.l);
+        }
+        out.fill(0);
+        let out_ptr = SharedMut(out.as_mut_ptr());
+        let out_len = out.len();
+        let nblocks = total.div_ceil(PIXEL_BLOCK);
+        // no explicit width-1 branch: WorkPool::run at width 1 executes
+        // the units inline on the caller, in unit order = the exact
+        // pass-major/block-minor walk `execute` performs, with lane 0's
+        // scratch — one code path for every width, by construction.
+        //
+        // pre-grow every lane's private scratch on the caller thread:
+        // workers then never allocate, and the warm-up is independent
+        // of which lane wins which block
+        for ctx in per.iter_mut() {
+            ctx.blk.resize(PIXEL_BLOCK * self.slots, (0, 0));
+            ctx.scratch.warm(2, self.slots, 8); // Split-capable, 8 input bits
+        }
+        let cols: &[i32] = &shared.cols;
+        let sums: &[i64] = &shared.win_sums;
+        let ctx_base = SharedMut(per.as_mut_ptr());
+        let passes = &self.passes;
+        wp.run(passes.len() * nblocks, &|lane, unit| {
+            let pass = &passes[unit / nblocks];
+            let pb0 = (unit % nblocks) * PIXEL_BLOCK;
+            let pb1 = (pb0 + PIXEL_BLOCK).min(total);
+            // SAFETY: each lane index is driven by exactly one thread,
+            // so the &mut to its private ExecCtx is unique
+            let ctx = unsafe { &mut *ctx_base.0.add(lane) };
+            self.run_std_block(
+                pass,
+                pb0,
+                pb1,
+                cols,
+                sums,
+                &mut ctx.blk,
+                &mut ctx.scratch,
+                out_ptr,
+                out_len,
+            );
+        });
+    }
+
+    /// One `(pass, pixel-block)` work unit: the resident filter groups
+    /// of `pass` streamed over pixels `[pb0, pb1)` of the (possibly
+    /// batch-folded) im2col staging.  This is the *single* block body
+    /// both the serial and the parallel executors run, so parallel
+    /// results are bit-true by construction.
+    ///
+    /// Writes are raw because units on different lanes address the same
+    /// output buffer — at provably disjoint indices: `px` ranges never
+    /// overlap across blocks, and each pass's groups own disjoint
+    /// output channels (`p = g * slots + s` with disjoint `g` ranges).
+    #[allow(clippy::too_many_arguments)]
+    fn run_std_block(
+        &self,
+        pass: &StdPass,
+        pb0: usize,
+        pb1: usize,
+        cols: &[i32],
+        win_sums: &[i64],
+        blk: &mut Vec<(i64, i64)>,
+        scratch: &mut MvmScratch,
+        out: SharedMut<i64>,
+        out_len: usize,
+    ) {
+        let is_fcc = matches!(self.kind, StdKind::Fcc { .. });
+        let mode = if is_fcc { Mode::Double } else { Mode::Regular };
+        for g in pass.g0..pass.g1 {
+            blk.clear();
+            blk.resize((pb1 - pb0) * self.slots, (0i64, 0i64));
+            for ti in 0..self.l_tiles {
+                let row = (g - pass.g0) * self.l_tiles + ti;
+                let lo = ti * self.cmp;
+                let hi = ((ti + 1) * self.cmp).min(self.l);
+                for px in pb0..pb1 {
+                    let tile = &cols[px * self.l + lo..px * self.l + hi];
+                    // FCC double mode drives INP and INN with the same
+                    // vector-wise input; regular mode leaves the Q̄
+                    // path dark
+                    let inn: &[i32] = if is_fcc { tile } else { &[] };
+                    pass.mac.mvm_row_into(row, tile, inn, mode, Grouping::Combined, scratch);
+                    let base = (px - pb0) * self.slots;
+                    for s in 0..self.slots {
+                        let ps = scratch.psum(0, s);
+                        blk[base + s].0 += ps.q;
+                        blk[base + s].1 += ps.qbar;
                     }
-                    match &self.kind {
-                        StdKind::Fcc { means } => {
-                            let pairs = self.n / 2;
-                            for px in pb0..pb1 {
-                                let base = (px - pb0) * self.slots;
-                                for s in 0..self.slots {
-                                    let p = g * self.slots + s;
-                                    if p >= pairs {
-                                        continue;
-                                    }
-                                    let m = means[p] as i64;
-                                    let (q, qbar) = ctx.blk[base + s];
-                                    let (even, odd) = aru_recover(
-                                        q,
-                                        qbar,
-                                        ctx.win_sums[px],
-                                        ctx.win_sums[px],
-                                        m,
-                                    );
-                                    out[px * self.n + 2 * p] = even;
-                                    out[px * self.n + 2 * p + 1] = odd;
-                                }
+                }
+            }
+            match &self.kind {
+                StdKind::Fcc { means } => {
+                    let pairs = self.n / 2;
+                    for px in pb0..pb1 {
+                        let base = (px - pb0) * self.slots;
+                        for s in 0..self.slots {
+                            let p = g * self.slots + s;
+                            if p >= pairs {
+                                continue;
                             }
-                        }
-                        StdKind::Regular => {
-                            for px in pb0..pb1 {
-                                let base = (px - pb0) * self.slots;
-                                for s in 0..self.slots {
-                                    let f = g * self.slots + s;
-                                    if f < self.n {
-                                        out[px * self.n + f] = ctx.blk[base + s].0;
-                                    }
-                                }
+                            let m = means[p] as i64;
+                            let (q, qbar) = blk[base + s];
+                            let (even, odd) =
+                                aru_recover(q, qbar, win_sums[px], win_sums[px], m);
+                            debug_assert!(px * self.n + 2 * p + 1 < out_len);
+                            // SAFETY: disjoint (px, channel) slot — see
+                            // the method docs
+                            unsafe {
+                                *out.0.add(px * self.n + 2 * p) = even;
+                                *out.0.add(px * self.n + 2 * p + 1) = odd;
                             }
                         }
                     }
                 }
-                pb0 = pb1;
+                StdKind::Regular => {
+                    for px in pb0..pb1 {
+                        let base = (px - pb0) * self.slots;
+                        for s in 0..self.slots {
+                            let f = g * self.slots + s;
+                            if f < self.n {
+                                debug_assert!(px * self.n + f < out_len);
+                                // SAFETY: disjoint (px, channel) slot
+                                unsafe { *out.0.add(px * self.n + f) = blk[base + s].0 };
+                            }
+                        }
+                    }
+                }
             }
         }
     }
@@ -620,90 +788,203 @@ impl PlannedDwConv {
             window_sums_into(&mut ctx.dw_sums, &ctx.dw_windows, taps);
         }
         out.fill(0);
-        match &self.kind {
-            DwKind::Fcc { means, reconfig } if *reconfig => {
-                self.execute_fcc_reconfig(means, ctx, out)
-            }
-            DwKind::Fcc { means, .. } => self.execute_fcc_dbis(means, ctx, out),
-            DwKind::Regular => self.execute_regular(ctx, out),
+        let out_ptr = SharedMut(out.as_mut_ptr());
+        let out_len = out.len();
+        let ExecCtx { scratch, dw_windows, dw_sums, inp, inn, .. } = ctx;
+        for pass in &self.passes {
+            self.run_dw_block(
+                pass, 0, pixels, dw_windows, dw_sums, scratch, inp, inn, out_ptr, out_len,
+            );
         }
     }
 
-    fn execute_fcc_dbis(&self, means: &[i32], ctx: &mut ExecCtx, out: &mut [i64]) {
+    /// Parallel twin of [`PlannedDwConv::execute`]: shards the
+    /// [`PIXEL_BLOCK`] runs of every resident weight pass across the
+    /// pool's lanes.  Byte-identical to `execute` at every pool width
+    /// (each `(pass, block)` unit writes a disjoint slice of `out`:
+    /// its own pixel range × its pass's resident channels).
+    pub fn execute_par(&self, input: &[i32], pool: &mut ExecPool, out: &mut [i64]) {
+        assert_eq!(input.len(), self.h * self.w * self.c, "input shape mismatch");
+        assert_eq!(out.len(), self.out_len(), "output shape mismatch");
         let (pixels, taps, c) = (self.oh * self.ow, self.taps, self.c);
-        for pass in &self.passes {
-            for p in pass.u0..pass.u1 {
-                let row = p - pass.u0;
-                let m = means[p] as i64;
-                for px in 0..pixels {
-                    let we = &ctx.dw_windows[(2 * p) * pixels * taps + px * taps..][..taps];
-                    let wo = &ctx.dw_windows[(2 * p + 1) * pixels * taps + px * taps..][..taps];
-                    pass.mac.mvm_row_into(
-                        row,
-                        we,
-                        wo,
-                        Mode::Double,
-                        Grouping::Combined,
-                        &mut ctx.scratch,
-                    );
-                    let ps = ctx.scratch.psum(0, 0);
-                    let sp = ctx.dw_sums[(2 * p) * pixels + px];
-                    let sn = ctx.dw_sums[(2 * p + 1) * pixels + px];
-                    let (even, odd) = aru_recover(ps.q, ps.qbar, sp, sn, m);
-                    out[px * c + 2 * p] = even;
-                    out[px * c + 2 * p + 1] = odd;
+        let ExecPool { pool: wp, shared, per } = pool;
+        // stage windows + ΣI on the caller; read-only for the workers
+        shared.dw_windows.resize(c * pixels * taps, 0);
+        for ch in 0..c {
+            im2col_channel_into(
+                &mut shared.dw_windows[ch * pixels * taps..(ch + 1) * pixels * taps],
+                input,
+                self.h,
+                self.w,
+                c,
+                ch,
+                self.k,
+                self.stride,
+            );
+        }
+        if matches!(self.kind, DwKind::Fcc { .. }) {
+            window_sums_into(&mut shared.dw_sums, &shared.dw_windows, taps);
+        }
+        out.fill(0);
+        let out_ptr = SharedMut(out.as_mut_ptr());
+        let out_len = out.len();
+        let nblocks = pixels.div_ceil(PIXEL_BLOCK);
+        // no explicit width-1 branch — see execute_batch_par: the pool
+        // runs the units inline in the same order on the caller.
+        // pre-grow every lane's private scratch on the caller thread
+        let (_, slots, _) = paper_geometry();
+        for ctx in per.iter_mut() {
+            ctx.scratch.warm(2, slots, 8); // Split-capable, 8 input bits
+            ctx.inp.resize(self.cmp, 0);
+            ctx.inn.resize(self.cmp, 0);
+        }
+        let windows: &[i32] = &shared.dw_windows;
+        let sums: &[i64] = &shared.dw_sums;
+        let ctx_base = SharedMut(per.as_mut_ptr());
+        let passes = &self.passes;
+        wp.run(passes.len() * nblocks, &|lane, unit| {
+            let pass = &passes[unit / nblocks];
+            let px0 = (unit % nblocks) * PIXEL_BLOCK;
+            let px1 = (px0 + PIXEL_BLOCK).min(pixels);
+            // SAFETY: each lane index is driven by exactly one thread,
+            // so the &mut to its private ExecCtx is unique
+            let ctx = unsafe { &mut *ctx_base.0.add(lane) };
+            self.run_dw_block(
+                pass,
+                px0,
+                px1,
+                windows,
+                sums,
+                &mut ctx.scratch,
+                &mut ctx.inp,
+                &mut ctx.inn,
+                out_ptr,
+                out_len,
+            );
+        });
+    }
+
+    /// One `(pass, pixel-block)` work unit, dispatched by mapping kind —
+    /// the single block body both the serial and the parallel dw
+    /// executors run (see [`PlannedConv::run_std_block`] for the raw
+    /// write rationale; disjointness here is pixel range × the pass's
+    /// resident channels).
+    #[allow(clippy::too_many_arguments)]
+    fn run_dw_block(
+        &self,
+        pass: &DwPass,
+        px0: usize,
+        px1: usize,
+        windows: &[i32],
+        sums: &[i64],
+        scratch: &mut MvmScratch,
+        inp: &mut Vec<i32>,
+        inn: &mut Vec<i32>,
+        out: SharedMut<i64>,
+        out_len: usize,
+    ) {
+        match &self.kind {
+            DwKind::Fcc { means, reconfig } if *reconfig => self.run_dw_reconfig_block(
+                pass, px0, px1, means, windows, sums, scratch, inp, inn, out, out_len,
+            ),
+            DwKind::Fcc { means, .. } => {
+                self.run_dw_dbis_block(pass, px0, px1, means, windows, sums, scratch, out, out_len)
+            }
+            DwKind::Regular => {
+                self.run_dw_regular_block(pass, px0, px1, windows, scratch, out, out_len)
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_dw_dbis_block(
+        &self,
+        pass: &DwPass,
+        px0: usize,
+        px1: usize,
+        means: &[i32],
+        windows: &[i32],
+        sums: &[i64],
+        scratch: &mut MvmScratch,
+        out: SharedMut<i64>,
+        out_len: usize,
+    ) {
+        let (pixels, taps, c) = (self.oh * self.ow, self.taps, self.c);
+        for p in pass.u0..pass.u1 {
+            let row = p - pass.u0;
+            let m = means[p] as i64;
+            for px in px0..px1 {
+                let we = &windows[(2 * p) * pixels * taps + px * taps..][..taps];
+                let wo = &windows[(2 * p + 1) * pixels * taps + px * taps..][..taps];
+                pass.mac.mvm_row_into(row, we, wo, Mode::Double, Grouping::Combined, scratch);
+                let ps = scratch.psum(0, 0);
+                let sp = sums[(2 * p) * pixels + px];
+                let sn = sums[(2 * p + 1) * pixels + px];
+                let (even, odd) = aru_recover(ps.q, ps.qbar, sp, sn, m);
+                debug_assert!(px * c + 2 * p + 1 < out_len);
+                // SAFETY: disjoint (px, channel) slot — see run_dw_block
+                unsafe {
+                    *out.0.add(px * c + 2 * p) = even;
+                    *out.0.add(px * c + 2 * p + 1) = odd;
                 }
             }
         }
     }
 
-    fn execute_fcc_reconfig(&self, means: &[i32], ctx: &mut ExecCtx, out: &mut [i64]) {
+    #[allow(clippy::too_many_arguments)]
+    fn run_dw_reconfig_block(
+        &self,
+        pass: &DwPass,
+        px0: usize,
+        px1: usize,
+        means: &[i32],
+        windows: &[i32],
+        sums: &[i64],
+        scratch: &mut MvmScratch,
+        inp: &mut Vec<i32>,
+        inn: &mut Vec<i32>,
+        out: SharedMut<i64>,
+        out_len: usize,
+    ) {
         let (pixels, taps, c) = (self.oh * self.ow, self.taps, self.c);
         let pairs = c / 2;
         let half = self.cmp / 2;
-        for pass in &self.passes {
-            for rg in pass.u0..pass.u1 {
-                let row = rg - pass.u0;
-                for px in 0..pixels {
-                    // two stages, alternating slots
-                    for s in 0..2 {
-                        let pa = rg * 4 + 2 * s; // half 0 pair
-                        let pb = rg * 4 + 2 * s + 1; // half 1 pair
-                        ctx.inp.clear();
-                        ctx.inp.resize(self.cmp, 0);
-                        ctx.inn.clear();
-                        ctx.inn.resize(self.cmp, 0);
-                        for (half_id, p) in [(0usize, pa), (1usize, pb)] {
-                            if p >= pairs {
-                                continue;
-                            }
-                            for t in 0..taps {
-                                let ccx = half_id * half + t;
-                                ctx.inp[ccx] =
-                                    ctx.dw_windows[(2 * p) * pixels * taps + px * taps + t];
-                                ctx.inn[ccx] =
-                                    ctx.dw_windows[(2 * p + 1) * pixels * taps + px * taps + t];
-                            }
+        for rg in pass.u0..pass.u1 {
+            let row = rg - pass.u0;
+            for px in px0..px1 {
+                // two stages, alternating slots
+                for s in 0..2 {
+                    let pa = rg * 4 + 2 * s; // half 0 pair
+                    let pb = rg * 4 + 2 * s + 1; // half 1 pair
+                    inp.clear();
+                    inp.resize(self.cmp, 0);
+                    inn.clear();
+                    inn.resize(self.cmp, 0);
+                    for (half_id, p) in [(0usize, pa), (1usize, pb)] {
+                        if p >= pairs {
+                            continue;
                         }
-                        pass.mac.mvm_row_into(
-                            row,
-                            &ctx.inp,
-                            &ctx.inn,
-                            Mode::Double,
-                            Grouping::Split,
-                            &mut ctx.scratch,
-                        );
-                        for (ghalf, p) in [(0usize, pa), (1usize, pb)] {
-                            if p >= pairs {
-                                continue;
-                            }
-                            let m = means[p] as i64;
-                            let sp = ctx.dw_sums[(2 * p) * pixels + px];
-                            let sn = ctx.dw_sums[(2 * p + 1) * pixels + px];
-                            let ps = ctx.scratch.psum(ghalf, s);
-                            let (even, odd) = aru_recover(ps.q, ps.qbar, sp, sn, m);
-                            out[px * c + 2 * p] = even;
-                            out[px * c + 2 * p + 1] = odd;
+                        for t in 0..taps {
+                            let ccx = half_id * half + t;
+                            inp[ccx] = windows[(2 * p) * pixels * taps + px * taps + t];
+                            inn[ccx] = windows[(2 * p + 1) * pixels * taps + px * taps + t];
+                        }
+                    }
+                    pass.mac.mvm_row_into(row, inp, inn, Mode::Double, Grouping::Split, scratch);
+                    for (ghalf, p) in [(0usize, pa), (1usize, pb)] {
+                        if p >= pairs {
+                            continue;
+                        }
+                        let m = means[p] as i64;
+                        let sp = sums[(2 * p) * pixels + px];
+                        let sn = sums[(2 * p + 1) * pixels + px];
+                        let ps = scratch.psum(ghalf, s);
+                        let (even, odd) = aru_recover(ps.q, ps.qbar, sp, sn, m);
+                        debug_assert!(px * c + 2 * p + 1 < out_len);
+                        // SAFETY: disjoint (px, channel) slot
+                        unsafe {
+                            *out.0.add(px * c + 2 * p) = even;
+                            *out.0.add(px * c + 2 * p + 1) = odd;
                         }
                     }
                 }
@@ -711,23 +992,26 @@ impl PlannedDwConv {
         }
     }
 
-    fn execute_regular(&self, ctx: &mut ExecCtx, out: &mut [i64]) {
+    fn run_dw_regular_block(
+        &self,
+        pass: &DwPass,
+        px0: usize,
+        px1: usize,
+        windows: &[i32],
+        scratch: &mut MvmScratch,
+        out: SharedMut<i64>,
+        out_len: usize,
+    ) {
         let (pixels, taps, c) = (self.oh * self.ow, self.taps, self.c);
-        for pass in &self.passes {
-            for ch in pass.u0..pass.u1 {
-                let row = ch - pass.u0;
-                for px in 0..pixels {
-                    let window = &ctx.dw_windows[ch * pixels * taps + px * taps..][..taps];
-                    pass.mac.mvm_row_into(
-                        row,
-                        window,
-                        &[],
-                        Mode::Regular,
-                        Grouping::Combined,
-                        &mut ctx.scratch,
-                    );
-                    out[px * c + ch] = ctx.scratch.psum(0, 0).q;
-                }
+        for ch in pass.u0..pass.u1 {
+            let row = ch - pass.u0;
+            for px in px0..px1 {
+                let window = &windows[ch * pixels * taps + px * taps..][..taps];
+                pass.mac
+                    .mvm_row_into(row, window, &[], Mode::Regular, Grouping::Combined, scratch);
+                debug_assert!(px * c + ch < out_len);
+                // SAFETY: disjoint (px, channel) slot
+                unsafe { *out.0.add(px * c + ch) = scratch.psum(0, 0).q };
             }
         }
     }
@@ -1079,5 +1363,113 @@ mod tests {
         let mut out = vec![0i64; plan.out_len()];
         plan.execute(&input, &mut ctx, &mut out);
         assert_eq!(out, fcc_oracle(&input, h, w, c, &fcc, k, 1));
+    }
+
+    #[test]
+    fn execute_par_matches_serial_across_widths() {
+        // multi-pass, multi-block shape: 256 pixels > PIXEL_BLOCK and
+        // enough filters for 2 reload passes, so both unit axes shard
+        let mut rng = Rng::new(110);
+        let (h, w, c, k, n) = (18, 18, 40, 1, 132);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, n * c), n, c);
+        let fcc = fcc_transform(&bank);
+        let plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+        assert!(plan.load_passes() >= 2);
+        let mut ctx = ExecCtx::new();
+        let mut want = vec![0i64; plan.out_len()];
+        plan.execute(&input, &mut ctx, &mut want);
+        for width in [1usize, 2, 8] {
+            let mut pool = ExecPool::new(width);
+            let mut got = vec![1i64; plan.out_len()]; // dirty sentinel
+            plan.execute_par(&input, &mut pool, &mut got);
+            assert_eq!(got, want, "execute_par diverged at width {width}");
+        }
+    }
+
+    #[test]
+    fn execute_batch_par_equals_per_image_execute() {
+        let mut rng = Rng::new(111);
+        let (h, w, c, k, n, batch) = (10, 10, 3, 3, 8, 3);
+        let bank = FilterBank::new(rand_vec(&mut rng, n * k * k * c), n, k * k * c);
+        let fcc = fcc_transform(&bank);
+        let plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+        let inputs = rand_vec(&mut rng, batch * h * w * c);
+        let mut ctx = ExecCtx::new();
+        let mut want = vec![0i64; batch * plan.out_len()];
+        for bi in 0..batch {
+            plan.execute(
+                &inputs[bi * h * w * c..(bi + 1) * h * w * c],
+                &mut ctx,
+                &mut want[bi * plan.out_len()..(bi + 1) * plan.out_len()],
+            );
+        }
+        for width in [1usize, 2, 8] {
+            let mut pool = ExecPool::new(width);
+            let mut got = vec![1i64; batch * plan.out_len()];
+            plan.execute_batch_par(&inputs, batch, &mut pool, &mut got);
+            assert_eq!(got, want, "batched execute diverged at width {width}");
+        }
+    }
+
+    #[test]
+    fn dw_execute_par_matches_serial_all_mappings() {
+        let mut rng = Rng::new(112);
+        let (h, w, c, k) = (12, 12, 16, 3); // 100 pixels, 2 blocks at 64
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, c * k * k), c, k * k);
+        let fcc = fcc_transform(&bank);
+        let filters = rand_vec(&mut rng, c * k * k);
+        let plans = [
+            PlannedDwConv::fcc(h, w, c, &fcc, k, 1, false), // DBIS
+            PlannedDwConv::fcc(h, w, c, &fcc, k, 1, true),  // reconfig/Split
+            PlannedDwConv::regular(h, w, c, &filters, k, 1),
+        ];
+        for (pi, plan) in plans.iter().enumerate() {
+            let mut ctx = ExecCtx::new();
+            let mut want = vec![0i64; plan.out_len()];
+            plan.execute(&input, &mut ctx, &mut want);
+            for width in [1usize, 2, 8] {
+                let mut pool = ExecPool::new(width);
+                let mut got = vec![1i64; plan.out_len()];
+                plan.execute_par(&input, &mut pool, &mut got);
+                assert_eq!(got, want, "dw plan {pi} diverged at width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_par_keeps_weights_resident() {
+        // the residency invariant must survive parallel dispatch
+        let mut rng = Rng::new(113);
+        let (h, w, c, k, n) = (6, 6, 3, 3, 8);
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, n * k * k * c), n, k * k * c);
+        let fcc = fcc_transform(&bank);
+        let plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+        let written = plan.weight_writes();
+        let mut pool = ExecPool::new(4);
+        let mut out = vec![0i64; plan.out_len()];
+        for _ in 0..3 {
+            plan.execute_par(&input, &mut pool, &mut out);
+        }
+        assert_eq!(plan.weight_writes(), written, "execute_par wrote weights");
+    }
+
+    #[test]
+    fn one_pool_serves_many_plans() {
+        // pool reuse across plans/shapes must not leak state (the
+        // session uses one pool for every fabric layer)
+        let mut rng = Rng::new(114);
+        let mut pool = ExecPool::new(2);
+        for &(h, w, c, k, n) in &[(4usize, 4usize, 3usize, 3usize, 8usize), (9, 9, 2, 3, 4)] {
+            let input = rand_vec(&mut rng, h * w * c);
+            let bank = FilterBank::new(rand_vec(&mut rng, n * k * k * c), n, k * k * c);
+            let fcc = fcc_transform(&bank);
+            let plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+            let mut got = vec![0i64; plan.out_len()];
+            plan.execute_par(&input, &mut pool, &mut got);
+            assert_eq!(got, fcc_oracle(&input, h, w, c, &fcc, k, 1));
+        }
     }
 }

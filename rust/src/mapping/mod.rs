@@ -14,5 +14,5 @@ pub mod exec;
 pub mod im2col;
 pub mod plan;
 
-pub use exec::{ExecCtx, PlannedConv, PlannedDwConv};
+pub use exec::{ExecCtx, ExecPool, PlannedConv, PlannedDwConv};
 pub use plan::{plan_layer, plan_network, LayerPlan, PlanKind};

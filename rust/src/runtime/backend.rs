@@ -167,11 +167,17 @@ impl FromStr for FabricChoice {
 }
 
 /// Full backend selection: kind plus the knobs individual backends
-/// consult (`fabric` applies to the reference backend only).
+/// consult (`fabric` and `threads` apply to the reference backend
+/// only).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct BackendSpec {
     pub kind: BackendKind,
     pub fabric: FabricChoice,
+    /// Execution-pool width for bit-sliced fabric sessions: `0`
+    /// (default) resolves through the `DDC_THREADS` environment
+    /// variable and falls back to 1 — the serial path, which every
+    /// width is byte-identical to (`crate::util::pool::resolve_threads`).
+    pub threads: usize,
 }
 
 impl BackendSpec {
@@ -191,7 +197,8 @@ impl BackendSpec {
                 super::reference::ReferenceBackend::seeded_with(
                     super::reference::DEFAULT_SEED,
                     self.fabric,
-                ),
+                )
+                .with_threads(self.threads),
             )),
             BackendKind::Pjrt => create_pjrt(artifact_dir),
             BackendKind::Auto => {
@@ -321,6 +328,7 @@ mod tests {
         let spec = BackendSpec {
             kind: BackendKind::Reference,
             fabric: FabricChoice::BitSliced,
+            threads: 2,
         };
         let mut b = spec.create("/nonexistent").expect("backend");
         let img = vec![0.25f32; IMG_ELEMS];

@@ -28,14 +28,20 @@
 //! fabric via [`PlannedConv`], writing SRAM weights exactly once), and
 //! every buffer the forward pass touches is owned by the session.
 //! [`Session::infer_batch_into`] then executes whole batches with the
-//! batch folded into the MVM row dimension and — after the first call
-//! at a given batch size — zero heap allocation.
+//! batch folded into the MVM row dimension — on the bit-sliced fabric
+//! too, where `PlannedConv::execute_batch_par` streams all images of
+//! the batch through one resident weight pass and shards the
+//! batch×pixel blocks across the session's [`ExecPool`] (width from
+//! `BackendSpec::threads` / `DDC_THREADS`; 1 = the serial path, and
+//! every width is byte-identical) — and, after the first call at a
+//! given batch size, zero heap allocation.
 
 use anyhow::{ensure, Result};
 
 use crate::fcc::{fcc_transform, FccWeights, FilterBank};
-use crate::mapping::exec::{ExecCtx, PlannedConv};
+use crate::mapping::exec::{ExecPool, PlannedConv};
 use crate::mapping::im2col::{im2col_into, out_dims};
+use crate::util::pool::resolve_threads;
 use crate::util::rng::Rng;
 
 use super::backend::{Backend, FabricChoice, Session, IMG_ELEMS, NUM_CLASSES};
@@ -184,6 +190,9 @@ pub struct ReferenceBackend {
     layers: Vec<RefLayer>,
     seed: u64,
     fabric: FabricChoice,
+    /// Requested pool width for fabric sessions (0 = `DDC_THREADS` env,
+    /// then 1 — see [`resolve_threads`]).
+    threads: usize,
 }
 
 impl ReferenceBackend {
@@ -225,7 +234,15 @@ impl ReferenceBackend {
             layers: vec![c1, RefLayer::Pool2, c2, RefLayer::Pool2, RefLayer::Gap, fc],
             seed,
             fabric,
+            threads: 0,
         }
+    }
+
+    /// Set the execution-pool width planned sessions use on the
+    /// bit-sliced fabric (0 = resolve from `DDC_THREADS`, then 1).
+    pub fn with_threads(mut self, threads: usize) -> ReferenceBackend {
+        self.threads = threads;
+        self
     }
 
     pub fn seed(&self) -> u64 {
@@ -240,7 +257,7 @@ impl ReferenceBackend {
     /// without boxing (test/bench convenience; [`Backend::prepare`]
     /// wraps this).
     pub fn plan(&self) -> Result<ReferenceSession> {
-        ReferenceSession::plan(&self.layers, self.fabric)
+        ReferenceSession::plan(&self.layers, self.fabric, self.threads)
     }
 }
 
@@ -281,14 +298,21 @@ pub struct ReferenceSession {
     raw: Vec<i32>,
     /// Dense FCC stored-path partial sums, `[batch * P, cout/2]`.
     psum: Vec<i32>,
-    /// Fabric conv raw accumulators for one image, `[P, cout]`.
+    /// Fabric conv raw accumulators for the whole batch,
+    /// `[batch * P, cout]`.
     out64: Vec<i64>,
-    /// Fabric executor scratch.
-    ctx: ExecCtx,
+    /// Fabric execution pool: shared staging + per-lane scratch, kept
+    /// warm for the session's lifetime (width 1 when no layer runs on
+    /// the fabric).
+    pool: ExecPool,
 }
 
 impl ReferenceSession {
-    fn plan(layers: &[RefLayer], fabric: FabricChoice) -> Result<ReferenceSession> {
+    fn plan(
+        layers: &[RefLayer],
+        fabric: FabricChoice,
+        threads: usize,
+    ) -> Result<ReferenceSession> {
         let mut planned = Vec::with_capacity(layers.len());
         // walk the activation dims so fabric plans know their geometry
         let (mut h, mut w, mut c) = (32usize, 32usize, 3usize);
@@ -350,6 +374,12 @@ impl ReferenceSession {
             }
         }
         ensure!(head_cout.is_some(), "classifier head missing");
+        // a parallel pool only helps layers that run on the fabric;
+        // dense-only sessions keep the width-1 (no threads) pool
+        let any_fabric = planned
+            .iter()
+            .any(|l| matches!(l, SessionLayer::ConvFabric { .. }));
+        let width = if any_fabric { resolve_threads(threads) } else { 1 };
         Ok(ReferenceSession {
             layers: planned,
             act: Vec::new(),
@@ -358,8 +388,14 @@ impl ReferenceSession {
             raw: Vec::new(),
             psum: Vec::new(),
             out64: Vec::new(),
-            ctx: ExecCtx::new(),
+            pool: ExecPool::new(width),
         })
+    }
+
+    /// The execution-pool width this session shards fabric convs
+    /// across (1 = serial; dense-only sessions are always 1).
+    pub fn pool_width(&self) -> usize {
+        self.pool.width()
     }
 
     /// Sum of SRAM weight writes across all fabric-planned layers
@@ -410,7 +446,7 @@ impl Session for ReferenceSession {
             raw,
             psum,
             out64,
-            ctx,
+            pool,
         } = self;
         // quantize the whole batch onto the INT8 activation grid.
         // Throughout this pass, staging buffers are resize()d without
@@ -471,15 +507,14 @@ impl Session for ReferenceSession {
                     let pixels = oh * ow;
                     let cout = plan.out_channels();
                     act_next.resize(batch * pixels * cout, 0);
-                    out64.resize(pixels * cout, 0); // execute fills it
-                    for bi in 0..batch {
-                        plan.execute(&act[bi * h * w * c..(bi + 1) * h * w * c], ctx, out64);
-                        for (dst, &v) in act_next[bi * pixels * cout..(bi + 1) * pixels * cout]
-                            .iter_mut()
-                            .zip(out64.iter())
-                        {
-                            *dst = requant_relu(v, *shift);
-                        }
+                    out64.resize(batch * pixels * cout, 0); // execute fills it
+                    // one batched pass per resident weight load: every
+                    // image of the batch streams past the weights while
+                    // they are hot (the ping-pong-buffer analogue), and
+                    // the batch×pixel blocks shard across the pool
+                    plan.execute_batch_par(&act[..batch * h * w * c], batch, pool, out64);
+                    for (dst, &v) in act_next.iter_mut().zip(out64.iter()) {
+                        *dst = requant_relu(v, *shift);
                     }
                     std::mem::swap(act, act_next);
                     h = oh;
@@ -718,6 +753,61 @@ mod tests {
         let a: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect();
         let b: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect();
         assert_ne!(be.infer_batch(&a, 1).unwrap(), be.infer_batch(&b, 1).unwrap());
+    }
+
+    #[test]
+    fn threaded_fabric_sessions_are_bit_identical() {
+        // pool widths must never change logits: every (pass, block)
+        // unit writes a disjoint output slice
+        let mut rng = Rng::new(21);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+        let mut want = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+            .with_threads(1)
+            .infer_batch(&x, batch)
+            .unwrap();
+        for threads in [2usize, 4] {
+            let be = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+                .with_threads(threads);
+            let session = be.plan().unwrap();
+            assert_eq!(session.pool_width(), threads);
+            let mut s = session;
+            let mut out = vec![0f32; batch * NUM_CLASSES];
+            s.infer_batch_into(&x, batch, &mut out).unwrap();
+            assert_eq!(out, want, "fabric logits drifted at {threads} threads");
+            want = out;
+        }
+    }
+
+    #[test]
+    fn batched_fabric_session_equals_per_image() {
+        // the session-batching path (one resident pass per batch) must
+        // equal feeding the same session one image at a time
+        let mut rng = Rng::new(22);
+        let batch = 4;
+        let x: Vec<f32> = (0..batch * IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+        let be = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+            .with_threads(2);
+        let mut s = be.plan().unwrap();
+        let mut batched = vec![0f32; batch * NUM_CLASSES];
+        s.infer_batch_into(&x, batch, &mut batched).unwrap();
+        let mut single = vec![0f32; NUM_CLASSES];
+        for bi in 0..batch {
+            s.infer_batch_into(&x[bi * IMG_ELEMS..(bi + 1) * IMG_ELEMS], 1, &mut single)
+                .unwrap();
+            assert_eq!(
+                &batched[bi * NUM_CLASSES..(bi + 1) * NUM_CLASSES],
+                single.as_slice(),
+                "image {bi} drifted between batched and per-image sessions"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_sessions_never_spin_up_a_pool() {
+        let be = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::DenseReference)
+            .with_threads(8);
+        assert_eq!(be.plan().unwrap().pool_width(), 1);
     }
 
     #[test]

@@ -1,0 +1,533 @@
+//! Hand-rolled work-stealing thread pool for the host-parallel
+//! executors (ROADMAP "Parallelize pixel blocks") — offline deps only,
+//! so no rayon/crossbeam: everything here is std.
+//!
+//! # Shape
+//!
+//! A [`WorkPool`] of width `N` owns `N - 1` parked worker threads; the
+//! caller of [`WorkPool::run`] is always lane 0, so width 1 spawns no
+//! threads and runs the units inline — the serial path *is* the
+//! degenerate pool.
+//!
+//! [`WorkPool::run`] executes `f(lane, unit)` for every `unit in
+//! 0..units` exactly once, with a **scoped** borrow: `f` may capture
+//! non-`'static` references (the resident `PlannedConv`, the im2col
+//! staging, the output slice) because `run` does not return until every
+//! worker has finished the job — the closure outlives all uses by
+//! construction, no `Arc`/`'static` gymnastics required.
+//!
+//! # Work distribution
+//!
+//! Each lane owns a half-open index range packed into one `AtomicU64`
+//! (`next` in the high half, `end` in the low half).  Lanes pop from
+//! the front of their own range; a lane whose range is empty steals the
+//! *upper half* of the richest victim's range with a single CAS
+//! (chase-lev in spirit, but over index ranges instead of deques — the
+//! work units are dense integers, so no buffer is needed at all).  A
+//! range holding one last unit is never stolen: its owner is by
+//! construction still draining it, and leaving the tail avoids the
+//! two-thieves-one-unit CAS storm.
+//!
+//! # Allocation discipline
+//!
+//! The dispatch path allocates nothing: job hand-off is a data pointer
+//! plus a monomorphized trampoline stored in a pre-existing slot,
+//! ranges are pre-sized atomics, and wake-up is a futex-backed
+//! `Condvar`.  This is what keeps the steady-state zero-alloc contract
+//! of `Session::infer_batch_into` intact at pool widths > 1
+//! (`tests/alloc_steady_state.rs`).
+
+use std::any::Any;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Hard ceiling on pool width (range indices are packed into u32
+/// halves and lane scans are linear; 64 lanes is far beyond any
+/// geometry this repo simulates).
+pub const MAX_THREADS: usize = 64;
+
+/// Resolve a requested pool width: explicit `requested >= 1` wins,
+/// `0` means "unset" and falls back to the `DDC_THREADS` environment
+/// variable, then to 1 (the serial path).  The result is clamped to
+/// `1..=`[`MAX_THREADS`].
+pub fn resolve_threads(requested: usize) -> usize {
+    let n = if requested > 0 {
+        requested
+    } else {
+        std::env::var("DDC_THREADS")
+            .ok()
+            .and_then(|v| parse_threads_var(&v))
+            .unwrap_or(1)
+    };
+    n.clamp(1, MAX_THREADS)
+}
+
+/// Parse a `DDC_THREADS` value: a positive integer (clamping happens in
+/// [`resolve_threads`]); anything else is ignored.
+fn parse_threads_var(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n),
+        _ => None,
+    }
+}
+
+/// A raw `*mut T` asserting that cross-thread access is externally
+/// synchronized: every worker touches a disjoint set of indices (its
+/// own lane slot, or the disjoint output region of its work unit).
+/// The pool's barrier (`run` returns only after all lanes finish)
+/// sequences those writes before the caller reads them.
+pub struct SharedMut<T>(pub *mut T);
+
+// manual impls: a derive would demand `T: Copy`, but copying the
+// *pointer* is always fine
+impl<T> Clone for SharedMut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for SharedMut<T> {}
+
+unsafe impl<T: Send> Send for SharedMut<T> {}
+unsafe impl<T: Send> Sync for SharedMut<T> {}
+
+/// Type-erased job: closure data pointer + monomorphized trampoline.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize, usize),
+}
+
+// SAFETY: the pointer is only dereferenced while `run` blocks the
+// owning thread, so the closure it points at is alive and `Sync`.
+unsafe impl Send for Job {}
+
+unsafe fn trampoline<F: Fn(usize, usize) + Sync>(data: *const (), lane: usize, unit: usize) {
+    (*(data as *const F))(lane, unit)
+}
+
+struct State {
+    /// Bumped once per job; workers use it to tell jobs apart.
+    epoch: u64,
+    job: Option<Job>,
+    /// Worker lanes still inside the current job.
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Per-lane index range, packed `(next << 32) | end`.
+    ranges: Vec<AtomicU64>,
+    /// Set when any lane's closure panicked during the current job;
+    /// `run` converts it into a caller-side panic after the barrier.
+    panicked: AtomicBool,
+}
+
+#[inline]
+fn pack(next: u32, end: u32) -> u64 {
+    ((next as u64) << 32) | end as u64
+}
+
+#[inline]
+fn unpack(v: u64) -> (u32, u32) {
+    ((v >> 32) as u32, v as u32)
+}
+
+/// Pop the front unit of a lane's own range.
+fn pop(range: &AtomicU64) -> Option<usize> {
+    let mut cur = range.load(Ordering::Acquire);
+    loop {
+        let (next, end) = unpack(cur);
+        if next >= end {
+            return None;
+        }
+        match range.compare_exchange_weak(
+            cur,
+            pack(next + 1, end),
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => return Some(next as usize),
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Steal the upper half of a victim's range (leaving the lower half,
+/// which the victim pops from).  Returns the stolen `(start, end)`.
+/// A single remaining unit is left to its owner — see the module docs.
+fn steal(victim: &AtomicU64) -> Option<(u32, u32)> {
+    let mut cur = victim.load(Ordering::Acquire);
+    loop {
+        let (next, end) = unpack(cur);
+        if end.saturating_sub(next) < 2 {
+            return None;
+        }
+        let mid = next + (end - next) / 2;
+        match victim.compare_exchange_weak(
+            cur,
+            pack(next, mid),
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => return Some((mid, end)),
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// One lane's share of a job: drain own range, then steal halves from
+/// the richest victim until every range is empty.
+fn run_share(shared: &Shared, lane: usize, job: Job) {
+    loop {
+        while let Some(unit) = pop(&shared.ranges[lane]) {
+            // SAFETY: `run` keeps the closure alive until all lanes
+            // finish; `Job` is only ever built from a `Sync` closure.
+            unsafe { (job.call)(job.data, lane, unit) };
+        }
+        // own range empty: pick the victim with the most work left
+        let mut victim = lane;
+        let mut victim_remaining = 0u32;
+        for (v, range) in shared.ranges.iter().enumerate() {
+            if v == lane {
+                continue;
+            }
+            let (next, end) = unpack(range.load(Ordering::Acquire));
+            let remaining = end.saturating_sub(next);
+            if remaining > victim_remaining {
+                victim_remaining = remaining;
+                victim = v;
+            }
+        }
+        if victim_remaining == 0 {
+            // every range was empty at scan time; ranges only drain, so
+            // (modulo in-flight steals, which move work to live lanes)
+            // the job is done for this lane
+            return;
+        }
+        match steal(&shared.ranges[victim]) {
+            Some((s, e)) => shared.ranges[lane].store(pack(s, e), Ordering::Release),
+            // nothing stealable (single-unit tails, or we lost the
+            // race): let the owners run instead of burning the core on
+            // a tight rescan loop while the tail drains
+            None => std::thread::yield_now(),
+        }
+        // rescan from the top
+    }
+}
+
+/// [`run_share`] behind a panic guard.  A panicking closure must never
+/// unwind past the job barrier (other lanes still hold the raw job
+/// pointer), and a dead lane must not strand its remaining units — a
+/// single-unit range is unstealable by design, so the survivors would
+/// otherwise spin on it forever.  On panic: abandon this lane's range,
+/// raise the shared flag, and hand the payload back to the caller.
+fn run_share_guarded(shared: &Shared, lane: usize, job: Job) -> Option<Box<dyn Any + Send>> {
+    match panic::catch_unwind(AssertUnwindSafe(|| run_share(shared, lane, job))) {
+        Ok(()) => None,
+        Err(payload) => {
+            shared.ranges[lane].store(0, Ordering::Release);
+            shared.panicked.store(true, Ordering::Release);
+            Some(payload)
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, lane: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    if let Some(job) = st.job {
+                        seen_epoch = st.epoch;
+                        break job;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // worker panics are flagged (run() re-raises them on the
+        // caller) — this lane must still decrement `active`, or the
+        // barrier would never open
+        let _ = run_share_guarded(&shared, lane, job);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// The pool.  See the module docs for the execution model.
+pub struct WorkPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    width: usize,
+}
+
+impl WorkPool {
+    /// Build a pool of `threads` total lanes (caller included), so
+    /// `threads - 1` worker threads are spawned.  `threads` is clamped
+    /// to `1..=`[`MAX_THREADS`].
+    pub fn new(threads: usize) -> WorkPool {
+        let width = threads.clamp(1, MAX_THREADS);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            ranges: (0..width).map(|_| AtomicU64::new(0)).collect(),
+            panicked: AtomicBool::new(false),
+        });
+        let handles = (1..width)
+            .map(|lane| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("ddc-pool-{lane}"))
+                    .spawn(move || worker_loop(shared, lane))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkPool {
+            shared,
+            handles,
+            width,
+        }
+    }
+
+    /// Total lanes, caller included.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Execute `f(lane, unit)` for every `unit in 0..units` exactly
+    /// once across the pool's lanes, blocking until all units are done.
+    /// `lane < width()` identifies the executing lane, so callers can
+    /// hand each lane its own scratch state; which lane runs which unit
+    /// is *not* deterministic — callers must make units independent
+    /// (disjoint output regions), which also makes results identical at
+    /// every pool width.
+    ///
+    /// Takes `&mut self`: a pool runs one job at a time.  The
+    /// steady-state path performs no heap allocation.
+    ///
+    /// # Panics
+    ///
+    /// If `f` panics on any lane the panic is re-raised here — but
+    /// only *after* every lane has left the job, so no lane ever
+    /// touches a dead closure or a freed output buffer.  The pool
+    /// itself stays usable afterwards.
+    pub fn run<F: Fn(usize, usize) + Sync>(&mut self, units: usize, f: &F) {
+        if units == 0 {
+            return;
+        }
+        if self.width == 1 {
+            for unit in 0..units {
+                f(0, unit);
+            }
+            return;
+        }
+        assert!(units <= u32::MAX as usize, "unit count overflows the packed ranges");
+        // carve the initial even split (remainder to the low lanes)
+        let per = units / self.width;
+        let extra = units % self.width;
+        let mut start = 0usize;
+        for (lane, range) in self.shared.ranges.iter().enumerate() {
+            let len = per + usize::from(lane < extra);
+            range.store(pack(start as u32, (start + len) as u32), Ordering::Release);
+            start += len;
+        }
+        let job = Job {
+            data: f as *const F as *const (),
+            call: trampoline::<F>,
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job);
+            st.active = self.width - 1;
+            self.shared.work_cv.notify_all();
+        }
+        // the caller is lane 0, panic-guarded like every other lane:
+        // we must reach the barrier below before unwinding, because
+        // the workers still hold the raw job pointer until it opens
+        let caller_panic = run_share_guarded(&self.shared, 0, job);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active != 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        drop(st);
+        // swap unconditionally: a caller-lane panic also raised the
+        // flag, and it must not leak into the next job
+        let lane_panicked = self.shared.panicked.swap(false, Ordering::AcqRel);
+        if let Some(payload) = caller_panic {
+            panic::resume_unwind(payload);
+        }
+        if lane_panicked {
+            panic!("a pool worker lane panicked while executing the job");
+        }
+    }
+}
+
+impl Drop for WorkPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn every_unit_runs_exactly_once() {
+        for width in [1usize, 2, 3, 8] {
+            let mut pool = WorkPool::new(width);
+            let units = 257; // odd + > width so the split is uneven
+            let hits: Vec<AtomicUsize> = (0..units).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(units, &|_, u| {
+                hits[u].fetch_add(1, Ordering::Relaxed);
+            });
+            for (u, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "unit {u} at width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_are_in_range_and_caller_is_lane_zero() {
+        let mut pool = WorkPool::new(4);
+        let width = pool.width();
+        let bad = AtomicUsize::new(0);
+        pool.run(100, &|lane, _| {
+            if lane >= width {
+                bad.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(bad.load(Ordering::Relaxed), 0);
+        // width 1 runs inline on the caller: lane must always be 0
+        let mut serial = WorkPool::new(1);
+        serial.run(10, &|lane, _| assert_eq!(lane, 0));
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs_of_different_sizes() {
+        let mut pool = WorkPool::new(3);
+        for units in [1usize, 5, 64, 2, 0, 129] {
+            let count = AtomicUsize::new(0);
+            pool.run(units, &|_, _| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), units);
+        }
+    }
+
+    #[test]
+    fn uneven_unit_costs_still_cover_everything() {
+        // front-loaded cost: lane 0's initial range is far more
+        // expensive, so the other lanes must steal to finish
+        let mut pool = WorkPool::new(4);
+        let units = 64;
+        let hits: Vec<AtomicUsize> = (0..units).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(units, &|_, u| {
+            let spins: u64 = if u < 8 { 20_000 } else { 10 };
+            let mut acc = 0u64;
+            for i in 0..spins {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+            hits[u].fetch_add(1, Ordering::Relaxed);
+        });
+        for (u, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "unit {u}");
+        }
+    }
+
+    #[test]
+    fn disjoint_writes_through_shared_mut() {
+        let mut pool = WorkPool::new(4);
+        let mut out = vec![0u64; 1000];
+        let base = SharedMut(out.as_mut_ptr());
+        pool.run(out.len(), &|_, u| {
+            // SAFETY: unit indices are unique, so writes are disjoint
+            unsafe { *base.0.add(u) = u as u64 * 3 };
+        });
+        for (u, &v) in out.iter().enumerate() {
+            assert_eq!(v, u as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn panicking_job_neither_hangs_nor_poisons_the_pool() {
+        // whichever lane hits the panicking unit, run() must re-raise
+        // after the barrier (no deadlock on a dead worker, no unwind
+        // past live raw job pointers) and the pool must stay usable
+        let mut pool = WorkPool::new(4);
+        for _ in 0..2 {
+            let result = panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.run(64, &|_, u| {
+                    if u == 13 {
+                        panic!("boom");
+                    }
+                });
+            }));
+            assert!(result.is_err(), "panic in a job unit must propagate");
+            // the same pool still runs clean jobs to completion
+            let count = AtomicUsize::new(0);
+            pool.run(100, &|_, _| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 100, "pool poisoned after panic");
+        }
+    }
+
+    #[test]
+    fn range_pack_roundtrip_and_steal_split() {
+        assert_eq!(unpack(pack(7, 19)), (7, 19));
+        let r = AtomicU64::new(pack(0, 10));
+        let (s, e) = steal(&r).expect("steal half");
+        assert_eq!((s, e), (5, 10));
+        assert_eq!(unpack(r.load(Ordering::Relaxed)), (0, 5));
+        // a single remaining unit is left to its owner
+        let one = AtomicU64::new(pack(4, 5));
+        assert!(steal(&one).is_none());
+        assert_eq!(pop(&one), Some(4));
+        assert_eq!(pop(&one), None);
+    }
+
+    #[test]
+    fn resolve_threads_explicit_and_clamped() {
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(7), 7);
+        assert_eq!(resolve_threads(10_000), MAX_THREADS);
+        // the env fallback parser (resolve_threads(0) itself would read
+        // the live environment — racy under the parallel test harness)
+        assert_eq!(parse_threads_var("4"), Some(4));
+        assert_eq!(parse_threads_var(" 2 "), Some(2));
+        assert_eq!(parse_threads_var("0"), None);
+        assert_eq!(parse_threads_var("lots"), None);
+    }
+}

@@ -4,8 +4,13 @@
 //! A counting global allocator wraps the system allocator; after a
 //! warm-up flush has grown every session buffer to its steady-state
 //! size, repeated `Session::infer_batch_into` calls must perform ZERO
-//! heap allocations — on both the dense reference fabric and the
-//! bit-sliced planned fabric.
+//! heap allocations — on the dense reference fabric, the bit-sliced
+//! planned fabric, and the bit-sliced fabric at pool width > 1 (PR 4):
+//! the parallel executors pre-grow every lane's scratch on the caller
+//! thread and hand work off through pre-sized atomics + a condvar, so
+//! parallel dispatch adds no steady-state allocations either (the
+//! counter is process-global, so worker-thread allocations would be
+//! caught).
 //!
 //! This file deliberately contains a single `#[test]`: the counter is
 //! process-global, and a concurrently running test would pollute the
@@ -52,8 +57,17 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 #[test]
 fn steady_state_infer_batch_into_is_allocation_free() {
     const IMG: usize = 32 * 32 * 3;
-    for fabric in [FabricChoice::DenseReference, FabricChoice::BitSliced] {
-        let backend = ReferenceBackend::seeded_with(0xDDC0, fabric);
+    // (fabric, pool width): width 4 exercises the parallel dispatch
+    // path — per-lane ExecCtx clones kept warm, work handed off
+    // allocation-free (explicit widths, not DDC_THREADS, so the
+    // measured configuration never depends on the environment)
+    let cases = [
+        (FabricChoice::DenseReference, 1usize),
+        (FabricChoice::BitSliced, 1),
+        (FabricChoice::BitSliced, 4),
+    ];
+    for (fabric, threads) in cases {
+        let backend = ReferenceBackend::seeded_with(0xDDC0, fabric).with_threads(threads);
         let mut session = backend.plan().expect("plan");
         let batch = 4;
         let mut rng = Rng::new(77);
@@ -73,7 +87,7 @@ fn steady_state_infer_batch_into_is_allocation_free() {
         assert_eq!(
             after - before,
             0,
-            "steady-state infer_batch_into allocated on the {fabric:?} path"
+            "steady-state infer_batch_into allocated on the {fabric:?} path at {threads} threads"
         );
         // the outputs are real (not an accidentally-elided call)
         assert!(out.iter().any(|&v| v != 0.0), "logits all zero on {fabric:?}");

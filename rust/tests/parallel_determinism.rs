@@ -1,0 +1,194 @@
+//! Integration: parallel execution is byte-identical to serial (PR 4
+//! acceptance criterion).
+//!
+//! `execute_par` / `execute_batch_par` shard `(pass, pixel-block)` work
+//! units across an `ExecPool`; because every unit writes a disjoint
+//! output slice and reads only shared staging, the result must be
+//! byte-identical to the serial `execute` at *every* pool width — for
+//! both conv executors, every mapping mode (Regular/Double computing ×
+//! Combined/Split grouping), and the whole session stack.  This suite
+//! also runs under `--features scalar-fabric` in CI, covering both
+//! fabric implementations.
+
+use ddc_pim::fcc::{fcc_transform, FilterBank};
+use ddc_pim::mapping::exec::{ExecCtx, ExecPool, PlannedConv, PlannedDwConv};
+use ddc_pim::runtime::{
+    reference::ReferenceBackend, Backend, FabricChoice, Session, IMG_ELEMS, NUM_CLASSES,
+};
+use ddc_pim::util::rng::Rng;
+
+const WIDTHS: [usize; 3] = [1, 2, 8];
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.int8() as i32).collect()
+}
+
+/// Serial baseline for a std/pw plan.
+fn serial(plan: &PlannedConv, input: &[i32]) -> Vec<i64> {
+    let mut ctx = ExecCtx::new();
+    let mut out = vec![0i64; plan.out_len()];
+    plan.execute(input, &mut ctx, &mut out);
+    out
+}
+
+#[test]
+fn std_fcc_double_combined_pinned_across_widths() {
+    // Double computing × Combined grouping, multi-pass + multi-block
+    // (18x18 = 324 pixels > one 64-pixel block; 132 filters force a
+    // second weight-reload pass)
+    let mut rng = Rng::new(400);
+    let (h, w, c, k, n) = (18, 18, 40, 1, 132);
+    let input = rand_vec(&mut rng, h * w * c);
+    let bank = FilterBank::new(rand_vec(&mut rng, n * c), n, c);
+    let fcc = fcc_transform(&bank);
+    let plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+    assert!(plan.load_passes() >= 2, "shape was meant to force a reload pass");
+    let want = serial(&plan, &input);
+    for width in WIDTHS {
+        let mut pool = ExecPool::new(width);
+        let mut got = vec![-7i64; plan.out_len()]; // dirty sentinel
+        plan.execute_par(&input, &mut pool, &mut got);
+        assert_eq!(got, want, "std_fcc diverged at width {width}");
+    }
+}
+
+#[test]
+fn std_regular_pinned_across_widths() {
+    // Regular computing (PIM baseline): Q path only
+    let mut rng = Rng::new(401);
+    let (h, w, c, k, n) = (12, 12, 3, 3, 5);
+    let input = rand_vec(&mut rng, h * w * c);
+    let filters = rand_vec(&mut rng, n * k * k * c);
+    let plan = PlannedConv::std_regular(h, w, c, &filters, n, k, 1);
+    let want = serial(&plan, &input);
+    for width in WIDTHS {
+        let mut pool = ExecPool::new(width);
+        let mut got = vec![-7i64; plan.out_len()];
+        plan.execute_par(&input, &mut pool, &mut got);
+        assert_eq!(got, want, "std_regular diverged at width {width}");
+    }
+}
+
+#[test]
+fn dw_all_mappings_pinned_across_widths() {
+    // DBIS (Double × Combined), reconfig (Double × Split) and the
+    // regular dw baseline, 144 pixels = 3 blocks
+    let mut rng = Rng::new(402);
+    let (h, w, c, k) = (14, 14, 16, 3);
+    let input = rand_vec(&mut rng, h * w * c);
+    let bank = FilterBank::new(rand_vec(&mut rng, c * k * k), c, k * k);
+    let fcc = fcc_transform(&bank);
+    let filters = rand_vec(&mut rng, c * k * k);
+    let plans = [
+        ("dbis", PlannedDwConv::fcc(h, w, c, &fcc, k, 1, false)),
+        ("reconfig", PlannedDwConv::fcc(h, w, c, &fcc, k, 1, true)),
+        ("regular", PlannedDwConv::regular(h, w, c, &filters, k, 1)),
+    ];
+    for (name, plan) in &plans {
+        let mut ctx = ExecCtx::new();
+        let mut want = vec![0i64; plan.out_len()];
+        plan.execute(&input, &mut ctx, &mut want);
+        for width in WIDTHS {
+            let mut pool = ExecPool::new(width);
+            let mut got = vec![-7i64; plan.out_len()];
+            plan.execute_par(&input, &mut pool, &mut got);
+            assert_eq!(&got, &want, "dw {name} diverged at width {width}");
+        }
+    }
+}
+
+#[test]
+fn batched_execute_equals_per_image_across_widths() {
+    // the session-batching unit: batch folded into the pixel dimension
+    // must equal `batch` separate executes, at every width
+    let mut rng = Rng::new(403);
+    let (h, w, c, k, n, batch) = (10, 10, 3, 3, 8, 5);
+    let bank = FilterBank::new(rand_vec(&mut rng, n * k * k * c), n, k * k * c);
+    let fcc = fcc_transform(&bank);
+    let plan = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+    let img = h * w * c;
+    let inputs = rand_vec(&mut rng, batch * img);
+    let mut ctx = ExecCtx::new();
+    let mut want = vec![0i64; batch * plan.out_len()];
+    for bi in 0..batch {
+        plan.execute(
+            &inputs[bi * img..(bi + 1) * img],
+            &mut ctx,
+            &mut want[bi * plan.out_len()..(bi + 1) * plan.out_len()],
+        );
+    }
+    for width in WIDTHS {
+        let mut pool = ExecPool::new(width);
+        let mut got = vec![-7i64; batch * plan.out_len()];
+        plan.execute_batch_par(&inputs, batch, &mut pool, &mut got);
+        assert_eq!(got, want, "batched execute diverged at width {width}");
+    }
+}
+
+#[test]
+fn session_logits_pinned_across_widths_and_fabrics() {
+    // end to end: the full session stack at every pool width must match
+    // the width-1 logits, on both fabric choices (the dense path never
+    // uses the pool; pinning it proves the knob is harmless there)
+    let mut rng = Rng::new(404);
+    let batch = 3;
+    let x: Vec<f32> = (0..batch * IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+    for fabric in [FabricChoice::DenseReference, FabricChoice::BitSliced] {
+        let want = ReferenceBackend::seeded_with(0xDDC0, fabric)
+            .with_threads(1)
+            .infer_batch(&x, batch)
+            .unwrap();
+        for width in WIDTHS {
+            let got = ReferenceBackend::seeded_with(0xDDC0, fabric)
+                .with_threads(width)
+                .infer_batch(&x, batch)
+                .unwrap();
+            assert_eq!(got, want, "{fabric:?} logits drifted at width {width}");
+        }
+    }
+}
+
+#[test]
+fn batched_session_equals_per_image_sessions() {
+    // ROADMAP session-batching item: one batched infer through the
+    // fabric session == the same images one at a time, and both equal
+    // the dense reference logits at these layer sizes
+    let mut rng = Rng::new(405);
+    let batch = 4;
+    let x: Vec<f32> = (0..batch * IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+    let be = ReferenceBackend::seeded_with(0xDDC0, FabricChoice::BitSliced).with_threads(4);
+    let mut session = be.plan().unwrap();
+    let mut batched = vec![0f32; batch * NUM_CLASSES];
+    session.infer_batch_into(&x, batch, &mut batched).unwrap();
+    let mut single = vec![0f32; NUM_CLASSES];
+    for bi in 0..batch {
+        session
+            .infer_batch_into(&x[bi * IMG_ELEMS..(bi + 1) * IMG_ELEMS], 1, &mut single)
+            .unwrap();
+        assert_eq!(
+            &batched[bi * NUM_CLASSES..(bi + 1) * NUM_CLASSES],
+            single.as_slice(),
+            "image {bi}: batched fabric session drifted from per-image"
+        );
+    }
+    let dense = ReferenceBackend::seeded_with(0xDDC0, FabricChoice::DenseReference)
+        .infer_batch(&x, batch)
+        .unwrap();
+    assert_eq!(batched, dense, "fabric batch drifted from the dense kernel");
+}
+
+#[test]
+fn parallel_sessions_keep_weights_resident() {
+    // the residency invariant survives pool dispatch: executes at any
+    // width perform zero SRAM weight writes
+    let be = ReferenceBackend::seeded_with(0xDDC0, FabricChoice::BitSliced).with_threads(8);
+    let mut session = be.plan().unwrap();
+    let written = session.fabric_weight_writes();
+    assert!(written > 0, "bitsliced plan must write conv weights");
+    let x = vec![0.4f32; 2 * IMG_ELEMS];
+    let mut out = vec![0f32; 2 * NUM_CLASSES];
+    for _ in 0..3 {
+        session.infer_batch_into(&x, 2, &mut out).unwrap();
+    }
+    assert_eq!(session.fabric_weight_writes(), written, "parallel execute wrote weights");
+}
