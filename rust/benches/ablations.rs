@@ -1,19 +1,69 @@
 //! Ablation benches for the design choices DESIGN.md calls out (beyond
 //! the paper's own Fig. 13 ladder):
 //!
+//! * bit-sliced fabric compartment-count scaling (incl. the >64-lane
+//!   multi-word geometries the density argument is about, each
+//!   cross-checked against the scalar oracle before timing),
 //! * DRAM prefetch on/off (exposed stalls),
 //! * macro count scaling,
 //! * weight-memory capacity sensitivity,
 //! * batching policy for the serving path (latency/throughput trade).
+//!
+//! `--smoke` runs only the geometry sweep (CI's envelope smoke: the
+//! scaled-up configs must execute — and agree with the oracle — on
+//! every build).
 
+use ddc_pim::arch::lpu::Mode;
+use ddc_pim::arch::pim_core::MacroGeometry;
+use ddc_pim::arch::pim_macro::{MvmScratch, PimMacro};
+use ddc_pim::arch::reconfig::Grouping;
 use ddc_pim::config::{ArchConfig, SimConfig};
 use ddc_pim::coordinator::scheduler::{schedule, total_stall};
 use ddc_pim::mapping::plan_network;
 use ddc_pim::model::zoo;
 use ddc_pim::sim::simulate_network;
-use ddc_pim::util::benchkit::report;
+use ddc_pim::util::benchkit::{bench, report};
+use ddc_pim::util::rng::Rng;
+
+/// Row-step cost across macro compartment counts on the functional
+/// bit-sliced fabric.  32/64 lanes pack into one plane word; 96/128
+/// take the multi-word path (rejected outright before the multi-word
+/// `WeightPlanes`).  Each geometry is proven bit-true against the
+/// scalar oracle before it is timed.
+fn fabric_geometry_sweep(iters: u32) {
+    println!("== ablation: fabric compartment count (bit-true row-step) ==");
+    let mut rng = Rng::new(5);
+    for lanes in [32usize, 64, 96, 128] {
+        let mut mac = PimMacro::with_geometry(MacroGeometry::with_compartments(lanes));
+        for cmp in 0..lanes {
+            for slot in 0..2 {
+                mac.load_weight(cmp, 0, slot, rng.int8() as i32);
+            }
+        }
+        let xs: Vec<i32> = (0..lanes).map(|_| rng.int8() as i32).collect();
+        let mut scratch = MvmScratch::new();
+        mac.mvm_row_into(0, &xs, &xs, Mode::Double, Grouping::Combined, &mut scratch);
+        assert_eq!(
+            scratch.to_vecs(),
+            mac.mvm_row_scalar(0, &xs, &xs, Mode::Double, Grouping::Combined),
+            "bitsliced row-step diverged from the scalar oracle at {lanes} lanes"
+        );
+        let r = bench(&format!("fabric.c{lanes}.mvm_row"), 10, iters, || {
+            mac.mvm_row_into(0, &xs, &xs, Mode::Double, Grouping::Combined, &mut scratch);
+            std::hint::black_box(scratch.psum(0, 0));
+        });
+        report(&format!("fabric.c{lanes}.ns_per_lane"), r.mean_ns / lanes as f64, "ns/lane");
+    }
+}
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    fabric_geometry_sweep(if smoke { 50 } else { 2000 });
+    if smoke {
+        println!("geometry smoke OK: multi-word envelope executes bit-true");
+        return;
+    }
+
     let net = zoo::mobilenet_v2();
     let sim = SimConfig::ddc_full();
 

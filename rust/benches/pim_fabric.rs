@@ -8,6 +8,7 @@
 //! for the bench trajectory (see `make bench`).
 
 use ddc_pim::arch::lpu::Mode;
+use ddc_pim::arch::pim_core::MacroGeometry;
 use ddc_pim::arch::pim_macro::{MvmScratch, PimMacro};
 use ddc_pim::arch::reconfig::Grouping;
 use ddc_pim::fcc::{fcc_transform, FilterBank};
@@ -64,6 +65,72 @@ fn main() {
         "mvm_row.regular.split.speedup_vs_scalar",
         slow_split.mean_ns / fast_split.mean_ns,
         "x",
+    );
+
+    // dense-weight Regular-mode baseline for the sparse-weight case
+    let dense_reg = s.bench("mvm_row.regular.combined", 10, 2000, || {
+        mac.mvm_row_into(0, &xs, &[], Mode::Regular, Grouping::Combined, &mut scratch);
+        std::hint::black_box(scratch.psum(0, 0));
+    });
+
+    // sparse stored weights, Q path: both slots hold {0, 1}, so 14 of
+    // the 16 stored Q planes (kw 1..7 of each slot) are all-zero and
+    // the nonzero summaries skip those adder-tree columns outright —
+    // the ≥50%-zero-weight-plane workload of the acceptance criterion
+    let mut sparse_q_mac = PimMacro::paper();
+    for cmp in 0..32 {
+        sparse_q_mac.load_weight(cmp, 0, 0, rng.below(2) as i32);
+        sparse_q_mac.load_weight(cmp, 0, 1, rng.below(2) as i32);
+    }
+    let sparse_reg = s.bench("mvm_row.sparse_w.regular.combined", 10, 2000, || {
+        sparse_q_mac.mvm_row_into(0, &xs, &[], Mode::Regular, Grouping::Combined, &mut scratch);
+        std::hint::black_box(scratch.psum(0, 0));
+    });
+    s.report(
+        "mvm_row.sparse_w.regular.speedup_vs_dense",
+        dense_reg.mean_ns / sparse_reg.mean_ns,
+        "x (14/16 Q planes dark)",
+    );
+
+    // polarity-split sparsity, Double mode: slot 0 holds {0, 1} (Q
+    // planes kw 1..7 dark), slot 1 holds {-1, -2} (Q̄ planes kw 1..7
+    // dark) — each polarity skips 7/8 of one slot's columns, proving
+    // the skip is tracked per polarity, not just on Q
+    let mut sparse_mixed_mac = PimMacro::paper();
+    for cmp in 0..32 {
+        sparse_mixed_mac.load_weight(cmp, 0, 0, rng.below(2) as i32);
+        sparse_mixed_mac.load_weight(cmp, 0, 1, -1 - rng.below(2) as i32);
+    }
+    let sparse_dbl = s.bench("mvm_row.sparse_w.double.combined", 10, 2000, || {
+        sparse_mixed_mac
+            .mvm_row_into(0, &xs, &xs, Mode::Double, Grouping::Combined, &mut scratch);
+        std::hint::black_box(scratch.psum(0, 0));
+    });
+    s.report(
+        "mvm_row.sparse_w.double.speedup_vs_dense",
+        fast.mean_ns / sparse_dbl.mean_ns,
+        "x (7/8 planes dark per polarity per slot)",
+    );
+
+    // scaled-up geometry: 128 compartments = 2 plane words per column
+    // (hard-rejected before the multi-word WeightPlanes)
+    let c128 = 128usize;
+    let mut wide_mac = PimMacro::with_geometry(MacroGeometry::with_compartments(c128));
+    for cmp in 0..c128 {
+        for slot in 0..2 {
+            wide_mac.load_weight(cmp, 0, slot, rng.int8() as i32);
+        }
+    }
+    let wide_xs: Vec<i32> = (0..c128).map(|_| rng.int8() as i32).collect();
+    let wide = s.bench("mvm_row.double.combined.c128", 10, 2000, || {
+        wide_mac
+            .mvm_row_into(0, &wide_xs, &wide_xs, Mode::Double, Grouping::Combined, &mut scratch);
+        std::hint::black_box(scratch.psum(0, 0));
+    });
+    s.report(
+        "mvm_row.c128_vs_c32.cost_ratio",
+        wide.mean_ns / fast.mean_ns,
+        "x time for 4x lanes",
     );
 
     // a full small conv layer through the functional path

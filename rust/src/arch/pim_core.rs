@@ -11,10 +11,12 @@
 //!
 //! * per-cell ([`Compartment`]/DBMU/6T) — the faithful circuit view used
 //!   by the scalar oracle ([`PimCore::compute_cycle`]) and readback;
-//! * per-bit-plane ([`WeightPlanes`]) — one `u64` word per
-//!   (row, slot, weight-bit) packing that bit across all compartments,
-//!   so the bitsliced hot path in [`super::pim_macro`] reduces a whole
-//!   adder-tree column with one AND + `count_ones`.
+//! * per-bit-plane ([`WeightPlanes`]) — one `[u64; ceil(cmps/64)]`
+//!   multi-word plane per (row, slot, weight-bit) packing that bit
+//!   across all compartments, plus per-word nonzero summaries of both
+//!   polarities, so the bitsliced hot path in [`super::pim_macro`]
+//!   reduces a whole adder-tree column with one AND + `count_ones` per
+//!   word — and skips the columns whose plane is dark.
 pub use super::sram::WeightPlanes;
 
 use super::compartment::{Compartment, CompartmentOut};
@@ -22,6 +24,49 @@ use super::lpu::Mode;
 
 /// Weight precision of a row slot (8 columns per INT8 weight).
 pub const WEIGHT_BITS: usize = 8;
+
+/// Macro geometry knob for planners and sessions: compartment (lane)
+/// count, rows, and per-compartment columns.  [`MacroGeometry::paper`]
+/// is the published 32×64×16 configuration; compartment counts above 64
+/// are packed as multi-word [`WeightPlanes`] by the bitsliced fabric,
+/// so the scaled-up configs of the density argument plan and execute
+/// like any other geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MacroGeometry {
+    pub compartments: usize,
+    pub rows: usize,
+    pub dbmus: usize,
+}
+
+impl MacroGeometry {
+    /// The published geometry: 32 compartments × 64 rows × 16 columns.
+    pub fn paper() -> Self {
+        MacroGeometry {
+            compartments: PimCore::PAPER_COMPARTMENTS,
+            rows: PimCore::PAPER_ROWS,
+            dbmus: PimCore::PAPER_DBMUS,
+        }
+    }
+
+    /// Paper rows/columns at a scaled compartment count.
+    pub fn with_compartments(compartments: usize) -> Self {
+        MacroGeometry {
+            compartments,
+            ..Self::paper()
+        }
+    }
+
+    /// Weight slots per row per compartment (2 for 16 columns).
+    pub fn slots(&self) -> usize {
+        self.dbmus / WEIGHT_BITS
+    }
+}
+
+impl Default for MacroGeometry {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
 
 /// One PIM core.
 #[derive(Debug, Clone)]
@@ -60,11 +105,12 @@ impl PimCore {
 
     /// A core at the paper geometry.
     pub fn paper() -> Self {
-        Self::new(
-            Self::PAPER_COMPARTMENTS,
-            Self::PAPER_ROWS,
-            Self::PAPER_DBMUS,
-        )
+        Self::with_geometry(MacroGeometry::paper())
+    }
+
+    /// A core at an explicit [`MacroGeometry`].
+    pub fn with_geometry(geom: MacroGeometry) -> Self {
+        Self::new(geom.compartments, geom.rows, geom.dbmus)
     }
 
     pub fn num_compartments(&self) -> usize {
@@ -171,25 +217,28 @@ mod tests {
     #[test]
     fn planes_stay_coherent_with_cells() {
         use crate::util::rng::Rng;
+        // 96 compartments = 2 plane words: the coherence walk crosses
+        // the word seam (cmp 64) as well as the partial last word
+        let (cmps, rows) = (96usize, 4usize);
         let mut rng = Rng::new(17);
-        let mut core = PimCore::new(8, 4, 16);
+        let mut core = PimCore::new(cmps, rows, 16);
         // random writes, including overwrites of the same (cmp, row, slot)
-        for _ in 0..200 {
-            let cmp = rng.below(8) as usize;
-            let row = rng.below(4) as usize;
+        for _ in 0..600 {
+            let cmp = rng.below(cmps as u64) as usize;
+            let row = rng.below(rows as u64) as usize;
             let slot = rng.below(2) as usize;
             core.write_weight(cmp, row, slot, rng.int8() as i32);
         }
         // every plane bit must equal the corresponding cell's Q
-        for row in 0..4 {
+        for row in 0..rows {
             for slot in 0..2 {
                 for kw in 0..WEIGHT_BITS {
-                    let plane = core.weight_planes().plane(row, slot, kw);
-                    for cmp in 0..8 {
+                    for cmp in 0..cmps {
+                        let plane = core.weight_planes().plane(row, slot, kw, cmp / 64);
                         let w = core.read_weight(cmp, row, slot);
                         let q = (w as u32 >> kw) & 1 == 1;
                         assert_eq!(
-                            (plane >> cmp) & 1 == 1,
+                            (plane >> (cmp % 64)) & 1 == 1,
                             q,
                             "plane/cell drift at cmp={cmp} row={row} slot={slot} kw={kw}"
                         );
@@ -197,5 +246,16 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn geometry_builds_matching_core() {
+        let geom = MacroGeometry::with_compartments(128);
+        assert_eq!(geom.slots(), 2);
+        let core = PimCore::with_geometry(geom);
+        assert_eq!(core.num_compartments(), 128);
+        assert_eq!(core.rows(), PimCore::PAPER_ROWS);
+        assert_eq!(core.weight_planes().nwords(), 2);
+        assert_eq!(MacroGeometry::default(), MacroGeometry::paper());
     }
 }

@@ -11,13 +11,18 @@
 //!
 //! Two implementations of the same semantics:
 //!
-//! * **bitsliced** (default hot path) — input bits are packed into one
-//!   `u64` word per bit-cycle (bit = compartment), weight bits come from
-//!   the precomputed [`WeightPlanes`][crate::arch::sram::WeightPlanes]
-//!   shadow, and every adder-tree column reduces to
-//!   `(plane & inputs).count_ones()`.  All-zero input bit-planes are
-//!   skipped outright — the software twin of the zero bit-column skip in
-//!   the bit-level-sparsity PIM lines of work.
+//! * **bitsliced** (default hot path) — input bits are packed into
+//!   `ceil(lanes/64)` `u64` words per bit-cycle (bit = compartment),
+//!   weight bits come from the precomputed multi-word
+//!   [`WeightPlanes`][crate::arch::sram::WeightPlanes] shadow, and every
+//!   adder-tree column reduces to `(plane & inputs).count_ones()` per
+//!   word.  Sparsity is skipped on *both* operands: all-zero input
+//!   bit-planes never enter the loop (value-level input skip), and the
+//!   per-word nonzero summaries of the stored planes drop dark
+//!   adder-tree columns — independently for the Q and Q̄ polarities,
+//!   because a Q plane with no stored 1s is a Q̄ plane that is *fully*
+//!   lit (the software twin of the zero bit-column skip in the
+//!   bit-level-sparsity PIM lines of work).
 //! * **scalar** ([`PimMacro::mvm_row_scalar`]) — the original per-cell
 //!   circuit walk, retained as the differential-testing oracle.  The
 //!   `scalar-fabric` cargo feature forces it as the `mvm_row_into`
@@ -26,7 +31,7 @@
 
 use super::lpu::Mode;
 use super::merge::bit_weight;
-use super::pim_core::{PimCore, WEIGHT_BITS};
+use super::pim_core::{MacroGeometry, PimCore, WEIGHT_BITS};
 use super::reconfig::{reduce, Grouping};
 
 /// Partial-sum pair for one (group, slot): the stored-filter psum (Q
@@ -45,10 +50,15 @@ pub struct PsumPair {
 #[derive(Debug, Clone, Default)]
 pub struct MvmScratch {
     psums: Vec<PsumPair>,
+    /// Packed input planes, plane-major: `[ki * nwords + word]`.
     inp_planes: Vec<u64>,
     inn_planes: Vec<u64>,
+    /// Per-(group, word) lane masks of the active grouping:
+    /// `[g * nwords + word]`.
+    gmasks: Vec<u64>,
     ngroups: usize,
     slots: usize,
+    nwords: usize,
 }
 
 impl MvmScratch {
@@ -56,25 +66,31 @@ impl MvmScratch {
         Self::default()
     }
 
-    /// Size for `ngroups * slots` psums and `input_bits` input planes,
-    /// zeroing all of them (allocation-free once capacity exists).
-    fn reset(&mut self, ngroups: usize, slots: usize, input_bits: usize) {
+    /// Size for `ngroups * slots` psums and `input_bits * nwords` input
+    /// plane words, zeroing all of them (allocation-free once capacity
+    /// exists).
+    fn reset(&mut self, ngroups: usize, slots: usize, input_bits: usize, nwords: usize) {
         self.ngroups = ngroups;
         self.slots = slots;
+        self.nwords = nwords;
         self.psums.clear();
         self.psums.resize(ngroups * slots, PsumPair::default());
         self.inp_planes.clear();
-        self.inp_planes.resize(input_bits, 0);
+        self.inp_planes.resize(input_bits * nwords, 0);
         self.inn_planes.clear();
-        self.inn_planes.resize(input_bits, 0);
+        self.inn_planes.resize(input_bits * nwords, 0);
+        self.gmasks.clear();
+        self.gmasks.resize(ngroups * nwords, 0);
     }
 
     /// Pre-grow to a geometry (same resize discipline as the internal
     /// reset) so the *first* `mvm_row_into` call on a worker thread
     /// performs no allocation — the parallel executors warm every
     /// per-lane scratch on the caller thread before dispatching.
-    pub fn warm(&mut self, ngroups: usize, slots: usize, input_bits: usize) {
-        self.reset(ngroups, slots, input_bits);
+    /// `lanes` is the compartment count of the macro the scratch will
+    /// serve (it sizes the plane words).
+    pub fn warm(&mut self, ngroups: usize, slots: usize, input_bits: usize, lanes: usize) {
+        self.reset(ngroups, slots, input_bits, lanes.div_ceil(64));
     }
 
     /// Result of the last `mvm_row_into` call for (group, slot).
@@ -100,19 +116,22 @@ impl MvmScratch {
     }
 }
 
-/// Pack per-lane INT8 values into per-bit `u64` planes: bit `lane` of
-/// `planes[ki]` is bit `ki` of `inputs[lane]` (two's complement, low 8
-/// bits — identical to the `(x as u8) >> ki` view of the scalar path).
+/// Pack per-lane INT8 values into per-bit multi-word planes: bit
+/// `lane % 64` of `planes[ki * nwords + lane / 64]` is bit `ki` of
+/// `inputs[lane]` (two's complement, low 8 bits — identical to the
+/// `(x as u8) >> ki` view of the scalar path).
 #[inline]
-fn pack_input_planes(planes: &mut [u64], inputs: &[i32]) {
+fn pack_input_planes(planes: &mut [u64], nwords: usize, inputs: &[i32]) {
+    let nbits = planes.len() / nwords;
     for (lane, &x) in inputs.iter().enumerate() {
+        let (word, bit) = (lane / 64, lane % 64);
         let mut v = (x as u8) as u64;
         while v != 0 {
             let ki = v.trailing_zeros() as usize;
-            if ki >= planes.len() {
+            if ki >= nbits {
                 break; // input precision below 8 bits truncates high bits
             }
-            planes[ki] |= 1u64 << lane;
+            planes[ki * nwords + word] |= 1u64 << bit;
             v &= v - 1;
         }
     }
@@ -149,6 +168,13 @@ impl PimMacro {
 
     pub fn paper() -> Self {
         Self::new(PimCore::paper(), 8, 8)
+    }
+
+    /// A macro at an explicit [`MacroGeometry`], full INT8 precision on
+    /// both operands — the constructor the geometry-parameterized
+    /// planners use.
+    pub fn with_geometry(geom: MacroGeometry) -> Self {
+        Self::new(PimCore::with_geometry(geom), 8, 8)
     }
 
     /// Load one stored weight (normal SRAM mode).
@@ -205,47 +231,84 @@ impl PimMacro {
         assert!(inputs_n.len() <= ncmp, "INN vector wider than the core");
         let slots = self.core.slots();
         let ngroups = grouping.ngroups();
-        scratch.reset(ngroups, slots, self.input_bits);
+        let planes = self.core.weight_planes();
+        let nwords = planes.nwords();
+        scratch.reset(ngroups, slots, self.input_bits, nwords);
         if mode == Mode::NormalSram {
             return; // LPU disabled: all psums stay zero, like the silicon
         }
-        let planes = self.core.weight_planes();
         debug_assert_eq!(
             planes.wbits(),
             self.weight_bits,
             "weight precision is fixed by the 8-bit slot layout"
         );
-        pack_input_planes(&mut scratch.inp_planes, inputs_p);
+        let MvmScratch {
+            psums,
+            inp_planes,
+            inn_planes,
+            gmasks,
+            ..
+        } = scratch;
+        pack_input_planes(inp_planes, nwords, inputs_p);
         if mode == Mode::Double {
-            pack_input_planes(&mut scratch.inn_planes, inputs_n);
+            pack_input_planes(inn_planes, nwords, inputs_n);
         }
-        let gmasks = grouping.lane_masks(ncmp);
+        for wi in 0..nwords {
+            let m = grouping.lane_masks_word(ncmp, wi);
+            for (g, &gm) in m.iter().take(ngroups).enumerate() {
+                gmasks[g * nwords + wi] = gm;
+            }
+        }
         for ki in 0..self.input_bits {
-            let pw = scratch.inp_planes[ki];
-            let nw = scratch.inn_planes[ki]; // all-zero in Regular mode
-            if pw == 0 && nw == 0 {
+            let ip = &inp_planes[ki * nwords..(ki + 1) * nwords];
+            let inn = &inn_planes[ki * nwords..(ki + 1) * nwords]; // zero in Regular
+            if ip.iter().zip(inn).all(|(&p, &n)| p == 0 && n == 0) {
                 continue; // zero input bit-plane: nothing fires this cycle
             }
             let wki = bit_weight(ki, self.input_bits);
-            for (g, &gmask) in gmasks.iter().take(ngroups).enumerate() {
-                let pg = pw & gmask;
-                let ng = nw & gmask;
-                if pg == 0 && ng == 0 {
-                    continue;
-                }
-                for s in 0..slots {
-                    // one AND + popcount per weight bit = one adder tree
-                    let ws = planes.row_slot_planes(row, s);
-                    let mut q_acc = 0i64;
-                    let mut qbar_acc = 0i64;
-                    for (kw, &plane) in ws.iter().enumerate() {
-                        let bw = bit_weight(kw, self.weight_bits);
-                        q_acc += (plane & pg).count_ones() as i64 * bw;
-                        qbar_acc += (!plane & ng).count_ones() as i64 * bw;
+            for g in 0..ngroups {
+                let gm = &gmasks[g * nwords..(g + 1) * nwords];
+                for wi in 0..nwords {
+                    let pg = ip[wi] & gm[wi];
+                    let ng = inn[wi] & gm[wi];
+                    if pg == 0 && ng == 0 {
+                        continue;
                     }
-                    let pair = &mut scratch.psums[g * slots + s];
-                    pair.q += q_acc * wki;
-                    pair.qbar += qbar_acc * wki;
+                    for s in 0..slots {
+                        // one AND + popcount per *lit* weight bit = one
+                        // adder-tree column; the nonzero summaries drop
+                        // the dark columns of this word without reading
+                        // their planes
+                        let (ws, nz_q, nz_qbar) = planes.word_planes(row, s, wi);
+                        let mut q_acc = 0i64;
+                        let mut qbar_acc = 0i64;
+                        if pg != 0 {
+                            let mut lit = nz_q as u32;
+                            while lit != 0 {
+                                let kw = lit.trailing_zeros() as usize;
+                                lit &= lit - 1;
+                                q_acc += (ws[kw] & pg).count_ones() as i64
+                                    * bit_weight(kw, self.weight_bits);
+                            }
+                        }
+                        if ng != 0 {
+                            // independent polarity: Q̄ = !plane & mask is
+                            // lit exactly where Q has stored zeros, so a
+                            // Q-sparse plane is Q̄-dense and vice versa
+                            let mut lit = nz_qbar as u32;
+                            while lit != 0 {
+                                let kw = lit.trailing_zeros() as usize;
+                                lit &= lit - 1;
+                                qbar_acc += (!ws[kw] & ng).count_ones() as i64
+                                    * bit_weight(kw, self.weight_bits);
+                            }
+                        }
+                        if q_acc != 0 || qbar_acc != 0 {
+                            let pair = &mut psums[g * slots + s];
+                            pair.q += q_acc * wki;
+                            pair.qbar += qbar_acc * wki;
+                        }
+                    }
                 }
             }
         }
@@ -268,7 +331,12 @@ impl PimMacro {
         let mut n = inputs_n.to_vec();
         n.resize(ncmp, 0);
         let psums = self.mvm_row_scalar(row, &p, &n, mode, grouping);
-        scratch.reset(psums.len(), self.core.slots(), self.input_bits);
+        scratch.reset(
+            psums.len(),
+            self.core.slots(),
+            self.input_bits,
+            ncmp.div_ceil(64),
+        );
         for (g, group) in psums.iter().enumerate() {
             for (s, &pair) in group.iter().enumerate() {
                 scratch.psums[g * scratch.slots + s] = pair;
@@ -538,10 +606,77 @@ mod tests {
     #[test]
     fn pack_input_planes_is_bit_transpose() {
         let mut planes = vec![0u64; 8];
-        pack_input_planes(&mut planes, &[0b0101, -1, 0]);
+        pack_input_planes(&mut planes, 1, &[0b0101, -1, 0]);
         assert_eq!(planes[0], 0b011); // lanes 0 and 1 have bit 0 set
         assert_eq!(planes[1], 0b010); // only lane 1 (-1 = all bits)
         assert_eq!(planes[2], 0b011);
         assert_eq!(planes[7], 0b010);
+    }
+
+    #[test]
+    fn pack_input_planes_crosses_word_seams() {
+        // 70 lanes = 2 words: lane 64 must land in word 1, bit 0
+        let mut inputs = vec![0i32; 70];
+        inputs[63] = 1;
+        inputs[64] = 0b10;
+        inputs[69] = -1;
+        let mut planes = vec![0u64; 8 * 2];
+        pack_input_planes(&mut planes, 2, &inputs);
+        assert_eq!(planes[0], 1 << 63); // ki=0 word 0
+        assert_eq!(planes[1], 1 << 5); // ki=0 word 1: only lane 69
+        assert_eq!(planes[2], 0); // ki=1 word 0
+        assert_eq!(planes[3], (1 << 0) | (1 << 5)); // ki=1 word 1
+        assert_eq!(planes[15], 1 << 5); // ki=7 word 1
+    }
+
+    #[test]
+    fn wide_macro_matches_scalar_oracle() {
+        // >64 compartments (the multi-word plane path), in-module smoke
+        // of the full differential suite in tests/differential_fabric.rs
+        let mut rng = Rng::new(69);
+        for ncmp in [65usize, 128] {
+            let mut m = PimMacro::with_geometry(MacroGeometry::with_compartments(ncmp));
+            for cmp in 0..ncmp {
+                for slot in 0..2 {
+                    m.load_weight(cmp, 0, slot, rng.int8() as i32);
+                }
+            }
+            let xs: Vec<i32> = (0..ncmp).map(|_| rng.int8() as i32).collect();
+            let xn: Vec<i32> = (0..ncmp).map(|_| rng.int8() as i32).collect();
+            let mut scratch = MvmScratch::new();
+            for mode in [Mode::Regular, Mode::Double] {
+                for grouping in [Grouping::Combined, Grouping::Split] {
+                    m.mvm_row_into(0, &xs, &xn, mode, grouping, &mut scratch);
+                    let want = m.mvm_row_scalar(0, &xs, &xn, mode, grouping);
+                    assert_eq!(
+                        scratch.to_vecs(),
+                        want,
+                        "divergence at ncmp {ncmp} {mode:?} {grouping:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_weight_planes_match_scalar_oracle() {
+        // weights whose bit-planes are mostly dark on one polarity: the
+        // summary-driven skip must change nothing but the work done
+        let mut rng = Rng::new(70);
+        let mut m = PimMacro::paper();
+        for cmp in 0..32 {
+            m.load_weight(cmp, 0, 0, rng.below(2) as i32); // Q planes 1..7 dark
+            m.load_weight(cmp, 0, 1, -1 - rng.below(2) as i32); // Q̄ planes 1..7 dark
+        }
+        let xs: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
+        let xn: Vec<i32> = (0..32).map(|_| rng.int8() as i32).collect();
+        let mut scratch = MvmScratch::new();
+        for mode in [Mode::Regular, Mode::Double] {
+            for grouping in [Grouping::Combined, Grouping::Split] {
+                m.mvm_row_into(0, &xs, &xn, mode, grouping, &mut scratch);
+                let want = m.mvm_row_scalar(0, &xs, &xn, mode, grouping);
+                assert_eq!(scratch.to_vecs(), want, "sparse drift {mode:?} {grouping:?}");
+            }
+        }
     }
 }

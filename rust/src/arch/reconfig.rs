@@ -26,21 +26,38 @@ impl Grouping {
         }
     }
 
-    /// Lane masks of each accumulation group over `lanes` packed
-    /// compartments (`lanes <= 64`) — the word-level view of the
-    /// adder-unit combine/split mux used by the bitsliced hot path:
-    /// Combined is one full-width group (second mask 0), Split is the
-    /// low/high compartment halves.
-    pub fn lane_masks(self, lanes: usize) -> [u64; 2] {
-        debug_assert!((1..=64).contains(&lanes));
-        let full = if lanes == 64 { u64::MAX } else { (1u64 << lanes) - 1 };
+    /// Per-word lane masks of each accumulation group over `lanes`
+    /// packed compartments, for arbitrary lane counts — the word-level
+    /// view of the adder-unit combine/split mux used by the bitsliced
+    /// hot path.  Word `word` covers lanes `[64*word, 64*word + 64)`.
+    /// Combined is one full-width group (second mask 0); Split is the
+    /// low/high compartment halves around `lanes / 2`, matching exactly
+    /// the `..half` / `half..` slicing of the scalar [`reduce`].
+    pub fn lane_masks_word(self, lanes: usize, word: usize) -> [u64; 2] {
+        let first = word * 64;
+        debug_assert!(lanes >= 1 && first < lanes);
+        let n = (lanes - first).min(64);
+        let full = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
         match self {
             Grouping::Combined => [full, 0],
             Grouping::Split => {
-                let lo = (1u64 << (lanes / 2)) - 1;
+                // lanes of the low half that fall inside this word
+                let in_lo = (lanes / 2).saturating_sub(first).min(n);
+                let lo = if in_lo == 64 {
+                    u64::MAX
+                } else {
+                    (1u64 << in_lo) - 1
+                };
                 [lo, full & !lo]
             }
         }
+    }
+
+    /// Single-word view for `lanes <= 64` (word 0 of
+    /// [`Grouping::lane_masks_word`]).
+    pub fn lane_masks(self, lanes: usize) -> [u64; 2] {
+        debug_assert!((1..=64).contains(&lanes));
+        self.lane_masks_word(lanes, 0)
     }
 }
 
@@ -142,6 +159,34 @@ mod tests {
             assert_eq!(s0 | s1, full, "split must cover all {lanes} lanes");
             assert_eq!(s0 & s1, 0, "split groups must be disjoint");
             assert_eq!(s0.count_ones() as usize, lanes / 2);
+        }
+    }
+
+    #[test]
+    fn lane_masks_word_cover_and_partition_wide_lanes() {
+        // multi-word geometries: every word's masks must partition that
+        // word's populated lanes, and the per-lane group assignment
+        // must match the scalar reduce's `..half` / `half..` slicing
+        for lanes in [65usize, 96, 127, 128, 130, 200] {
+            let nwords = lanes.div_ceil(64);
+            let half = lanes / 2;
+            let mut lo_lanes = 0usize;
+            for wi in 0..nwords {
+                let n = (lanes - wi * 64).min(64);
+                let full = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+                let [c0, c1] = Grouping::Combined.lane_masks_word(lanes, wi);
+                assert_eq!(c0, full);
+                assert_eq!(c1, 0);
+                let [s0, s1] = Grouping::Split.lane_masks_word(lanes, wi);
+                assert_eq!(s0 | s1, full, "split must cover word {wi} of {lanes} lanes");
+                assert_eq!(s0 & s1, 0, "split groups must be disjoint in word {wi}");
+                lo_lanes += s0.count_ones() as usize;
+                for bit in 0..n {
+                    let lane = wi * 64 + bit;
+                    assert_eq!((s0 >> bit) & 1 == 1, lane < half, "lane {lane} of {lanes}");
+                }
+            }
+            assert_eq!(lo_lanes, half, "low half must hold lanes/2 lanes at {lanes}");
         }
     }
 

@@ -117,85 +117,157 @@ impl SramArray {
 }
 
 /// Bit-plane shadow of a core's weight storage: for every
-/// (row, slot, weight-bit) one `u64` word packs that weight bit across up
-/// to 64 lanes (compartments).
+/// (row, slot, weight-bit) one *multi-word* plane `[u64; W]` with
+/// `W = ceil(lanes / 64)` packs that weight bit across all lanes
+/// (compartments); word `wi` covers lanes `[64*wi, 64*wi + 64)`.
 ///
-/// Built incrementally at weight-load time (the cold path), so the
-/// compute hot loop is one AND + `count_ones` per word instead of a
-/// per-cell walk.  The Q̄ plane is never stored: it is
-/// `!plane & lane_mask` — the 6T complementary-pair invariant lifted to
-/// word level, exactly as [`SramCell::q_bar`] derives it per cell.
+/// Built incrementally at weight-load time (the cold path) together
+/// with a per-(row, slot, word) **nonzero summary** — one bitmask over
+/// the `wbits` weight bits per polarity — so the compute hot loop
+/// visits only the planes that can contribute:
+///
+/// * `nz_q` bit `kw` set ⇔ the Q plane word holds any stored 1;
+/// * `nz_qbar` bit `kw` set ⇔ the Q̄ word (`!plane & mask`) holds any
+///   stored 0.
+///
+/// The polarities are independent — a plane that is all-zero on Q is
+/// all-ones on Q̄ and vice versa — so a skip that consulted only the Q
+/// summary would silently drop Q̄-path work in double-computing mode.
+///
+/// The Q̄ plane is never stored: it is `!plane & lane_mask(word)` — the
+/// 6T complementary-pair invariant lifted to word level, exactly as
+/// [`SramCell::q_bar`] derives it per cell.
 #[derive(Debug, Clone)]
 pub struct WeightPlanes {
-    /// `rows * slots * wbits` words; bit `lane` of
-    /// `planes[(row * slots + slot) * wbits + kw]` is weight bit `kw` of
-    /// lane `lane`'s slot-`slot` weight at `row`.
+    /// `rows * slots * nwords * wbits` words; bit `lane % 64` of
+    /// `planes[((row * slots + slot) * nwords + lane / 64) * wbits + kw]`
+    /// is weight bit `kw` of lane `lane`'s slot-`slot` weight at `row`.
+    /// Word-major so the `wbits` planes of one (row, slot, word) are
+    /// contiguous — the hot-path access pattern.
     planes: Vec<u64>,
+    /// Per-(row, slot, word) bitmask over `kw`: Q plane word nonzero.
+    nz_q: Vec<u8>,
+    /// Per-(row, slot, word) bitmask over `kw`: Q̄ plane word nonzero.
+    nz_qbar: Vec<u8>,
     rows: usize,
     slots: usize,
     wbits: usize,
-    lane_mask: u64,
+    nwords: usize,
+    /// Populated-lane mask per word (only the last word can be partial).
+    lane_masks: Vec<u64>,
 }
 
 impl WeightPlanes {
     pub fn new(lanes: usize, rows: usize, slots: usize, wbits: usize) -> Self {
+        assert!(lanes >= 1, "bit-plane packing needs at least one lane");
         assert!(
-            (1..=64).contains(&lanes),
-            "bit-plane packing supports 1..=64 lanes, got {lanes}"
+            (1..=8).contains(&wbits),
+            "nonzero summaries are u8 masks: wbits must be 1..=8, got {wbits}"
         );
+        let nwords = lanes.div_ceil(64);
+        let lane_masks = (0..nwords)
+            .map(|wi| {
+                let n = (lanes - wi * 64).min(64);
+                if n == 64 { u64::MAX } else { (1u64 << n) - 1 }
+            })
+            .collect();
+        // all-zero planes: every Q plane is dark and every Q̄ plane is
+        // fully lit (each stored 0 contributes a complement 1)
+        let full = ((1u16 << wbits) - 1) as u8;
         WeightPlanes {
-            planes: vec![0; rows * slots * wbits],
+            planes: vec![0; rows * slots * nwords * wbits],
+            nz_q: vec![0; rows * slots * nwords],
+            nz_qbar: vec![full; rows * slots * nwords],
             rows,
             slots,
             wbits,
-            lane_mask: if lanes == 64 { u64::MAX } else { (1u64 << lanes) - 1 },
+            nwords,
+            lane_masks,
         }
     }
 
-    fn idx(&self, row: usize, slot: usize, kw: usize) -> usize {
-        debug_assert!(row < self.rows && slot < self.slots && kw < self.wbits);
-        (row * self.slots + slot) * self.wbits + kw
+    #[inline]
+    fn summary_idx(&self, row: usize, slot: usize, word: usize) -> usize {
+        debug_assert!(row < self.rows && slot < self.slots && word < self.nwords);
+        (row * self.slots + slot) * self.nwords + word
+    }
+
+    #[inline]
+    fn word_base(&self, row: usize, slot: usize, word: usize) -> usize {
+        self.summary_idx(row, slot, word) * self.wbits
     }
 
     /// Record lane `lane`'s weight at (row, slot) into all `wbits` planes
-    /// (two's complement, LSB-first — matches [`SramArray::write_weight8`]).
+    /// (two's complement, LSB-first — matches [`SramArray::write_weight8`])
+    /// and refresh the nonzero summaries of the touched word — the
+    /// maintenance invariant that keeps summary and plane views coherent
+    /// through the single `write_weight` path.
     pub fn record(&mut self, lane: usize, row: usize, slot: usize, w: i32) {
-        let bit = 1u64 << lane;
-        debug_assert!(bit & self.lane_mask != 0, "lane {lane} out of range");
+        let word = lane / 64;
+        assert!(
+            word < self.nwords && (self.lane_masks[word] >> (lane % 64)) & 1 == 1,
+            "lane {lane} out of range"
+        );
+        let bit = 1u64 << (lane % 64);
+        let mask = self.lane_masks[word];
+        let base = self.word_base(row, slot, word);
+        let si = self.summary_idx(row, slot, word);
         for kw in 0..self.wbits {
-            let i = self.idx(row, slot, kw);
+            let plane = &mut self.planes[base + kw];
             if (w as u32 >> kw) & 1 == 1 {
-                self.planes[i] |= bit;
+                *plane |= bit;
             } else {
-                self.planes[i] &= !bit;
+                *plane &= !bit;
+            }
+            let kbit = 1u8 << kw;
+            if *plane != 0 {
+                self.nz_q[si] |= kbit;
+            } else {
+                self.nz_q[si] &= !kbit;
+            }
+            if !*plane & mask != 0 {
+                self.nz_qbar[si] |= kbit;
+            } else {
+                self.nz_qbar[si] &= !kbit;
             }
         }
     }
 
-    /// Q bit-plane of (row, slot, weight-bit): bit `lane` = stored Q bit.
+    /// Word `word` of the Q bit-plane of (row, slot, weight-bit): bit
+    /// `lane % 64` = lane `64*word + lane%64`'s stored Q bit.
     #[inline]
-    pub fn plane(&self, row: usize, slot: usize, kw: usize) -> u64 {
-        self.planes[self.idx(row, slot, kw)]
+    pub fn plane(&self, row: usize, slot: usize, kw: usize, word: usize) -> u64 {
+        debug_assert!(kw < self.wbits);
+        self.planes[self.word_base(row, slot, word) + kw]
     }
 
-    /// Q̄ bit-plane — the free complementary word of the 6T pair.
+    /// Word `word` of the Q̄ bit-plane — the free complementary word of
+    /// the 6T pair.
     #[inline]
-    pub fn plane_bar(&self, row: usize, slot: usize, kw: usize) -> u64 {
-        !self.plane(row, slot, kw) & self.lane_mask
+    pub fn plane_bar(&self, row: usize, slot: usize, kw: usize, word: usize) -> u64 {
+        !self.plane(row, slot, kw, word) & self.lane_masks[word]
     }
 
-    /// All `wbits` planes of (row, slot) as one contiguous slice — the
-    /// hot-path access pattern (one bounds check per row-step).
+    /// All `wbits` planes of (row, slot, word) as one contiguous slice,
+    /// plus the two polarity summaries — the hot-path access pattern
+    /// (one bounds check per (row, slot, word) step).
     #[inline]
-    pub fn row_slot_planes(&self, row: usize, slot: usize) -> &[u64] {
-        let i = self.idx(row, slot, 0);
-        &self.planes[i..i + self.wbits]
+    pub fn word_planes(&self, row: usize, slot: usize, word: usize) -> (&[u64], u8, u8) {
+        let si = self.summary_idx(row, slot, word);
+        let base = si * self.wbits;
+        (&self.planes[base..base + self.wbits], self.nz_q[si], self.nz_qbar[si])
     }
 
-    /// Mask of the populated lane bits.
+    /// Populated-lane mask of each word.
     #[inline]
-    pub fn lane_mask(&self) -> u64 {
-        self.lane_mask
+    pub fn lane_masks(&self) -> &[u64] {
+        &self.lane_masks
+    }
+
+    /// Words per plane (`ceil(lanes / 64)`).
+    #[inline]
+    pub fn nwords(&self) -> usize {
+        self.nwords
     }
 
     pub fn wbits(&self) -> usize {
@@ -273,8 +345,8 @@ mod tests {
                 (0..8).all(|kw| {
                     let q = a.cell(row, slot * 8 + kw).q();
                     let qb = a.cell(row, slot * 8 + kw).q_bar();
-                    (p.plane(row, slot, kw) & 1 == 1) == q
-                        && (p.plane_bar(row, slot, kw) & 1 == 1) == qb
+                    (p.plane(row, slot, kw, 0) & 1 == 1) == q
+                        && (p.plane_bar(row, slot, kw, 0) & 1 == 1) == qb
                 })
             },
         );
@@ -287,14 +359,14 @@ mod tests {
         p.record(5, 1, 0, 0b0001);
         p.record(31, 1, 0, -1); // all bits set
         // kw=0: lanes 0, 5, 31
-        assert_eq!(p.plane(1, 0, 0), (1 << 0) | (1 << 5) | (1 << 31));
+        assert_eq!(p.plane(1, 0, 0, 0), (1 << 0) | (1 << 5) | (1 << 31));
         // kw=2: lanes 0, 31
-        assert_eq!(p.plane(1, 0, 2), (1 << 0) | (1 << 31));
+        assert_eq!(p.plane(1, 0, 2, 0), (1 << 0) | (1 << 31));
         // complementary plane is the inverse within the 32 lanes
-        assert_eq!(p.plane_bar(1, 0, 0), !p.plane(1, 0, 0) & 0xFFFF_FFFF);
+        assert_eq!(p.plane_bar(1, 0, 0, 0), !p.plane(1, 0, 0, 0) & 0xFFFF_FFFF);
         // untouched (row, slot) stays all-zero / all-complement
-        assert_eq!(p.plane(0, 1, 3), 0);
-        assert_eq!(p.plane_bar(0, 1, 3), 0xFFFF_FFFF);
+        assert_eq!(p.plane(0, 1, 3, 0), 0);
+        assert_eq!(p.plane_bar(0, 1, 3, 0), 0xFFFF_FFFF);
     }
 
     #[test]
@@ -303,19 +375,78 @@ mod tests {
         p.record(3, 0, 0, -1);
         p.record(3, 0, 0, 0);
         for kw in 0..8 {
-            assert_eq!(p.plane(0, 0, kw), 0, "stale bit left in plane {kw}");
+            assert_eq!(p.plane(0, 0, kw, 0), 0, "stale bit left in plane {kw}");
         }
+        // and the summaries followed the overwrite back to dark-Q
+        let (_, nz_q, nz_qbar) = p.word_planes(0, 0, 0);
+        assert_eq!(nz_q, 0);
+        assert_eq!(nz_qbar, 0xFF);
     }
 
     #[test]
-    fn weight_planes_row_slot_slice() {
+    fn weight_planes_word_slice() {
         let mut p = WeightPlanes::new(64, 2, 2, 8);
         p.record(63, 1, 1, 0b1000_0001u32 as i32);
-        let ws = p.row_slot_planes(1, 1);
+        let (ws, nz_q, nz_qbar) = p.word_planes(1, 1, 0);
         assert_eq!(ws.len(), 8);
         assert_eq!(ws[0], 1 << 63);
         assert_eq!(ws[7], 1 << 63);
         assert_eq!(ws[3], 0);
-        assert_eq!(p.lane_mask(), u64::MAX);
+        assert_eq!(nz_q, 0b1000_0001);
+        assert_eq!(nz_qbar, 0xFF); // 63 stored zeros light every Q̄ plane
+        assert_eq!(p.lane_masks(), &[u64::MAX]);
+    }
+
+    #[test]
+    fn weight_planes_multiword_lanes() {
+        // 130 lanes = 3 words, last word holding 2 lanes
+        let mut p = WeightPlanes::new(130, 1, 1, 8);
+        assert_eq!(p.nwords(), 3);
+        assert_eq!(p.lane_masks(), &[u64::MAX, u64::MAX, 0b11]);
+        p.record(64, 0, 0, 0b0100);
+        p.record(129, 0, 0, 0b0100);
+        assert_eq!(p.plane(0, 0, 2, 0), 0);
+        assert_eq!(p.plane(0, 0, 2, 1), 1 << 0);
+        assert_eq!(p.plane(0, 0, 2, 2), 1 << 1);
+        // Q̄ within the partial word respects the populated-lane mask
+        assert_eq!(p.plane_bar(0, 0, 2, 2), 0b01);
+        assert_eq!(p.plane_bar(0, 0, 0, 2), 0b11);
+    }
+
+    #[test]
+    fn weight_planes_summaries_track_both_polarities() {
+        use crate::util::rng::Rng;
+        // random writes + overwrites on a multi-word geometry: the
+        // summaries must equal a from-scratch recomputation of "is this
+        // plane word nonzero" for both polarities, always
+        let mut rng = Rng::new(35);
+        let (lanes, rows, slots) = (96usize, 2usize, 2usize);
+        let mut p = WeightPlanes::new(lanes, rows, slots, 8);
+        for _ in 0..500 {
+            let lane = rng.below(lanes as u64) as usize;
+            let row = rng.below(rows as u64) as usize;
+            let slot = rng.below(slots as u64) as usize;
+            p.record(lane, row, slot, rng.int8() as i32);
+        }
+        for row in 0..rows {
+            for slot in 0..slots {
+                for wi in 0..p.nwords() {
+                    let (ws, nz_q, nz_qbar) = p.word_planes(row, slot, wi);
+                    let mask = p.lane_masks()[wi];
+                    for (kw, &w) in ws.iter().enumerate() {
+                        assert_eq!(
+                            (nz_q >> kw) & 1 == 1,
+                            w != 0,
+                            "stale Q summary at ({row},{slot},{wi},{kw})"
+                        );
+                        assert_eq!(
+                            (nz_qbar >> kw) & 1 == 1,
+                            !w & mask != 0,
+                            "stale Q̄ summary at ({row},{slot},{wi},{kw})"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

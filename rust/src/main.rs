@@ -116,7 +116,7 @@ fn run(args: &[String]) -> i32 {
                  \n  flags: --artifacts <dir>  (default: artifacts)\
                  \n         --backend <auto|reference|pjrt>  (default: auto)\
                  \n         --fabric <dense|bitsliced>  (reference conv path; default: dense)\
-                 \n         --threads <N>  (bitsliced exec pool width; default: DDC_THREADS or 1)\
+                 \n         --threads <N>  (exec pool width; default: DDC_THREADS or 1)\
                  \n  models: {}",
                 zoo::ALL_MODELS.join(", ")
             );

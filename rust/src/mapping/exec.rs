@@ -46,7 +46,7 @@
 
 use crate::arch::lpu::Mode;
 use crate::arch::merge::aru_recover;
-use crate::arch::pim_core::{PimCore, WEIGHT_BITS};
+use crate::arch::pim_core::MacroGeometry;
 use crate::arch::pim_macro::{MvmScratch, PimMacro};
 use crate::arch::reconfig::Grouping;
 use crate::fcc::FccWeights;
@@ -57,17 +57,6 @@ use super::im2col::{im2col_channel_into, im2col_into, out_dims};
 /// Pixels streamed per resident (row, slot) pass: the row's bit-planes
 /// stay register/L1-hot while this many activation windows flow past.
 const PIXEL_BLOCK: usize = 64;
-
-/// Geometry of the paper macro — `(compartments, slots, rows)` — read
-/// from the constants so planners can size their pass schedules without
-/// constructing a throwaway cell array.
-fn paper_geometry() -> (usize, usize, usize) {
-    (
-        PimCore::PAPER_COMPARTMENTS,
-        PimCore::PAPER_DBMUS / WEIGHT_BITS,
-        PimCore::PAPER_ROWS,
-    )
-}
 
 /// Caller-owned scratch for the planned executors: every buffer the
 /// per-pixel loops touch, reused across `execute` calls (and across
@@ -135,6 +124,15 @@ impl ExecPool {
     /// Total lanes, caller included.
     pub fn width(&self) -> usize {
         self.pool.width()
+    }
+
+    /// Scoped access to the underlying [`WorkPool`] for callers that
+    /// shard non-conv work across the same lanes (e.g. the dense MVM
+    /// row blocks in `runtime/reference.rs`): `f(lane, unit)` runs
+    /// exactly once per `unit in 0..units`, with the same disjoint-
+    /// write obligations as the conv executors.
+    pub fn run<F: Fn(usize, usize) + Sync>(&mut self, units: usize, f: &F) {
+        self.pool.run(units, f)
     }
 }
 
@@ -206,10 +204,26 @@ pub struct PlannedConv {
 }
 
 impl PlannedConv {
-    /// Plan a std/pw-conv in double computing mode with FCC weights:
-    /// only the even comp filters are written (normal SRAM mode), once,
-    /// here.
+    /// Plan a std/pw-conv in double computing mode with FCC weights at
+    /// the paper geometry (see [`PlannedConv::std_fcc_with`]).
     pub fn std_fcc(
+        h: usize,
+        w: usize,
+        c: usize,
+        fcc: &FccWeights,
+        k: usize,
+        stride: usize,
+    ) -> PlannedConv {
+        Self::std_fcc_with(MacroGeometry::paper(), h, w, c, fcc, k, stride)
+    }
+
+    /// Plan a std/pw-conv in double computing mode with FCC weights on
+    /// an explicit macro geometry (any compartment count — >64 lanes
+    /// pack as multi-word planes): only the even comp filters are
+    /// written (normal SRAM mode), once, here.
+    #[allow(clippy::too_many_arguments)]
+    pub fn std_fcc_with(
+        geom: MacroGeometry,
         h: usize,
         w: usize,
         c: usize,
@@ -221,7 +235,7 @@ impl PlannedConv {
         assert_eq!(fcc.comp.l, l, "filter length mismatch");
         let n = fcc.comp.n;
         let pairs = n / 2;
-        let (cmp, slots, rows) = paper_geometry();
+        let (cmp, slots, rows) = (geom.compartments, geom.slots(), geom.rows);
         let l_tiles = l.div_ceil(cmp);
         let groups = pairs.div_ceil(slots);
         let groups_per_pass = (rows / l_tiles).max(1);
@@ -230,7 +244,7 @@ impl PlannedConv {
         while g0 < groups {
             let g1 = (g0 + groups_per_pass).min(groups);
             // load pass: write even comp filters (normal SRAM mode)
-            let mut mac = PimMacro::paper();
+            let mut mac = PimMacro::with_geometry(geom);
             for g in g0..g1 {
                 for ti in 0..l_tiles {
                     let row = (g - g0) * l_tiles + ti;
@@ -272,9 +286,26 @@ impl PlannedConv {
         }
     }
 
-    /// Plan a std/pw-conv in regular computing mode (PIM baseline):
-    /// the full `[N, L]` filter bank is written.
+    /// Plan a std/pw-conv in regular computing mode at the paper
+    /// geometry (see [`PlannedConv::std_regular_with`]).
     pub fn std_regular(
+        h: usize,
+        w: usize,
+        c: usize,
+        filters: &[i32], // [N, L]
+        n: usize,
+        k: usize,
+        stride: usize,
+    ) -> PlannedConv {
+        Self::std_regular_with(MacroGeometry::paper(), h, w, c, filters, n, k, stride)
+    }
+
+    /// Plan a std/pw-conv in regular computing mode (PIM baseline) on
+    /// an explicit macro geometry: the full `[N, L]` filter bank is
+    /// written.
+    #[allow(clippy::too_many_arguments)]
+    pub fn std_regular_with(
+        geom: MacroGeometry,
         h: usize,
         w: usize,
         c: usize,
@@ -285,7 +316,7 @@ impl PlannedConv {
     ) -> PlannedConv {
         let l = k * k * c;
         assert_eq!(filters.len(), n * l, "filter bank shape mismatch");
-        let (cmp, slots, rows) = paper_geometry();
+        let (cmp, slots, rows) = (geom.compartments, geom.slots(), geom.rows);
         let l_tiles = l.div_ceil(cmp);
         let groups = n.div_ceil(slots);
         let groups_per_pass = (rows / l_tiles).max(1);
@@ -293,7 +324,7 @@ impl PlannedConv {
         let mut g0 = 0;
         while g0 < groups {
             let g1 = (g0 + groups_per_pass).min(groups);
-            let mut mac = PimMacro::paper();
+            let mut mac = PimMacro::with_geometry(geom);
             for g in g0..g1 {
                 for ti in 0..l_tiles {
                     let row = (g - g0) * l_tiles + ti;
@@ -458,7 +489,8 @@ impl PlannedConv {
         // of which lane wins which block
         for ctx in per.iter_mut() {
             ctx.blk.resize(PIXEL_BLOCK * self.slots, (0, 0));
-            ctx.scratch.warm(2, self.slots, 8); // Split-capable, 8 input bits
+            // Split-capable, 8 input bits, this plan's lane count
+            ctx.scratch.warm(2, self.slots, 8, self.cmp);
         }
         let cols: &[i32] = &shared.cols;
         let sums: &[i64] = &shared.win_sums;
@@ -608,6 +640,7 @@ pub struct PlannedDwConv {
     ow: usize,
     taps: usize,
     cmp: usize,
+    slots: usize,
     passes: Vec<DwPass>,
     kind: DwKind,
 }
@@ -626,11 +659,26 @@ impl PlannedDwConv {
         stride: usize,
         reconfig: bool,
     ) -> PlannedDwConv {
+        Self::fcc_with(MacroGeometry::paper(), h, w, c, fcc, k, stride, reconfig)
+    }
+
+    /// [`PlannedDwConv::fcc`] on an explicit macro geometry.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fcc_with(
+        geom: MacroGeometry,
+        h: usize,
+        w: usize,
+        c: usize,
+        fcc: &FccWeights, // [C, K*K] comp filters, channel pairs
+        k: usize,
+        stride: usize,
+        reconfig: bool,
+    ) -> PlannedDwConv {
         let taps = k * k;
         assert_eq!(fcc.comp.l, taps, "filter length mismatch");
         assert_eq!(fcc.comp.n, c, "channel count mismatch");
         let pairs = c / 2;
-        let (cmp, _, rows) = paper_geometry();
+        let (cmp, rows) = (geom.compartments, geom.rows);
         let reconfig = reconfig && 2 * taps <= cmp;
         let mut passes = Vec::new();
         if reconfig {
@@ -641,7 +689,7 @@ impl PlannedDwConv {
             let mut u0 = 0;
             while u0 < row_groups {
                 let u1 = (u0 + rows).min(row_groups);
-                let mut mac = PimMacro::paper();
+                let mut mac = PimMacro::with_geometry(geom);
                 for rg in u0..u1 {
                     let row = rg - u0;
                     for cc in 0..cmp {
@@ -667,7 +715,7 @@ impl PlannedDwConv {
             let mut u0 = 0;
             while u0 < pairs {
                 let u1 = (u0 + rows).min(pairs);
-                let mut mac = PimMacro::paper();
+                let mut mac = PimMacro::with_geometry(geom);
                 for p in u0..u1 {
                     let row = p - u0;
                     for cc in 0..taps.min(cmp) {
@@ -689,6 +737,7 @@ impl PlannedDwConv {
             ow,
             taps,
             cmp,
+            slots: geom.slots(),
             passes,
             kind: DwKind::Fcc {
                 means: fcc.means.clone(),
@@ -706,14 +755,28 @@ impl PlannedDwConv {
         k: usize,
         stride: usize,
     ) -> PlannedDwConv {
+        Self::regular_with(MacroGeometry::paper(), h, w, c, filters, k, stride)
+    }
+
+    /// [`PlannedDwConv::regular`] on an explicit macro geometry.
+    #[allow(clippy::too_many_arguments)]
+    pub fn regular_with(
+        geom: MacroGeometry,
+        h: usize,
+        w: usize,
+        c: usize,
+        filters: &[i32], // [C, K*K]
+        k: usize,
+        stride: usize,
+    ) -> PlannedDwConv {
         let taps = k * k;
         assert_eq!(filters.len(), c * taps, "filter bank shape mismatch");
-        let (cmp, _, rows) = paper_geometry();
+        let (cmp, rows) = (geom.compartments, geom.rows);
         let mut passes = Vec::new();
         let mut u0 = 0;
         while u0 < c {
             let u1 = (u0 + rows).min(c);
-            let mut mac = PimMacro::paper();
+            let mut mac = PimMacro::with_geometry(geom);
             for ch in u0..u1 {
                 let row = ch - u0;
                 for cc in 0..taps.min(cmp) {
@@ -734,6 +797,7 @@ impl PlannedDwConv {
             ow,
             taps,
             cmp,
+            slots: geom.slots(),
             passes,
             kind: DwKind::Regular,
         }
@@ -832,9 +896,9 @@ impl PlannedDwConv {
         // no explicit width-1 branch — see execute_batch_par: the pool
         // runs the units inline in the same order on the caller.
         // pre-grow every lane's private scratch on the caller thread
-        let (_, slots, _) = paper_geometry();
         for ctx in per.iter_mut() {
-            ctx.scratch.warm(2, slots, 8); // Split-capable, 8 input bits
+            // Split-capable, 8 input bits, this plan's lane count
+            ctx.scratch.warm(2, self.slots, 8, self.cmp);
             ctx.inp.resize(self.cmp, 0);
             ctx.inn.resize(self.cmp, 0);
         }
@@ -1295,11 +1359,38 @@ mod tests {
     fn paper_geometry_matches_the_built_macro() {
         // the const-based planner geometry must never drift from the
         // macro the passes actually build
+        let geom = MacroGeometry::paper();
         let mac = PimMacro::paper();
         assert_eq!(
-            paper_geometry(),
+            (geom.compartments, geom.slots(), geom.rows),
             (mac.core.num_compartments(), mac.core.slots(), mac.core.rows())
         );
+    }
+
+    #[test]
+    fn wide_geometry_plans_match_direct_conv() {
+        // >64-compartment geometries (previously hard-rejected by the
+        // single-word WeightPlanes): fewer l-tiles per group, multi-word
+        // planes in every row-step, same exact outputs
+        let mut rng = Rng::new(115);
+        let (h, w, c, k, n) = (4, 4, 20, 3, 8); // l = 180 > 128 lanes
+        let input = rand_vec(&mut rng, h * w * c);
+        let bank = FilterBank::new(rand_vec(&mut rng, n * k * k * c), n, k * k * c);
+        let fcc = fcc_transform(&bank);
+        let want = fcc_oracle(&input, h, w, c, &fcc, k, 1);
+        for lanes in [65usize, 96, 128] {
+            let geom = MacroGeometry::with_compartments(lanes);
+            let plan = PlannedConv::std_fcc_with(geom, h, w, c, &fcc, k, 1);
+            let mut ctx = ExecCtx::new();
+            let mut out = vec![0i64; plan.out_len()];
+            plan.execute(&input, &mut ctx, &mut out);
+            assert_eq!(out, want, "std_fcc drifted at {lanes} compartments");
+            // and through the pool, which warms multi-word scratches
+            let mut pool = ExecPool::new(2);
+            let mut got = vec![1i64; plan.out_len()];
+            plan.execute_par(&input, &mut pool, &mut got);
+            assert_eq!(got, want, "execute_par drifted at {lanes} compartments");
+        }
     }
 
     #[test]

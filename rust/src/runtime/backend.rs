@@ -173,10 +173,12 @@ impl FromStr for FabricChoice {
 pub struct BackendSpec {
     pub kind: BackendKind,
     pub fabric: FabricChoice,
-    /// Execution-pool width for bit-sliced fabric sessions: `0`
-    /// (default) resolves through the `DDC_THREADS` environment
-    /// variable and falls back to 1 — the serial path, which every
-    /// width is byte-identical to (`crate::util::pool::resolve_threads`).
+    /// Execution-pool width for reference sessions on either fabric
+    /// (bit-sliced convs shard pixel blocks, dense convs shard MVM row
+    /// blocks): `0` (default) resolves through the `DDC_THREADS`
+    /// environment variable and falls back to 1 — the serial path,
+    /// which every width is byte-identical to
+    /// (`crate::util::pool::resolve_threads`).
     pub threads: usize,
 }
 

@@ -38,10 +38,11 @@
 
 use anyhow::{ensure, Result};
 
+use crate::arch::pim_core::MacroGeometry;
 use crate::fcc::{fcc_transform, FccWeights, FilterBank};
 use crate::mapping::exec::{ExecPool, PlannedConv};
 use crate::mapping::im2col::{im2col_into, out_dims};
-use crate::util::pool::resolve_threads;
+use crate::util::pool::{resolve_threads, SharedMut};
 use crate::util::rng::Rng;
 
 use super::backend::{Backend, FabricChoice, Session, IMG_ELEMS, NUM_CLASSES};
@@ -114,6 +115,44 @@ pub fn mvm_i32(x: &[i32], w: &[i32], b: usize, l: usize, n: usize) -> Vec<i32> {
     out
 }
 
+/// Rows of a `[b, n]` output sharded per parallel work unit: coarse
+/// enough to amortize dispatch over thousands of MACs, fine enough
+/// that typical `batch * pixels` row counts split across every lane.
+const MVM_ROW_BLOCK: usize = 32;
+
+/// Parallel twin of [`mvm_i32_into`]: shards the `b` row dimension
+/// across the pool's lanes in [`MVM_ROW_BLOCK`] runs.  Byte-identical
+/// to the serial kernel at every pool width — all arithmetic for an
+/// output row happens inside exactly one unit (wrapping adds in
+/// row-private register accumulators) and units write disjoint row
+/// ranges, so scheduling order cannot change any byte.
+pub fn mvm_i32_into_par(
+    out: &mut [i32],
+    x: &[i32],
+    w: &[i32],
+    b: usize,
+    l: usize,
+    n: usize,
+    pool: &mut ExecPool,
+) {
+    let nblocks = b.div_ceil(MVM_ROW_BLOCK);
+    if nblocks <= 1 || pool.width() == 1 {
+        return mvm_i32_into(out, x, w, b, l, n);
+    }
+    assert_eq!(x.len(), b * l, "x shape mismatch");
+    assert_eq!(w.len(), l * n, "w shape mismatch");
+    assert_eq!(out.len(), b * n, "out shape mismatch");
+    let out_ptr = SharedMut(out.as_mut_ptr());
+    pool.run(nblocks, &|_lane, unit| {
+        let r0 = unit * MVM_ROW_BLOCK;
+        let r1 = (r0 + MVM_ROW_BLOCK).min(b);
+        // SAFETY: units own disjoint row ranges of `out`
+        let rows =
+            unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(r0 * n), (r1 - r0) * n) };
+        mvm_i32_into(rows, &x[r0 * l..r1 * l], w, r1 - r0, l, n);
+    });
+}
+
 /// FCC MVM with ARU recovery into caller-owned buffers: `out` is the
 /// `[b, 2*half]` interleaved result, `psum` the `[b, half]` stored-path
 /// partial sums (scratch the caller keeps to avoid allocation).
@@ -142,6 +181,48 @@ pub fn fcc_mvm_into(
             out[bi * 2 * half + 2 * p + 1] = odd;
         }
     }
+}
+
+/// Parallel twin of [`fcc_mvm_into`]: each [`MVM_ROW_BLOCK`] row run
+/// performs its own stored-path MVM *and* Eq. 7 recovery, so the whole
+/// FCC path of a row stays inside one unit.  Byte-identical to the
+/// serial kernel at every pool width (disjoint `out`/`psum` row
+/// ranges; see [`mvm_i32_into_par`]).
+#[allow(clippy::too_many_arguments)]
+pub fn fcc_mvm_into_par(
+    out: &mut [i32],
+    psum: &mut [i32],
+    x: &[i32],
+    w_even: &[i32],
+    m: &[i32],
+    b: usize,
+    l: usize,
+    half: usize,
+    pool: &mut ExecPool,
+) {
+    let nblocks = b.div_ceil(MVM_ROW_BLOCK);
+    if nblocks <= 1 || pool.width() == 1 {
+        return fcc_mvm_into(out, psum, x, w_even, m, b, l, half);
+    }
+    assert_eq!(x.len(), b * l, "x shape mismatch");
+    assert_eq!(m.len(), half, "m shape mismatch");
+    assert_eq!(out.len(), b * 2 * half, "out shape mismatch");
+    assert_eq!(psum.len(), b * half, "psum shape mismatch");
+    let out_ptr = SharedMut(out.as_mut_ptr());
+    let psum_ptr = SharedMut(psum.as_mut_ptr());
+    pool.run(nblocks, &|_lane, unit| {
+        let r0 = unit * MVM_ROW_BLOCK;
+        let r1 = (r0 + MVM_ROW_BLOCK).min(b);
+        let rows = r1 - r0;
+        // SAFETY: units own disjoint row ranges of both buffers
+        let (o, p) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(out_ptr.0.add(r0 * 2 * half), rows * 2 * half),
+                std::slice::from_raw_parts_mut(psum_ptr.0.add(r0 * half), rows * half),
+            )
+        };
+        fcc_mvm_into(o, p, &x[r0 * l..r1 * l], w_even, m, rows, l, half);
+    });
 }
 
 /// FCC MVM with ARU recovery (paper Eq. 7 / `fcc_mvm_ref`):
@@ -190,9 +271,13 @@ pub struct ReferenceBackend {
     layers: Vec<RefLayer>,
     seed: u64,
     fabric: FabricChoice,
-    /// Requested pool width for fabric sessions (0 = `DDC_THREADS` env,
-    /// then 1 — see [`resolve_threads`]).
+    /// Requested pool width for planned sessions (0 = `DDC_THREADS`
+    /// env, then 1 — see [`resolve_threads`]).  Both fabrics use the
+    /// pool: bit-sliced convs shard pixel blocks, dense convs shard
+    /// MVM row blocks.
     threads: usize,
+    /// Macro geometry bit-sliced sessions plan onto (default: paper).
+    geometry: MacroGeometry,
 }
 
 impl ReferenceBackend {
@@ -235,13 +320,23 @@ impl ReferenceBackend {
             seed,
             fabric,
             threads: 0,
+            geometry: MacroGeometry::paper(),
         }
     }
 
-    /// Set the execution-pool width planned sessions use on the
-    /// bit-sliced fabric (0 = resolve from `DDC_THREADS`, then 1).
+    /// Set the execution-pool width planned sessions use — on both
+    /// fabrics (0 = resolve from `DDC_THREADS`, then 1).
     pub fn with_threads(mut self, threads: usize) -> ReferenceBackend {
         self.threads = threads;
+        self
+    }
+
+    /// Set the macro geometry bit-sliced sessions plan onto.  Any
+    /// compartment count is accepted — >64 lanes pack as multi-word
+    /// weight planes — and every geometry produces identical logits
+    /// (only the pass schedule changes).
+    pub fn with_macro_geometry(mut self, geometry: MacroGeometry) -> ReferenceBackend {
+        self.geometry = geometry;
         self
     }
 
@@ -257,7 +352,7 @@ impl ReferenceBackend {
     /// without boxing (test/bench convenience; [`Backend::prepare`]
     /// wraps this).
     pub fn plan(&self) -> Result<ReferenceSession> {
-        ReferenceSession::plan(&self.layers, self.fabric, self.threads)
+        ReferenceSession::plan(&self.layers, self.fabric, self.threads, self.geometry)
     }
 }
 
@@ -301,9 +396,9 @@ pub struct ReferenceSession {
     /// Fabric conv raw accumulators for the whole batch,
     /// `[batch * P, cout]`.
     out64: Vec<i64>,
-    /// Fabric execution pool: shared staging + per-lane scratch, kept
-    /// warm for the session's lifetime (width 1 when no layer runs on
-    /// the fabric).
+    /// Execution pool: shared staging + per-lane scratch, kept warm
+    /// for the session's lifetime.  Bit-sliced convs shard pixel
+    /// blocks across it; dense convs shard MVM row blocks.
     pool: ExecPool,
 }
 
@@ -312,6 +407,7 @@ impl ReferenceSession {
         layers: &[RefLayer],
         fabric: FabricChoice,
         threads: usize,
+        geometry: MacroGeometry,
     ) -> Result<ReferenceSession> {
         let mut planned = Vec::with_capacity(layers.len());
         // walk the activation dims so fabric plans know their geometry
@@ -339,7 +435,9 @@ impl ReferenceSession {
                             shift: *shift,
                         },
                         FabricChoice::BitSliced => SessionLayer::ConvFabric {
-                            plan: PlannedConv::std_fcc(h, w, *cin, fcc, *k, *stride),
+                            plan: PlannedConv::std_fcc_with(
+                                geometry, h, w, *cin, fcc, *k, *stride,
+                            ),
                             shift: *shift,
                         },
                     });
@@ -374,12 +472,10 @@ impl ReferenceSession {
             }
         }
         ensure!(head_cout.is_some(), "classifier head missing");
-        // a parallel pool only helps layers that run on the fabric;
-        // dense-only sessions keep the width-1 (no threads) pool
-        let any_fabric = planned
-            .iter()
-            .any(|l| matches!(l, SessionLayer::ConvFabric { .. }));
-        let width = if any_fabric { resolve_threads(threads) } else { 1 };
+        // both fabrics shard through the pool: bit-sliced convs by
+        // pixel block, dense convs by MVM row block — one knob, one
+        // byte-identical contract at every width
+        let width = resolve_threads(threads);
         Ok(ReferenceSession {
             layers: planned,
             act: Vec::new(),
@@ -392,8 +488,8 @@ impl ReferenceSession {
         })
     }
 
-    /// The execution-pool width this session shards fabric convs
-    /// across (1 = serial; dense-only sessions are always 1).
+    /// The execution-pool width this session shards conv work across
+    /// (1 = the serial path; every width is byte-identical).
     pub fn pool_width(&self) -> usize {
         self.pool.width()
     }
@@ -492,7 +588,19 @@ impl Session for ReferenceSession {
                     let rows = batch * pixels;
                     raw.resize(rows * cout, 0);
                     psum.resize(rows * half, 0);
-                    fcc_mvm_into(raw, psum, cols.as_slice(), w_even_cols, means, rows, l, half);
+                    // batch*pixels MVM rows shard across the session
+                    // pool in row blocks (serial at width 1)
+                    fcc_mvm_into_par(
+                        raw,
+                        psum,
+                        cols.as_slice(),
+                        w_even_cols,
+                        means,
+                        rows,
+                        l,
+                        half,
+                        pool,
+                    );
                     act_next.resize(rows * cout, 0);
                     for (dst, &v) in act_next.iter_mut().zip(raw.iter()) {
                         *dst = requant_relu(v as i64, *shift);
@@ -804,11 +912,42 @@ mod tests {
     }
 
     #[test]
-    fn dense_sessions_never_spin_up_a_pool() {
+    fn dense_sessions_use_the_pool_too() {
+        // the dense fcc_mvm path shards MVM row blocks through the same
+        // ExecPool as the fabric (the ROADMAP mvm_i32 follow-up), so a
+        // dense session honors the requested width
         let be = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::DenseReference)
             .with_threads(8);
-        assert_eq!(be.plan().unwrap().pool_width(), 1);
+        assert_eq!(be.plan().unwrap().pool_width(), 8);
     }
+
+    #[test]
+    fn dense_parallel_sessions_are_bit_identical() {
+        // dense logits must not depend on the pool width: every MVM
+        // output row is computed wholly inside one work unit
+        let mut rng = Rng::new(23);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+        let want = ReferenceBackend::seeded(DEFAULT_SEED)
+            .with_threads(1)
+            .infer_batch(&x, batch)
+            .unwrap();
+        for threads in [2usize, 4] {
+            let got = ReferenceBackend::seeded(DEFAULT_SEED)
+                .with_threads(threads)
+                .infer_batch(&x, batch)
+                .unwrap();
+            assert_eq!(got, want, "dense logits drifted at {threads} threads");
+        }
+    }
+
+    // NB: one owner, no in-module duplicates — the width-{1,4}
+    // byte-identity pin of mvm_i32_into_par / fcc_mvm_into_par lives
+    // in tests/parallel_determinism.rs
+    // (dense_mvm_kernels_pinned_at_widths_1_and_4), and the
+    // 128-compartment end-to-end envelope is pinned by
+    // tests/session_semantics.rs
+    // (wide_geometry_fabric_session_matches_dense_reference).
 
     #[test]
     fn fabric_session_resides_weights_once() {

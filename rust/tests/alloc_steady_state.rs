@@ -60,9 +60,12 @@ fn steady_state_infer_batch_into_is_allocation_free() {
     // (fabric, pool width): width 4 exercises the parallel dispatch
     // path — per-lane ExecCtx clones kept warm, work handed off
     // allocation-free (explicit widths, not DDC_THREADS, so the
-    // measured configuration never depends on the environment)
+    // measured configuration never depends on the environment).  The
+    // dense width-4 case covers the pooled MVM row-block kernels,
+    // which dispatch through the same pre-sized atomics.
     let cases = [
         (FabricChoice::DenseReference, 1usize),
+        (FabricChoice::DenseReference, 4),
         (FabricChoice::BitSliced, 1),
         (FabricChoice::BitSliced, 4),
     ];

@@ -1,8 +1,11 @@
-//! Differential coverage for the bitsliced fabric (PR 2 tentpole): the
-//! word-parallel bit-plane `mvm_row` against the retained per-cell
-//! scalar oracle across Regular/Double × Combined/Split × random INT8
-//! inputs/weights and core geometries, and the zero-alloc executors
-//! against direct convolution on random shapes.
+//! Differential coverage for the bitsliced fabric (PR 2 tentpole,
+//! extended by the PR 5 multi-word planes): the word-parallel bit-plane
+//! `mvm_row` against the retained per-cell scalar oracle across
+//! Regular/Double × Combined/Split × random INT8 inputs/weights and
+//! core geometries — including >64-compartment multi-word geometries
+//! and adversarial sparse/dense weight patterns aimed at the nonzero
+//! summaries — and the zero-alloc executors against direct convolution
+//! on random shapes.
 //!
 //! All cases are drawn from the seeded `util::rng` stream through the
 //! `util::prop` harness, so any failure is replayable from the printed
@@ -10,11 +13,11 @@
 //! oracle itself and these tests pin the adapter instead.)
 
 use ddc_pim::arch::lpu::Mode;
-use ddc_pim::arch::pim_core::PimCore;
+use ddc_pim::arch::pim_core::{MacroGeometry, PimCore};
 use ddc_pim::arch::pim_macro::{MvmScratch, PimMacro};
 use ddc_pim::arch::reconfig::Grouping;
 use ddc_pim::fcc::{fcc_transform, recompose, FilterBank};
-use ddc_pim::mapping::exec::{exec_dw_fcc, exec_std_fcc};
+use ddc_pim::mapping::exec::{exec_dw_fcc, exec_std_fcc, ExecCtx, PlannedConv, PlannedDwConv};
 use ddc_pim::mapping::im2col::{direct_conv, direct_dwconv};
 use ddc_pim::util::prop::forall_explain;
 use ddc_pim::util::rng::Rng;
@@ -73,6 +76,168 @@ fn bitsliced_mvm_row_matches_scalar_oracle() {
                         }
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Every (row, mode, grouping) of a macro vs the scalar oracle; returns
+/// the first divergence as an error string.
+fn check_macro_vs_oracle(
+    mac: &PimMacro,
+    rows: usize,
+    xs: &[i32],
+    xn: &[i32],
+    label: &str,
+) -> Result<(), String> {
+    let mut scratch = MvmScratch::new();
+    for row in 0..rows {
+        for mode in [Mode::Regular, Mode::Double] {
+            for grouping in [Grouping::Combined, Grouping::Split] {
+                let want = mac.mvm_row_scalar(row, xs, xn, mode, grouping);
+                mac.mvm_row_into(row, xs, xn, mode, grouping, &mut scratch);
+                if scratch.to_vecs() != want {
+                    return Err(format!("divergence at row {row} {mode:?} {grouping:?} ({label})"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn multiword_geometries_match_scalar_oracle() {
+    // >64 compartments — 65 (one lane into the second word), 96, 128 —
+    // were hard-rejected by the single-word WeightPlanes; now they must
+    // be bit-true across every mode and grouping
+    forall_explain(
+        0x71DE_1A85,
+        12,
+        |r| {
+            let ncmp = [65usize, 96, 128][r.below(3) as usize];
+            (ncmp, r.next_u64())
+        },
+        |&(ncmp, seed)| {
+            let mut rng = Rng::new(seed);
+            let mac = random_macro(&mut rng, ncmp, 2);
+            let xs = rand_vec(&mut rng, ncmp);
+            let xn = sparse_vec(&mut rng, ncmp);
+            check_macro_vs_oracle(&mac, 2, &xs, &xn, &format!("ncmp={ncmp}"))
+        },
+    );
+}
+
+#[test]
+fn adversarial_weight_patterns_match_scalar_oracle() {
+    // stored-weight patterns aimed at the per-word nonzero summaries:
+    // all-zero (every Q plane dark, every Q̄ plane lit), all -1 (the
+    // inverse), {0, 1} (Q sparse / Q̄ dense), {-1, -2} (Q̄ sparse),
+    // a single hot lane, and a single hot weight bit — across narrow,
+    // word-boundary and multi-word lane counts, against dense INP and
+    // half-zero INN inputs
+    forall_explain(
+        0xDA2_B175,
+        48,
+        |r| {
+            let ncmp = [16usize, 32, 64, 65, 128][r.below(5) as usize];
+            let pat = r.below(6) as usize;
+            (ncmp, pat, r.next_u64())
+        },
+        |&(ncmp, pat, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut mac = PimMacro::new(PimCore::new(ncmp, 2, 16), 8, 8);
+            let hot_lane = rng.below(ncmp as u64) as usize;
+            for cmp in 0..ncmp {
+                for row in 0..2 {
+                    for slot in 0..2 {
+                        let w = match pat {
+                            0 => 0,
+                            1 => -1,
+                            2 => rng.below(2) as i32,
+                            3 => -1 - rng.below(2) as i32,
+                            4 if cmp == hot_lane => rng.int8() as i32,
+                            4 => 0,
+                            _ => (rng.below(2) as i32) << 5, // only kw=5 ever lit
+                        };
+                        mac.load_weight(cmp, row, slot, w);
+                    }
+                }
+            }
+            let xs = rand_vec(&mut rng, ncmp);
+            let xn = sparse_vec(&mut rng, ncmp);
+            check_macro_vs_oracle(&mac, 2, &xs, &xn, &format!("ncmp={ncmp} pattern={pat}"))
+        },
+    );
+}
+
+#[test]
+fn wide_zero_extension_matches_padded_oracle() {
+    // short input slices on a 128-lane macro: lanes past the slice end
+    // (including entire upper words) must behave like explicit zeros
+    forall_explain(
+        0x71DE_22,
+        24,
+        |r| {
+            let len = r.below(129) as usize; // 0..=128 active lanes
+            (len, r.next_u64())
+        },
+        |&(len, seed)| {
+            let mut rng = Rng::new(seed);
+            let mac = random_macro(&mut rng, 128, 2);
+            let xs = rand_vec(&mut rng, len);
+            let mut padded = xs.clone();
+            padded.resize(128, 0);
+            let mut scratch = MvmScratch::new();
+            for grouping in [Grouping::Combined, Grouping::Split] {
+                mac.mvm_row_into(1, &xs, &xs, Mode::Double, grouping, &mut scratch);
+                let want = mac.mvm_row_scalar(1, &padded, &padded, Mode::Double, grouping);
+                if scratch.to_vecs() != want {
+                    return Err(format!("wide zero-extension drift at len={len} {grouping:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn wide_geometry_executors_match_direct_conv() {
+    // the plan/execute path at 65/96/128 compartments (std FCC and dw
+    // reconfig) against the direct-conv oracles
+    forall_explain(
+        0x71DE_57D,
+        9,
+        |r| {
+            let lanes = [65usize, 96, 128][r.below(3) as usize];
+            (lanes, r.next_u64())
+        },
+        |&(lanes, seed)| {
+            let geom = MacroGeometry::with_compartments(lanes);
+            let mut rng = Rng::new(seed);
+            let (h, w, c, k, n) = (4usize, 3usize, 11usize, 3usize, 6usize);
+            let input = rand_vec(&mut rng, h * w * c);
+            let l = k * k * c; // 99: tiles 1-2 words wide, ragged tail
+            let bank = FilterBank::new(rand_vec(&mut rng, n * l), n, l);
+            let fcc = fcc_transform(&bank);
+            let plan = PlannedConv::std_fcc_with(geom, h, w, c, &fcc, k, 1);
+            let mut ctx = ExecCtx::new();
+            let mut out = vec![0i64; plan.out_len()];
+            plan.execute(&input, &mut ctx, &mut out);
+            let want = direct_conv(&input, h, w, c, &recompose(&fcc).data, n, k, 1);
+            if out != want {
+                return Err(format!("std_fcc_with drifted at {lanes} lanes"));
+            }
+            let dc = 8usize;
+            let dw_input = rand_vec(&mut rng, h * w * dc);
+            let dw_bank = FilterBank::new(rand_vec(&mut rng, dc * k * k), dc, k * k);
+            let dw_fcc = fcc_transform(&dw_bank);
+            let dw_plan = PlannedDwConv::fcc_with(geom, h, w, dc, &dw_fcc, k, 1, true);
+            let mut dw_out = vec![0i64; dw_plan.out_len()];
+            dw_plan.execute(&dw_input, &mut ctx, &mut dw_out);
+            let dw_want = direct_dwconv(&dw_input, h, w, dc, &recompose(&dw_fcc).data, k, 1);
+            if dw_out != dw_want {
+                return Err(format!("dw fcc_with drifted at {lanes} lanes"));
             }
             Ok(())
         },

@@ -13,7 +13,8 @@
 use ddc_pim::fcc::{fcc_transform, FilterBank};
 use ddc_pim::mapping::exec::{ExecCtx, ExecPool, PlannedConv, PlannedDwConv};
 use ddc_pim::runtime::{
-    reference::ReferenceBackend, Backend, FabricChoice, Session, IMG_ELEMS, NUM_CLASSES,
+    reference::{fcc_mvm_i32, fcc_mvm_into_par, mvm_i32, mvm_i32_into_par, ReferenceBackend},
+    Backend, FabricChoice, Session, IMG_ELEMS, NUM_CLASSES,
 };
 use ddc_pim::util::rng::Rng;
 
@@ -125,11 +126,50 @@ fn batched_execute_equals_per_image_across_widths() {
     }
 }
 
+/// Satellite pin (widths {1, 4}): the pooled dense MVM kernels must be
+/// byte-identical to the serial kernels — every output row's wrapping
+/// adds happen inside exactly one work unit, so scheduling cannot
+/// reorder them.  Shapes cover the single-block shortcut, a ragged
+/// tail block and a block-aligned row count.
+#[test]
+fn dense_mvm_kernels_pinned_at_widths_1_and_4() {
+    let mut rng = Rng::new(406);
+    for &(b, l, n) in &[(1usize, 5usize, 4usize), (50, 18, 9), (96, 12, 16)] {
+        let x = rand_vec(&mut rng, b * l);
+        let w = rand_vec(&mut rng, l * n);
+        let want = mvm_i32(&x, &w, b, l, n);
+        let half = n / 2;
+        let bank = FilterBank::new(rand_vec(&mut rng, 2 * half * l), 2 * half, l);
+        let fcc = fcc_transform(&bank);
+        let fcc_want = fcc_mvm_i32(&x, &fcc.stored_even_cols(), &fcc.means, b, l, half);
+        for width in [1usize, 4] {
+            let mut pool = ExecPool::new(width);
+            let mut got = vec![-7i32; b * n];
+            mvm_i32_into_par(&mut got, &x, &w, b, l, n, &mut pool);
+            assert_eq!(got, want, "mvm_i32 diverged at b={b} l={l} n={n} width={width}");
+            let mut fcc_got = vec![-7i32; b * 2 * half];
+            let mut psum = vec![0i32; b * half];
+            fcc_mvm_into_par(
+                &mut fcc_got,
+                &mut psum,
+                &x,
+                &fcc.stored_even_cols(),
+                &fcc.means,
+                b,
+                l,
+                half,
+                &mut pool,
+            );
+            assert_eq!(fcc_got, fcc_want, "fcc_mvm diverged at b={b} width={width}");
+        }
+    }
+}
+
 #[test]
 fn session_logits_pinned_across_widths_and_fabrics() {
     // end to end: the full session stack at every pool width must match
-    // the width-1 logits, on both fabric choices (the dense path never
-    // uses the pool; pinning it proves the knob is harmless there)
+    // the width-1 logits, on both fabric choices (the dense path now
+    // shards MVM row blocks through the same pool)
     let mut rng = Rng::new(404);
     let batch = 3;
     let x: Vec<f32> = (0..batch * IMG_ELEMS).map(|_| rng.normal() as f32).collect();

@@ -12,6 +12,7 @@
 //!   the `&self` execute path never writes again (asserted via the
 //!   weight-write counters).
 
+use ddc_pim::arch::pim_core::MacroGeometry;
 use ddc_pim::fcc::{fcc_transform, recompose, FilterBank};
 use ddc_pim::mapping::exec::{
     exec_dw_fcc, exec_dw_regular, exec_std_fcc, exec_std_regular, ExecCtx, PlannedConv,
@@ -100,6 +101,28 @@ fn bitsliced_fabric_session_matches_dense_reference() {
     ds.infer_batch_into(&x, batch, &mut dout).expect("dense");
     fs.infer_batch_into(&x, batch, &mut fout).expect("fabric");
     assert_eq!(dout, fout, "bit-sliced fabric drifted from the dense kernel");
+}
+
+#[test]
+fn wide_geometry_fabric_session_matches_dense_reference() {
+    // the >64-compartment envelope end to end: a 128-compartment macro
+    // geometry (multi-word weight planes — hard-rejected at plan time
+    // before this PR) must serve the full CIFAR stack and agree exactly
+    // with the dense reference kernel, which is itself pinned to the
+    // scalar oracle by the differential suite
+    let dense = ReferenceBackend::seeded(DEFAULT_SEED);
+    let wide = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+        .with_macro_geometry(MacroGeometry::with_compartments(128));
+    let mut ds = dense.prepare().expect("dense prepare");
+    let mut ws = wide.prepare().expect("wide fabric prepare");
+    let mut rng = Rng::new(36);
+    let batch = 2;
+    let x: Vec<f32> = (0..batch).flat_map(|_| image(&mut rng)).collect();
+    let mut dout = vec![0f32; batch * NUM_CLASSES];
+    let mut wout = vec![0f32; batch * NUM_CLASSES];
+    ds.infer_batch_into(&x, batch, &mut dout).expect("dense");
+    ws.infer_batch_into(&x, batch, &mut wout).expect("wide fabric");
+    assert_eq!(dout, wout, "128-compartment fabric drifted from the dense kernel");
 }
 
 #[test]
