@@ -21,7 +21,8 @@ test-python:
 test: test-rust test-python
 
 # populate the bench trajectory: BENCH_*.json at the repo root
-# (mean/min/max ns per named hot path; see DESIGN.md §7).
+# (mean/min/max ns per named hot path; schema + gate contract:
+# docs/benching.md, architecture: DESIGN.md §7).
 # cargo runs bench binaries with cwd = the package root (rust/), so the
 # --json paths are ../-prefixed to land at the repo root.
 bench:
@@ -36,10 +37,11 @@ bench-smoke:
 
 # bench trajectory gate: run a fresh full pim_fabric pass and diff it
 # against the checked-in baseline; fails on >10% mean regressions.
-# Exit codes: 0 ok, 1 regression, 2 usage/structural error, 3 baseline
-# unfit (carries "estimated"/"quick": true — regenerate via `make
-# bench` on a toolchain host and commit the result; CI's bench gate
-# step fails loudly on exit 3 instead of silently skipping).
+# Exit codes (full contract: docs/benching.md): 0 ok, 1 regression,
+# 2 usage/structural error, 3 baseline unfit (carries
+# "estimated"/"quick": true — regenerate via `make bench` on a
+# toolchain host and commit the result; CI's bench gate step fails
+# loudly on exit 3 instead of silently skipping).
 bench-diff:
 	cargo build --release --benches --bin bench-diff
 	cargo bench --bench pim_fabric -- --json ../BENCH_pim_fabric.new.json

@@ -163,6 +163,15 @@ impl CostModel {
             + dram_bytes as f64 * DRAM_PJ_PER_BYTE)
             * 1e-9
     }
+
+    /// Energy of one weight-reload pass (mJ): the bytes cross DRAM and
+    /// are written into the weight SRAM once.  This is the marginal
+    /// cost capacity pressure adds — every reload beyond the first
+    /// residency pays it again, which is why the streaming planner
+    /// packs as many layers per pass as the budget allows.
+    pub fn reload_energy_mj(&self, bytes: u64) -> f64 {
+        bytes as f64 * (DRAM_PJ_PER_BYTE + SRAM_PJ_PER_BYTE) * 1e-9
+    }
 }
 
 #[cfg(test)]
@@ -175,6 +184,16 @@ mod tests {
 
     fn base() -> CostModel {
         CostModel::new(ArchConfig::baseline())
+    }
+
+    #[test]
+    fn reload_energy_is_dram_plus_sram_write() {
+        let c = ddc();
+        // 1 KB reloaded: 1024 * (20.0 + 0.5) pJ = 20.992 nJ = 2.0992e-5 mJ
+        let mj = c.reload_energy_mj(1024);
+        assert!((mj - 1024.0 * 20.5 * 1e-9).abs() < 1e-15);
+        // reloading is strictly more expensive than staying resident
+        assert!(c.reload_energy_mj(4096) > c.reload_energy_mj(0));
     }
 
     #[test]

@@ -6,20 +6,31 @@
 /// DRAM transfer bookkeeping.
 #[derive(Debug, Clone)]
 pub struct Dram {
+    /// Streaming bandwidth (paper config: 8 B/cycle).
     pub bytes_per_cycle: f64,
+    /// Fixed setup latency per transfer (paper config: 100 cycles).
     pub latency_cycles: u64,
     /// Total bytes moved (traffic statistics; FCC halves conv weights).
     pub total_bytes: u64,
+    /// Number of transfers issued.
     pub total_transfers: u64,
+    /// Transfer cycles masked behind concurrent compute (prefetch).
+    pub hidden_cycles: u64,
+    /// Transfer cycles that stalled the fabric (nothing to hide behind).
+    pub stalled_cycles: u64,
 }
 
 impl Dram {
+    /// Model with the given bandwidth and setup latency; all traffic
+    /// counters start at zero.
     pub fn new(bytes_per_cycle: f64, latency_cycles: u64) -> Self {
         Dram {
             bytes_per_cycle,
             latency_cycles,
             total_bytes: 0,
             total_transfers: 0,
+            hidden_cycles: 0,
+            stalled_cycles: 0,
         }
     }
 
@@ -42,6 +53,29 @@ impl Dram {
     /// of compute run concurrently (prefetch masking).
     pub fn exposed_cycles(&self, transfer: u64, overlap_cycles: u64) -> u64 {
         transfer.saturating_sub(overlap_cycles)
+    }
+
+    /// Record a prefetched transfer: `bytes` move while `overlap_cycles`
+    /// of compute run concurrently.  Splits the transfer into its hidden
+    /// and exposed halves, accumulates both, and returns the exposed
+    /// (stalling) cycles — the single entry point the engine uses so the
+    /// overlap ratio is always consistent with the traffic counters.
+    pub fn prefetched_transfer(&mut self, bytes: usize, overlap_cycles: u64) -> u64 {
+        let transfer = self.transfer(bytes);
+        let exposed = self.exposed_cycles(transfer, overlap_cycles);
+        self.hidden_cycles += transfer - exposed;
+        self.stalled_cycles += exposed;
+        exposed
+    }
+
+    /// Fraction of all transfer cycles masked behind compute (0..=1);
+    /// 1.0 when no traffic has moved (nothing was exposed).
+    pub fn overlap_ratio(&self) -> f64 {
+        let total = self.hidden_cycles + self.stalled_cycles;
+        if total == 0 {
+            return 1.0;
+        }
+        self.hidden_cycles as f64 / total as f64
     }
 }
 
@@ -72,5 +106,26 @@ mod tests {
         d.transfer(50);
         assert_eq!(d.total_bytes, 150);
         assert_eq!(d.total_transfers, 2);
+    }
+
+    #[test]
+    fn prefetch_overlap_accounting() {
+        let mut d = Dram::new(8.0, 100);
+        // 800 B = 200 cycles; 150 hidden behind compute, 50 exposed
+        let exposed = d.prefetched_transfer(800, 150);
+        assert_eq!(exposed, 50);
+        assert_eq!(d.hidden_cycles, 150);
+        assert_eq!(d.stalled_cycles, 50);
+        assert!((d.overlap_ratio() - 0.75).abs() < 1e-12);
+        // a fully hidden transfer leaves no stall behind
+        assert_eq!(d.prefetched_transfer(800, 10_000), 0);
+        assert_eq!(d.stalled_cycles, 50);
+        assert!(d.overlap_ratio() > 0.75);
+    }
+
+    #[test]
+    fn overlap_ratio_is_one_with_no_traffic() {
+        let d = Dram::new(8.0, 100);
+        assert_eq!(d.overlap_ratio(), 1.0);
     }
 }

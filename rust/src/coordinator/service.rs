@@ -21,7 +21,10 @@
 //!
 //! Alongside the functional result, each request is annotated with the
 //! *simulated* DDC-PIM latency of the model so the serving path reports
-//! both wall-clock and modelled-hardware numbers.
+//! both wall-clock and modelled-hardware numbers.  When the backend
+//! spec carries a weight-streaming budget (`BackendSpec::stream_kb`),
+//! [`ServiceStats`] additionally carries the session's
+//! [`CapacityPressure`] counters, refreshed whenever stats are queried.
 
 use std::sync::mpsc;
 use std::thread::{self, JoinHandle};
@@ -30,7 +33,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::{ArchConfig, SimConfig};
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{CapacityPressure, LatencyHistogram};
 use crate::model::zoo;
 use crate::runtime::{Backend, BackendKind, BackendSpec, Session, IMG_ELEMS, NUM_CLASSES};
 use crate::sim::simulate_network;
@@ -70,6 +73,10 @@ pub struct ServiceStats {
     pub max_latency: Duration,
     /// Log-bucketed latency distribution (p50/p99 queries).
     pub latency_hist: LatencyHistogram,
+    /// Weight-streaming capacity pressure reported by the session
+    /// (all-zero when the backend runs without a streaming budget —
+    /// `CapacityPressure::default()` means "everything resident").
+    pub capacity: CapacityPressure,
 }
 
 impl ServiceStats {
@@ -261,6 +268,7 @@ fn worker_loop(
             match msg {
                 Ok(Msg::Infer(r)) => batcher.push(r),
                 Ok(Msg::Stats(stx)) => {
+                    stats.capacity = session.capacity_pressure().unwrap_or_default();
                     let _ = stx.send(stats.clone());
                 }
                 Ok(Msg::Shutdown) => open = false,
@@ -273,6 +281,7 @@ fn worker_loop(
                 match msg {
                     Msg::Infer(r) => batcher.push(r),
                     Msg::Stats(stx) => {
+                        stats.capacity = session.capacity_pressure().unwrap_or_default();
                         let _ = stx.send(stats.clone());
                     }
                     Msg::Shutdown => open = false,
@@ -370,6 +379,7 @@ mod tests {
                 kind: BackendKind::Reference,
                 fabric: FabricChoice::BitSliced,
                 threads: 2,
+                stream_kb: 0,
             },
             "/nonexistent".into(),
             BatchPolicy::default(),
@@ -380,6 +390,37 @@ mod tests {
         // at these layer sizes the i32 kernels cannot overflow, so the
         // bit-sliced macro path and the dense kernel agree exactly
         assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn streamed_service_reports_capacity_pressure() {
+        // a 2 KiB budget cannot hold conv2's 2304 B: the worker session
+        // streams, and stats() surfaces its pressure counters
+        let svc = InferenceService::start_spec(
+            BackendSpec {
+                kind: BackendKind::Reference,
+                fabric: FabricChoice::DenseReference,
+                threads: 1,
+                stream_kb: 2,
+            },
+            "/nonexistent".into(),
+            BatchPolicy::default(),
+        );
+        svc.infer(vec![0.1; IMG_ELEMS]).expect("streamed inference");
+        svc.infer(vec![0.2; IMG_ELEMS]).expect("streamed inference");
+        let stats = svc.stats().expect("stats");
+        let p = stats.capacity;
+        assert_eq!(p.capacity_bytes, 2048);
+        assert!(p.staged_bytes > 0, "no staging recorded");
+        assert!(p.reloads > 0, "second request must re-stage the passes");
+        // an unbudgeted service stays all-zero ("everything resident")
+        let resident =
+            InferenceService::start("/nonexistent".into(), BatchPolicy::default());
+        resident.infer(vec![0.1; IMG_ELEMS]).expect("inference");
+        assert_eq!(
+            resident.stats().expect("stats").capacity,
+            CapacityPressure::default()
+        );
     }
 
     #[test]

@@ -96,10 +96,21 @@ fn run(args: &[String]) -> i32 {
             }
         },
     };
+    let stream_kb = match flags.get("stream-kb") {
+        None => 0, // no budget: every conv layer stays resident
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            _ => {
+                eprintln!("--stream-kb needs an integer >= 0 (KiB), got {v:?}");
+                return 2;
+            }
+        },
+    };
     let spec = BackendSpec {
         kind: backend_kind,
         fabric,
         threads,
+        stream_kb,
     };
     match pos.first().map(String::as_str) {
         Some("info") => cmd_info(),
@@ -117,6 +128,7 @@ fn run(args: &[String]) -> i32 {
                  \n         --backend <auto|reference|pjrt>  (default: auto)\
                  \n         --fabric <dense|bitsliced>  (reference conv path; default: dense)\
                  \n         --threads <N>  (exec pool width; default: DDC_THREADS or 1)\
+                 \n         --stream-kb <N>  (weight-streaming budget in KiB; default: 0 = resident)\
                  \n  models: {}",
                 zoo::ALL_MODELS.join(", ")
             );
@@ -291,7 +303,43 @@ fn cmd_selfcheck(artifact_dir: &str, spec: BackendSpec) -> i32 {
         })
     });
 
-    // 4. golden replay when the python AOT pass has produced artifacts
+    // 4. weight streaming: a capacity-budgeted session must produce
+    //    byte-identical logits to the resident path, and report its
+    //    pressure counters (reference backend only; PJRT sessions do
+    //    not stream)
+    if spec.kind != BackendKind::Pjrt && backend.name() == "reference" {
+        check(&mut failures, "weight streaming parity (2 KiB budget)", {
+            let mut rng = Rng::new(304);
+            let img: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+            let resident = backend.infer_batch(&img, 1);
+            let streamed_spec = BackendSpec {
+                stream_kb: 2,
+                ..spec
+            };
+            resident.and_then(|want| {
+                let streamed = streamed_spec.create(artifact_dir)?;
+                let mut session = streamed.prepare()?;
+                let mut got = vec![0f32; NUM_CLASSES];
+                session.infer_batch_into(&img, 1, &mut got)?;
+                session.infer_batch_into(&img, 1, &mut got)?;
+                anyhow::ensure!(got == want, "streamed logits diverged from resident");
+                let p = session
+                    .capacity_pressure()
+                    .ok_or_else(|| anyhow::anyhow!("streamed session reported no pressure"))?;
+                anyhow::ensure!(p.staged_bytes > 0, "no staging recorded");
+                println!(
+                    "  streaming: reloads={} evictions={} peak occupancy={:.2} overlap={:.2}",
+                    p.reloads,
+                    p.evictions,
+                    p.peak_occupancy(),
+                    p.overlap_ratio(),
+                );
+                Ok(())
+            })
+        });
+    }
+
+    // 5. golden replay when the python AOT pass has produced artifacts
     //    (the integer kernels carry their shapes, so replay works on any
     //    backend; the model golden is PJRT-only).  Only a *missing*
     //    goldens.json skips; a present-but-unreadable one is a FAIL.
@@ -427,5 +475,17 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendS
         stats.p99().as_secs_f64() * 1e3,
         stats.max_latency.as_secs_f64() * 1e3,
     );
+    let p = stats.capacity;
+    if p.capacity_bytes > 0 {
+        println!(
+            "streaming: budget {} B | reloads {} | evictions {} | peak occupancy {:.2} | prefetch overlap {:.2} | exposed stall {:.2}ms",
+            p.capacity_bytes,
+            p.reloads,
+            p.evictions,
+            p.peak_occupancy(),
+            p.overlap_ratio(),
+            p.stall.as_secs_f64() * 1e3,
+        );
+    }
     0
 }

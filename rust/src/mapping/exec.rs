@@ -56,7 +56,7 @@ use super::im2col::{im2col_channel_into, im2col_into, out_dims};
 
 /// Pixels streamed per resident (row, slot) pass: the row's bit-planes
 /// stay register/L1-hot while this many activation windows flow past.
-const PIXEL_BLOCK: usize = 64;
+pub const PIXEL_BLOCK: usize = 64;
 
 /// Caller-owned scratch for the planned executors: every buffer the
 /// per-pixel loops touch, reused across `execute` calls (and across
@@ -158,6 +158,51 @@ pub fn window_sums(cols: &[i32], l: usize) -> Vec<i64> {
     let mut out = Vec::new();
     window_sums_into(&mut out, cols, l);
     out
+}
+
+/// Stored INT8 weight bytes of a conv layer with `n` output channels
+/// and reduction length `l`: FCC stores only the even comp filters
+/// (`n/2 * l` — the paper's capacity doubling), regular mode the full
+/// bank.  The streaming planner budgets layer footprints with this
+/// before any plan is built.
+pub fn stored_weight_bytes(n: usize, l: usize, fcc: bool) -> usize {
+    if fcc {
+        (n / 2) * l
+    } else {
+        n * l
+    }
+}
+
+/// Split a layer stack into weight-reload passes that fit a capacity
+/// budget: a greedy left-to-right walk packs consecutive layers while
+/// their cumulative footprint stays within `budget_bytes`, and starts a
+/// new pass otherwise.  A single layer larger than the whole budget
+/// still gets its own pass (a stack cannot split finer than one layer —
+/// the executor stages it anyway and reports occupancy > 1).
+///
+/// Returns the pass boundaries as index ranges over `footprints`; an
+/// empty input yields no passes.  Deterministic, so the pass counts the
+/// differential tests pin ({1, 2, 4} in `tests/streaming_semantics.rs`)
+/// are stable across hosts.
+pub fn plan_reload_passes(
+    footprints: &[usize],
+    budget_bytes: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let mut passes = Vec::new();
+    let mut start = 0;
+    let mut acc = 0usize;
+    for (i, &bytes) in footprints.iter().enumerate() {
+        if i > start && acc + bytes > budget_bytes {
+            passes.push(start..i);
+            start = i;
+            acc = 0;
+        }
+        acc += bytes;
+    }
+    if start < footprints.len() {
+        passes.push(start..footprints.len());
+    }
+    passes
 }
 
 /// One weight-reload pass of a std/pw plan: the filter groups
@@ -386,6 +431,19 @@ impl PlannedConv {
     /// session tests).
     pub fn weight_writes(&self) -> u64 {
         self.passes.iter().map(|p| p.mac.weight_writes()).sum()
+    }
+
+    /// Bytes of stored INT8 weights this plan keeps resident: the FCC
+    /// path stores only the even comp filters (`n/2 * l`), the regular
+    /// path the full bank (`n * l`).  This is the footprint the
+    /// streaming planner budgets against — see
+    /// [`stored_weight_bytes`] for computing it without building the
+    /// plan.
+    pub fn weight_footprint_bytes(&self) -> usize {
+        match self.kind {
+            StdKind::Fcc { .. } => stored_weight_bytes(self.n, self.l, true),
+            StdKind::Regular => stored_weight_bytes(self.n, self.l, false),
+        }
     }
 
     /// Run one `[H, W, C]` input through the resident weights into a
@@ -1562,5 +1620,40 @@ mod tests {
             plan.execute_par(&input, &mut pool, &mut got);
             assert_eq!(got, fcc_oracle(&input, h, w, c, &fcc, k, 1));
         }
+    }
+
+    #[test]
+    fn weight_footprint_is_half_for_fcc() {
+        let mut rng = Rng::new(115);
+        let (h, w, c, k, n) = (4usize, 4usize, 3usize, 3usize, 8usize);
+        let l = k * k * c;
+        let bank = FilterBank::new(rand_vec(&mut rng, n * l), n, l);
+        let fcc_plan = PlannedConv::std_fcc(h, w, c, &fcc_transform(&bank), k, 1);
+        assert_eq!(fcc_plan.weight_footprint_bytes(), (n / 2) * l);
+        let reg_plan = PlannedConv::std_regular(h, w, c, &bank.data, n, k, 1);
+        assert_eq!(reg_plan.weight_footprint_bytes(), n * l);
+        assert_eq!(stored_weight_bytes(n, l, true), (n / 2) * l);
+        assert_eq!(stored_weight_bytes(n, l, false), n * l);
+    }
+
+    #[test]
+    fn reload_pass_planning_is_greedy_and_total() {
+        // everything fits: one pass
+        assert_eq!(plan_reload_passes(&[10, 20, 30], 100), vec![0..3]);
+        // greedy split: 10+20 fits 30, adding 30 would exceed
+        assert_eq!(plan_reload_passes(&[10, 20, 30], 30), vec![0..2, 2..3]);
+        // a single over-budget layer still gets its own pass
+        assert_eq!(plan_reload_passes(&[10, 200, 10], 50), vec![0..1, 1..2, 2..3]);
+        // over-budget first layer does not produce an empty pass
+        assert_eq!(plan_reload_passes(&[200, 10], 50), vec![0..1, 1..2]);
+        // degenerate inputs
+        assert_eq!(plan_reload_passes(&[], 50), Vec::<std::ops::Range<usize>>::new());
+        assert_eq!(plan_reload_passes(&[5], 0), vec![0..1]);
+        // every index appears exactly once, in order
+        let fp = [30usize, 30, 30, 30, 30];
+        let passes = plan_reload_passes(&fp, 60);
+        assert_eq!(passes, vec![0..2, 2..4, 4..5]);
+        let covered: Vec<usize> = passes.iter().flat_map(|r| r.clone()).collect();
+        assert_eq!(covered, vec![0, 1, 2, 3, 4]);
     }
 }

@@ -8,11 +8,18 @@
 //! * [`exec`] — functional executor: plans a conv layer onto the
 //!   bit-true [`crate::arch::pim_macro::PimMacro`] (weights written
 //!   once) and executes inputs through the resident weights, recovering
-//!   outputs via the ARU; verified against the direct-conv oracle.
+//!   outputs via the ARU; verified against the direct-conv oracle.  It
+//!   also owns the capacity-budget primitives of weight streaming:
+//!   [`exec::stored_weight_bytes`] sizes a layer's resident footprint
+//!   and [`exec::plan_reload_passes`] splits a layer stack into reload
+//!   passes that fit a budget (consumed by the streaming session in
+//!   `runtime/reference.rs`).
 
 pub mod exec;
 pub mod im2col;
 pub mod plan;
 
-pub use exec::{ExecCtx, ExecPool, PlannedConv, PlannedDwConv};
+pub use exec::{
+    plan_reload_passes, stored_weight_bytes, ExecCtx, ExecPool, PlannedConv, PlannedDwConv,
+};
 pub use plan::{plan_layer, plan_network, LayerPlan, PlanKind};

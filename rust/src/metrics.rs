@@ -1,5 +1,9 @@
 //! Service-level metrics: streaming latency histogram with percentile
-//! queries (used by the coordinator and the serving benches).
+//! queries (used by the coordinator and the serving benches), plus the
+//! [`CapacityPressure`] accumulator the weight-streaming session
+//! reports through (`Session::capacity_pressure`) so `serve` and the
+//! bench cases can surface reload counts, occupancy and the
+//! prefetch-overlap ratio alongside latency.
 
 use std::time::Duration;
 
@@ -76,6 +80,73 @@ impl LatencyHistogram {
     }
 }
 
+/// Capacity-pressure counters for a weight-streaming session: how often
+/// weights had to be re-staged, how much of the staging cost hid behind
+/// compute, and how full the weight memory ran.
+///
+/// Produced by `Session::capacity_pressure` (absolute counters since
+/// session start) and mergeable across sessions/workers like
+/// [`LatencyHistogram`].  All-zero (the [`Default`]) means "no streaming
+/// configured": the session held every weight resident.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CapacityPressure {
+    /// Weight-reload pass switches performed (0 when everything fit in
+    /// one resident pass).
+    pub reloads: u64,
+    /// Regions evicted from the weight memory to make room.
+    pub evictions: u64,
+    /// Times a single pass exceeded the whole capacity budget
+    /// (occupancy > 1.0 — the stack cannot be split finer than one
+    /// layer).
+    pub overflows: u64,
+    /// Bytes staged into the weight memory in total.
+    pub staged_bytes: u64,
+    /// Peak bytes resident at once.
+    pub peak_resident_bytes: u64,
+    /// Capacity budget the session ran under (0 = unbudgeted).
+    pub capacity_bytes: u64,
+    /// Wall time spent building/staging weight passes in total.
+    pub stage_busy: Duration,
+    /// Stage time that overlapped compute (prefetch hid it).
+    pub stage_hidden: Duration,
+    /// Stage time the execute path had to wait out (exposed stall).
+    pub stall: Duration,
+}
+
+impl CapacityPressure {
+    /// Peak occupancy of the capacity budget (0..; > 1.0 after an
+    /// overflow, 0.0 when unbudgeted).
+    pub fn peak_occupancy(&self) -> f64 {
+        if self.capacity_bytes == 0 {
+            return 0.0;
+        }
+        self.peak_resident_bytes as f64 / self.capacity_bytes as f64
+    }
+
+    /// Fraction of total staging time hidden behind compute (0..=1);
+    /// 1.0 when nothing was staged (no stall was ever exposed).
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.stage_busy.is_zero() {
+            return 1.0;
+        }
+        (self.stage_hidden.as_secs_f64() / self.stage_busy.as_secs_f64()).clamp(0.0, 1.0)
+    }
+
+    /// Merge another session's counters into this one (peaks take the
+    /// max, the budget is assumed shared).
+    pub fn merge(&mut self, other: &CapacityPressure) {
+        self.reloads += other.reloads;
+        self.evictions += other.evictions;
+        self.overflows += other.overflows;
+        self.staged_bytes += other.staged_bytes;
+        self.peak_resident_bytes = self.peak_resident_bytes.max(other.peak_resident_bytes);
+        self.capacity_bytes = self.capacity_bytes.max(other.capacity_bytes);
+        self.stage_busy += other.stage_busy;
+        self.stage_hidden += other.stage_hidden;
+        self.stall += other.stall;
+    }
+}
+
 /// Throughput accumulator (ops over wall time).
 #[derive(Debug, Clone, Default)]
 pub struct Throughput {
@@ -134,6 +205,34 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.mean(), Duration::ZERO);
         assert_eq!(h.percentile(99.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn capacity_pressure_ratios() {
+        let mut p = CapacityPressure {
+            reloads: 4,
+            staged_bytes: 4096,
+            peak_resident_bytes: 300,
+            capacity_bytes: 200,
+            stage_busy: Duration::from_millis(10),
+            stage_hidden: Duration::from_millis(8),
+            stall: Duration::from_millis(2),
+            ..Default::default()
+        };
+        assert!((p.peak_occupancy() - 1.5).abs() < 1e-12);
+        assert!((p.overlap_ratio() - 0.8).abs() < 1e-12);
+        let q = p;
+        p.merge(&q);
+        assert_eq!(p.reloads, 8);
+        assert_eq!(p.peak_resident_bytes, 300); // max, not sum
+        assert_eq!(p.stall, Duration::from_millis(4));
+    }
+
+    #[test]
+    fn capacity_pressure_default_is_quiet() {
+        let p = CapacityPressure::default();
+        assert_eq!(p.peak_occupancy(), 0.0);
+        assert_eq!(p.overlap_ratio(), 1.0);
     }
 
     #[test]

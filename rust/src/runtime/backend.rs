@@ -47,6 +47,16 @@ pub trait Session {
     /// `tests/alloc_steady_state.rs`).  The PJRT session reuses its
     /// staging buffer but its runtime allocates result literals.
     fn infer_batch_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()>;
+
+    /// Capacity-pressure counters accumulated since the session was
+    /// prepared — `Some` only for sessions running under a
+    /// weight-streaming budget
+    /// (`crate::runtime::reference::StreamConfig`); `None` (the
+    /// default) when every weight is resident for the session's
+    /// lifetime.
+    fn capacity_pressure(&self) -> Option<crate::metrics::CapacityPressure> {
+        None
+    }
 }
 
 /// An inference executor.
@@ -180,6 +190,14 @@ pub struct BackendSpec {
     /// which every width is byte-identical to
     /// (`crate::util::pool::resolve_threads`).
     pub threads: usize,
+    /// Weight-streaming capacity budget in KiB for reference sessions
+    /// (`0` = no budget: every conv layer stays resident).  Non-zero
+    /// values stream conv weights through
+    /// `crate::runtime::reference::StreamConfig::budget(stream_kb * 1024)`
+    /// with background prefetch on; logits are byte-identical at every
+    /// budget, and pressure counters surface through
+    /// [`Session::capacity_pressure`].
+    pub stream_kb: usize,
 }
 
 impl BackendSpec {
@@ -195,13 +213,19 @@ impl BackendSpec {
     /// hermetic.
     pub fn create(&self, artifact_dir: &str) -> Result<Box<dyn Backend>> {
         match self.kind {
-            BackendKind::Reference => Ok(Box::new(
-                super::reference::ReferenceBackend::seeded_with(
+            BackendKind::Reference => {
+                let mut be = super::reference::ReferenceBackend::seeded_with(
                     super::reference::DEFAULT_SEED,
                     self.fabric,
                 )
-                .with_threads(self.threads),
-            )),
+                .with_threads(self.threads);
+                if self.stream_kb > 0 {
+                    be = be.with_streaming(super::reference::StreamConfig::budget(
+                        self.stream_kb * 1024,
+                    ));
+                }
+                Ok(Box::new(be))
+            }
             BackendKind::Pjrt => create_pjrt(artifact_dir),
             BackendKind::Auto => {
                 #[cfg(feature = "pjrt")]
@@ -331,11 +355,35 @@ mod tests {
             kind: BackendKind::Reference,
             fabric: FabricChoice::BitSliced,
             threads: 2,
+            stream_kb: 0,
         };
         let mut b = spec.create("/nonexistent").expect("backend");
         let img = vec![0.25f32; IMG_ELEMS];
         let out = b.infer_batch(&img, 1).expect("infer");
         assert_eq!(out.len(), NUM_CLASSES);
+    }
+
+    #[test]
+    fn streamed_spec_reports_capacity_pressure() {
+        let spec = BackendSpec {
+            kind: BackendKind::Reference,
+            fabric: FabricChoice::DenseReference,
+            threads: 1,
+            stream_kb: 2, // 2048 B < conv2's 2304 B footprint -> 2 passes
+        };
+        let b = spec.create("/nonexistent").expect("backend");
+        let mut s = b.prepare().expect("session");
+        let img = vec![0.25f32; IMG_ELEMS];
+        let mut out = vec![0f32; NUM_CLASSES];
+        s.infer_batch_into(&img, 1, &mut out).expect("infer");
+        let p = s.capacity_pressure().expect("streamed session has pressure");
+        assert_eq!(p.capacity_bytes, 2048);
+        assert!(p.staged_bytes > 0);
+        // an unbudgeted spec reports none
+        let b = BackendSpec::new(BackendKind::Reference)
+            .create("/nonexistent")
+            .expect("backend");
+        assert!(b.prepare().expect("session").capacity_pressure().is_none());
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -9,7 +9,7 @@
 //!   (dense INT8 MVM and the Eq. 7 ARU recovery), so it is bit-true
 //!   against the L1 kernel contracts and needs no artifacts, no native
 //!   libraries and no network — this is what CI exercises.
-//! * [`pjrt`] (cargo feature `pjrt`) — the PJRT/HLO path: loads the
+//! * `pjrt` (cargo feature `pjrt`) — the PJRT/HLO path: loads the
 //!   python-AOT HLO-text artifacts (see `python/compile/aot.py`) and
 //!   executes them through the `xla` crate.  The default build vendors a
 //!   compile-time stub for `xla`; swap in the real crate to run the
@@ -32,7 +32,10 @@
 //! reference backend otherwise, so every caller (service, CLI,
 //! examples, tests) works on a clean checkout.  [`BackendSpec`] carries
 //! the extra knobs (e.g. [`FabricChoice`]: whether the reference
-//! backend's convs run on the dense kernel or the bit-sliced fabric).
+//! backend's convs run on the dense kernel or the bit-sliced fabric,
+//! and `stream_kb`: an optional weight-streaming capacity budget —
+//! see [`StreamConfig`] — under which sessions reload conv weights in
+//! capacity-fitting passes and report [`Session::capacity_pressure`]).
 
 pub mod artifacts;
 pub mod backend;
@@ -45,7 +48,7 @@ pub use backend::{
     create_backend, verify_kernel_oracles, Backend, BackendKind, BackendSpec, FabricChoice,
     Session, IMG_ELEMS, NUM_CLASSES,
 };
-pub use reference::{ReferenceBackend, ReferenceSession};
+pub use reference::{ReferenceBackend, ReferenceSession, StreamConfig};
 
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, PjrtBackend, PjrtSession, Runtime};

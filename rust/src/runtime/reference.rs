@@ -35,13 +35,38 @@
 //! `BackendSpec::threads` / `DDC_THREADS`; 1 = the serial path, and
 //! every width is byte-identical) — and, after the first call at a
 //! given batch size, zero heap allocation.
+//!
+//! # Weight streaming
+//!
+//! With [`ReferenceBackend::with_streaming`] the session additionally
+//! models a finite weight memory ([`StreamConfig::capacity_bytes`]):
+//! the conv stack is split into weight-reload passes by
+//! [`plan_reload_passes`] over the FCC stored footprints
+//! ([`stored_weight_bytes`]), a pass's execution forms are (re)built
+//! whenever it is acquired, and — with [`StreamConfig::prefetch`] on —
+//! a background stager thread builds pass N+1 while pass N computes on
+//! the [`ExecPool`]: the double-buffered analogue of the
+//! architecture's ping-pong weight DFFs.  Streamed logits are
+//! byte-identical to the resident path at every budget because both
+//! route through the same per-layer execution helpers
+//! (`run_dense_conv` / `run_fabric_conv`).  Residency is
+//! book-kept on a [`StagedBuffer`], and the pressure counters
+//! (reloads, evictions, overflow, occupancy, prefetch overlap) surface
+//! through [`Session::capacity_pressure`].
+
+use std::ops::Range;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
+use crate::arch::mem::StagedBuffer;
 use crate::arch::pim_core::MacroGeometry;
 use crate::fcc::{fcc_transform, FccWeights, FilterBank};
-use crate::mapping::exec::{ExecPool, PlannedConv};
+use crate::mapping::exec::{plan_reload_passes, stored_weight_bytes, ExecPool, PlannedConv};
 use crate::mapping::im2col::{im2col_into, out_dims};
+use crate::metrics::CapacityPressure;
 use crate::util::pool::{resolve_threads, SharedMut};
 use crate::util::rng::Rng;
 
@@ -55,6 +80,43 @@ const INPUT_SCALE: f32 = 32.0;
 
 /// Logit de-quantization scale (arbitrary but fixed).
 const LOGIT_SCALE: f32 = 1.0 / 64.0;
+
+/// Weight-streaming configuration for a planned session: the capacity
+/// budget the conv stack must fit inside (per reload pass), and whether
+/// the next pass is prefetched on a background stager thread while the
+/// current one computes.
+///
+/// `prefetch: false` stages every pass synchronously on the execute
+/// path (every staging cycle is an exposed stall) — useful for
+/// deterministic allocation accounting; logits are identical either
+/// way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamConfig {
+    /// Weight-memory budget in bytes a single reload pass must fit
+    /// (a lone over-budget layer still gets a pass; it is counted as an
+    /// overflow, not split).
+    pub capacity_bytes: usize,
+    /// Overlap the staging of pass N+1 with the compute of pass N.
+    pub prefetch: bool,
+}
+
+impl StreamConfig {
+    /// Budgeted streaming with prefetch on (the production shape).
+    pub fn budget(capacity_bytes: usize) -> StreamConfig {
+        StreamConfig {
+            capacity_bytes,
+            prefetch: true,
+        }
+    }
+
+    /// Budgeted streaming with prefetch off: all staging is exposed.
+    pub fn synchronous(capacity_bytes: usize) -> StreamConfig {
+        StreamConfig {
+            capacity_bytes,
+            prefetch: false,
+        }
+    }
+}
 
 /// Dense signed-INT8 MVM into a caller-owned `[b, n]` buffer: the
 /// zero-allocation twin of [`mvm_i32`], wrapping int32 accumulation
@@ -118,7 +180,7 @@ pub fn mvm_i32(x: &[i32], w: &[i32], b: usize, l: usize, n: usize) -> Vec<i32> {
 /// Rows of a `[b, n]` output sharded per parallel work unit: coarse
 /// enough to amortize dispatch over thousands of MACs, fine enough
 /// that typical `batch * pixels` row counts split across every lane.
-const MVM_ROW_BLOCK: usize = 32;
+pub const MVM_ROW_BLOCK: usize = 32;
 
 /// Parallel twin of [`mvm_i32_into`]: shards the `b` row dimension
 /// across the pool's lanes in [`MVM_ROW_BLOCK`] runs.  Byte-identical
@@ -278,6 +340,9 @@ pub struct ReferenceBackend {
     threads: usize,
     /// Macro geometry bit-sliced sessions plan onto (default: paper).
     geometry: MacroGeometry,
+    /// Weight-streaming config for planned sessions (`None` = every
+    /// conv layer stays resident for the session's lifetime).
+    streaming: Option<StreamConfig>,
 }
 
 impl ReferenceBackend {
@@ -321,7 +386,36 @@ impl ReferenceBackend {
             fabric,
             threads: 0,
             geometry: MacroGeometry::paper(),
+            streaming: None,
         }
+    }
+
+    /// Like [`ReferenceBackend::seeded_with`], with `extra_convs`
+    /// additional seeded conv3x3(32→32, FCC) layers inserted before the
+    /// global pool.  SAME-padded, so any depth is valid; each extra
+    /// layer adds a 4608 B stored-weight footprint — the knob the
+    /// streaming tests use to build stacks that exceed a capacity
+    /// budget.
+    pub fn seeded_deep(seed: u64, fabric: FabricChoice, extra_convs: usize) -> ReferenceBackend {
+        let mut be = Self::seeded_with(seed, fabric);
+        let mut rng = Rng::new(seed ^ 0x5EED_DEE9);
+        let gap_at = be.layers.len() - 2; // insert before Gap → Fc
+        for i in 0..extra_convs {
+            let l = 3 * 3 * 32;
+            let bank = FilterBank::new((0..32 * l).map(|_| rng.int8() as i32).collect(), 32, l);
+            be.layers.insert(
+                gap_at + i,
+                RefLayer::ConvFcc {
+                    k: 3,
+                    cin: 32,
+                    cout: 32,
+                    stride: 1,
+                    fcc: fcc_transform(&bank),
+                    shift: 10,
+                },
+            );
+        }
+        be
     }
 
     /// Set the execution-pool width planned sessions use — on both
@@ -340,6 +434,15 @@ impl ReferenceBackend {
         self
     }
 
+    /// Stream conv weights through a finite capacity budget instead of
+    /// keeping the whole stack resident.  Logits are byte-identical to
+    /// the resident path for every budget; only the reload schedule
+    /// (and the capacity-pressure counters) change.
+    pub fn with_streaming(mut self, cfg: StreamConfig) -> ReferenceBackend {
+        self.streaming = Some(cfg);
+        self
+    }
+
     pub fn seed(&self) -> u64 {
         self.seed
     }
@@ -352,7 +455,13 @@ impl ReferenceBackend {
     /// without boxing (test/bench convenience; [`Backend::prepare`]
     /// wraps this).
     pub fn plan(&self) -> Result<ReferenceSession> {
-        ReferenceSession::plan(&self.layers, self.fabric, self.threads, self.geometry)
+        ReferenceSession::plan(
+            &self.layers,
+            self.fabric,
+            self.threads,
+            self.geometry,
+            self.streaming,
+        )
     }
 }
 
@@ -373,9 +482,277 @@ enum SessionLayer {
     /// FCC conv on the bit-sliced functional fabric: weights resident
     /// in the planned macro(s), written once at prepare time.
     ConvFabric { plan: PlannedConv, shift: u32 },
+    /// FCC conv whose execution form lives in the streaming pass store
+    /// (`slot` indexes [`StreamState`]'s spec list); weights are staged
+    /// into the capacity budget on demand and may be evicted between
+    /// passes.
+    ConvStreamed { slot: usize },
     Pool2,
     Gap,
     Fc { cin: usize, cout: usize, w: Vec<i32> },
+}
+
+/// Model-level definition of one streamed conv layer: everything needed
+/// to (re)build its execution form from DRAM-side weights, on either
+/// fabric, deterministically — so a rebuilt pass is bit-identical to
+/// the first build.
+struct ConvSpec {
+    geometry: MacroGeometry,
+    h: usize,
+    w: usize,
+    k: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    fcc: FccWeights,
+    shift: u32,
+    fabric: FabricChoice,
+}
+
+impl ConvSpec {
+    /// Stored-weight footprint this layer occupies in the capacity
+    /// budget (FCC: only the even comp filters are resident).
+    fn footprint_bytes(&self) -> usize {
+        stored_weight_bytes(self.cout, self.k * self.k * self.cin, true)
+    }
+
+    /// Build the execution form (the DRAM→SRAM staging work).
+    fn build(&self) -> BuiltConv {
+        match self.fabric {
+            FabricChoice::DenseReference => BuiltConv::Dense {
+                k: self.k,
+                cin: self.cin,
+                cout: self.cout,
+                stride: self.stride,
+                w_even_cols: self.fcc.stored_even_cols(),
+                means: self.fcc.means.clone(),
+                shift: self.shift,
+            },
+            FabricChoice::BitSliced => BuiltConv::Fabric {
+                plan: PlannedConv::std_fcc_with(
+                    self.geometry,
+                    self.h,
+                    self.w,
+                    self.cin,
+                    &self.fcc,
+                    self.k,
+                    self.stride,
+                ),
+                shift: self.shift,
+            },
+        }
+    }
+}
+
+/// A staged execution form: the same shapes the resident
+/// [`SessionLayer`] conv arms hold, built on demand per reload pass.
+enum BuiltConv {
+    Dense {
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        w_even_cols: Vec<i32>,
+        means: Vec<i32>,
+        shift: u32,
+    },
+    Fabric {
+        plan: PlannedConv,
+        shift: u32,
+    },
+}
+
+/// A prefetched pass: (pass index, built layers, build wall time).
+type StagedPass = (usize, Vec<BuiltConv>, Duration);
+
+/// Background prefetcher: one thread that builds requested passes off
+/// the execute path, so the staging of pass N+1 overlaps the compute of
+/// pass N (which runs on the session's [`ExecPool`]).  Requests and
+/// responses stay in lockstep — at most one pass is in flight.
+struct Stager {
+    req: Option<mpsc::Sender<usize>>,
+    resp: mpsc::Receiver<StagedPass>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Stager {
+    fn spawn(specs: Arc<Vec<ConvSpec>>, passes: Vec<Range<usize>>) -> Stager {
+        let (req_tx, req_rx) = mpsc::channel::<usize>();
+        let (resp_tx, resp_rx) = mpsc::channel::<StagedPass>();
+        let handle = thread::Builder::new()
+            .name("ddc-stager".into())
+            .spawn(move || {
+                for pass in req_rx {
+                    let t0 = Instant::now();
+                    let built: Vec<BuiltConv> =
+                        passes[pass].clone().map(|s| specs[s].build()).collect();
+                    if resp_tx.send((pass, built, t0.elapsed())).is_err() {
+                        break; // session dropped mid-build
+                    }
+                }
+            })
+            .expect("spawn stager thread");
+        Stager {
+            req: Some(req_tx),
+            resp: resp_rx,
+            handle: Some(handle),
+        }
+    }
+
+    fn request(&self, pass: usize) {
+        if let Some(tx) = &self.req {
+            let _ = tx.send(pass);
+        }
+    }
+
+    fn recv(&self) -> Option<StagedPass> {
+        self.resp.recv().ok()
+    }
+}
+
+impl Drop for Stager {
+    fn drop(&mut self) {
+        // closing the request channel lets the thread drain and exit
+        self.req.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Streaming pass store: the reload schedule, the currently resident
+/// pass, the optional prefetcher, and the [`StagedBuffer`] that
+/// book-keeps SRAM residency (evictions, overflow, peak occupancy).
+struct StreamState {
+    specs: Arc<Vec<ConvSpec>>,
+    /// Reload passes as spec-slot ranges (greedy capacity packing).
+    passes: Vec<Range<usize>>,
+    /// Pass index of each spec slot.
+    pass_of: Vec<usize>,
+    /// Total stored bytes of each pass.
+    pass_bytes: Vec<usize>,
+    /// Execution forms of the resident pass (host side of the budget).
+    resident: Vec<BuiltConv>,
+    resident_pass: Option<usize>,
+    /// Passes staged at least once (a re-acquire is a *re*load).
+    seen: Vec<bool>,
+    /// Pass currently being built by the stager, if any.
+    inflight: Option<usize>,
+    stager: Option<Stager>,
+    sram: StagedBuffer,
+    pressure: CapacityPressure,
+}
+
+impl StreamState {
+    fn new(specs: Vec<ConvSpec>, cfg: StreamConfig) -> StreamState {
+        let footprints: Vec<usize> = specs.iter().map(|s| s.footprint_bytes()).collect();
+        let passes = plan_reload_passes(&footprints, cfg.capacity_bytes);
+        let mut pass_of = vec![0usize; specs.len()];
+        let mut pass_bytes = vec![0usize; passes.len()];
+        for (pi, range) in passes.iter().enumerate() {
+            for slot in range.clone() {
+                pass_of[slot] = pi;
+            }
+            pass_bytes[pi] = footprints[range.start..range.end].iter().sum();
+        }
+        let specs = Arc::new(specs);
+        // a single pass never needs prefetch: after the first batch the
+        // weights simply stay resident
+        let stager = if cfg.prefetch && passes.len() > 1 {
+            Some(Stager::spawn(specs.clone(), passes.clone()))
+        } else {
+            None
+        };
+        let seen = vec![false; passes.len()];
+        StreamState {
+            specs,
+            passes,
+            pass_of,
+            pass_bytes,
+            resident: Vec::new(),
+            resident_pass: None,
+            seen,
+            inflight: None,
+            stager,
+            sram: StagedBuffer::new("weight-stream", cfg.capacity_bytes),
+            pressure: CapacityPressure {
+                capacity_bytes: cfg.capacity_bytes as u64,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Make `pass` resident (double-buffer handoff): take the
+    /// prefetched build if one is in flight for it (only the wait is an
+    /// exposed stall), else build synchronously (fully exposed), then
+    /// stage it into the [`StagedBuffer`] — FIFO-evicting the previous
+    /// pass, since by the greedy packing rule two consecutive passes
+    /// never fit the budget together — and queue the next prefetch.
+    fn ensure_resident(&mut self, pass: usize) {
+        if self.resident_pass == Some(pass) {
+            return;
+        }
+        let (built, busy, waited) = match (&self.stager, self.inflight) {
+            (Some(st), Some(want)) if want == pass => {
+                let t0 = Instant::now();
+                let (idx, built, busy) = st.recv().expect("stager thread died");
+                debug_assert_eq!(idx, pass);
+                self.inflight = None;
+                (built, busy, t0.elapsed())
+            }
+            _ => {
+                // drain a mismatched prefetch so request/response stay
+                // in lockstep (out-of-order acquire; not the hot path)
+                if self.inflight.take().is_some() {
+                    if let Some(st) = &self.stager {
+                        let _ = st.recv();
+                    }
+                }
+                let t0 = Instant::now();
+                let built: Vec<BuiltConv> = self.passes[pass]
+                    .clone()
+                    .map(|s| self.specs[s].build())
+                    .collect();
+                let busy = t0.elapsed();
+                (built, busy, busy)
+            }
+        };
+        self.pressure.stage_busy += busy;
+        self.pressure.stall += waited;
+        self.pressure.stage_hidden += busy.saturating_sub(waited);
+        let outcome = self.sram.stage(pass as u64, self.pass_bytes[pass]);
+        self.pressure.evictions += outcome.evicted as u64;
+        if outcome.overflowed {
+            self.pressure.overflows += 1;
+        }
+        self.pressure.staged_bytes += self.pass_bytes[pass] as u64;
+        self.pressure.peak_resident_bytes = self
+            .pressure
+            .peak_resident_bytes
+            .max(self.sram.peak_used() as u64);
+        if self.seen[pass] {
+            self.pressure.reloads += 1;
+        }
+        self.seen[pass] = true;
+        self.resident = built;
+        self.resident_pass = Some(pass);
+        // queue the successor (wrapping: the last pass prefetches pass
+        // 0 for the next batch) so its staging overlaps this compute
+        if let Some(st) = &self.stager {
+            let next = (pass + 1) % self.passes.len();
+            if self.inflight.is_none() && next != pass {
+                st.request(next);
+                self.inflight = Some(next);
+            }
+        }
+    }
+
+    /// Execution form for `slot`, staging its pass first if needed.
+    fn built_for(&mut self, slot: usize) -> &BuiltConv {
+        let pass = self.pass_of[slot];
+        self.ensure_resident(pass);
+        &self.resident[slot - self.passes[pass].start]
+    }
 }
 
 /// A prepared reference session: planned layer stack + every buffer the
@@ -400,6 +777,8 @@ pub struct ReferenceSession {
     /// for the session's lifetime.  Bit-sliced convs shard pixel
     /// blocks across it; dense convs shard MVM row blocks.
     pool: ExecPool,
+    /// Streaming pass store (`None` = all conv layers resident).
+    stream: Option<StreamState>,
 }
 
 impl ReferenceSession {
@@ -408,8 +787,10 @@ impl ReferenceSession {
         fabric: FabricChoice,
         threads: usize,
         geometry: MacroGeometry,
+        streaming: Option<StreamConfig>,
     ) -> Result<ReferenceSession> {
         let mut planned = Vec::with_capacity(layers.len());
+        let mut specs: Vec<ConvSpec> = Vec::new();
         // walk the activation dims so fabric plans know their geometry
         let (mut h, mut w, mut c) = (32usize, 32usize, 3usize);
         let mut head_cout = None;
@@ -424,23 +805,44 @@ impl ReferenceSession {
                     shift,
                 } => {
                     ensure!(c == *cin, "layer stack dim mismatch: {} != {}", c, cin);
-                    planned.push(match fabric {
-                        FabricChoice::DenseReference => SessionLayer::ConvDense {
+                    if streaming.is_some() {
+                        // defer the build: the spec is the DRAM-side
+                        // definition, staged per reload pass at execute
+                        // time (byte-identical — ConvSpec::build is
+                        // exactly the resident construction below)
+                        let slot = specs.len();
+                        specs.push(ConvSpec {
+                            geometry,
+                            h,
+                            w,
                             k: *k,
                             cin: *cin,
                             cout: *cout,
                             stride: *stride,
-                            w_even_cols: fcc.stored_even_cols(),
-                            means: fcc.means.clone(),
+                            fcc: fcc.clone(),
                             shift: *shift,
-                        },
-                        FabricChoice::BitSliced => SessionLayer::ConvFabric {
-                            plan: PlannedConv::std_fcc_with(
-                                geometry, h, w, *cin, fcc, *k, *stride,
-                            ),
-                            shift: *shift,
-                        },
-                    });
+                            fabric,
+                        });
+                        planned.push(SessionLayer::ConvStreamed { slot });
+                    } else {
+                        planned.push(match fabric {
+                            FabricChoice::DenseReference => SessionLayer::ConvDense {
+                                k: *k,
+                                cin: *cin,
+                                cout: *cout,
+                                stride: *stride,
+                                w_even_cols: fcc.stored_even_cols(),
+                                means: fcc.means.clone(),
+                                shift: *shift,
+                            },
+                            FabricChoice::BitSliced => SessionLayer::ConvFabric {
+                                plan: PlannedConv::std_fcc_with(
+                                    geometry, h, w, *cin, fcc, *k, *stride,
+                                ),
+                                shift: *shift,
+                            },
+                        });
+                    }
                     let (oh, ow) = out_dims(h, w, *stride);
                     h = oh;
                     w = ow;
@@ -485,6 +887,7 @@ impl ReferenceSession {
             psum: Vec::new(),
             out64: Vec::new(),
             pool: ExecPool::new(width),
+            stream: streaming.map(|cfg| StreamState::new(specs, cfg)),
         })
     }
 
@@ -494,8 +897,11 @@ impl ReferenceSession {
         self.pool.width()
     }
 
-    /// Sum of SRAM weight writes across all fabric-planned layers
-    /// (0 on the dense path) — constant for the session's lifetime.
+    /// Sum of SRAM weight writes across all *resident* fabric-planned
+    /// layers (0 on the dense path) — constant for the session's
+    /// lifetime.  Streamed layers re-write weights every reload pass by
+    /// design; their traffic shows up in
+    /// [`ReferenceSession::capacity_pressure_stats`] instead.
     pub fn fabric_weight_writes(&self) -> u64 {
         self.layers
             .iter()
@@ -505,6 +911,20 @@ impl ReferenceSession {
             })
             .sum()
     }
+
+    /// Number of weight-reload passes the streaming planner split the
+    /// conv stack into (`None` when the session is not streaming; `1`
+    /// means everything fit the budget and stays resident after the
+    /// first batch).
+    pub fn streaming_passes(&self) -> Option<usize> {
+        self.stream.as_ref().map(|s| s.passes.len())
+    }
+
+    /// Capacity-pressure counters accumulated since the session was
+    /// planned (`None` when the session is not streaming).
+    pub fn capacity_pressure_stats(&self) -> Option<CapacityPressure> {
+        self.stream.as_ref().map(|s| s.pressure)
+    }
 }
 
 /// Requantize an accumulator back to the INT8 activation grid and ReLU.
@@ -512,9 +932,112 @@ fn requant_relu(v: i64, shift: u32) -> i32 {
     ((v >> shift).clamp(-128, 127) as i32).max(0)
 }
 
+/// Execute one dense-kernel FCC conv over the batch: im2col → parallel
+/// `fcc_mvm` → requant/ReLU → activation ping-pong.  The single body
+/// both the resident ([`SessionLayer::ConvDense`]) and streamed
+/// ([`BuiltConv::Dense`]) paths run, so streamed logits are
+/// byte-identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn run_dense_conv(
+    k: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    w_even_cols: &[i32],
+    means: &[i32],
+    shift: u32,
+    batch: usize,
+    h: &mut usize,
+    w: &mut usize,
+    c: &mut usize,
+    act: &mut Vec<i32>,
+    act_next: &mut Vec<i32>,
+    cols: &mut Vec<i32>,
+    raw: &mut Vec<i32>,
+    psum: &mut Vec<i32>,
+    pool: &mut ExecPool,
+) {
+    debug_assert_eq!(*c, cin);
+    let l = k * k * cin;
+    let (oh, ow) = out_dims(*h, *w, stride);
+    let pixels = oh * ow;
+    // every pixel window of every image is one row of the FCC MVM
+    // kernel — the exact oracle the goldens replay, with the batch
+    // folded into the row dim
+    cols.resize(batch * pixels * l, 0);
+    let plane = *h * *w * *c;
+    for bi in 0..batch {
+        im2col_into(
+            &mut cols[bi * pixels * l..(bi + 1) * pixels * l],
+            &act[bi * plane..(bi + 1) * plane],
+            *h,
+            *w,
+            *c,
+            k,
+            stride,
+        );
+    }
+    let half = cout / 2;
+    let rows = batch * pixels;
+    raw.resize(rows * cout, 0);
+    psum.resize(rows * half, 0);
+    // batch*pixels MVM rows shard across the session pool in row
+    // blocks (serial at width 1)
+    fcc_mvm_into_par(raw, psum, cols.as_slice(), w_even_cols, means, rows, l, half, pool);
+    act_next.resize(rows * cout, 0);
+    for (dst, &v) in act_next.iter_mut().zip(raw.iter()) {
+        *dst = requant_relu(v as i64, shift);
+    }
+    std::mem::swap(act, act_next);
+    *h = oh;
+    *w = ow;
+    *c = cout;
+}
+
+/// Execute one bit-sliced fabric conv over the batch: one batched pass
+/// per resident weight load, sharded across the pool, then
+/// requant/ReLU and the activation ping-pong.  Shared by the resident
+/// ([`SessionLayer::ConvFabric`]) and streamed ([`BuiltConv::Fabric`])
+/// paths.
+#[allow(clippy::too_many_arguments)]
+fn run_fabric_conv(
+    plan: &PlannedConv,
+    shift: u32,
+    batch: usize,
+    h: &mut usize,
+    w: &mut usize,
+    c: &mut usize,
+    act: &mut Vec<i32>,
+    act_next: &mut Vec<i32>,
+    out64: &mut Vec<i64>,
+    pool: &mut ExecPool,
+) {
+    let (oh, ow) = plan.out_dims();
+    let pixels = oh * ow;
+    let cout = plan.out_channels();
+    act_next.resize(batch * pixels * cout, 0);
+    out64.resize(batch * pixels * cout, 0); // execute fills it
+    // one batched pass per resident weight load: every image of the
+    // batch streams past the weights while they are hot (the
+    // ping-pong-buffer analogue), and the batch×pixel blocks shard
+    // across the pool
+    plan.execute_batch_par(&act[..batch * *h * *w * *c], batch, pool, out64);
+    for (dst, &v) in act_next.iter_mut().zip(out64.iter()) {
+        *dst = requant_relu(v, shift);
+    }
+    std::mem::swap(act, act_next);
+    *h = oh;
+    *w = ow;
+    *c = cout;
+}
+
 impl Session for ReferenceSession {
     fn name(&self) -> &'static str {
         "reference"
+    }
+
+    fn capacity_pressure(&self) -> Option<CapacityPressure> {
+        self.capacity_pressure_stats()
     }
 
     fn infer_batch_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
@@ -543,6 +1066,7 @@ impl Session for ReferenceSession {
             psum,
             out64,
             pool,
+            stream,
         } = self;
         // quantize the whole batch onto the INT8 activation grid.
         // Throughout this pass, staging buffers are resize()d without
@@ -564,70 +1088,85 @@ impl Session for ReferenceSession {
                     w_even_cols,
                     means,
                     shift,
-                } => {
-                    debug_assert_eq!(c, *cin);
-                    let l = k * k * cin;
-                    let (oh, ow) = out_dims(h, w, *stride);
-                    let pixels = oh * ow;
-                    // every pixel window of every image is one row of
-                    // the FCC MVM kernel — the exact oracle the goldens
-                    // replay, with the batch folded into the row dim
-                    cols.resize(batch * pixels * l, 0);
-                    for bi in 0..batch {
-                        im2col_into(
-                            &mut cols[bi * pixels * l..(bi + 1) * pixels * l],
-                            &act[bi * h * w * c..(bi + 1) * h * w * c],
-                            h,
-                            w,
-                            c,
+                } => run_dense_conv(
+                    *k,
+                    *cin,
+                    *cout,
+                    *stride,
+                    w_even_cols,
+                    means,
+                    *shift,
+                    batch,
+                    &mut h,
+                    &mut w,
+                    &mut c,
+                    act,
+                    act_next,
+                    cols,
+                    raw,
+                    psum,
+                    pool,
+                ),
+                SessionLayer::ConvFabric { plan, shift } => run_fabric_conv(
+                    plan,
+                    *shift,
+                    batch,
+                    &mut h,
+                    &mut w,
+                    &mut c,
+                    act,
+                    act_next,
+                    out64,
+                    pool,
+                ),
+                SessionLayer::ConvStreamed { slot } => {
+                    let st = stream
+                        .as_mut()
+                        .expect("streamed layer planned without stream state");
+                    // staging the slot's pass may wait on the
+                    // prefetcher (the exposed stall the pressure
+                    // counters record) or build synchronously
+                    match st.built_for(*slot) {
+                        BuiltConv::Dense {
+                            k,
+                            cin,
+                            cout,
+                            stride,
+                            w_even_cols,
+                            means,
+                            shift,
+                        } => run_dense_conv(
                             *k,
+                            *cin,
+                            *cout,
                             *stride,
-                        );
+                            w_even_cols,
+                            means,
+                            *shift,
+                            batch,
+                            &mut h,
+                            &mut w,
+                            &mut c,
+                            act,
+                            act_next,
+                            cols,
+                            raw,
+                            psum,
+                            pool,
+                        ),
+                        BuiltConv::Fabric { plan, shift } => run_fabric_conv(
+                            plan,
+                            *shift,
+                            batch,
+                            &mut h,
+                            &mut w,
+                            &mut c,
+                            act,
+                            act_next,
+                            out64,
+                            pool,
+                        ),
                     }
-                    let half = cout / 2;
-                    let rows = batch * pixels;
-                    raw.resize(rows * cout, 0);
-                    psum.resize(rows * half, 0);
-                    // batch*pixels MVM rows shard across the session
-                    // pool in row blocks (serial at width 1)
-                    fcc_mvm_into_par(
-                        raw,
-                        psum,
-                        cols.as_slice(),
-                        w_even_cols,
-                        means,
-                        rows,
-                        l,
-                        half,
-                        pool,
-                    );
-                    act_next.resize(rows * cout, 0);
-                    for (dst, &v) in act_next.iter_mut().zip(raw.iter()) {
-                        *dst = requant_relu(v as i64, *shift);
-                    }
-                    std::mem::swap(act, act_next);
-                    h = oh;
-                    w = ow;
-                    c = *cout;
-                }
-                SessionLayer::ConvFabric { plan, shift } => {
-                    let (oh, ow) = plan.out_dims();
-                    let pixels = oh * ow;
-                    let cout = plan.out_channels();
-                    act_next.resize(batch * pixels * cout, 0);
-                    out64.resize(batch * pixels * cout, 0); // execute fills it
-                    // one batched pass per resident weight load: every
-                    // image of the batch streams past the weights while
-                    // they are hot (the ping-pong-buffer analogue), and
-                    // the batch×pixel blocks shard across the pool
-                    plan.execute_batch_par(&act[..batch * h * w * c], batch, pool, out64);
-                    for (dst, &v) in act_next.iter_mut().zip(out64.iter()) {
-                        *dst = requant_relu(v, *shift);
-                    }
-                    std::mem::swap(act, act_next);
-                    h = oh;
-                    w = ow;
-                    c = cout;
                 }
                 SessionLayer::Pool2 => {
                     let (oh, ow) = (h / 2, w / 2);
@@ -948,6 +1487,111 @@ mod tests {
     // 128-compartment end-to-end envelope is pinned by
     // tests/session_semantics.rs
     // (wide_geometry_fabric_session_matches_dense_reference).
+
+    #[test]
+    fn streamed_session_plans_expected_pass_counts() {
+        // seeded_deep(.., 2) stored footprints: [216, 2304, 4608, 4608]
+        for (budget, want_passes) in [(16384usize, 1usize), (9300, 2), (2400, 4)] {
+            let be = ReferenceBackend::seeded_deep(DEFAULT_SEED, FabricChoice::DenseReference, 2)
+                .with_streaming(StreamConfig::budget(budget));
+            let s = be.plan().unwrap();
+            assert_eq!(
+                s.streaming_passes(),
+                Some(want_passes),
+                "budget {budget} planned the wrong pass count"
+            );
+        }
+    }
+
+    #[test]
+    fn single_pass_streaming_stages_once_and_never_reloads() {
+        let be = ReferenceBackend::seeded(DEFAULT_SEED)
+            .with_streaming(StreamConfig::synchronous(16384));
+        let mut s = be.plan().unwrap();
+        assert_eq!(s.streaming_passes(), Some(1));
+        let img = vec![0.5f32; IMG_ELEMS];
+        let mut out = vec![0f32; NUM_CLASSES];
+        for _ in 0..3 {
+            s.infer_batch_into(&img, 1, &mut out).unwrap();
+        }
+        let p = s.capacity_pressure_stats().unwrap();
+        assert_eq!(p.reloads, 0, "a fitting stack must stay resident");
+        assert_eq!(p.evictions, 0);
+        assert_eq!(p.overflows, 0);
+        // staged exactly once: conv1 (216 B) + conv2 (2304 B)
+        assert_eq!(p.staged_bytes, 2520);
+        assert_eq!(p.peak_resident_bytes, 2520);
+        assert!(p.peak_occupancy() > 0.0 && p.peak_occupancy() < 1.0);
+    }
+
+    #[test]
+    fn multi_pass_streaming_counts_reloads_and_evictions() {
+        // budget 2304: conv1 (216 B) and conv2 (2304 B) cannot coexist
+        // → 2 passes, and every batch after the first re-stages both
+        let be = ReferenceBackend::seeded(DEFAULT_SEED)
+            .with_streaming(StreamConfig::synchronous(2304));
+        let mut s = be.plan().unwrap();
+        assert_eq!(s.streaming_passes(), Some(2));
+        let img = vec![0.5f32; IMG_ELEMS];
+        let mut out = vec![0f32; NUM_CLASSES];
+        let batches = 3u64;
+        for _ in 0..batches {
+            s.infer_batch_into(&img, 1, &mut out).unwrap();
+        }
+        let p = s.capacity_pressure_stats().unwrap();
+        // first batch: 2 cold stagings; each later batch: 2 reloads
+        assert_eq!(p.reloads, 2 * (batches - 1));
+        assert!(p.evictions > 0, "pass switches must evict the old pass");
+        assert_eq!(p.overflows, 0);
+        assert_eq!(p.staged_bytes, (216 + 2304) * batches);
+        assert_eq!(p.peak_resident_bytes, 2304);
+        // synchronous staging exposes every staging cycle
+        assert_eq!(p.stage_hidden, Duration::ZERO);
+        assert_eq!(p.stall, p.stage_busy);
+    }
+
+    #[test]
+    fn streamed_logits_match_resident_across_budgets_dense() {
+        let mut rng = Rng::new(31);
+        let batch = 2;
+        let x: Vec<f32> = (0..batch * IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+        let want = ReferenceBackend::seeded(DEFAULT_SEED)
+            .infer_batch(&x, batch)
+            .unwrap();
+        for budget in [16384usize, 2304, 300] {
+            let got = ReferenceBackend::seeded(DEFAULT_SEED)
+                .with_streaming(StreamConfig::budget(budget))
+                .infer_batch(&x, batch)
+                .unwrap();
+            assert_eq!(got, want, "streamed logits drifted at budget {budget}");
+        }
+    }
+
+    #[test]
+    fn over_budget_layer_overflows_but_still_matches() {
+        // budget 100 < conv1's 216 B: both passes overflow, occupancy
+        // exceeds 1.0, and logits must still be byte-identical
+        let mut rng = Rng::new(33);
+        let x: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+        let want = ReferenceBackend::seeded(DEFAULT_SEED).infer_batch(&x, 1).unwrap();
+        let be = ReferenceBackend::seeded(DEFAULT_SEED)
+            .with_streaming(StreamConfig::synchronous(100));
+        let mut s = be.plan().unwrap();
+        let mut out = vec![0f32; NUM_CLASSES];
+        s.infer_batch_into(&x, 1, &mut out).unwrap();
+        assert_eq!(out, want.as_slice());
+        let p = s.capacity_pressure_stats().unwrap();
+        assert_eq!(p.overflows, 2);
+        assert!(p.peak_occupancy() > 1.0, "occupancy {}", p.peak_occupancy());
+    }
+
+    #[test]
+    fn non_streaming_session_reports_no_pressure() {
+        let s = ReferenceBackend::seeded(DEFAULT_SEED).plan().unwrap();
+        assert_eq!(s.streaming_passes(), None);
+        assert!(s.capacity_pressure_stats().is_none());
+        assert!(Session::capacity_pressure(&s).is_none());
+    }
 
     #[test]
     fn fabric_session_resides_weights_once() {

@@ -10,6 +10,12 @@
 //!    (`compute_cycles`), with the merge flush at each pass boundary;
 //! 4. outputs bounce through the ping-pong memory (accounted as SRAM
 //!    energy; the swap itself is free).
+//!
+//! Alongside the cycle math the engine books capacity pressure: each
+//! transfer's hidden/exposed split accumulates on the [`Dram`] model
+//! (feeding `RunStats::prefetch_overlap_ratio`), and each layer records
+//! how many weight-reload passes it needs through the weight memory and
+//! its occupancy demand — pure observability; totals are unchanged.
 
 use crate::arch::cost::CostModel;
 use crate::arch::dram::Dram;
@@ -52,12 +58,22 @@ impl Simulation {
             // previous layer's busy cycles
             let wbytes = plan.dram_weight_bytes;
             let wtransfer = dram.transfer(wbytes as usize);
-            let exposed = dram.exposed_cycles(pending_transfer + wtransfer, prev_busy);
+            let total_transfer = pending_transfer + wtransfer;
+            let exposed = dram.exposed_cycles(total_transfer, prev_busy);
+            // book the hidden/exposed split on the DRAM model — the
+            // overlap-ratio observability; the cycle math is unchanged
+            dram.hidden_cycles += total_transfer - exposed;
+            dram.stalled_cycles += exposed;
 
             // weight memory staging (layer-by-layer, §III-D)
             weight_mem.reset();
+            let capacity = weight_mem.capacity().max(1);
             let staged = (wbytes as usize).min(weight_mem.capacity());
             weight_mem.alloc(staged);
+            // capacity pressure: passes the weights need through the
+            // memory, and the (unclamped) occupancy they demand
+            let reload_passes = (wbytes as usize).div_ceil(capacity) as u64;
+            let weight_occupancy = wbytes as f64 / capacity as f64;
 
             // --- fabric
             let compute = plan.compute_cycles * batch;
@@ -88,6 +104,8 @@ impl Simulation {
                 sram_bytes: act_bytes,
                 energy_mj: energy,
                 fcc: plan.fcc,
+                reload_passes,
+                weight_occupancy,
             });
             total_cycles += cycles;
             prev_busy = busy;
@@ -104,6 +122,7 @@ impl Simulation {
             total_dram_bytes: total_dram,
             total_energy_mj: total_energy,
             freq_mhz: self.arch.freq_mhz,
+            hidden_dram_cycles: dram.hidden_cycles,
         }
     }
 }
@@ -190,6 +209,49 @@ mod tests {
         };
         assert!(enb0 < mnv2, "enb0={enb0} mnv2={mnv2}");
         assert!(enb0 > 2.0, "enb0={enb0}");
+    }
+
+    #[test]
+    fn capacity_observability_is_consistent() {
+        let net = zoo::mobilenet_v2();
+        let ddc = simulate_network(&net, &ArchConfig::ddc_pim(), &SimConfig::ddc_full());
+        // hidden + exposed covers every transfer cycle exactly once
+        let ratio = ddc.prefetch_overlap_ratio();
+        assert!((0.0..=1.0).contains(&ratio), "ratio={ratio}");
+        assert_eq!(
+            ddc.exposed_stall_cycles(),
+            ddc.layers.iter().map(|l| l.exposed_dram_cycles).sum::<u64>()
+        );
+        for l in &ddc.layers {
+            if l.dram_bytes > 0 {
+                assert!(l.reload_passes >= 1, "{}: no reload pass", l.name);
+                assert!(l.weight_occupancy > 0.0);
+            } else {
+                assert_eq!(l.reload_passes, 0, "{}: weightless layer", l.name);
+            }
+        }
+        // MobileNetV2 fits the paper's 256 KB weight memory layer by
+        // layer: no layer needs more than one pass
+        assert_eq!(ddc.total_weight_reloads(), 0);
+        let peak = ddc.peak_weight_occupancy();
+        assert!(peak > 0.0 && peak <= 1.0, "peak={peak}");
+    }
+
+    #[test]
+    fn tiny_weight_memory_forces_reload_passes() {
+        // shrink the weight memory below VGG's FC footprint: the same
+        // plans now need multiple reload passes (and occupancy > 1.0)
+        // while the cycle totals stay exactly what they were
+        let net = zoo::vgg19();
+        let arch = ArchConfig::ddc_pim();
+        let full = simulate_network(&net, &arch, &SimConfig::ddc_full());
+        let mut small = arch.clone();
+        small.weight_mem_kb = 16;
+        let squeezed = simulate_network(&net, &small, &SimConfig::ddc_full());
+        assert!(squeezed.total_weight_reloads() > full.total_weight_reloads());
+        assert!(squeezed.peak_weight_occupancy() > 1.0);
+        // observability only: capacity does not change the cycle model
+        assert_eq!(full.total_cycles, squeezed.total_cycles);
     }
 
     #[test]

@@ -1,4 +1,7 @@
-//! Simulation statistics containers.
+//! Simulation statistics containers: per-layer and whole-run cycle /
+//! traffic / energy outcomes, plus the capacity-pressure view (reload
+//! passes, weight-memory occupancy, prefetch-overlap ratio, exposed
+//! stalls) the reports and the streaming bench surface.
 
 use crate::mapping::PlanKind;
 
@@ -17,6 +20,15 @@ pub struct LayerStats {
     pub sram_bytes: u64,
     pub energy_mj: f64,
     pub fcc: bool,
+    /// Weight-reload passes this layer's weights need through the
+    /// weight memory: 1 when they fit the capacity, `ceil(bytes /
+    /// capacity)` when a single layer exceeds it, 0 for weightless
+    /// layers (pooling).
+    pub reload_passes: u64,
+    /// Weight-memory occupancy demand of this layer (`weight bytes /
+    /// capacity`, *not* clamped — > 1.0 flags a layer the memory
+    /// cannot hold at once).
+    pub weight_occupancy: f64,
 }
 
 /// Whole-run outcome.
@@ -28,6 +40,10 @@ pub struct RunStats {
     pub total_dram_bytes: u64,
     pub total_energy_mj: f64,
     pub freq_mhz: f64,
+    /// DRAM transfer cycles masked behind compute by the layer-ahead
+    /// prefetch (the hidden half; the exposed half is the per-layer
+    /// `exposed_dram_cycles` sum).
+    pub hidden_dram_cycles: u64,
 }
 
 impl RunStats {
@@ -74,6 +90,42 @@ impl RunStats {
     pub fn mvm_cycles(&self) -> u64 {
         self.layers.iter().map(|l| l.compute_cycles).sum()
     }
+
+    /// Total DRAM stall cycles the prefetch could not hide (sum of the
+    /// per-layer exposed cycles).
+    pub fn exposed_stall_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.exposed_dram_cycles).sum()
+    }
+
+    /// Fraction of all DRAM transfer cycles masked behind compute
+    /// (0..=1); 1.0 when no transfer cycle was ever exposed.
+    pub fn prefetch_overlap_ratio(&self) -> f64 {
+        let exposed = self.exposed_stall_cycles();
+        let total = self.hidden_dram_cycles + exposed;
+        if total == 0 {
+            return 1.0;
+        }
+        self.hidden_dram_cycles as f64 / total as f64
+    }
+
+    /// Weight-reload passes beyond each layer's first residency — the
+    /// extra DRAM trips capacity pressure forces (0 when every layer
+    /// fits the weight memory in one pass).
+    pub fn total_weight_reloads(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.reload_passes.saturating_sub(1))
+            .sum()
+    }
+
+    /// Peak per-layer weight-memory occupancy demand over the run
+    /// (> 1.0 means some layer exceeds the capacity outright).
+    pub fn peak_weight_occupancy(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.weight_occupancy)
+            .fold(0.0, f64::max)
+    }
 }
 
 #[cfg(test)]
@@ -88,6 +140,7 @@ mod tests {
             total_dram_bytes: 0,
             total_energy_mj: 1e-3,
             freq_mhz: 333.0,
+            hidden_dram_cycles: 0,
         }
     }
 
@@ -108,5 +161,44 @@ mod tests {
     fn tops_per_w() {
         let s = stats(1, 500_000); // 1e6 ops over 1e-6 J = 1 TOPS/W... scaled
         assert!(s.achieved_tops_per_w() > 0.0);
+    }
+
+    fn layer(exposed: u64, passes: u64, occ: f64) -> LayerStats {
+        LayerStats {
+            name: "l".into(),
+            kind: PlanKind::StdDouble,
+            cycles: 100,
+            compute_cycles: 90,
+            load_cycles: 5,
+            exposed_dram_cycles: exposed,
+            macs: 1,
+            dram_bytes: 1,
+            sram_bytes: 1,
+            energy_mj: 0.0,
+            fcc: true,
+            reload_passes: passes,
+            weight_occupancy: occ,
+        }
+    }
+
+    #[test]
+    fn capacity_pressure_views() {
+        let mut s = stats(200, 2);
+        s.layers = vec![layer(0, 1, 0.5), layer(30, 3, 1.5)];
+        s.hidden_dram_cycles = 90;
+        assert_eq!(s.exposed_stall_cycles(), 30);
+        assert!((s.prefetch_overlap_ratio() - 0.75).abs() < 1e-12);
+        // reloads = passes beyond the first residency: (1-1) + (3-1)
+        assert_eq!(s.total_weight_reloads(), 2);
+        assert!((s.peak_weight_occupancy() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quiet_run_has_full_overlap() {
+        let s = stats(10, 1);
+        assert_eq!(s.exposed_stall_cycles(), 0);
+        assert_eq!(s.prefetch_overlap_ratio(), 1.0);
+        assert_eq!(s.total_weight_reloads(), 0);
+        assert_eq!(s.peak_weight_occupancy(), 0.0);
     }
 }

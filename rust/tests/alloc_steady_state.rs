@@ -12,6 +12,11 @@
 //! counter is process-global, so worker-thread allocations would be
 //! caught).
 //!
+//! A weight-streamed session (PR 6) cannot be allocation-free — every
+//! reload pass rebuilds its weights — so its contract is *bounded*
+//! steady state instead: the same allocation count every batch, with
+//! no monotonic growth.
+//!
 //! This file deliberately contains a single `#[test]`: the counter is
 //! process-global, and a concurrently running test would pollute the
 //! measured window.
@@ -19,7 +24,10 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use ddc_pim::runtime::{reference::ReferenceBackend, FabricChoice, Session, NUM_CLASSES};
+use ddc_pim::runtime::{
+    reference::{ReferenceBackend, StreamConfig},
+    FabricChoice, Session, NUM_CLASSES,
+};
 use ddc_pim::util::rng::Rng;
 
 /// System allocator wrapper counting every allocation-path call
@@ -95,4 +103,32 @@ fn steady_state_infer_batch_into_is_allocation_free() {
         // the outputs are real (not an accidentally-elided call)
         assert!(out.iter().any(|&v| v != 0.0), "logits all zero on {fabric:?}");
     }
+
+    // streamed session: a 2304 B budget splits the seeded stack into 2
+    // reload passes, so every batch rebuilds both passes' weights —
+    // bounded, not zero.  Synchronous staging keeps the stager thread
+    // (and its channel traffic) out of the measured window; the per-
+    // batch allocation count must be identical across rounds.
+    let backend = ReferenceBackend::seeded_with(0xDDC0, FabricChoice::BitSliced)
+        .with_streaming(StreamConfig::synchronous(2304));
+    let mut session = backend.plan().expect("streamed plan");
+    let batch = 4;
+    let mut rng = Rng::new(77);
+    let x: Vec<f32> = (0..batch * IMG).map(|_| rng.normal() as f32).collect();
+    let mut out = vec![0f32; batch * NUM_CLASSES];
+    for _ in 0..2 {
+        session.infer_batch_into(&x, batch, &mut out).expect("streamed warm-up");
+    }
+    let mut per_round = [0u64; 4];
+    for slot in per_round.iter_mut() {
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        session.infer_batch_into(&x, batch, &mut out).expect("streamed steady");
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        *slot = after - before;
+    }
+    assert!(
+        per_round.iter().all(|&c| c == per_round[0]),
+        "streamed steady state must not grow: per-round allocation counts {per_round:?}"
+    );
+    assert!(out.iter().any(|&v| v != 0.0), "streamed logits all zero");
 }

@@ -1,0 +1,149 @@
+//! Integration: the weight-streaming session (PR 6 tentpole).
+//!
+//! Pins the one contract that makes streaming safe to turn on: a
+//! capacity budget changes *when weights are resident*, never *what
+//! the network computes*.  Logits from a streamed session must be
+//! byte-identical to the fully-resident session — across pass counts
+//! {1, 2, 4}, on both fabrics, with prefetch on and off, and under
+//! budgets small enough to force evictions and over-budget overflow
+//! passes — while the [`CapacityPressure`] counters report the
+//! pressure honestly.
+//!
+//! The subject network is `ReferenceBackend::seeded_deep(.., 2)`: the
+//! seeded CIFAR stack plus two extra conv3x3(32->32) layers, stored
+//! conv footprints [216, 2304, 4608, 4608] B (FCC-halved), so the
+//! greedy pass planner yields 1 / 2 / 4 passes at budgets
+//! 16384 / 9300 / 2400 B (the 2400 B budget makes each 4608 B layer an
+//! over-budget overflow pass of its own).
+
+use ddc_pim::runtime::{
+    reference::{ReferenceBackend, StreamConfig, DEFAULT_SEED},
+    FabricChoice, Session, IMG_ELEMS, NUM_CLASSES,
+};
+use ddc_pim::util::rng::Rng;
+
+const EXTRA_CONVS: usize = 2;
+
+fn batch_input(seed: u64, batch: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..batch * IMG_ELEMS).map(|_| rng.normal() as f32).collect()
+}
+
+/// Logits from the fully-resident (non-streamed) deep session.
+fn resident_logits(fabric: FabricChoice, x: &[f32], batch: usize) -> Vec<f32> {
+    let be = ReferenceBackend::seeded_deep(DEFAULT_SEED, fabric, EXTRA_CONVS);
+    let mut s = be.plan().expect("resident plan");
+    let mut out = vec![0f32; batch * NUM_CLASSES];
+    s.infer_batch_into(x, batch, &mut out).expect("resident infer");
+    out
+}
+
+#[test]
+fn streamed_logits_match_resident_across_pass_counts_and_fabrics() {
+    let batch = 3;
+    let x = batch_input(0x57E4_01, batch);
+    for fabric in [FabricChoice::DenseReference, FabricChoice::BitSliced] {
+        let want = resident_logits(fabric, &x, batch);
+        for (budget, want_passes) in [(16384usize, 1usize), (9300, 2), (2400, 4)] {
+            let be = ReferenceBackend::seeded_deep(DEFAULT_SEED, fabric, EXTRA_CONVS)
+                .with_streaming(StreamConfig::budget(budget));
+            let mut s = be.plan().expect("streamed plan");
+            assert_eq!(
+                s.streaming_passes(),
+                Some(want_passes),
+                "budget {budget} planned the wrong pass count on {fabric:?}"
+            );
+            let mut out = vec![0f32; batch * NUM_CLASSES];
+            // two rounds: the second exercises the reload (wrap-around
+            // prefetch) path, which must be just as exact
+            for round in 0..2 {
+                s.infer_batch_into(&x, batch, &mut out).expect("streamed infer");
+                assert_eq!(
+                    out, want,
+                    "streamed logits drifted at budget {budget} on {fabric:?} (round {round})"
+                );
+            }
+            let p = s.capacity_pressure_stats().expect("streamed pressure");
+            if want_passes == 1 {
+                assert_eq!(p.reloads, 0, "a fitting stack must never reload");
+            } else {
+                // round 2 re-acquires every pass it has already seen
+                assert_eq!(
+                    p.reloads,
+                    want_passes as u64,
+                    "budget {budget} reload count on {fabric:?}"
+                );
+                assert!(p.evictions > 0, "pass switches must evict");
+            }
+        }
+    }
+}
+
+#[test]
+fn prefetch_and_synchronous_staging_agree_exactly() {
+    // prefetch changes *when* staging work happens (overlapped on the
+    // stager thread vs inline), never the staged bytes or the logits
+    let batch = 2;
+    let x = batch_input(0x57E4_02, batch);
+    let budget = 9300;
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    let mut counters = Vec::new();
+    for cfg in [StreamConfig::budget(budget), StreamConfig::synchronous(budget)] {
+        let be = ReferenceBackend::seeded_deep(DEFAULT_SEED, FabricChoice::BitSliced, EXTRA_CONVS)
+            .with_streaming(cfg);
+        let mut s = be.plan().expect("plan");
+        let mut out = vec![0f32; batch * NUM_CLASSES];
+        for _ in 0..3 {
+            s.infer_batch_into(&x, batch, &mut out).expect("infer");
+        }
+        let p = s.capacity_pressure_stats().expect("pressure");
+        outs.push(out);
+        counters.push((p.reloads, p.evictions, p.overflows, p.staged_bytes, p.peak_resident_bytes));
+    }
+    assert_eq!(outs[0], outs[1], "prefetch changed the logits");
+    assert_eq!(counters[0], counters[1], "prefetch changed the pressure bookkeeping");
+}
+
+#[test]
+fn eviction_and_overflow_forcing_budget_stays_byte_identical() {
+    // 300 B holds conv1 (216 B) but nothing else: every other conv is
+    // an over-budget overflow pass, evicted and restaged per batch
+    let batch = 2;
+    let x = batch_input(0x57E4_03, batch);
+    for fabric in [FabricChoice::DenseReference, FabricChoice::BitSliced] {
+        let want = resident_logits(fabric, &x, batch);
+        let be = ReferenceBackend::seeded_deep(DEFAULT_SEED, fabric, EXTRA_CONVS)
+            .with_streaming(StreamConfig::budget(300));
+        let mut s = be.plan().expect("plan");
+        assert_eq!(s.streaming_passes(), Some(4));
+        let mut out = vec![0f32; batch * NUM_CLASSES];
+        s.infer_batch_into(&x, batch, &mut out).expect("infer");
+        assert_eq!(out, want, "overflow-pass logits drifted on {fabric:?}");
+        let p = s.capacity_pressure_stats().expect("pressure");
+        assert_eq!(p.overflows, 3, "2304 and 2x4608 B layers must overflow a 300 B budget");
+        assert!(p.evictions > 0, "restaging must evict the previous pass");
+        assert!(
+            p.peak_occupancy() > 1.0,
+            "an over-budget pass must report occupancy > 1.0, got {}",
+            p.peak_occupancy()
+        );
+    }
+}
+
+#[test]
+fn streamed_session_stays_deterministic_across_interleaved_inputs() {
+    // pass reloads between calls must not leak state across batches
+    let a = batch_input(0x57E4_04, 1);
+    let b = batch_input(0x57E4_05, 1);
+    let be = ReferenceBackend::seeded_deep(DEFAULT_SEED, FabricChoice::BitSliced, EXTRA_CONVS)
+        .with_streaming(StreamConfig::budget(9300));
+    let mut s = be.plan().expect("plan");
+    let mut la1 = vec![0f32; NUM_CLASSES];
+    let mut lb = vec![0f32; NUM_CLASSES];
+    let mut la2 = vec![0f32; NUM_CLASSES];
+    s.infer_batch_into(&a, 1, &mut la1).expect("a#1");
+    s.infer_batch_into(&b, 1, &mut lb).expect("b");
+    s.infer_batch_into(&a, 1, &mut la2).expect("a#2");
+    assert_eq!(la1, la2, "reload passes leaked state between calls");
+    assert_ne!(la1, lb, "logits insensitive to input");
+}
