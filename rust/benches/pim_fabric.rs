@@ -7,8 +7,9 @@
 //! the same host; `--json BENCH_pim_fabric.json` persists the numbers
 //! for the bench trajectory (see `make bench`).
 
+use ddc_pim::arch::fault::{FaultConfig, FaultPlan};
 use ddc_pim::arch::lpu::Mode;
-use ddc_pim::arch::pim_core::MacroGeometry;
+use ddc_pim::arch::pim_core::{MacroGeometry, PimCore};
 use ddc_pim::arch::pim_macro::{MvmScratch, PimMacro};
 use ddc_pim::arch::reconfig::Grouping;
 use ddc_pim::fcc::{fcc_transform, FilterBank};
@@ -273,6 +274,45 @@ fn main() {
         pressure.peak_occupancy(),
         "of the 9300 B budget",
     );
+
+    // integrity scrub (PR 7): a seeded-faulted core at macro-like
+    // geometry (32 compartments x 64 rows, BER 1e-3), weights written
+    // into 48 rows with 16 left as repair spares.  The *cold* scrub —
+    // paid once, after staging — detects the corrupted rows against the
+    // Q/Q̄-complement checksums and re-homes them onto spares; it
+    // mutates the core, so it is timed as a single pass and reported as
+    // a value.  The `faulty.scrub` bench case is the steady-state sweep
+    // a server would run periodically: re-verifying an already-clean
+    // fabric (pure checksum walk, no mutation), so it can be iterated
+    // in place.
+    let fgeom = MacroGeometry {
+        compartments: 32,
+        rows: 64,
+        dbmus: 16,
+    };
+    let fcfg = FaultConfig::new(0xDDC7, 0.001);
+    let mut fcore = PimCore::with_geometry(fgeom);
+    fcore.install_fault_plan(&FaultPlan::seeded(fgeom, &fcfg, 0));
+    for cmp in 0..fgeom.compartments {
+        for row in 0..48 {
+            for slot in 0..fgeom.dbmus / 8 {
+                fcore.write_weight(cmp, row, slot, rng.int8() as i32);
+            }
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let cold = fcore.scrub();
+    let cold_ns = t0.elapsed().as_nanos() as f64;
+    s.report("faulty.scrub.cold", cold_ns, "ns (one detect+repair pass)");
+    s.report(
+        "faulty.scrub.quarantined_rows",
+        cold.quarantined_rows as f64,
+        "rows (seed 0xDDC7, BER 1e-3)",
+    );
+    s.report("faulty.scrub.repaired_rows", cold.repaired_rows as f64, "rows");
+    s.bench("faulty.scrub", 2, 200, || {
+        std::hint::black_box(fcore.scrub().checked_words);
+    });
 
     s.finish();
 }

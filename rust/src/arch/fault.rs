@@ -1,0 +1,516 @@
+//! Bit-cell fault model + complementary-state integrity scrub.
+//!
+//! DDC-PIM stores a *pair* of filters in every 6T cell — Q is the even
+//! filter's bit, Q̄ the complementary twin's — so a single stuck-at or
+//! transient cell fault silently corrupts two filters at once.  This
+//! module gives the fabric a way to model that (a seeded [`FaultPlan`]
+//! with a configurable bit-error rate), to *detect* the corruption
+//! (per-plane-word checksums against a write-intent ledger), and to
+//! *survive* it (row quarantine + re-home onto spare rows, with
+//! documented zeroization when the spares run out).
+//!
+//! ## Fault taxonomy
+//!
+//! Faults live at `(compartment, row, slot, weight-bit)` granularity —
+//! one 6T cell of the weight array — in three kinds:
+//!
+//! * **stuck-at-0** — the cell reads 0 regardless of what was written;
+//! * **stuck-at-1** — the cell reads 1 regardless;
+//! * **transient** — a single-event upset that flips the *next* write
+//!   landing on the cell, then clears (one-shot).
+//!
+//! All three manifest through the single weight-write path
+//! ([`super::pim_core::PimCore::write_weight`]): the intended value is
+//! recorded in the logical intent ledger, the masks corrupt the value,
+//! and the corrupted value is stored in *both* coherent views (per-cell
+//! array and bit-plane shadow) — so the cell/plane coherence invariant
+//! survives fault injection, and the scalar oracle and bitsliced kernel
+//! see the *same* corrupted array.  Cells that are never written hold
+//! their reset state (0); a fault on an unwritten cell has no effect
+//! until a write lands on it — a deliberate modeling choice that keeps
+//! the zero-fault path byte-identical.
+//!
+//! ## The Q/Q̄ detection argument
+//!
+//! The 6T pair invariant means Q̄ is *derived*, never stored: the model
+//! reads `q_bar() == !q` per cell and `!plane & lane_mask` per plane
+//! word ([`super::sram`]).  A cell fault therefore corrupts Q and Q̄
+//! *together, consistently* — there is no separate Q̄ state to check.
+//! Checksumming the stored Q plane words against the intent ledger
+//! consequently covers **both** polarities: any fault visible to either
+//! the Q path or the Q̄ path of double-computing mode changes the stored
+//! Q word and breaks its checksum.  Detection is per
+//! `(row, slot, word)` unit — the same granularity the hot loop reads.
+//!
+//! ## Quarantine / re-home / degrade
+//!
+//! A row with any mismatching checksum is quarantined.  Repair re-plays
+//! the row's intent through the (still faulted) write path onto a spare
+//! physical row — a never-written row of the same macro — and verifies
+//! the result; spares that fail verification (they carry stuck-ats of
+//! their own) are marked dead and the next spare is tried.  The logical
+//! → physical `row_map` then redirects every read.  When no clean spare
+//! is left, the row is **zeroed**: intent and stored state are cleared,
+//! modeling the periphery masking the row out, and the blast radius
+//! (rows and nonzero stored weights lost — each stored weight carries
+//! two logical filters in double mode) is reported instead of silently
+//! serving corrupt data.
+
+use super::pim_core::{MacroGeometry, WEIGHT_BITS};
+use crate::util::rng::Rng;
+
+/// What a faulty cell does to writes landing on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Cell reads 0 regardless of the written bit.
+    StuckAt0,
+    /// Cell reads 1 regardless of the written bit.
+    StuckAt1,
+    /// One-shot upset: the next write's bit is inverted, then the cell
+    /// behaves normally.
+    Transient,
+}
+
+/// One cell fault at `(compartment, row, slot, weight-bit)` — physical
+/// coordinates (faults are silicon defects; they do not move when a
+/// logical row is re-homed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    pub cmp: usize,
+    pub row: usize,
+    pub slot: usize,
+    pub kw: usize,
+    pub kind: FaultKind,
+}
+
+/// Knobs for seeded fault injection: a deterministic seed and a
+/// per-cell bit-error rate in `[0, 1]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    pub seed: u64,
+    pub ber: f64,
+}
+
+impl FaultConfig {
+    pub fn new(seed: u64, ber: f64) -> Self {
+        assert!((0.0..=1.0).contains(&ber), "BER {ber} outside [0, 1]");
+        FaultConfig { seed, ber }
+    }
+
+    /// Integer-friendly constructor: BER in parts-per-million (the form
+    /// `BackendSpec` carries, since its derives require `Eq`).
+    pub fn from_ppm(seed: u64, ppm: u32) -> Self {
+        Self::new(seed, ppm as f64 / 1e6)
+    }
+}
+
+/// A set of cell faults to install into one core.  Either enumerated
+/// explicitly ([`FaultPlan::from_faults`], tests) or sampled uniformly
+/// over every cell of a geometry at the configured BER
+/// ([`FaultPlan::seeded`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// No faults at all.  Installing this still routes every write
+    /// through the interposed path — the property tests pin that the
+    /// result is byte-identical to a core with no plan installed.
+    pub fn empty() -> Self {
+        FaultPlan::default()
+    }
+
+    /// An explicit fault list (test/chaos construction).
+    pub fn from_faults(faults: Vec<Fault>) -> Self {
+        FaultPlan { faults }
+    }
+
+    /// Sample every cell of `geom` independently at `cfg.ber`; `salt`
+    /// decorrelates the streams of sibling cores (one per weight pass)
+    /// sharing one config.  Deterministic in `(seed, salt, geom, ber)`.
+    pub fn seeded(geom: MacroGeometry, cfg: &FaultConfig, salt: u64) -> Self {
+        let mut rng = Rng::new(cfg.seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut faults = Vec::new();
+        if cfg.ber <= 0.0 {
+            return FaultPlan { faults };
+        }
+        for cmp in 0..geom.compartments {
+            for row in 0..geom.rows {
+                for slot in 0..geom.slots() {
+                    for kw in 0..WEIGHT_BITS {
+                        if rng.f64() < cfg.ber {
+                            let kind = match rng.below(3) {
+                                0 => FaultKind::StuckAt0,
+                                1 => FaultKind::StuckAt1,
+                                _ => FaultKind::Transient,
+                            };
+                            faults.push(Fault { cmp, row, slot, kw, kind });
+                        }
+                    }
+                }
+            }
+        }
+        FaultPlan { faults }
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+}
+
+/// Per-cell-location fault masks over the 8 weight bits of one
+/// `(cmp, row, slot)` byte.  Precedence on overlap: stuck-at-1 wins
+/// over stuck-at-0 (`set` is OR-ed after `clear` is AND-ed out), the
+/// transient flip applies last and once.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct FaultMasks {
+    clear: u8,
+    set: u8,
+    flip: u8,
+}
+
+/// Running totals a faulted core accumulates across its lifetime
+/// (injection at write time, detection/repair at scrub time).  The
+/// runtime folds these into `metrics::ReliabilityStats`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultTally {
+    /// Weight bits actually corrupted at write time (benign stuck-ats
+    /// that agree with the written bit are not counted).
+    pub injected_bits: u64,
+    /// Checksum units `(row, slot, word)` the scrub found corrupted.
+    pub detected_words: u64,
+    /// Quarantined rows re-homed onto a verified-clean spare.
+    pub repaired_rows: u64,
+    /// Rows quarantined in total (repaired + zeroed).
+    pub quarantined_rows: u64,
+    /// Quarantined rows zeroed for lack of clean spares.
+    pub zeroed_rows: u64,
+}
+
+impl FaultTally {
+    pub fn merge(&mut self, other: &FaultTally) {
+        self.injected_bits += other.injected_bits;
+        self.detected_words += other.detected_words;
+        self.repaired_rows += other.repaired_rows;
+        self.quarantined_rows += other.quarantined_rows;
+        self.zeroed_rows += other.zeroed_rows;
+    }
+}
+
+/// Result of one integrity-scrub pass over a core.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScrubReport {
+    /// Checksum units `(row, slot, word)` compared.
+    pub checked_words: u64,
+    /// Units whose stored checksum diverged from the intent ledger.
+    pub detected_words: u64,
+    /// Rows quarantined (any corrupt unit).
+    pub quarantined_rows: u64,
+    /// Quarantined rows re-homed onto a verified-clean spare row.
+    pub repaired_rows: u64,
+    /// Spare rows that failed post-repair verification (own faults).
+    pub dead_spares: u64,
+    /// Quarantined rows zeroed because no clean spare remained.
+    pub zeroed_rows: u64,
+    /// Nonzero stored weights lost to zeroization — the blast radius
+    /// (double it for logical filters: every stored weight carries its
+    /// complementary twin).
+    pub zeroed_weights: u64,
+}
+
+impl ScrubReport {
+    /// Whether the scrub found nothing wrong.
+    pub fn is_clean(&self) -> bool {
+        self.detected_words == 0
+    }
+
+    pub fn merge(&mut self, other: &ScrubReport) {
+        self.checked_words += other.checked_words;
+        self.detected_words += other.detected_words;
+        self.quarantined_rows += other.quarantined_rows;
+        self.repaired_rows += other.repaired_rows;
+        self.dead_spares += other.dead_spares;
+        self.zeroed_rows += other.zeroed_rows;
+        self.zeroed_weights += other.zeroed_weights;
+    }
+}
+
+/// Checksum of one `(row, slot, word)` unit: a 64-bit multiply-rotate
+/// mix folded over the `WEIGHT_BITS` plane words.  Any single-word
+/// change alters the digest; collisions need an adversarial 512-bit
+/// input, far beyond what cell faults produce.
+#[inline]
+pub fn plane_checksum(words: &[u64]) -> u64 {
+    let mut h = 0x6A09_E667_F3BC_C909u64;
+    for &w in words {
+        h = (h ^ w).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(13);
+    }
+    h
+}
+
+/// Live fault state of one core: physical fault masks, the logical
+/// write-intent ledger the scrub checks against, the logical → physical
+/// row map, and spare-row bookkeeping.  Owned by
+/// [`super::pim_core::PimCore`]; `None` there means the entirely
+/// untouched legacy write path runs.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    cmps: usize,
+    rows: usize,
+    slots: usize,
+    /// Physical `(cmp, row, slot)`-indexed corruption masks.
+    masks: Vec<FaultMasks>,
+    /// Logical `(cmp, row, slot)`-indexed written intent (reset = 0,
+    /// which matches the cells' reset state).
+    intent: Vec<i8>,
+    /// Logical row → physical row (identity until a repair re-homes).
+    row_map: Vec<u32>,
+    /// Physical rows holding live data (write targets + claimed spares).
+    row_used: Vec<bool>,
+    /// Spare rows that failed repair verification.
+    row_dead: Vec<bool>,
+    tally: FaultTally,
+}
+
+impl FaultState {
+    pub fn new(cmps: usize, rows: usize, slots: usize, plan: &FaultPlan) -> Self {
+        let mut masks = vec![FaultMasks::default(); cmps * rows * slots];
+        for f in plan.faults() {
+            assert!(
+                f.cmp < cmps && f.row < rows && f.slot < slots && f.kw < WEIGHT_BITS,
+                "fault {f:?} outside the {cmps}x{rows}x{slots} core"
+            );
+            let m = &mut masks[(f.cmp * rows + f.row) * slots + f.slot];
+            let bit = 1u8 << f.kw;
+            match f.kind {
+                FaultKind::StuckAt0 => m.clear |= bit,
+                FaultKind::StuckAt1 => m.set |= bit,
+                FaultKind::Transient => m.flip |= bit,
+            }
+        }
+        FaultState {
+            cmps,
+            rows,
+            slots,
+            masks,
+            intent: vec![0; cmps * rows * slots],
+            row_map: (0..rows as u32).collect(),
+            row_used: vec![false; rows],
+            row_dead: vec![false; rows],
+            tally: FaultTally::default(),
+        }
+    }
+
+    #[inline]
+    fn loc(&self, cmp: usize, row: usize, slot: usize) -> usize {
+        (cmp * self.rows + row) * self.slots + slot
+    }
+
+    /// Physical home of a logical row.
+    #[inline]
+    pub fn physical(&self, row: usize) -> usize {
+        self.row_map[row] as usize
+    }
+
+    /// Record what the planner *meant* to store at a logical location.
+    #[inline]
+    pub fn record_intent(&mut self, cmp: usize, row: usize, slot: usize, w: i32) {
+        let loc = self.loc(cmp, row, slot);
+        self.intent[loc] = w as i8;
+    }
+
+    /// Intended value at a logical location (0 if never written —
+    /// matching the cells' reset state).
+    #[inline]
+    pub fn intent(&self, cmp: usize, row: usize, slot: usize) -> i32 {
+        self.intent[self.loc(cmp, row, slot)] as i32
+    }
+
+    /// Push a write through the fault masks of a *physical* location:
+    /// returns the value the cells actually latch, books the corrupted
+    /// bits, consumes any pending transient, and marks the row live.
+    pub fn corrupt(&mut self, cmp: usize, phys_row: usize, slot: usize, w: i32) -> i32 {
+        self.row_used[phys_row] = true;
+        let loc = self.loc(cmp, phys_row, slot);
+        let m = &mut self.masks[loc];
+        let bits = w as u8;
+        let mut out = (bits & !m.clear) | m.set;
+        out ^= m.flip;
+        m.flip = 0;
+        self.tally.injected_bits += (out ^ bits).count_ones() as u64;
+        out as i8 as i32
+    }
+
+    /// Word `word` of the *intended* Q bit-plane of
+    /// `(logical row, slot, kw)` — what the stored plane would hold on
+    /// fault-free silicon.
+    fn golden_word(&self, row: usize, slot: usize, kw: usize, word: usize) -> u64 {
+        let lo = word * 64;
+        let hi = ((word + 1) * 64).min(self.cmps);
+        let mut w = 0u64;
+        for lane in lo..hi {
+            if (self.intent[self.loc(lane, row, slot)] as u8 >> kw) & 1 == 1 {
+                w |= 1u64 << (lane - lo);
+            }
+        }
+        w
+    }
+
+    /// Golden checksum of one `(logical row, slot, word)` unit, from the
+    /// intent ledger — the reference the stored planes are compared to.
+    pub fn golden_checksum(&self, row: usize, slot: usize, word: usize) -> u64 {
+        let mut words = [0u64; WEIGHT_BITS];
+        for (kw, w) in words.iter_mut().enumerate() {
+            *w = self.golden_word(row, slot, kw, word);
+        }
+        plane_checksum(&words)
+    }
+
+    /// Claim the lowest-numbered clean spare (a physical row never
+    /// written and not marked dead).  Ascending scan = deterministic
+    /// quarantine behavior.
+    pub fn claim_spare(&mut self) -> Option<usize> {
+        let s = (0..self.rows).find(|&r| !self.row_used[r] && !self.row_dead[r])?;
+        self.row_used[s] = true;
+        Some(s)
+    }
+
+    /// Mark a spare dead after failed repair verification.
+    pub fn mark_dead(&mut self, row: usize) {
+        self.row_dead[row] = true;
+    }
+
+    /// Re-home a logical row onto a verified spare.
+    pub fn map_row(&mut self, logical: usize, phys: usize) {
+        self.row_map[logical] = phys as u32;
+    }
+
+    /// Zero a logical row's intent (graceful degradation); returns the
+    /// number of nonzero stored weights lost.
+    pub fn zero_intent_row(&mut self, row: usize) -> u64 {
+        let mut lost = 0;
+        for cmp in 0..self.cmps {
+            for slot in 0..self.slots {
+                let loc = self.loc(cmp, row, slot);
+                if self.intent[loc] != 0 {
+                    lost += 1;
+                }
+                self.intent[loc] = 0;
+            }
+        }
+        lost
+    }
+
+    /// Fold a scrub's outcome into the lifetime tally.
+    pub fn book_scrub(&mut self, report: &ScrubReport) {
+        self.tally.detected_words += report.detected_words;
+        self.tally.repaired_rows += report.repaired_rows;
+        self.tally.quarantined_rows += report.quarantined_rows;
+        self.tally.zeroed_rows += report.zeroed_rows;
+    }
+
+    /// Lifetime injection/detection/repair totals.
+    pub fn tally(&self) -> FaultTally {
+        self.tally
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_ber_scaled() {
+        let geom = MacroGeometry::paper();
+        let cfg = FaultConfig::new(42, 0.01);
+        let a = FaultPlan::seeded(geom, &cfg, 3);
+        let b = FaultPlan::seeded(geom, &cfg, 3);
+        assert_eq!(a, b);
+        // different salt decorrelates
+        assert_ne!(a, FaultPlan::seeded(geom, &cfg, 4));
+        // 32*64*2*8 = 32768 cells at 1% → expect ~328, allow wide slack
+        let n = a.len();
+        assert!((150..600).contains(&n), "implausible fault count {n}");
+        // zero BER yields the empty plan without touching the RNG
+        assert!(FaultPlan::seeded(geom, &FaultConfig::new(42, 0.0), 3).is_empty());
+    }
+
+    #[test]
+    fn corrupt_applies_masks_and_counts_bits() {
+        let plan = FaultPlan::from_faults(vec![
+            Fault { cmp: 0, row: 1, slot: 0, kw: 0, kind: FaultKind::StuckAt1 },
+            Fault { cmp: 0, row: 1, slot: 0, kw: 3, kind: FaultKind::StuckAt0 },
+            Fault { cmp: 0, row: 1, slot: 0, kw: 7, kind: FaultKind::Transient },
+        ]);
+        let mut fs = FaultState::new(2, 4, 2, &plan);
+        // 0b0000_1000 → stuck1 sets bit 0, stuck0 clears bit 3, transient
+        // flips bit 7 (once): 0b1000_0001 = -127
+        assert_eq!(fs.corrupt(0, 1, 0, 0b0000_1000), 0b1000_0001u8 as i8 as i32);
+        assert_eq!(fs.tally().injected_bits, 3);
+        // transient is spent; stuck-ats persist
+        assert_eq!(fs.corrupt(0, 1, 0, 0b0000_1000), 0b0000_0001);
+        assert_eq!(fs.tally().injected_bits, 5);
+        // a benign write (agrees with both stuck-ats) injects nothing
+        assert_eq!(fs.corrupt(0, 1, 0, 0b0000_0001), 0b0000_0001);
+        assert_eq!(fs.tally().injected_bits, 5);
+        // clean sibling location untouched
+        assert_eq!(fs.corrupt(1, 1, 0, 0b0000_1000), 0b0000_1000);
+    }
+
+    #[test]
+    fn golden_checksum_tracks_intent() {
+        let mut fs = FaultState::new(96, 2, 2, &FaultPlan::empty());
+        let before = fs.golden_checksum(0, 1, 1);
+        fs.record_intent(70, 0, 1, -77); // lane 70 lives in word 1
+        assert_ne!(fs.golden_checksum(0, 1, 1), before);
+        assert_eq!(fs.golden_checksum(0, 1, 0), before); // word 0 untouched
+        // golden word matches the two's-complement bit layout
+        assert_eq!(fs.golden_word(0, 1, 0, 1), 1 << (70 - 64)); // -77 = ...0011
+        assert_eq!(fs.golden_word(0, 1, 2, 1), 0);
+    }
+
+    #[test]
+    fn spare_claiming_is_ascending_and_skips_dead() {
+        let mut fs = FaultState::new(1, 4, 1, &FaultPlan::empty());
+        fs.corrupt(0, 1, 0, 5); // row 1 in use
+        assert_eq!(fs.claim_spare(), Some(0));
+        fs.mark_dead(2);
+        assert_eq!(fs.claim_spare(), Some(3));
+        assert_eq!(fs.claim_spare(), None); // exhausted
+    }
+
+    #[test]
+    fn checksum_sensitive_to_any_word() {
+        let a = [1u64, 2, 3, 4, 5, 6, 7, 8];
+        for i in 0..8 {
+            let mut b = a;
+            b[i] ^= 1 << 40;
+            assert_ne!(plane_checksum(&a), plane_checksum(&b), "blind to word {i}");
+        }
+        // order matters too
+        let mut c = a;
+        c.swap(0, 7);
+        assert_ne!(plane_checksum(&a), plane_checksum(&c));
+    }
+
+    #[test]
+    fn zeroing_counts_blast_radius() {
+        let mut fs = FaultState::new(3, 2, 2, &FaultPlan::empty());
+        fs.record_intent(0, 1, 0, 9);
+        fs.record_intent(2, 1, 1, -4);
+        fs.record_intent(1, 0, 0, 7); // other row: untouched
+        assert_eq!(fs.zero_intent_row(1), 2);
+        assert_eq!(fs.intent(0, 1, 0), 0);
+        assert_eq!(fs.intent(1, 0, 0), 7);
+        assert_eq!(fs.zero_intent_row(1), 0); // idempotent
+    }
+}

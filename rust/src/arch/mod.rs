@@ -10,6 +10,10 @@
 //!   numerics (the paper's Fig. 6 truth table and Eq. 7).
 //! * **Timing/energy** ([`mem`], [`dram`], [`prepost`], [`cost`]) —
 //!   resource models consumed by the cycle engine in [`crate::sim`].
+//!
+//! [`fault`] cuts across the functional view: seeded bit-cell fault
+//! injection on the single weight-write path plus the integrity scrub
+//! that detects/repairs the damage (quarantine + spare-row re-home).
 
 pub mod adder_tree;
 pub mod compartment;
@@ -17,6 +21,7 @@ pub mod controller;
 pub mod cost;
 pub mod dbmu;
 pub mod dram;
+pub mod fault;
 pub mod lpu;
 pub mod mem;
 pub mod merge;

@@ -17,9 +17,17 @@
 //!   polarities, so the bitsliced hot path in [`super::pim_macro`]
 //!   reduces a whole adder-tree column with one AND + `count_ones` per
 //!   word — and skips the columns whose plane is dark.
+//!
+//! Reliability: an optional [`FaultState`] (installed from a
+//! [`FaultPlan`] before any weight is written) interposes on the same
+//! single write path — intended values go to a logical intent ledger,
+//! corrupted values go to both storage views — and [`PimCore::scrub`]
+//! detects/repairs the damage.  With no plan installed the legacy path
+//! runs untouched, byte for byte.
 pub use super::sram::WeightPlanes;
 
 use super::compartment::{Compartment, CompartmentOut};
+use super::fault::{plane_checksum, FaultPlan, FaultState, FaultTally, ScrubReport};
 use super::lpu::Mode;
 
 /// Weight precision of a row slot (8 columns per INT8 weight).
@@ -76,6 +84,9 @@ pub struct PimCore {
     rows: usize,
     dbmus: usize,
     weight_writes: u64,
+    /// Fault model + integrity state; `None` = the untouched legacy
+    /// write/read path (the zero-fault byte-identity guarantee).
+    faults: Option<FaultState>,
 }
 
 impl PimCore {
@@ -93,6 +104,7 @@ impl PimCore {
             rows,
             dbmus,
             weight_writes: 0,
+            faults: None,
         }
     }
 
@@ -128,10 +140,140 @@ impl PimCore {
 
     /// Normal-SRAM-mode weight write (updates both the per-cell array and
     /// the bit-plane shadow — the only weight write path).
+    ///
+    /// With a fault plan installed, `row` is a *logical* row: the intent
+    /// ledger records `w`, the write lands on the mapped physical row,
+    /// and the physical location's fault masks corrupt the stored value
+    /// — identically in both storage views, so cell/plane coherence
+    /// holds under injection.
     pub fn write_weight(&mut self, cmp: usize, row: usize, slot: usize, w: i32) {
-        self.compartments[cmp].write_weight8(row, slot, w);
-        self.planes.record(cmp, row, slot, w);
+        match &mut self.faults {
+            None => {
+                self.compartments[cmp].write_weight8(row, slot, w);
+                self.planes.record(cmp, row, slot, w);
+            }
+            Some(fs) => {
+                fs.record_intent(cmp, row, slot, w);
+                let phys = fs.physical(row);
+                let fw = fs.corrupt(cmp, phys, slot, w);
+                self.compartments[cmp].write_weight8(phys, slot, fw);
+                self.planes.record(cmp, phys, slot, fw);
+            }
+        }
         self.weight_writes += 1;
+    }
+
+    /// Install a bit-cell fault plan.  Must precede every weight write
+    /// (faults manifest through the write path; retrofitting a plan onto
+    /// a loaded core would miss the writes that already happened).
+    pub fn install_fault_plan(&mut self, plan: &FaultPlan) {
+        assert_eq!(
+            self.weight_writes, 0,
+            "fault plan must be installed on a fresh core, before any weight write"
+        );
+        self.faults = Some(FaultState::new(
+            self.compartments.len(),
+            self.rows,
+            self.slots(),
+            plan,
+        ));
+    }
+
+    /// Physical home of a logical row (identity without a fault plan or
+    /// before any quarantine re-homed a row).  Every row-addressed read
+    /// path maps through this.
+    #[inline]
+    pub fn physical_row(&self, row: usize) -> usize {
+        match &self.faults {
+            Some(fs) => fs.physical(row),
+            None => row,
+        }
+    }
+
+    /// Lifetime fault-injection/detection/repair totals (all-zero when
+    /// no plan is installed).
+    pub fn fault_tally(&self) -> FaultTally {
+        self.faults.as_ref().map(|f| f.tally()).unwrap_or_default()
+    }
+
+    /// Integrity scrub: verify every `(row, slot, word)` unit's stored
+    /// Q-plane checksum against the write-intent ledger (the Q̄ polarity
+    /// is derived from Q, so this covers both — see [`super::fault`]),
+    /// quarantine corrupt rows, re-home them onto clean spare rows
+    /// through the still-faulted write path, and zero rows for which no
+    /// clean spare remains.  No-op returning an empty report when no
+    /// fault plan is installed.  Scrub writes are maintenance, not
+    /// weight loads: `weight_writes` is unchanged.
+    pub fn scrub(&mut self) -> ScrubReport {
+        let mut report = ScrubReport::default();
+        let Some(mut fs) = self.faults.take() else {
+            return report;
+        };
+        let slots = self.slots();
+        let nwords = self.planes.nwords();
+        for row in 0..self.rows {
+            let phys = fs.physical(row);
+            let mut bad = 0u64;
+            for slot in 0..slots {
+                for wi in 0..nwords {
+                    report.checked_words += 1;
+                    let stored = plane_checksum(self.planes.word_planes(phys, slot, wi).0);
+                    if stored != fs.golden_checksum(row, slot, wi) {
+                        bad += 1;
+                    }
+                }
+            }
+            if bad == 0 {
+                continue;
+            }
+            report.detected_words += bad;
+            report.quarantined_rows += 1;
+            let mut repaired = false;
+            while let Some(spare) = fs.claim_spare() {
+                // replay the row's intent through the (faulted) write
+                // path at the spare's physical location
+                for cmp in 0..self.compartments.len() {
+                    for slot in 0..slots {
+                        let w = fs.intent(cmp, row, slot);
+                        let fw = fs.corrupt(cmp, spare, slot, w);
+                        self.compartments[cmp].write_weight8(spare, slot, fw);
+                        self.planes.record(cmp, spare, slot, fw);
+                    }
+                }
+                let clean = (0..slots).all(|slot| {
+                    (0..nwords).all(|wi| {
+                        plane_checksum(self.planes.word_planes(spare, slot, wi).0)
+                            == fs.golden_checksum(row, slot, wi)
+                    })
+                });
+                if clean {
+                    fs.map_row(row, spare);
+                    report.repaired_rows += 1;
+                    repaired = true;
+                    break;
+                }
+                // the spare carries stuck-ats of its own: retire it
+                fs.mark_dead(spare);
+                report.dead_spares += 1;
+            }
+            if !repaired {
+                // graceful degradation: the periphery masks the row out
+                // — model both intent and storage as all-zero, and
+                // report the blast radius instead of serving corrupt
+                // data
+                report.zeroed_weights += fs.zero_intent_row(row);
+                for cmp in 0..self.compartments.len() {
+                    for slot in 0..slots {
+                        self.compartments[cmp].write_weight8(phys, slot, 0);
+                        self.planes.record(cmp, phys, slot, 0);
+                    }
+                }
+                report.zeroed_rows += 1;
+            }
+        }
+        fs.book_scrub(&report);
+        self.faults = Some(fs);
+        report
     }
 
     /// Total normal-SRAM weight writes since construction.  The planned
@@ -142,8 +284,10 @@ impl PimCore {
         self.weight_writes
     }
 
-    /// Read back (Q side) — test/debug path.
+    /// Read back (Q side) — test/debug path.  Logical row: a quarantined
+    /// row reads from its spare home.
     pub fn read_weight(&self, cmp: usize, row: usize, slot: usize) -> i32 {
+        let row = self.physical_row(row);
         self.compartments[cmp].read_weight8(row, slot)
     }
 
@@ -172,6 +316,7 @@ impl PimCore {
     ) -> Vec<CompartmentOut> {
         assert_eq!(inp_bits.len(), self.compartments.len());
         assert_eq!(inn_bits.len(), self.compartments.len());
+        let row = self.physical_row(row);
         self.compartments
             .iter()
             .enumerate()
@@ -246,6 +391,183 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn empty_fault_plan_is_byte_identical() {
+        use crate::arch::fault::FaultPlan;
+        use crate::util::rng::Rng;
+        // the interposed (intent + map + corrupt) write path with an
+        // all-clean fault state must store exactly what the legacy path
+        // stores — cells, planes, write counter, compute outputs
+        let (cmps, rows) = (96usize, 8usize);
+        let mut plain = PimCore::new(cmps, rows, 16);
+        let mut faulted = PimCore::new(cmps, rows, 16);
+        faulted.install_fault_plan(&FaultPlan::empty());
+        let mut rng = Rng::new(71);
+        for _ in 0..500 {
+            let cmp = rng.below(cmps as u64) as usize;
+            let row = rng.below(rows as u64) as usize;
+            let slot = rng.below(2) as usize;
+            let w = rng.int8() as i32;
+            plain.write_weight(cmp, row, slot, w);
+            faulted.write_weight(cmp, row, slot, w);
+        }
+        assert_eq!(plain.weight_writes(), faulted.weight_writes());
+        assert_eq!(faulted.fault_tally().injected_bits, 0);
+        for row in 0..rows {
+            assert_eq!(faulted.physical_row(row), row);
+            for slot in 0..2 {
+                for cmp in 0..cmps {
+                    assert_eq!(
+                        plain.read_weight(cmp, row, slot),
+                        faulted.read_weight(cmp, row, slot)
+                    );
+                }
+                for kw in 0..WEIGHT_BITS {
+                    for wi in 0..2 {
+                        assert_eq!(
+                            plain.weight_planes().plane(row, slot, kw, wi),
+                            faulted.weight_planes().plane(row, slot, kw, wi)
+                        );
+                    }
+                }
+            }
+        }
+        // and a scrub over the clean state detects nothing, changes nothing
+        let report = faulted.scrub();
+        assert!(report.is_clean());
+        assert_eq!(report.quarantined_rows, 0);
+        assert!(report.checked_words > 0);
+    }
+
+    #[test]
+    fn stuck_at_fault_detected_and_repaired_onto_spare() {
+        use crate::arch::fault::{Fault, FaultKind, FaultPlan};
+        let mut core = PimCore::new(4, 8, 16);
+        // bit 6 of (cmp 0, row 2, slot 0) reads 1 no matter what
+        core.install_fault_plan(&FaultPlan::from_faults(vec![Fault {
+            cmp: 0,
+            row: 2,
+            slot: 0,
+            kw: 6,
+            kind: FaultKind::StuckAt1,
+        }]));
+        // load rows 0..4, leaving 4..8 as spares
+        for row in 0..4 {
+            for cmp in 0..4 {
+                for slot in 0..2 {
+                    core.write_weight(cmp, row, slot, (10 * cmp + row) as i32);
+                }
+            }
+        }
+        // the fault is live: stored value diverges from intent
+        assert_eq!(core.read_weight(0, 2, 0), 2 | 0x40);
+        assert!(core.fault_tally().injected_bits > 0);
+        let report = core.scrub();
+        assert_eq!(report.detected_words, 1);
+        assert_eq!(report.quarantined_rows, 1);
+        assert_eq!(report.repaired_rows, 1);
+        assert_eq!(report.zeroed_rows, 0);
+        // row 2 now lives on the first spare (row 4), reads repaired
+        assert_eq!(core.physical_row(2), 4);
+        for cmp in 0..4 {
+            for slot in 0..2 {
+                assert_eq!(core.read_weight(cmp, 2, slot), (10 * cmp + 2) as i32);
+            }
+        }
+        // untouched rows still identity-mapped and intact
+        assert_eq!(core.physical_row(1), 1);
+        assert_eq!(core.read_weight(3, 1, 1), 31);
+        // a second scrub finds a clean array (repair is stable)
+        assert!(core.scrub().is_clean());
+        // maintenance writes did not count as weight loads
+        assert_eq!(core.weight_writes(), 4 * 4 * 2);
+    }
+
+    #[test]
+    fn exhausted_spares_zero_the_quarantined_row() {
+        use crate::arch::fault::{Fault, FaultKind, FaultPlan};
+        let mut core = PimCore::new(2, 2, 16);
+        core.install_fault_plan(&FaultPlan::from_faults(vec![Fault {
+            cmp: 1,
+            row: 1,
+            slot: 1,
+            kw: 0,
+            kind: FaultKind::StuckAt0,
+        }]));
+        // every row written: no spare rows exist
+        for row in 0..2 {
+            for cmp in 0..2 {
+                for slot in 0..2 {
+                    core.write_weight(cmp, row, slot, 7);
+                }
+            }
+        }
+        assert_eq!(core.read_weight(1, 1, 1), 6); // bit 0 stuck at 0
+        let report = core.scrub();
+        assert_eq!(report.quarantined_rows, 1);
+        assert_eq!(report.repaired_rows, 0);
+        assert_eq!(report.zeroed_rows, 1);
+        assert_eq!(report.zeroed_weights, 4); // 2 cmps x 2 slots, all nonzero
+        // the whole quarantined row reads zero; the clean row survives
+        for cmp in 0..2 {
+            for slot in 0..2 {
+                assert_eq!(core.read_weight(cmp, 1, slot), 0);
+                assert_eq!(core.read_weight(cmp, 0, slot), 7);
+            }
+        }
+        // degradation is stable across scrubs
+        assert!(core.scrub().is_clean());
+    }
+
+    #[test]
+    fn faulted_writes_keep_planes_coherent_with_cells() {
+        use crate::arch::fault::{FaultConfig, FaultPlan};
+        use crate::util::rng::Rng;
+        // under a dense random fault plan the two storage views must
+        // still agree bit-for-bit (corruption is applied before both)
+        let (cmps, rows) = (96usize, 4usize);
+        let geom = MacroGeometry {
+            compartments: cmps,
+            rows,
+            dbmus: 16,
+        };
+        let mut core = PimCore::with_geometry(geom);
+        core.install_fault_plan(&FaultPlan::seeded(geom, &FaultConfig::new(9, 0.02), 0));
+        let mut rng = Rng::new(72);
+        for _ in 0..600 {
+            let cmp = rng.below(cmps as u64) as usize;
+            let row = rng.below(rows as u64) as usize;
+            let slot = rng.below(2) as usize;
+            core.write_weight(cmp, row, slot, rng.int8() as i32);
+        }
+        assert!(core.fault_tally().injected_bits > 0, "plan never fired");
+        for row in 0..rows {
+            let pr = core.physical_row(row);
+            for slot in 0..2 {
+                for kw in 0..WEIGHT_BITS {
+                    for cmp in 0..cmps {
+                        let plane = core.weight_planes().plane(pr, slot, kw, cmp / 64);
+                        let w = core.read_weight(cmp, row, slot);
+                        assert_eq!(
+                            (plane >> (cmp % 64)) & 1 == 1,
+                            (w as u32 >> kw) & 1 == 1,
+                            "faulted plane/cell drift at cmp={cmp} row={row} slot={slot} kw={kw}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fresh core")]
+    fn fault_plan_rejected_after_writes() {
+        use crate::arch::fault::FaultPlan;
+        let mut core = PimCore::new(2, 2, 16);
+        core.write_weight(0, 0, 0, 1);
+        core.install_fault_plan(&FaultPlan::empty());
     }
 
     #[test]

@@ -229,6 +229,9 @@ impl PimMacro {
         let ncmp = self.core.num_compartments();
         assert!(inputs_p.len() <= ncmp, "INP vector wider than the core");
         assert!(inputs_n.len() <= ncmp, "INN vector wider than the core");
+        // logical → physical row map (identity without a fault plan; the
+        // scalar path maps inside `compute_cycle`)
+        let row = self.core.physical_row(row);
         let slots = self.core.slots();
         let ngroups = grouping.ngroups();
         let planes = self.core.weight_planes();

@@ -47,10 +47,16 @@ impl<T> Batcher<T> {
     }
 
     pub fn push(&mut self, item: T) {
-        self.queue.push(Pending {
-            item,
-            arrived: Instant::now(),
-        });
+        self.push_arrived(item, Instant::now());
+    }
+
+    /// Push with an explicit arrival time.  Requeue paths (a batch
+    /// bounced off a panicked session) use the item's *original*
+    /// arrival so its flush deadline and latency accounting are
+    /// preserved — an already-overdue item makes the queue immediately
+    /// flushable rather than waiting a fresh `max_wait`.
+    pub fn push_arrived(&mut self, item: T, arrived: Instant) {
+        self.queue.push(Pending { item, arrived });
     }
 
     pub fn len(&self) -> usize {
@@ -156,6 +162,18 @@ mod tests {
         assert_eq!(sink, vec![2]);
         b.cut_into(&mut sink);
         assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn push_arrived_preserves_the_original_deadline() {
+        // a requeued item keeps its old arrival: already overdue, so
+        // the queue is immediately flushable (no fresh max_wait)
+        let w = Duration::from_millis(50);
+        let mut b = Batcher::new(policy(8, 50));
+        let past = Instant::now() - w;
+        b.push_arrived(7, past);
+        assert!(b.should_flush(Instant::now()), "overdue requeue must flush now");
+        assert_eq!(b.next_deadline(), Some(past + w));
     }
 
     #[test]

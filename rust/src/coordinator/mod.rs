@@ -7,6 +7,10 @@
 //!   [`crate::runtime::Session`] (weights resident for the worker's
 //!   lifetime; reference by default, PJRT/AOT artifacts behind the
 //!   `pjrt` feature) and executes batches through it zero-alloc.
+//!   Serving is fail-soft: batch panics are caught and retried on a
+//!   rebuilt session, clients get typed timeouts
+//!   ([`service::ServiceError`]), and the session's fault/scrub
+//!   counters ride along in [`service::ServiceStats`].
 
 pub mod batcher;
 pub mod scheduler;
@@ -16,4 +20,6 @@ pub use batcher::{BatchPolicy, Batcher};
 // shape constants come straight from the runtime (single definition);
 // re-exported here for the service's callers
 pub use crate::runtime::{IMG_ELEMS, NUM_CLASSES};
-pub use service::{InferenceResult, InferenceService, ServiceStats};
+pub use service::{
+    InferenceResult, InferenceService, ServiceError, ServiceStats, DEFAULT_INFER_TIMEOUT,
+};

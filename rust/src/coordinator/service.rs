@@ -26,25 +26,68 @@
 //! [`ServiceStats`] additionally carries the session's
 //! [`CapacityPressure`] counters, refreshed whenever stats are queried.
 
-use std::sync::mpsc;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::{ArchConfig, SimConfig};
-use crate::metrics::{CapacityPressure, LatencyHistogram};
+use crate::metrics::{CapacityPressure, LatencyHistogram, ReliabilityStats};
 use crate::model::zoo;
 use crate::runtime::{Backend, BackendKind, BackendSpec, Session, IMG_ELEMS, NUM_CLASSES};
 use crate::sim::simulate_network;
 
 use super::batcher::{BatchPolicy, Batcher};
 
+/// Default client-side deadline for [`InferenceService::infer`] — far
+/// above any sane batch time, so it only fires when the worker is
+/// wedged (hung session, dead thread), never on a slow-but-live batch.
+pub const DEFAULT_INFER_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How often a panicked worker retries rebuilding its session before
+/// giving up on the pending batch.
+const REBUILD_ATTEMPTS: u32 = 3;
+
+/// Typed client-visible failure: lets callers distinguish "my deadline
+/// elapsed" (retryable elsewhere) from "the service rejected or failed
+/// this request" without parsing strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The client-side deadline elapsed before a response arrived.  The
+    /// request may still complete inside the worker; the response is
+    /// discarded when the receiver drops.
+    Timeout,
+    /// The worker dropped the response channel without answering
+    /// (service shut down mid-request).
+    Disconnected,
+    /// The service answered with a validation or execution error.
+    Failed(String),
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::Timeout => write!(f, "inference timed out"),
+            ServiceError::Disconnected => write!(f, "service dropped the request"),
+            ServiceError::Failed(e) => write!(f, "inference failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
 /// One inference request.
 struct Request {
     input: Vec<f32>,
     resp: mpsc::Sender<Result<InferenceResult, String>>,
     submitted: Instant,
+    /// Times this request has already ridden in a batch that panicked
+    /// (bounds the requeue: one retry, then a terminal error).
+    retries: u32,
 }
 
 /// The answer a client gets back.
@@ -77,6 +120,12 @@ pub struct ServiceStats {
     /// (all-zero when the backend runs without a streaming budget —
     /// `CapacityPressure::default()` means "everything resident").
     pub capacity: CapacityPressure,
+    /// Fault-injection / fail-soft counters: the session's own tally
+    /// (faults injected/detected/repaired, quarantined rows, stager
+    /// fallbacks) plus the service-level `worker_rebuilds` and
+    /// client-side `timed_out_requests`.  All-zero when nothing has
+    /// gone wrong ([`ReliabilityStats::is_quiet`]).
+    pub reliability: ReliabilityStats,
 }
 
 impl ServiceStats {
@@ -101,12 +150,22 @@ enum Msg {
     Infer(Request),
     Stats(mpsc::Sender<ServiceStats>),
     Shutdown,
+    /// Chaos hook: make the next batch execution panic (one-shot), so
+    /// tests can prove the catch-unwind + session-rebuild path.
+    DebugPanicNextBatch,
+    /// Chaos hook: sleep this long before the next batch executes
+    /// (one-shot), so tests can trip the client-side timeout.
+    DebugHangNextBatch(Duration),
 }
 
 /// Handle to a running service.
 pub struct InferenceService {
     tx: mpsc::Sender<Msg>,
     worker: Option<JoinHandle<()>>,
+    /// Client-side timeout count (requests whose deadline elapsed);
+    /// merged into [`ServiceStats::reliability`] by
+    /// [`InferenceService::stats`].
+    timed_out: Arc<AtomicU64>,
 }
 
 impl InferenceService {
@@ -137,6 +196,7 @@ impl InferenceService {
         InferenceService {
             tx,
             worker: Some(worker),
+            timed_out: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -156,23 +216,62 @@ impl InferenceService {
             input,
             resp: rtx,
             submitted: Instant::now(),
+            retries: 0,
         };
         // if the worker died the receiver will simply disconnect
         let _ = self.tx.send(Msg::Infer(req));
         rrx
     }
 
-    /// Blocking convenience call.
-    pub fn infer(&self, input: Vec<f32>) -> Result<InferenceResult, String> {
-        self.submit(input)
-            .recv()
-            .map_err(|e| format!("service dropped request: {e}"))?
+    /// Blocking convenience call with the default client-side deadline
+    /// ([`DEFAULT_INFER_TIMEOUT`]): a wedged worker surfaces as
+    /// [`ServiceError::Timeout`] instead of hanging the caller forever.
+    pub fn infer(&self, input: Vec<f32>) -> Result<InferenceResult, ServiceError> {
+        self.infer_timeout(input, DEFAULT_INFER_TIMEOUT)
+    }
+
+    /// Blocking call with an explicit client-side deadline.  On
+    /// [`ServiceError::Timeout`] the request is *not* cancelled — the
+    /// worker may still execute it, and its response is discarded when
+    /// this receiver drops — but the caller gets its thread back and
+    /// the timeout is booked in
+    /// [`ServiceStats::reliability`]`.timed_out_requests`.
+    pub fn infer_timeout(
+        &self,
+        input: Vec<f32>,
+        timeout: Duration,
+    ) -> Result<InferenceResult, ServiceError> {
+        match self.submit(input).recv_timeout(timeout) {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => Err(ServiceError::Failed(e)),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                self.timed_out.fetch_add(1, Ordering::Relaxed);
+                Err(ServiceError::Timeout)
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServiceError::Disconnected),
+        }
     }
 
     pub fn stats(&self) -> Option<ServiceStats> {
         let (stx, srx) = mpsc::channel();
         self.tx.send(Msg::Stats(stx)).ok()?;
-        srx.recv().ok()
+        let mut s = srx.recv().ok()?;
+        s.reliability.timed_out_requests = self.timed_out.load(Ordering::Relaxed);
+        Some(s)
+    }
+
+    /// Chaos hook (test-only): the next batch execution panics inside
+    /// the worker, exercising catch-unwind + bounded session rebuild.
+    #[doc(hidden)]
+    pub fn debug_panic_next_batch(&self) {
+        let _ = self.tx.send(Msg::DebugPanicNextBatch);
+    }
+
+    /// Chaos hook (test-only): the next batch stalls this long before
+    /// executing, exercising the client-side timeout.
+    #[doc(hidden)]
+    pub fn debug_hang_next_batch(&self, delay: Duration) {
+        let _ = self.tx.send(Msg::DebugHangNextBatch(delay));
     }
 }
 
@@ -216,6 +315,7 @@ fn worker_loop(
                     let _ = stx.send(ServiceStats::default());
                 }
                 Msg::Shutdown => break,
+                Msg::DebugPanicNextBatch | Msg::DebugHangNextBatch(_) => {}
             }
         }
     };
@@ -230,6 +330,12 @@ fn worker_loop(
         Err(e) => return drain_with_error(rx, format!("session prepare failed: {e:#}")),
     };
     drop(backend); // the session owns everything execution needs
+    // scrub the freshly resident weights before serving: any bit-cell
+    // fault the write path manifested is detected and repaired (or
+    // quarantined) now, not discovered as wrong logits later.  A clean
+    // fabric makes this a no-op, and sessions without a scrubbable
+    // fabric return None.
+    let _ = session.scrub();
 
     // modelled hardware latency (once; amortized per batch below)
     let sim_ms = simulate_network(
@@ -242,6 +348,11 @@ fn worker_loop(
     let mut batcher: Batcher<Request> = Batcher::new(policy);
     let mut stats = ServiceStats::default();
     let mut open = true;
+    // fail-soft state: sessions rebuilt after a caught panic, plus the
+    // one-shot chaos hooks the debug messages arm
+    let mut rebuilds: u64 = 0;
+    let mut chaos_panic = false;
+    let mut chaos_hang: Option<Duration> = None;
     // persistent per-batch buffers: the cut sink, the packed input and
     // the logits live for the worker's lifetime, so the steady-state
     // path below allocates nothing per batch
@@ -269,9 +380,13 @@ fn worker_loop(
                 Ok(Msg::Infer(r)) => batcher.push(r),
                 Ok(Msg::Stats(stx)) => {
                     stats.capacity = session.capacity_pressure().unwrap_or_default();
+                    stats.reliability = session.reliability().unwrap_or_default();
+                    stats.reliability.worker_rebuilds = rebuilds;
                     let _ = stx.send(stats.clone());
                 }
                 Ok(Msg::Shutdown) => open = false,
+                Ok(Msg::DebugPanicNextBatch) => chaos_panic = true,
+                Ok(Msg::DebugHangNextBatch(d)) => chaos_hang = Some(d),
                 // deadline hit: the loop condition cuts the batch now
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
@@ -282,9 +397,13 @@ fn worker_loop(
                     Msg::Infer(r) => batcher.push(r),
                     Msg::Stats(stx) => {
                         stats.capacity = session.capacity_pressure().unwrap_or_default();
+                        stats.reliability = session.reliability().unwrap_or_default();
+                        stats.reliability.worker_rebuilds = rebuilds;
                         let _ = stx.send(stats.clone());
                     }
                     Msg::Shutdown => open = false,
+                    Msg::DebugPanicNextBatch => chaos_panic = true,
+                    Msg::DebugHangNextBatch(d) => chaos_hang = Some(d),
                 }
             }
         }
@@ -307,7 +426,63 @@ fn worker_loop(
         debug_assert_eq!(input_buf.len(), bsize * IMG_ELEMS);
         logits_buf.clear();
         logits_buf.resize(bsize * NUM_CLASSES, 0.0);
-        match session.infer_batch_into(&input_buf, bsize, &mut logits_buf) {
+        // execute behind catch_unwind: a panicking session (or the
+        // chaos hooks standing in for one) must never abort the worker
+        // — the batch is requeued once onto a rebuilt session instead
+        let panic_now = std::mem::take(&mut chaos_panic);
+        let hang = chaos_hang.take();
+        let exec = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(d) = hang {
+                thread::sleep(d);
+            }
+            if panic_now {
+                panic!("chaos hook: debug_panic_next_batch");
+            }
+            session.infer_batch_into(&input_buf, bsize, &mut logits_buf)
+        }));
+        let exec = match exec {
+            Ok(r) => r,
+            Err(_) => {
+                eprintln!(
+                    "[ddc-reliability] batch execution panicked; rebuilding the session \
+                     ({} request(s) requeued)",
+                    bsize
+                );
+                match rebuild_session(&spec, &artifact_dir) {
+                    Some(s) => {
+                        session = s;
+                        // same post-prepare scrub as the first session
+                        let _ = session.scrub();
+                        rebuilds += 1;
+                        // bounded requeue: each request rides a rebuilt
+                        // batch at most once, keeping its original
+                        // arrival time so it flushes immediately
+                        for mut req in pending.drain(..) {
+                            if req.retries == 0 {
+                                req.retries = 1;
+                                let arrived = req.submitted;
+                                batcher.push_arrived(req, arrived);
+                            } else {
+                                let _ = req.resp.send(Err(
+                                    "batch execution panicked twice; giving up".into(),
+                                ));
+                            }
+                        }
+                    }
+                    None => {
+                        let msg = format!(
+                            "batch execution panicked and session rebuild failed \
+                             after {REBUILD_ATTEMPTS} attempts"
+                        );
+                        for req in pending.drain(..) {
+                            let _ = req.resp.send(Err(msg.clone()));
+                        }
+                    }
+                }
+                continue;
+            }
+        };
+        match exec {
             Ok(()) => {
                 for (i, req) in pending.drain(..).enumerate() {
                     let mut logits = [0f32; NUM_CLASSES];
@@ -335,6 +510,24 @@ fn worker_loop(
             }
         }
     }
+}
+
+/// Rebuild the worker's session after a caught panic: fresh backend,
+/// fresh prepare, bounded attempts with linear backoff.  `None` when
+/// every attempt fails (the pending batch is then failed, not retried
+/// forever).
+fn rebuild_session(spec: &BackendSpec, artifact_dir: &str) -> Option<Box<dyn Session>> {
+    for attempt in 1..=REBUILD_ATTEMPTS {
+        thread::sleep(Duration::from_millis(10 * attempt as u64));
+        match spec.create(artifact_dir).and_then(|b| b.prepare()) {
+            Ok(s) => return Some(s),
+            Err(e) => eprintln!(
+                "[ddc-reliability] session rebuild attempt \
+                 {attempt}/{REBUILD_ATTEMPTS} failed: {e:#}"
+            ),
+        }
+    }
+    None
 }
 
 #[cfg(test)]
@@ -379,7 +572,7 @@ mod tests {
                 kind: BackendKind::Reference,
                 fabric: FabricChoice::BitSliced,
                 threads: 2,
-                stream_kb: 0,
+                ..Default::default()
             },
             "/nonexistent".into(),
             BatchPolicy::default(),
@@ -402,6 +595,7 @@ mod tests {
                 fabric: FabricChoice::DenseReference,
                 threads: 1,
                 stream_kb: 2,
+                ..Default::default()
             },
             "/nonexistent".into(),
             BatchPolicy::default(),
@@ -455,6 +649,70 @@ mod tests {
         drop(svc); // shutdown while the straggler is still queued
         let r = rx.recv().expect("response after shutdown").expect("served");
         assert_eq!(r.logits.len(), NUM_CLASSES);
+    }
+
+    #[test]
+    fn hung_worker_trips_the_client_timeout() {
+        let svc = InferenceService::start_with(
+            BackendKind::Reference,
+            "/nonexistent".into(),
+            BatchPolicy::default(),
+        );
+        // warm up so the session is prepared before the chaos hook arms
+        svc.infer(vec![0.1; IMG_ELEMS]).expect("warm-up");
+        svc.debug_hang_next_batch(Duration::from_millis(400));
+        let r = svc.infer_timeout(vec![0.2; IMG_ELEMS], Duration::from_millis(30));
+        assert_eq!(r, Err(ServiceError::Timeout));
+        let stats = svc.stats().expect("stats");
+        assert_eq!(stats.reliability.timed_out_requests, 1);
+        // the worker was stalled, not wedged: it serves again afterwards
+        assert!(svc.infer(vec![0.3; IMG_ELEMS]).is_ok());
+    }
+
+    #[test]
+    fn worker_panic_rebuilds_the_session_and_retries_the_batch() {
+        let svc = InferenceService::start_with(
+            BackendKind::Reference,
+            "/nonexistent".into(),
+            BatchPolicy::default(),
+        );
+        let baseline = svc.infer(vec![0.2; IMG_ELEMS]).expect("baseline");
+        svc.debug_panic_next_batch();
+        // the batch bounces off the panicking execution, the worker
+        // rebuilds its session, and the same request is served by the
+        // retry — degraded (slower) but correct, never a hung recv
+        let retried = svc.infer(vec![0.2; IMG_ELEMS]).expect("served after panic");
+        assert_eq!(retried.logits, baseline.logits, "rebuilt session must agree");
+        let stats = svc.stats().expect("stats");
+        assert_eq!(stats.reliability.worker_rebuilds, 1);
+        assert!(svc.infer(vec![0.4; IMG_ELEMS]).is_ok(), "service stays up");
+    }
+
+    #[test]
+    fn faulted_service_scrubs_at_prepare_and_reports_reliability() {
+        // nonzero BER on the bit-sliced fabric: the worker's
+        // post-prepare scrub detects and repairs the injected damage,
+        // and the counters surface through stats()
+        let svc = InferenceService::start_spec(
+            BackendSpec {
+                kind: BackendKind::Reference,
+                fabric: FabricChoice::BitSliced,
+                fault_ber_ppm: 2000,
+                fault_seed: 11,
+                ..Default::default()
+            },
+            "/nonexistent".into(),
+            BatchPolicy::default(),
+        );
+        svc.infer(vec![0.3; IMG_ELEMS]).expect("faulted fabric serves");
+        let r = svc.stats().expect("stats").reliability;
+        assert!(r.faults_injected > 0, "no faults manifested at this BER");
+        assert!(r.faults_detected > 0, "scrub missed the injected faults");
+        assert!(r.quarantined_rows > 0, "no rows quarantined");
+        // an unfaulted service stays quiet
+        let clean = InferenceService::start("/nonexistent".into(), BatchPolicy::default());
+        clean.infer(vec![0.3; IMG_ELEMS]).expect("clean");
+        assert!(clean.stats().expect("stats").reliability.is_quiet());
     }
 
     #[test]

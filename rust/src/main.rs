@@ -106,11 +106,43 @@ fn run(args: &[String]) -> i32 {
             }
         },
     };
+    // fault injection: the CLI flag wins, then the env knob CI uses
+    // (`DDC_FAULT_PPM`), then the pristine default
+    let fault_ber_ppm = match flags
+        .get("fault-ppm")
+        .cloned()
+        .or_else(|| std::env::var("DDC_FAULT_PPM").ok())
+    {
+        None => 0,
+        Some(v) => match v.parse::<u32>() {
+            Ok(n) if n <= 1_000_000 => n,
+            _ => {
+                eprintln!("--fault-ppm needs an integer in 0..=1000000 (ppm), got {v:?}");
+                return 2;
+            }
+        },
+    };
+    let fault_seed = match flags
+        .get("fault-seed")
+        .cloned()
+        .or_else(|| std::env::var("DDC_FAULT_SEED").ok())
+    {
+        None => 0xDDC7,
+        Some(v) => match v.parse::<u64>() {
+            Ok(n) => n,
+            _ => {
+                eprintln!("--fault-seed needs an integer, got {v:?}");
+                return 2;
+            }
+        },
+    };
     let spec = BackendSpec {
         kind: backend_kind,
         fabric,
         threads,
         stream_kb,
+        fault_ber_ppm,
+        fault_seed,
     };
     match pos.first().map(String::as_str) {
         Some("info") => cmd_info(),
@@ -129,6 +161,8 @@ fn run(args: &[String]) -> i32 {
                  \n         --fabric <dense|bitsliced>  (reference conv path; default: dense)\
                  \n         --threads <N>  (exec pool width; default: DDC_THREADS or 1)\
                  \n         --stream-kb <N>  (weight-streaming budget in KiB; default: 0 = resident)\
+                 \n         --fault-ppm <N>  (injected bit-error rate, cells per million; default: 0 = pristine)\
+                 \n         --fault-seed <N>  (fault pattern seed; default: 0xDDC7)\
                  \n  models: {}",
                 zoo::ALL_MODELS.join(", ")
             );
@@ -339,7 +373,68 @@ fn cmd_selfcheck(artifact_dir: &str, spec: BackendSpec) -> i32 {
         });
     }
 
-    // 5. golden replay when the python AOT pass has produced artifacts
+    // 5. fault injection + integrity scrub: a zero-fault bit-sliced
+    //    session books no reliability events, and a seeded-fault
+    //    session serves without panicking, detects the damage via the
+    //    Q/Q̄ checksum scrub, and quarantines the corrupt rows
+    //    (reference backend only; PJRT has no fault model)
+    if spec.kind != BackendKind::Pjrt && backend.name() == "reference" {
+        check(&mut failures, "fault injection + integrity scrub", {
+            (|| -> anyhow::Result<()> {
+                let mut rng = Rng::new(305);
+                let img: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+                let mut out = vec![0f32; NUM_CLASSES];
+                let clean = BackendSpec {
+                    fabric: FabricChoice::BitSliced,
+                    fault_ber_ppm: 0,
+                    ..spec
+                }
+                .create(artifact_dir)?;
+                let mut s = clean.prepare()?;
+                s.infer_batch_into(&img, 1, &mut out)?;
+                let r = s
+                    .reliability()
+                    .ok_or_else(|| anyhow::anyhow!("reference session reported no reliability"))?;
+                anyhow::ensure!(
+                    r.is_quiet(),
+                    "zero-fault session booked reliability events: {r:?}"
+                );
+                // seeded faults (the CLI/env BER, or a smoke default)
+                let ppm = if spec.fault_ber_ppm > 0 { spec.fault_ber_ppm } else { 1500 };
+                let faulted = BackendSpec {
+                    fabric: FabricChoice::BitSliced,
+                    fault_ber_ppm: ppm,
+                    ..spec
+                }
+                .create(artifact_dir)?;
+                let mut s = faulted.prepare()?;
+                s.infer_batch_into(&img, 1, &mut out)?; // must not panic
+                let before = s.reliability().unwrap_or_default();
+                anyhow::ensure!(before.faults_injected > 0, "BER {ppm} ppm manifested no faults");
+                let after = s
+                    .scrub()
+                    .ok_or_else(|| anyhow::anyhow!("faulted session cannot scrub"))?;
+                anyhow::ensure!(
+                    after.faults_detected > 0,
+                    "scrub detected none of {} injected fault bits",
+                    before.faults_injected
+                );
+                anyhow::ensure!(after.quarantined_rows > 0, "no corrupt rows quarantined");
+                s.infer_batch_into(&img, 1, &mut out)?; // repaired fabric still serves
+                println!(
+                    "  faults ({ppm} ppm): injected={} detected={} repaired={} quarantined={} zeroed={}",
+                    after.faults_injected,
+                    after.faults_detected,
+                    after.faults_repaired,
+                    after.quarantined_rows,
+                    after.zeroed_rows,
+                );
+                Ok(())
+            })()
+        });
+    }
+
+    // 6. golden replay when the python AOT pass has produced artifacts
     //    (the integer kernels carry their shapes, so replay works on any
     //    backend; the model golden is PJRT-only).  Only a *missing*
     //    goldens.json skips; a present-but-unreadable one is a FAIL.
@@ -440,7 +535,9 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendS
         .collect();
     let mut ok = 0;
     for rx in rxs {
-        match rx.recv() {
+        // a real client-side deadline: a wedged worker surfaces as an
+        // error line, never as a hung CLI
+        match rx.recv_timeout(ddc_pim::coordinator::DEFAULT_INFER_TIMEOUT) {
             Ok(Ok(r)) => {
                 ok += 1;
                 if ok <= 3 {
@@ -459,7 +556,7 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendS
                 return 1;
             }
             Err(e) => {
-                eprintln!("service dropped: {e}");
+                eprintln!("service dropped or timed out: {e}");
                 return 1;
             }
         }
@@ -485,6 +582,21 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendS
             p.peak_occupancy(),
             p.overlap_ratio(),
             p.stall.as_secs_f64() * 1e3,
+        );
+    }
+    let r = stats.reliability;
+    if !r.is_quiet() {
+        println!(
+            "reliability: faults injected {} | detected {} | repaired {} | quarantined rows {} | \
+             zeroed rows {} | stager fallbacks {} | worker rebuilds {} | timeouts {}",
+            r.faults_injected,
+            r.faults_detected,
+            r.faults_repaired,
+            r.quarantined_rows,
+            r.zeroed_rows,
+            r.stager_fallbacks,
+            r.worker_rebuilds,
+            r.timed_out_requests,
         );
     }
     0

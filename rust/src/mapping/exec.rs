@@ -44,6 +44,7 @@
 //! thin wrappers — plan, execute once, return — so callers migrate
 //! without semantic drift.
 
+use crate::arch::fault::{FaultConfig, FaultPlan, FaultTally, ScrubReport};
 use crate::arch::lpu::Mode;
 use crate::arch::merge::aru_recover;
 use crate::arch::pim_core::MacroGeometry;
@@ -276,6 +277,25 @@ impl PlannedConv {
         k: usize,
         stride: usize,
     ) -> PlannedConv {
+        Self::std_fcc_faulted(geom, h, w, c, fcc, k, stride, None)
+    }
+
+    /// [`PlannedConv::std_fcc_with`] with optional bit-cell fault
+    /// injection: each pass macro gets a [`FaultPlan`] seeded from
+    /// `faults`, salted by the pass index so sibling macros fault
+    /// independently but deterministically.  `None` takes the exact
+    /// unfaulted build path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn std_fcc_faulted(
+        geom: MacroGeometry,
+        h: usize,
+        w: usize,
+        c: usize,
+        fcc: &FccWeights,
+        k: usize,
+        stride: usize,
+        faults: Option<&FaultConfig>,
+    ) -> PlannedConv {
         let l = k * k * c;
         assert_eq!(fcc.comp.l, l, "filter length mismatch");
         let n = fcc.comp.n;
@@ -290,6 +310,10 @@ impl PlannedConv {
             let g1 = (g0 + groups_per_pass).min(groups);
             // load pass: write even comp filters (normal SRAM mode)
             let mut mac = PimMacro::with_geometry(geom);
+            if let Some(cfg) = faults {
+                mac.core
+                    .install_fault_plan(&FaultPlan::seeded(geom, cfg, passes.len() as u64));
+            }
             for g in g0..g1 {
                 for ti in 0..l_tiles {
                     let row = (g - g0) * l_tiles + ti;
@@ -359,6 +383,23 @@ impl PlannedConv {
         k: usize,
         stride: usize,
     ) -> PlannedConv {
+        Self::std_regular_faulted(geom, h, w, c, filters, n, k, stride, None)
+    }
+
+    /// [`PlannedConv::std_regular_with`] with optional fault injection
+    /// (see [`PlannedConv::std_fcc_faulted`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn std_regular_faulted(
+        geom: MacroGeometry,
+        h: usize,
+        w: usize,
+        c: usize,
+        filters: &[i32], // [N, L]
+        n: usize,
+        k: usize,
+        stride: usize,
+        faults: Option<&FaultConfig>,
+    ) -> PlannedConv {
         let l = k * k * c;
         assert_eq!(filters.len(), n * l, "filter bank shape mismatch");
         let (cmp, slots, rows) = (geom.compartments, geom.slots(), geom.rows);
@@ -370,6 +411,10 @@ impl PlannedConv {
         while g0 < groups {
             let g1 = (g0 + groups_per_pass).min(groups);
             let mut mac = PimMacro::with_geometry(geom);
+            if let Some(cfg) = faults {
+                mac.core
+                    .install_fault_plan(&FaultPlan::seeded(geom, cfg, passes.len() as u64));
+            }
             for g in g0..g1 {
                 for ti in 0..l_tiles {
                     let row = (g - g0) * l_tiles + ti;
@@ -431,6 +476,26 @@ impl PlannedConv {
     /// session tests).
     pub fn weight_writes(&self) -> u64 {
         self.passes.iter().map(|p| p.mac.weight_writes()).sum()
+    }
+
+    /// Integrity-scrub every pass macro (detect / quarantine / re-home
+    /// / degrade — see [`crate::arch::fault`]), returning the merged
+    /// report.  Empty report when the plan was built without faults.
+    pub fn scrub(&mut self) -> ScrubReport {
+        let mut report = ScrubReport::default();
+        for p in &mut self.passes {
+            report.merge(&p.mac.core.scrub());
+        }
+        report
+    }
+
+    /// Merged lifetime fault totals of every pass macro.
+    pub fn fault_tally(&self) -> FaultTally {
+        let mut tally = FaultTally::default();
+        for p in &self.passes {
+            tally.merge(&p.mac.core.fault_tally());
+        }
+        tally
     }
 
     /// Bytes of stored INT8 weights this plan keeps resident: the FCC

@@ -147,6 +147,74 @@ impl CapacityPressure {
     }
 }
 
+/// Reliability counters for a fault-injected / fail-soft deployment:
+/// what the fault model corrupted, what the integrity scrub caught and
+/// fixed, and how often the serving layer had to degrade instead of
+/// dying.
+///
+/// Produced by `Session::reliability` (fabric-side counters) and the
+/// coordinator (serving-side counters), and mergeable across
+/// sessions/workers like [`CapacityPressure`].  All-zero (the
+/// [`Default`]) means "quiet": no fault plan installed, no thread ever
+/// died, no request ever timed out.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReliabilityStats {
+    /// Bit-cell faults that actually corrupted a stored weight bit at
+    /// write time (benign faults — stuck-ats agreeing with the
+    /// intended bit — are not counted).
+    pub faults_injected: u64,
+    /// Corrupted plane words the integrity scrub detected (Q-plane
+    /// checksum mismatches against the write-intent ledger).
+    pub faults_detected: u64,
+    /// Quarantined rows successfully re-homed onto spare rows and
+    /// verified clean.
+    pub faults_repaired: u64,
+    /// Rows quarantined by the scrub in total (repaired + zeroed).
+    pub quarantined_rows: u64,
+    /// Quarantined rows zeroed because no clean spare row was left —
+    /// the documented graceful degradation; each zeroed stored weight
+    /// takes its complementary twin filter with it.
+    pub zeroed_rows: u64,
+    /// Times a streaming session lost its stager thread and completed
+    /// a pass synchronously instead of panicking.
+    pub stager_fallbacks: u64,
+    /// Times a service worker rebuilt its session after a panic in the
+    /// batch execution path.
+    pub worker_rebuilds: u64,
+    /// Client `infer` calls that hit their timeout instead of an
+    /// answer.
+    pub timed_out_requests: u64,
+}
+
+impl ReliabilityStats {
+    /// Whether anything at all went wrong (or was injected).
+    pub fn is_quiet(&self) -> bool {
+        *self == ReliabilityStats::default()
+    }
+
+    /// Fraction of detected faulty rows that were fully repaired
+    /// (1.0 when nothing was ever quarantined).
+    pub fn repair_ratio(&self) -> f64 {
+        if self.quarantined_rows == 0 {
+            return 1.0;
+        }
+        self.faults_repaired as f64 / self.quarantined_rows as f64
+    }
+
+    /// Merge another component's counters into this one (plain sums:
+    /// every field is a monotone event count).
+    pub fn merge(&mut self, other: &ReliabilityStats) {
+        self.faults_injected += other.faults_injected;
+        self.faults_detected += other.faults_detected;
+        self.faults_repaired += other.faults_repaired;
+        self.quarantined_rows += other.quarantined_rows;
+        self.zeroed_rows += other.zeroed_rows;
+        self.stager_fallbacks += other.stager_fallbacks;
+        self.worker_rebuilds += other.worker_rebuilds;
+        self.timed_out_requests += other.timed_out_requests;
+    }
+}
+
 /// Throughput accumulator (ops over wall time).
 #[derive(Debug, Clone, Default)]
 pub struct Throughput {

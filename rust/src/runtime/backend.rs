@@ -57,6 +57,25 @@ pub trait Session {
     fn capacity_pressure(&self) -> Option<crate::metrics::CapacityPressure> {
         None
     }
+
+    /// Reliability counters accumulated since the session was prepared
+    /// (faults injected/detected/repaired, quarantined rows, stager
+    /// fallbacks) — `None` (the default) for sessions with no fault or
+    /// degradation model.  The reference session always reports `Some`,
+    /// all-zero when nothing has gone wrong.
+    fn reliability(&self) -> Option<crate::metrics::ReliabilityStats> {
+        None
+    }
+
+    /// Run an integrity scrub over this session's resident weight
+    /// state: detect corruption (via the stored-Q checksums that cover
+    /// both complementary polarities), quarantine and re-home damaged
+    /// rows onto spares, zeroize what cannot be repaired.  Returns the
+    /// post-scrub reliability counters, or `None` (the default) when
+    /// the session has no scrubbable fabric.
+    fn scrub(&mut self) -> Option<crate::metrics::ReliabilityStats> {
+        None
+    }
 }
 
 /// An inference executor.
@@ -198,6 +217,17 @@ pub struct BackendSpec {
     /// budget, and pressure counters surface through
     /// [`Session::capacity_pressure`].
     pub stream_kb: usize,
+    /// Seeded bit-cell fault injection for reference sessions on the
+    /// bit-sliced fabric, as a bit-error rate in **parts per million**
+    /// (`0` = the pristine zero-fault fabric, byte for byte).  Integer
+    /// because this struct derives `Eq`; the backend converts through
+    /// `crate::arch::fault::FaultConfig::from_ppm`.  Detection/repair
+    /// counters surface through [`Session::reliability`] and the scrub
+    /// runs on demand via [`Session::scrub`].
+    pub fault_ber_ppm: u32,
+    /// Seed for the injected fault pattern (only read when
+    /// `fault_ber_ppm > 0`); same seed + same BER = same faults.
+    pub fault_seed: u64,
 }
 
 impl BackendSpec {
@@ -222,6 +252,12 @@ impl BackendSpec {
                 if self.stream_kb > 0 {
                     be = be.with_streaming(super::reference::StreamConfig::budget(
                         self.stream_kb * 1024,
+                    ));
+                }
+                if self.fault_ber_ppm > 0 {
+                    be = be.with_faults(crate::arch::fault::FaultConfig::from_ppm(
+                        self.fault_seed,
+                        self.fault_ber_ppm,
                     ));
                 }
                 Ok(Box::new(be))
@@ -355,7 +391,7 @@ mod tests {
             kind: BackendKind::Reference,
             fabric: FabricChoice::BitSliced,
             threads: 2,
-            stream_kb: 0,
+            ..Default::default()
         };
         let mut b = spec.create("/nonexistent").expect("backend");
         let img = vec![0.25f32; IMG_ELEMS];
@@ -370,6 +406,7 @@ mod tests {
             fabric: FabricChoice::DenseReference,
             threads: 1,
             stream_kb: 2, // 2048 B < conv2's 2304 B footprint -> 2 passes
+            ..Default::default()
         };
         let b = spec.create("/nonexistent").expect("backend");
         let mut s = b.prepare().expect("session");

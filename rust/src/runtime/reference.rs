@@ -61,12 +61,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
+use crate::arch::fault::{FaultConfig, FaultTally};
 use crate::arch::mem::StagedBuffer;
 use crate::arch::pim_core::MacroGeometry;
 use crate::fcc::{fcc_transform, FccWeights, FilterBank};
 use crate::mapping::exec::{plan_reload_passes, stored_weight_bytes, ExecPool, PlannedConv};
 use crate::mapping::im2col::{im2col_into, out_dims};
-use crate::metrics::CapacityPressure;
+use crate::metrics::{CapacityPressure, ReliabilityStats};
 use crate::util::pool::{resolve_threads, SharedMut};
 use crate::util::rng::Rng;
 
@@ -343,6 +344,9 @@ pub struct ReferenceBackend {
     /// Weight-streaming config for planned sessions (`None` = every
     /// conv layer stays resident for the session's lifetime).
     streaming: Option<StreamConfig>,
+    /// Bit-cell fault injection for planned bit-sliced sessions
+    /// (`None` = the untouched zero-fault fabric, byte for byte).
+    fault: Option<FaultConfig>,
 }
 
 impl ReferenceBackend {
@@ -387,6 +391,7 @@ impl ReferenceBackend {
             threads: 0,
             geometry: MacroGeometry::paper(),
             streaming: None,
+            fault: None,
         }
     }
 
@@ -443,6 +448,19 @@ impl ReferenceBackend {
         self
     }
 
+    /// Inject seeded bit-cell faults into every bit-sliced conv plan
+    /// (see [`crate::arch::fault`]): each layer's macros get their own
+    /// deterministically derived fault stream, so a streamed pass
+    /// rebuild is identically faulted.  The dense reference fabric has
+    /// no modeled bit cells, so this is a no-op there.  Detection and
+    /// repair run via [`ReferenceSession::scrub_fabric`] (the service
+    /// worker scrubs after prepare); counters surface through
+    /// [`Session::reliability`].
+    pub fn with_faults(mut self, cfg: FaultConfig) -> ReferenceBackend {
+        self.fault = Some(cfg);
+        self
+    }
+
     pub fn seed(&self) -> u64 {
         self.seed
     }
@@ -461,6 +479,7 @@ impl ReferenceBackend {
             self.threads,
             self.geometry,
             self.streaming,
+            self.fault,
         )
     }
 }
@@ -507,6 +526,19 @@ struct ConvSpec {
     fcc: FccWeights,
     shift: u32,
     fabric: FabricChoice,
+    /// Per-layer fault stream (already layer-salted), carried so a
+    /// streamed rebuild is identically faulted to the first build.
+    fault: Option<FaultConfig>,
+}
+
+/// Derive a layer-private fault stream from the session-level config so
+/// sibling conv layers (which often share one geometry) fault
+/// independently — but deterministically, keyed by layer position.
+fn layer_fault(fault: Option<FaultConfig>, layer: usize) -> Option<FaultConfig> {
+    fault.map(|cfg| FaultConfig {
+        seed: cfg.seed ^ (layer as u64 + 1).wrapping_mul(0xA24B_AED4_963E_E407),
+        ber: cfg.ber,
+    })
 }
 
 impl ConvSpec {
@@ -529,7 +561,7 @@ impl ConvSpec {
                 shift: self.shift,
             },
             FabricChoice::BitSliced => BuiltConv::Fabric {
-                plan: PlannedConv::std_fcc_with(
+                plan: PlannedConv::std_fcc_faulted(
                     self.geometry,
                     self.h,
                     self.w,
@@ -537,6 +569,7 @@ impl ConvSpec {
                     &self.fcc,
                     self.k,
                     self.stride,
+                    self.fault.as_ref(),
                 ),
                 shift: self.shift,
             },
@@ -576,26 +609,32 @@ struct Stager {
 }
 
 impl Stager {
-    fn spawn(specs: Arc<Vec<ConvSpec>>, passes: Vec<Range<usize>>) -> Stager {
+    /// Spawn the prefetcher.  `None` if the OS refuses the thread — the
+    /// session then stages synchronously (fail-soft, not fatal).
+    fn spawn(specs: Arc<Vec<ConvSpec>>, passes: Vec<Range<usize>>) -> Option<Stager> {
         let (req_tx, req_rx) = mpsc::channel::<usize>();
         let (resp_tx, resp_rx) = mpsc::channel::<StagedPass>();
-        let handle = thread::Builder::new()
-            .name("ddc-stager".into())
-            .spawn(move || {
-                for pass in req_rx {
-                    let t0 = Instant::now();
-                    let built: Vec<BuiltConv> =
-                        passes[pass].clone().map(|s| specs[s].build()).collect();
-                    if resp_tx.send((pass, built, t0.elapsed())).is_err() {
-                        break; // session dropped mid-build
-                    }
+        match thread::Builder::new().name("ddc-stager".into()).spawn(move || {
+            for pass in req_rx {
+                let t0 = Instant::now();
+                let built: Vec<BuiltConv> =
+                    passes[pass].clone().map(|s| specs[s].build()).collect();
+                if resp_tx.send((pass, built, t0.elapsed())).is_err() {
+                    break; // session dropped mid-build
                 }
-            })
-            .expect("spawn stager thread");
-        Stager {
-            req: Some(req_tx),
-            resp: resp_rx,
-            handle: Some(handle),
+            }
+        }) {
+            Ok(handle) => Some(Stager {
+                req: Some(req_tx),
+                resp: resp_rx,
+                handle: Some(handle),
+            }),
+            Err(e) => {
+                eprintln!(
+                    "[ddc-reliability] could not spawn stager thread ({e}); staging synchronously"
+                );
+                None
+            }
         }
     }
 
@@ -605,8 +644,23 @@ impl Stager {
         }
     }
 
+    /// `None` means the stager thread is gone (panicked or killed) —
+    /// callers must fall back to synchronous staging.
     fn recv(&self) -> Option<StagedPass> {
         self.resp.recv().ok()
+    }
+
+    /// Chaos hook: make this stager behave exactly like a dead thread
+    /// (join it, then disconnect the response channel so the next
+    /// `recv` reports death).  Test-only, reached via
+    /// [`ReferenceSession::debug_kill_stager`].
+    fn kill(&mut self) {
+        self.req.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        let (_dead_tx, dead_rx) = mpsc::channel();
+        self.resp = dead_rx; // sender dropped: every recv errors
     }
 }
 
@@ -641,6 +695,12 @@ struct StreamState {
     stager: Option<Stager>,
     sram: StagedBuffer,
     pressure: CapacityPressure,
+    /// Times the session completed a pass synchronously because the
+    /// stager thread was dead or could not be spawned.
+    fallbacks: u64,
+    /// Fault totals of evicted pass builds (their macros are dropped on
+    /// eviction; the injected/detected history must survive them).
+    dropped_tally: FaultTally,
 }
 
 impl StreamState {
@@ -658,8 +718,13 @@ impl StreamState {
         let specs = Arc::new(specs);
         // a single pass never needs prefetch: after the first batch the
         // weights simply stay resident
+        let mut fallbacks = 0;
         let stager = if cfg.prefetch && passes.len() > 1 {
-            Some(Stager::spawn(specs.clone(), passes.clone()))
+            let s = Stager::spawn(specs.clone(), passes.clone());
+            if s.is_none() {
+                fallbacks += 1; // requested prefetch, running without it
+            }
+            s
         } else {
             None
         };
@@ -679,6 +744,8 @@ impl StreamState {
                 capacity_bytes: cfg.capacity_bytes as u64,
                 ..Default::default()
             },
+            fallbacks,
+            dropped_tally: FaultTally::default(),
         }
     }
 
@@ -692,22 +759,45 @@ impl StreamState {
         if self.resident_pass == Some(pass) {
             return;
         }
-        let (built, busy, waited) = match (&self.stager, self.inflight) {
-            (Some(st), Some(want)) if want == pass => {
-                let t0 = Instant::now();
-                let (idx, built, busy) = st.recv().expect("stager thread died");
-                debug_assert_eq!(idx, pass);
-                self.inflight = None;
-                (built, busy, t0.elapsed())
-            }
-            _ => {
-                // drain a mismatched prefetch so request/response stay
-                // in lockstep (out-of-order acquire; not the hot path)
-                if self.inflight.take().is_some() {
-                    if let Some(st) = &self.stager {
-                        let _ = st.recv();
+        // try the prefetcher; a dead stager (panic, kill) is detected
+        // here by the disconnected response channel and the session
+        // falls back to synchronous staging — degraded, never fatal
+        let mut handoff: Option<(Vec<BuiltConv>, Duration, Duration)> = None;
+        let mut stager_dead = false;
+        if let Some(st) = &self.stager {
+            match self.inflight.take() {
+                Some(want) if want == pass => {
+                    let t0 = Instant::now();
+                    match st.recv() {
+                        Some((idx, built, busy)) => {
+                            debug_assert_eq!(idx, pass);
+                            handoff = Some((built, busy, t0.elapsed()));
+                        }
+                        None => stager_dead = true,
                     }
                 }
+                Some(_) => {
+                    // drain a mismatched prefetch so request/response
+                    // stay in lockstep (out-of-order acquire; not the
+                    // hot path)
+                    if st.recv().is_none() {
+                        stager_dead = true;
+                    }
+                }
+                None => {}
+            }
+        }
+        if stager_dead {
+            eprintln!(
+                "[ddc-reliability] stager thread died; staging pass {pass} synchronously \
+                 (prefetch disabled for the rest of this session)"
+            );
+            self.fallbacks += 1;
+            self.stager = None; // Drop joins whatever is left of it
+        }
+        let (built, busy, waited) = match handoff {
+            Some(h) => h,
+            None => {
                 let t0 = Instant::now();
                 let built: Vec<BuiltConv> = self.passes[pass]
                     .clone()
@@ -734,6 +824,13 @@ impl StreamState {
             self.pressure.reloads += 1;
         }
         self.seen[pass] = true;
+        // the evicted pass's macros are dropped with it: preserve their
+        // fault history first
+        for b in &self.resident {
+            if let BuiltConv::Fabric { plan, .. } = b {
+                self.dropped_tally.merge(&plan.fault_tally());
+            }
+        }
         self.resident = built;
         self.resident_pass = Some(pass);
         // queue the successor (wrapping: the last pass prefetches pass
@@ -788,12 +885,14 @@ impl ReferenceSession {
         threads: usize,
         geometry: MacroGeometry,
         streaming: Option<StreamConfig>,
+        fault: Option<FaultConfig>,
     ) -> Result<ReferenceSession> {
         let mut planned = Vec::with_capacity(layers.len());
         let mut specs: Vec<ConvSpec> = Vec::new();
         // walk the activation dims so fabric plans know their geometry
         let (mut h, mut w, mut c) = (32usize, 32usize, 3usize);
         let mut head_cout = None;
+        let mut conv_idx = 0usize;
         for layer in layers {
             match layer {
                 RefLayer::ConvFcc {
@@ -805,6 +904,8 @@ impl ReferenceSession {
                     shift,
                 } => {
                     ensure!(c == *cin, "layer stack dim mismatch: {} != {}", c, cin);
+                    let lf = layer_fault(fault, conv_idx);
+                    conv_idx += 1;
                     if streaming.is_some() {
                         // defer the build: the spec is the DRAM-side
                         // definition, staged per reload pass at execute
@@ -822,6 +923,7 @@ impl ReferenceSession {
                             fcc: fcc.clone(),
                             shift: *shift,
                             fabric,
+                            fault: lf,
                         });
                         planned.push(SessionLayer::ConvStreamed { slot });
                     } else {
@@ -836,8 +938,15 @@ impl ReferenceSession {
                                 shift: *shift,
                             },
                             FabricChoice::BitSliced => SessionLayer::ConvFabric {
-                                plan: PlannedConv::std_fcc_with(
-                                    geometry, h, w, *cin, fcc, *k, *stride,
+                                plan: PlannedConv::std_fcc_faulted(
+                                    geometry,
+                                    h,
+                                    w,
+                                    *cin,
+                                    fcc,
+                                    *k,
+                                    *stride,
+                                    lf.as_ref(),
                                 ),
                                 shift: *shift,
                             },
@@ -924,6 +1033,71 @@ impl ReferenceSession {
     /// planned (`None` when the session is not streaming).
     pub fn capacity_pressure_stats(&self) -> Option<CapacityPressure> {
         self.stream.as_ref().map(|s| s.pressure)
+    }
+
+    /// Merge the fault/scrub history of every fabric plan this session
+    /// has ever owned — resident layers, the streamed pass currently in
+    /// SRAM, and evicted passes (folded in at eviction) — plus the
+    /// stager fallback count, into one [`ReliabilityStats`] block.
+    /// All-zero on the dense fabric or with no fault plan installed.
+    pub fn reliability_stats(&self) -> ReliabilityStats {
+        let mut t = FaultTally::default();
+        for l in &self.layers {
+            if let SessionLayer::ConvFabric { plan, .. } = l {
+                t.merge(&plan.fault_tally());
+            }
+        }
+        let mut stats = ReliabilityStats::default();
+        if let Some(st) = &self.stream {
+            t.merge(&st.dropped_tally);
+            for b in &st.resident {
+                if let BuiltConv::Fabric { plan, .. } = b {
+                    t.merge(&plan.fault_tally());
+                }
+            }
+            stats.stager_fallbacks = st.fallbacks;
+        }
+        stats.faults_injected = t.injected_bits;
+        stats.faults_detected = t.detected_words;
+        stats.faults_repaired = t.repaired_rows;
+        stats.quarantined_rows = t.quarantined_rows;
+        stats.zeroed_rows = t.zeroed_rows;
+        stats
+    }
+
+    /// Run the integrity scrub over every fabric plan currently in SRAM
+    /// (resident layers plus the resident streamed pass), repairing
+    /// detected corruption onto spare rows — or zeroizing the damaged
+    /// column when spares are exhausted — then return the merged
+    /// [`ReliabilityStats`].  A clean fabric makes this a no-op.
+    pub fn scrub_fabric(&mut self) -> ReliabilityStats {
+        for l in &mut self.layers {
+            if let SessionLayer::ConvFabric { plan, .. } = l {
+                let _ = plan.scrub();
+            }
+        }
+        if let Some(st) = &mut self.stream {
+            for b in &mut st.resident {
+                if let BuiltConv::Fabric { plan, .. } = b {
+                    let _ = plan.scrub();
+                }
+            }
+        }
+        self.reliability_stats()
+    }
+
+    /// Chaos hook: kill the prefetch stager thread mid-session so tests
+    /// can prove the synchronous staging fallback stays byte-identical.
+    /// Returns `true` if there was a live stager to kill.
+    #[doc(hidden)]
+    pub fn debug_kill_stager(&mut self) -> bool {
+        match self.stream.as_mut().and_then(|st| st.stager.as_mut()) {
+            Some(stager) => {
+                stager.kill();
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -1038,6 +1212,14 @@ impl Session for ReferenceSession {
 
     fn capacity_pressure(&self) -> Option<CapacityPressure> {
         self.capacity_pressure_stats()
+    }
+
+    fn reliability(&self) -> Option<ReliabilityStats> {
+        Some(self.reliability_stats())
+    }
+
+    fn scrub(&mut self) -> Option<ReliabilityStats> {
+        Some(self.scrub_fabric())
     }
 
     fn infer_batch_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {

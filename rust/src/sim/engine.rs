@@ -123,6 +123,9 @@ impl Simulation {
             total_energy_mj: total_energy,
             freq_mhz: self.arch.freq_mhz,
             hidden_dram_cycles: dram.hidden_cycles,
+            // the cycle model is fault-free; serving/selfcheck attach
+            // the functional session's tally via attach_reliability
+            reliability: Default::default(),
         }
     }
 }

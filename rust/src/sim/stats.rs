@@ -4,6 +4,7 @@
 //! stalls) the reports and the streaming bench surface.
 
 use crate::mapping::PlanKind;
+use crate::metrics::ReliabilityStats;
 
 /// Per-layer simulation outcome.
 #[derive(Debug, Clone)]
@@ -44,6 +45,15 @@ pub struct RunStats {
     /// prefetch (the hidden half; the exposed half is the per-layer
     /// `exposed_dram_cycles` sum).
     pub hidden_dram_cycles: u64,
+    /// Reliability counters of the functional session the run rode on
+    /// (faults injected/detected/repaired, quarantined rows, fail-soft
+    /// events).  The cycle engine itself books nothing here — it models
+    /// a fault-free datapath — so this stays
+    /// [`ReliabilityStats::default`] until a caller attaches the
+    /// serving-side tally via [`RunStats::attach_reliability`], the
+    /// same way the capacity-pressure view pairs the modelled
+    /// reload/occupancy numbers with the session's measured counters.
+    pub reliability: ReliabilityStats,
 }
 
 impl RunStats {
@@ -126,6 +136,13 @@ impl RunStats {
             .map(|l| l.weight_occupancy)
             .fold(0.0, f64::max)
     }
+
+    /// Attach the functional session's reliability tally to this run
+    /// (builder-style, used by the selfcheck / serve report paths).
+    pub fn attach_reliability(mut self, r: ReliabilityStats) -> RunStats {
+        self.reliability = r;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -141,7 +158,21 @@ mod tests {
             total_energy_mj: 1e-3,
             freq_mhz: 333.0,
             hidden_dram_cycles: 0,
+            reliability: ReliabilityStats::default(),
         }
+    }
+
+    #[test]
+    fn attach_reliability_carries_the_tally() {
+        let r = ReliabilityStats {
+            faults_detected: 3,
+            ..Default::default()
+        };
+        let s = stats(1, 1).attach_reliability(r);
+        assert_eq!(s.reliability.faults_detected, 3);
+        assert!(!s.reliability.is_quiet());
+        // a fresh run is quiet until a session tally is attached
+        assert!(stats(1, 1).reliability.is_quiet());
     }
 
     #[test]

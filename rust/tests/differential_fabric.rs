@@ -12,6 +12,7 @@
 //! seed.  (Under `--features scalar-fabric` the fabric dispatches to the
 //! oracle itself and these tests pin the adapter instead.)
 
+use ddc_pim::arch::fault::FaultPlan;
 use ddc_pim::arch::lpu::Mode;
 use ddc_pim::arch::pim_core::{MacroGeometry, PimCore};
 use ddc_pim::arch::pim_macro::{MvmScratch, PimMacro};
@@ -76,6 +77,63 @@ fn bitsliced_mvm_row_matches_scalar_oracle() {
                         }
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn empty_fault_plan_is_byte_identical_across_geometries() {
+    // the fault-interposed write path with an *empty* plan must be a
+    // provable no-op: a macro with FaultPlan::empty() installed and a
+    // plain macro, loaded from the same weight stream, must agree on
+    // every readout across Regular/Double × Combined/Split — including
+    // multi-word (>64 compartment) geometries
+    forall_explain(
+        0xFA_0017,
+        24,
+        |r| {
+            let ncmp = [16usize, 32, 64, 65, 96, 128][r.below(6) as usize];
+            let rows = 1 + r.below(4) as usize;
+            (ncmp, rows, r.next_u64())
+        },
+        |&(ncmp, rows, seed)| {
+            let mut rng = Rng::new(seed);
+            let plain = random_macro(&mut rng, ncmp, rows);
+            let xs = rand_vec(&mut rng, ncmp);
+            let xn = sparse_vec(&mut rng, ncmp);
+            // identical weight stream into a fault-interposed core
+            let mut rng2 = Rng::new(seed);
+            let mut faulted = PimMacro::new(PimCore::new(ncmp, rows, 16), 8, 8);
+            faulted.core.install_fault_plan(&FaultPlan::empty());
+            for cmp in 0..ncmp {
+                for row in 0..rows {
+                    for slot in 0..2 {
+                        faulted.load_weight(cmp, row, slot, rng2.int8() as i32);
+                    }
+                }
+            }
+            let mut sa = MvmScratch::new();
+            let mut sb = MvmScratch::new();
+            for row in 0..rows {
+                for mode in [Mode::Regular, Mode::Double] {
+                    for grouping in [Grouping::Combined, Grouping::Split] {
+                        plain.mvm_row_into(row, &xs, &xn, mode, grouping, &mut sa);
+                        faulted.mvm_row_into(row, &xs, &xn, mode, grouping, &mut sb);
+                        if sa.to_vecs() != sb.to_vecs() {
+                            return Err(format!(
+                                "empty fault plan changed row {row} {mode:?} {grouping:?} \
+                                 (ncmp={ncmp})"
+                            ));
+                        }
+                    }
+                }
+            }
+            // the scrub on an uncorrupted core must find nothing
+            let report = faulted.core.scrub();
+            if !report.is_clean() {
+                return Err(format!("clean-core scrub reported damage: {report:?}"));
             }
             Ok(())
         },

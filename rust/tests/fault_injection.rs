@@ -1,0 +1,255 @@
+//! Integration: the fault-injection + integrity-scrub subsystem (PR 7).
+//!
+//! Three layers of coverage:
+//!
+//! * **Core** — seeded stuck-at/transient sweeps on a [`PimCore`] with
+//!   spare rows: every row the injected faults actually corrupted must
+//!   be detected by the Q/Q̄-checksum scrub (the analytical bound: the
+//!   Q̄ polarity is derived from Q, so a checksum over the stored Q
+//!   planes covers every manifested fault), then either re-homed onto a
+//!   verified-clean spare — restoring the written intent exactly — or
+//!   zeroed whole (graceful degradation, never served corrupt).
+//! * **Determinism** — the same seed must produce the same faults, the
+//!   same quarantine decisions, the same spare assignments, and the
+//!   same post-scrub reads, twice.
+//! * **Session** — zero-fault sessions are byte-identical to the plain
+//!   fabric on both fabrics; faulted sessions serve deterministically
+//!   (streamed rebuilds are identically faulted); killing the prefetch
+//!   stager mid-run degrades to synchronous staging with byte-identical
+//!   logits and a booked fallback, never a panic or a hung recv.
+
+use ddc_pim::arch::fault::{FaultConfig, FaultPlan};
+use ddc_pim::arch::pim_core::{MacroGeometry, PimCore};
+use ddc_pim::runtime::reference::{ReferenceBackend, StreamConfig, DEFAULT_SEED};
+use ddc_pim::runtime::{FabricChoice, Session, IMG_ELEMS, NUM_CLASSES};
+use ddc_pim::util::prop::forall_explain;
+use ddc_pim::util::rng::Rng;
+
+const NCMP: usize = 8;
+const ROWS: usize = 8;
+const WRITTEN: usize = 4; // rows loaded with weights; the rest are spares
+const SLOTS: usize = 2;
+
+/// Build a core under a seeded fault plan, write a deterministic weight
+/// pattern into the first [`WRITTEN`] rows, and return it with the
+/// intended values (indexed `[cmp][row][slot]`, flattened).
+fn faulted_core(cfg: &FaultConfig, wseed: u64) -> (PimCore, Vec<i32>) {
+    let geom = MacroGeometry {
+        compartments: NCMP,
+        rows: ROWS,
+        dbmus: 16,
+    };
+    let mut core = PimCore::with_geometry(geom);
+    core.install_fault_plan(&FaultPlan::seeded(geom, cfg, 0));
+    let mut rng = Rng::new(wseed);
+    let mut intents = vec![0i32; NCMP * WRITTEN * SLOTS];
+    for cmp in 0..NCMP {
+        for row in 0..WRITTEN {
+            for slot in 0..SLOTS {
+                let w = rng.int8() as i32;
+                intents[(cmp * WRITTEN + row) * SLOTS + slot] = w;
+                core.write_weight(cmp, row, slot, w);
+            }
+        }
+    }
+    (core, intents)
+}
+
+/// Rows (logical) whose current reads diverge from the written intent.
+fn corrupt_rows(core: &PimCore, intents: &[i32]) -> Vec<usize> {
+    (0..WRITTEN)
+        .filter(|&row| {
+            (0..NCMP).any(|cmp| {
+                (0..SLOTS).any(|slot| {
+                    core.read_weight(cmp, row, slot)
+                        != intents[(cmp * WRITTEN + row) * SLOTS + slot]
+                })
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn seeded_sweeps_are_fully_detected_then_repaired_or_zeroed() {
+    forall_explain(
+        0xFA_D37C,
+        16,
+        |r| (r.next_u64(), r.next_u64()),
+        |&(fseed, wseed)| {
+            let cfg = FaultConfig::new(fseed, 0.02);
+            let (mut core, intents) = faulted_core(&cfg, wseed);
+            // analytical detection bound: every row the write path
+            // actually corrupted must be quarantined by the scrub —
+            // the checksum covers the full stored Q state, and Q̄ is
+            // derived, so no manifested fault can hide
+            let corrupt = corrupt_rows(&core, &intents);
+            let report = core.scrub();
+            if report.quarantined_rows != corrupt.len() as u64 {
+                return Err(format!(
+                    "scrub quarantined {} rows, but {} rows were corrupt: {corrupt:?}",
+                    report.quarantined_rows,
+                    corrupt.len()
+                ));
+            }
+            if report.repaired_rows + report.zeroed_rows != report.quarantined_rows {
+                return Err(format!("quarantine bookkeeping split drifted: {report:?}"));
+            }
+            // post-scrub serving contract: every written row either
+            // reads back its intent exactly (repaired, or never hit) or
+            // is fully zeroed (degraded) — corrupt data is never served
+            for row in 0..WRITTEN {
+                let reads: Vec<i32> = (0..NCMP)
+                    .flat_map(|cmp| (0..SLOTS).map(move |slot| (cmp, slot)))
+                    .map(|(cmp, slot)| core.read_weight(cmp, row, slot))
+                    .collect();
+                let wants: Vec<i32> = (0..NCMP)
+                    .flat_map(|cmp| (0..SLOTS).map(move |slot| (cmp, slot)))
+                    .map(|(cmp, slot)| intents[(cmp * WRITTEN + row) * SLOTS + slot])
+                    .collect();
+                let intact = reads == wants;
+                let zeroed = reads.iter().all(|&v| v == 0);
+                if !intact && !zeroed {
+                    return Err(format!(
+                        "row {row} serves corrupt data after scrub: {reads:?} != {wants:?}"
+                    ));
+                }
+            }
+            // a second scrub over the repaired state finds nothing new
+            let second = core.scrub();
+            if !second.is_clean() {
+                return Err(format!("second scrub not clean: {second:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quarantine_and_repair_are_deterministic() {
+    forall_explain(
+        0xDE_7E12,
+        10,
+        |r| (r.next_u64(), r.next_u64()),
+        |&(fseed, wseed)| {
+            let cfg = FaultConfig::new(fseed, 0.03);
+            let (mut a, _) = faulted_core(&cfg, wseed);
+            let (mut b, _) = faulted_core(&cfg, wseed);
+            let ra = a.scrub();
+            let rb = b.scrub();
+            if ra != rb {
+                return Err(format!("scrub reports diverged: {ra:?} != {rb:?}"));
+            }
+            if a.fault_tally() != b.fault_tally() {
+                return Err("fault tallies diverged".into());
+            }
+            for row in 0..WRITTEN {
+                if a.physical_row(row) != b.physical_row(row) {
+                    return Err(format!(
+                        "row {row} re-homed differently: {} vs {}",
+                        a.physical_row(row),
+                        b.physical_row(row)
+                    ));
+                }
+                for cmp in 0..NCMP {
+                    for slot in 0..SLOTS {
+                        if a.read_weight(cmp, row, slot) != b.read_weight(cmp, row, slot) {
+                            return Err(format!("post-scrub read diverged at ({cmp},{row},{slot})"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn batch_input(seed: u64, batch: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..batch * IMG_ELEMS).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn zero_fault_sessions_are_byte_identical_on_both_fabrics() {
+    // BER 0 must be indistinguishable from no fault model at all —
+    // the zero-fault byte-identity acceptance gate, at session level
+    let x = batch_input(0xFA_B17E, 2);
+    for fabric in [FabricChoice::DenseReference, FabricChoice::BitSliced] {
+        let plain = ReferenceBackend::seeded_with(DEFAULT_SEED, fabric);
+        let faulted = ReferenceBackend::seeded_with(DEFAULT_SEED, fabric)
+            .with_faults(FaultConfig::new(9, 0.0));
+        let mut want = vec![0f32; 2 * NUM_CLASSES];
+        let mut got = vec![0f32; 2 * NUM_CLASSES];
+        plain.plan().expect("plain").infer_batch_into(&x, 2, &mut want).expect("plain infer");
+        let mut fs = faulted.plan().expect("faulted plan");
+        fs.infer_batch_into(&x, 2, &mut got).expect("faulted infer");
+        assert_eq!(got, want, "zero-BER fault model changed logits on {fabric:?}");
+        let r = fs.reliability_stats();
+        assert!(r.is_quiet(), "zero-BER session booked events on {fabric:?}: {r:?}");
+    }
+}
+
+#[test]
+fn faulted_streamed_rebuild_is_identically_faulted() {
+    // streaming rebuilds pass macros from scratch every reload: the
+    // per-layer fault derivation must make every rebuild identical, so
+    // a faulted streamed session is deterministic across rounds — and
+    // agrees with the faulted *resident* session, which built each
+    // macro exactly once
+    let x = batch_input(0xFA_57E4, 1);
+    let cfg = FaultConfig::new(41, 0.001);
+    let mut resident = ReferenceBackend::seeded_deep(DEFAULT_SEED, FabricChoice::BitSliced, 2)
+        .with_faults(cfg)
+        .plan()
+        .expect("resident plan");
+    let mut want = vec![0f32; NUM_CLASSES];
+    resident.infer_batch_into(&x, 1, &mut want).expect("resident infer");
+    let mut streamed = ReferenceBackend::seeded_deep(DEFAULT_SEED, FabricChoice::BitSliced, 2)
+        .with_faults(cfg)
+        .with_streaming(StreamConfig::budget(9300))
+        .plan()
+        .expect("streamed plan");
+    assert_eq!(streamed.streaming_passes(), Some(2));
+    let mut got = vec![0f32; NUM_CLASSES];
+    for round in 0..3 {
+        streamed.infer_batch_into(&x, 1, &mut got).expect("streamed infer");
+        assert_eq!(got, want, "faulted streamed logits drifted from resident (round {round})");
+    }
+    let r = streamed.reliability_stats();
+    assert!(r.faults_injected > 0, "BER 0.001 on the deep stack injected nothing");
+}
+
+#[test]
+fn killed_stager_falls_back_to_synchronous_staging_byte_identically() {
+    // chaos: the stager thread dies mid-run.  The session must log a
+    // fallback, stage synchronously from then on, and keep producing
+    // logits byte-identical to the resident session — no expect-panic,
+    // no hung recv
+    let x = batch_input(0xFA_C4A0, 2);
+    let mut resident = ReferenceBackend::seeded_deep(DEFAULT_SEED, FabricChoice::BitSliced, 2)
+        .plan()
+        .expect("resident plan");
+    let mut want = vec![0f32; 2 * NUM_CLASSES];
+    resident.infer_batch_into(&x, 2, &mut want).expect("resident infer");
+
+    let mut s = ReferenceBackend::seeded_deep(DEFAULT_SEED, FabricChoice::BitSliced, 2)
+        .with_streaming(StreamConfig::budget(9300))
+        .plan()
+        .expect("streamed plan");
+    let mut got = vec![0f32; 2 * NUM_CLASSES];
+    s.infer_batch_into(&x, 2, &mut got).expect("infer before kill");
+    assert_eq!(got, want, "streamed logits drifted before the kill");
+
+    assert!(s.debug_kill_stager(), "prefetching session should have a live stager");
+    // the next pass acquisition discovers the death and falls back
+    for round in 0..2 {
+        s.infer_batch_into(&x, 2, &mut got).expect("infer after kill");
+        assert_eq!(got, want, "logits drifted after stager death (round {round})");
+    }
+    let r = s.reliability_stats();
+    assert!(
+        r.stager_fallbacks >= 1,
+        "stager death must book a fallback, got {r:?}"
+    );
+    // killing an already-dead stager is a no-op
+    assert!(!s.debug_kill_stager());
+}

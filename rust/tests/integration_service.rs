@@ -108,6 +108,40 @@ fn bad_request_does_not_poison_its_batch() {
 }
 
 #[test]
+fn service_recovers_from_worker_panic_mid_traffic() {
+    // a panicking batch execution must be caught, the session rebuilt,
+    // and the same requests served by the retry — degraded (one rebuild
+    // booked) but correct, with no process abort and no hung client
+    let svc = service();
+    let mut rng = Rng::new(8);
+    let img = image(&mut rng);
+    let want = svc.infer(img.clone()).expect("baseline").logits;
+    svc.debug_panic_next_batch();
+    let got = svc.infer(img).expect("served across the panic");
+    assert_eq!(got.logits, want, "rebuilt session disagreed with the original");
+    assert_eq!(svc.stats().expect("stats").reliability.worker_rebuilds, 1);
+    for _ in 0..4 {
+        assert!(svc.infer(image(&mut rng)).is_ok(), "service degraded after rebuild");
+    }
+}
+
+#[test]
+fn client_timeout_is_typed_and_counted() {
+    use ddc_pim::coordinator::ServiceError;
+    let svc = service();
+    let mut rng = Rng::new(9);
+    svc.infer(image(&mut rng)).expect("warm-up");
+    svc.debug_hang_next_batch(Duration::from_millis(300));
+    let err = svc
+        .infer_timeout(image(&mut rng), Duration::from_millis(20))
+        .expect_err("a stalled worker must surface as a timeout");
+    assert_eq!(err, ServiceError::Timeout);
+    assert_eq!(svc.stats().expect("stats").reliability.timed_out_requests, 1);
+    // the worker was stalled, not dead: traffic resumes
+    assert!(svc.infer(image(&mut rng)).is_ok());
+}
+
+#[test]
 fn distinct_inputs_get_distinct_logits() {
     let svc = service();
     let mut rng = Rng::new(5);
