@@ -8,14 +8,17 @@
 //! for the bench trajectory (see `make bench`).
 
 use ddc_pim::arch::fault::{FaultConfig, FaultPlan};
+use ddc_pim::arch::grid::{GridShape, MacroGrid};
 use ddc_pim::arch::lpu::Mode;
 use ddc_pim::arch::pim_core::{MacroGeometry, PimCore};
 use ddc_pim::arch::pim_macro::{MvmScratch, PimMacro};
 use ddc_pim::arch::reconfig::Grouping;
+use ddc_pim::coordinator::{BatchPolicy, InferenceService, ServiceConfig, ServiceStats};
 use ddc_pim::fcc::{fcc_transform, FilterBank};
 use ddc_pim::mapping::exec::{exec_std_fcc, ExecCtx, ExecPool, PlannedConv};
+use ddc_pim::mapping::ShardedConv;
 use ddc_pim::runtime::reference::{mvm_i32, ReferenceBackend, StreamConfig, DEFAULT_SEED};
-use ddc_pim::runtime::{FabricChoice, Session, IMG_ELEMS, NUM_CLASSES};
+use ddc_pim::runtime::{BackendKind, BackendSpec, FabricChoice, Session, IMG_ELEMS, NUM_CLASSES};
 use ddc_pim::util::benchkit::BenchSession;
 use ddc_pim::util::rng::Rng;
 
@@ -193,6 +196,27 @@ fn main() {
         "x",
     );
 
+    // multi-macro grid: the same layer sharded across a 2x2 macro grid
+    // (4 FCC pair-range shards, one stored pair each), executed on the
+    // same 4-lane pool.  Outputs are byte-identical to the single-macro
+    // plan; the ratio is the host-side cost of the shard scatter
+    // (per-shard scratch + channel-slice copy) the grid adds.
+    let sharded = ShardedConv::std_fcc(
+        &MacroGrid::new(GridShape::new(2, 2), MacroGeometry::paper()),
+        bh, bw, bc, &bfcc, bk, 1, None,
+    );
+    let mut shard_scratch: Vec<i64> = Vec::new();
+    let mut sharded_out = vec![0i64; sharded.out_len()];
+    let grid4 = s.bench("sharded_conv.execute_par.2x2.t4.18x18x8.k3.n8", 1, 10, || {
+        sharded.execute_par(&binput, &mut pool4, &mut shard_scratch, &mut sharded_out);
+        std::hint::black_box(sharded_out[0]);
+    });
+    s.report(
+        "sharded_conv.2x2.overhead_vs_single_macro",
+        grid4.mean_ns / par4.mean_ns,
+        "x (scatter cost at equal host parallelism)",
+    );
+
     // session batching: 8 images streamed through one resident weight
     // pass (batch folded into the pixel dimension), 4 pool lanes
     let batch = 8usize;
@@ -313,6 +337,64 @@ fn main() {
     s.bench("faulty.scrub", 2, 200, || {
         std::hint::black_box(fcore.scrub().checked_words);
     });
+
+    // the serving tier: a 24-request burst through the batching
+    // dispatcher, 1 worker session vs 2.  Wall-clock per burst plus the
+    // SLO percentiles the service books — the numbers `serve` reports,
+    // pinned here against the bench trajectory.  One timed pass per
+    // worker count: service startup (session prepare + sim model) would
+    // otherwise dominate an iterated measurement.
+    let burst = 24usize;
+    let mut burst_rng = Rng::new(99);
+    let burst_imgs: Vec<Vec<f32>> = (0..burst)
+        .map(|_| (0..IMG_ELEMS).map(|_| burst_rng.normal() as f32).collect())
+        .collect();
+    let serve_burst = |workers: usize| -> (f64, ServiceStats) {
+        let svc = InferenceService::start_cluster(
+            BackendSpec {
+                kind: BackendKind::Reference,
+                fabric: FabricChoice::BitSliced,
+                threads: 2,
+                ..Default::default()
+            },
+            "/nonexistent".into(),
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            ServiceConfig {
+                workers,
+                max_queue_depth: 0,
+            },
+        );
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = burst_imgs.iter().map(|img| svc.submit(img.clone())).collect();
+        for rx in rxs {
+            rx.recv().expect("channel").expect("burst inference");
+        }
+        let elapsed_ns = t0.elapsed().as_nanos() as f64;
+        (elapsed_ns, svc.stats().expect("stats"))
+    };
+    let (w1_ns, _) = serve_burst(1);
+    let (w2_ns, w2_stats) = serve_burst(2);
+    s.report("service.burst24.w1", w1_ns, "ns (1 worker, batch<=4)");
+    s.report("service.burst24.w2", w2_ns, "ns (2 workers, batch<=4)");
+    s.report("service.burst24.w2_speedup_vs_w1", w1_ns / w2_ns, "x");
+    s.report(
+        "service.burst24.w2.p50",
+        w2_stats.p50().as_nanos() as f64,
+        "ns (request latency, log-bucket upper edge)",
+    );
+    s.report(
+        "service.burst24.w2.p95",
+        w2_stats.p95().as_nanos() as f64,
+        "ns",
+    );
+    s.report(
+        "service.burst24.w2.p99",
+        w2_stats.p99().as_nanos() as f64,
+        "ns",
+    );
 
     s.finish();
 }

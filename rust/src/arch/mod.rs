@@ -14,6 +14,11 @@
 //! [`fault`] cuts across the functional view: seeded bit-cell fault
 //! injection on the single weight-write path plus the integrity scrub
 //! that detects/repairs the damage (quarantine + spare-row re-home).
+//!
+//! [`grid`] scales the functional view out: a `rows × cols`
+//! [`grid::MacroGrid`] of macros that the shard planner
+//! ([`crate::mapping::shard`]) splits conv layers across, byte-identical
+//! to the single-macro plans at every grid shape.
 
 pub mod adder_tree;
 pub mod compartment;
@@ -22,6 +27,7 @@ pub mod cost;
 pub mod dbmu;
 pub mod dram;
 pub mod fault;
+pub mod grid;
 pub mod lpu;
 pub mod mem;
 pub mod merge;

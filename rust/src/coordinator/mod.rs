@@ -3,14 +3,18 @@
 //! * [`batcher`] — dynamic request batching (full batches ride the wide
 //!   executable, stragglers are padded);
 //! * [`scheduler`] — prefetch-aware layer timeline;
-//! * [`service`] — the threaded request loop that prepares one
-//!   [`crate::runtime::Session`] (weights resident for the worker's
-//!   lifetime; reference by default, PJRT/AOT artifacts behind the
-//!   `pjrt` feature) and executes batches through it zero-alloc.
-//!   Serving is fail-soft: batch panics are caught and retried on a
-//!   rebuilt session, clients get typed timeouts
-//!   ([`service::ServiceError`]), and the session's fault/scrub
-//!   counters ride along in [`service::ServiceStats`].
+//! * [`service`] — the serving tier: a batching dispatcher in front of
+//!   N worker threads, each owning its own resident
+//!   [`crate::runtime::Session`] (reference by default, PJRT/AOT
+//!   artifacts behind the `pjrt` feature) and executing batches
+//!   zero-alloc.  Admission control sheds load at the door with the
+//!   typed [`service::ServiceError::Overloaded`] when the in-flight
+//!   depth hits [`service::ServiceConfig::max_queue_depth`].  Serving
+//!   is fail-soft: batch panics are caught and retried on a rebuilt
+//!   session, clients get typed timeouts
+//!   ([`service::ServiceError`]), and SLO percentiles (p50/p95/p99),
+//!   admission counters and the sessions' fault/scrub counters ride
+//!   along in [`service::ServiceStats`].
 
 pub mod batcher;
 pub mod scheduler;
@@ -21,5 +25,6 @@ pub use batcher::{BatchPolicy, Batcher};
 // re-exported here for the service's callers
 pub use crate::runtime::{IMG_ELEMS, NUM_CLASSES};
 pub use service::{
-    InferenceResult, InferenceService, ServiceError, ServiceStats, DEFAULT_INFER_TIMEOUT,
+    resolve_workers, InferenceResult, InferenceService, ServiceConfig, ServiceError, ServiceStats,
+    DEFAULT_INFER_TIMEOUT, MAX_WORKERS,
 };

@@ -1,44 +1,54 @@
-//! Inference service: the request loop that owns the execution session.
+//! Inference service: a batching dispatcher in front of N worker
+//! sessions.
 //!
-//! A dedicated worker thread owns the [`Session`] (PJRT handles are not
-//! `Send`-safe by contract, so the backend is constructed — and its
-//! session prepared — inside the thread and never leaves it).  Clients
-//! submit CIFAR-shaped images over a channel; the batcher groups them
-//! (the worker sleeps exactly to [`Batcher::next_deadline`], so a lone
-//! straggler flushes the moment its `max_wait` expires); the session
-//! executes the whole batch with a real batch dimension (the PJRT
-//! backend pads stragglers up to its wide executable, the reference
-//! backend folds the batch into its MVM row dimension — on the
-//! bit-sliced fabric through the session's parallel exec pool, width
-//! chosen by `BackendSpec::threads` / `--threads` / `DDC_THREADS`).
+//! One **dispatcher** thread owns the ingest channel and the
+//! [`Batcher`]: clients submit CIFAR-shaped images, the batcher groups
+//! them (the dispatcher sleeps exactly to [`Batcher::next_deadline`],
+//! so a lone straggler flushes the moment its `max_wait` expires), and
+//! each cut batch is handed to a pool of **worker** threads over a
+//! shared channel.  Every worker owns its *own* [`Session`] (PJRT
+//! handles are not `Send`-safe by contract, so each backend is
+//! constructed — and its session prepared — inside its worker thread
+//! and never leaves it); because sessions are deterministic, any
+//! worker may serve any batch and the logits are byte-identical to a
+//! single-worker deployment.  Worker count comes from
+//! [`ServiceConfig::workers`] / `DDC_WORKERS` (default 1, the exact
+//! single-worker shape this service had before scale-out).
 //!
-//! Weights are resident for the worker's lifetime: the backend is
-//! prepared exactly once, and every per-batch buffer (the pending-cut
-//! sink, the packed input, the logits) is persistent, so the
-//! steady-state execute path performs no per-batch heap allocation.
-//! (The per-request `mpsc` response send is the one remaining
-//! allocation, and the response itself is client-owned by design.)
+//! **Admission control**: [`ServiceConfig::max_queue_depth`] bounds
+//! the in-flight depth (queued + executing).  A request arriving at a
+//! full queue is rejected *synchronously* with the typed
+//! [`ServiceError::Overloaded`] — load is shed at the door, with
+//! backpressure accounting in [`ServiceStats::admission`], never by
+//! unbounded queue growth.  Depth 0 (the default) disables shedding.
+//!
+//! Weights are resident for each worker's lifetime: its backend is
+//! prepared exactly once, and every per-batch buffer (the packed
+//! input, the logits) is persistent, so the steady-state execute path
+//! performs no per-batch heap allocation inside the session.  Batch
+//! carriers (`Vec<Request>`) are recycled back to the dispatcher over
+//! a return channel instead of reallocated per cut.
 //!
 //! Alongside the functional result, each request is annotated with the
 //! *simulated* DDC-PIM latency of the model so the serving path reports
-//! both wall-clock and modelled-hardware numbers.  When the backend
-//! spec carries a weight-streaming budget (`BackendSpec::stream_kb`),
-//! [`ServiceStats`] additionally carries the session's
-//! [`CapacityPressure`] counters, refreshed whenever stats are queried.
+//! both wall-clock and modelled-hardware numbers.  [`ServiceStats`]
+//! carries SLO-grade latency percentiles (p50/p95/p99 from the
+//! log-bucketed [`LatencyHistogram`]), the merged per-worker
+//! [`CapacityPressure`] and [`ReliabilityStats`] snapshots, and the
+//! admission counters — all readable synchronously, even while every
+//! worker is busy.
 
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
 use crate::config::{ArchConfig, SimConfig};
-use crate::metrics::{CapacityPressure, LatencyHistogram, ReliabilityStats};
+use crate::metrics::{AdmissionStats, CapacityPressure, LatencyHistogram, ReliabilityStats};
 use crate::model::zoo;
-use crate::runtime::{Backend, BackendKind, BackendSpec, Session, IMG_ELEMS, NUM_CLASSES};
+use crate::runtime::{BackendKind, BackendSpec, Session, IMG_ELEMS, NUM_CLASSES};
 use crate::sim::simulate_network;
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -52,9 +62,58 @@ pub const DEFAULT_INFER_TIMEOUT: Duration = Duration::from_secs(30);
 /// giving up on the pending batch.
 const REBUILD_ATTEMPTS: u32 = 3;
 
+/// Hard ceiling on worker sessions: each worker owns a full resident
+/// session (weights + buffers + exec pool), so the useful count is
+/// bounded by memory and cores long before this.
+pub const MAX_WORKERS: usize = 32;
+
+/// Resolve a requested worker count.  Precedence (same contract as
+/// `DDC_THREADS` / `DDC_GRID`): an explicit `requested >= 1` wins, `0`
+/// means "unset" and falls back to the `DDC_WORKERS` environment
+/// variable, then to 1 (the single-worker path).  An unparseable
+/// `DDC_WORKERS` is *warned about* on stderr and treated as unset —
+/// never silently ignored.  The result is clamped to
+/// `1..=`[`MAX_WORKERS`].
+pub fn resolve_workers(requested: usize) -> usize {
+    let n = if requested > 0 {
+        requested
+    } else {
+        match std::env::var("DDC_WORKERS") {
+            Ok(raw) => match raw.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => n,
+                _ => {
+                    eprintln!(
+                        "[ddc-config] ignoring DDC_WORKERS={raw:?}: want a positive integer; \
+                         using 1"
+                    );
+                    1
+                }
+            },
+            Err(_) => 1,
+        }
+    };
+    n.clamp(1, MAX_WORKERS)
+}
+
+/// Serving-tier shape: how many worker sessions drain the batch queue,
+/// and how deep the ingress queue may grow before load is shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServiceConfig {
+    /// Worker sessions behind the batcher (`0` = resolve through the
+    /// `DDC_WORKERS` environment variable, then 1 — see
+    /// [`resolve_workers`]).
+    pub workers: usize,
+    /// In-flight request bound (queued + executing) enforced at
+    /// [`InferenceService::submit`]; a request beyond it is rejected
+    /// with [`ServiceError::Overloaded`].  `0` (the default) disables
+    /// admission control: nothing is ever shed.
+    pub max_queue_depth: usize,
+}
+
 /// Typed client-visible failure: lets callers distinguish "my deadline
-/// elapsed" (retryable elsewhere) from "the service rejected or failed
-/// this request" without parsing strings.
+/// elapsed" (retryable elsewhere) from "the service shed my request"
+/// (retryable after backoff) from "the service rejected or failed this
+/// request" without parsing strings.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServiceError {
     /// The client-side deadline elapsed before a response arrived.  The
@@ -64,6 +123,10 @@ pub enum ServiceError {
     /// The worker dropped the response channel without answering
     /// (service shut down mid-request).
     Disconnected,
+    /// Admission control shed this request at the door: the in-flight
+    /// depth was at [`ServiceConfig::max_queue_depth`].  The request
+    /// was never queued; retry after backoff.
+    Overloaded,
     /// The service answered with a validation or execution error.
     Failed(String),
 }
@@ -73,6 +136,7 @@ impl fmt::Display for ServiceError {
         match self {
             ServiceError::Timeout => write!(f, "inference timed out"),
             ServiceError::Disconnected => write!(f, "service dropped the request"),
+            ServiceError::Overloaded => write!(f, "service overloaded: request shed at admission"),
             ServiceError::Failed(e) => write!(f, "inference failed: {e}"),
         }
     }
@@ -83,11 +147,8 @@ impl std::error::Error for ServiceError {}
 /// One inference request.
 struct Request {
     input: Vec<f32>,
-    resp: mpsc::Sender<Result<InferenceResult, String>>,
+    resp: mpsc::Sender<Result<InferenceResult, ServiceError>>,
     submitted: Instant,
-    /// Times this request has already ridden in a batch that panicked
-    /// (bounds the requeue: one retry, then a terminal error).
-    retries: u32,
 }
 
 /// The answer a client gets back.
@@ -114,18 +175,22 @@ pub struct ServiceStats {
     pub batches: u64,
     pub total_latency: Duration,
     pub max_latency: Duration,
-    /// Log-bucketed latency distribution (p50/p99 queries).
+    /// Log-bucketed latency distribution (p50/p95/p99 queries).
     pub latency_hist: LatencyHistogram,
-    /// Weight-streaming capacity pressure reported by the session
-    /// (all-zero when the backend runs without a streaming budget —
-    /// `CapacityPressure::default()` means "everything resident").
+    /// Weight-streaming capacity pressure, merged across all worker
+    /// sessions (all-zero when the backend runs without a streaming
+    /// budget — `CapacityPressure::default()` means "everything
+    /// resident").
     pub capacity: CapacityPressure,
-    /// Fault-injection / fail-soft counters: the session's own tally
+    /// Fault-injection / fail-soft counters: the merged sessions' tally
     /// (faults injected/detected/repaired, quarantined rows, stager
     /// fallbacks) plus the service-level `worker_rebuilds` and
     /// client-side `timed_out_requests`.  All-zero when nothing has
     /// gone wrong ([`ReliabilityStats::is_quiet`]).
     pub reliability: ReliabilityStats,
+    /// Admission-control counters: admitted/shed requests, the depth
+    /// bound in force, the peak in-flight depth, worker count.
+    pub admission: AdmissionStats,
 }
 
 impl ServiceStats {
@@ -141,6 +206,10 @@ impl ServiceStats {
         self.latency_hist.percentile(50.0)
     }
 
+    pub fn p95(&self) -> Duration {
+        self.latency_hist.percentile(95.0)
+    }
+
     pub fn p99(&self) -> Duration {
         self.latency_hist.percentile(99.0)
     }
@@ -148,34 +217,159 @@ impl ServiceStats {
 
 enum Msg {
     Infer(Request),
-    Stats(mpsc::Sender<ServiceStats>),
     Shutdown,
-    /// Chaos hook: make the next batch execution panic (one-shot), so
-    /// tests can prove the catch-unwind + session-rebuild path.
-    DebugPanicNextBatch,
-    /// Chaos hook: sleep this long before the next batch executes
-    /// (one-shot), so tests can trip the client-side timeout.
-    DebugHangNextBatch(Duration),
+}
+
+/// Core request/latency counters, folded in by workers under one lock
+/// (one acquisition per batch, not per request-field).
+#[derive(Default)]
+struct CoreStats {
+    requests: u64,
+    batches: u64,
+    total_latency: Duration,
+    max_latency: Duration,
+    hist: LatencyHistogram,
+}
+
+/// Per-worker session snapshot, overwritten after every batch (and
+/// once after prepare+scrub).  Snapshots are *absolute* counters from
+/// each session, so [`InferenceService::stats`] merges the latest
+/// slot per worker instead of accumulating — re-reading never
+/// double-counts.
+#[derive(Default, Clone, Copy)]
+struct WorkerSnapshot {
+    capacity: CapacityPressure,
+    reliability: ReliabilityStats,
+    rebuilds: u64,
+}
+
+/// State shared between the client handle, the dispatcher and every
+/// worker: admission atomics, stats, per-worker snapshots, chaos
+/// hooks.
+struct ServiceShared {
+    core: Mutex<CoreStats>,
+    snapshots: Mutex<Vec<WorkerSnapshot>>,
+    /// Admitted requests not yet answered (queued + executing).
+    in_flight: AtomicU64,
+    peak_depth: AtomicU64,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    /// Client-side timeout count (requests whose deadline elapsed).
+    timed_out: AtomicU64,
+    /// Workers whose session is (or is still becoming) live.
+    live_workers: AtomicUsize,
+    /// First worker-init failure, for failing queued batches usefully
+    /// when *every* worker is gone.
+    init_error: Mutex<Option<String>>,
+    /// Chaos hook: the next batch any worker picks up panics.
+    chaos_panic: AtomicBool,
+    /// Chaos hook: the next batch any worker picks up stalls this many
+    /// ms first (0 = unarmed).
+    chaos_hang_ms: AtomicU64,
+    max_queue_depth: usize,
+    workers: usize,
+}
+
+impl ServiceShared {
+    fn new(workers: usize, max_queue_depth: usize) -> ServiceShared {
+        ServiceShared {
+            core: Mutex::new(CoreStats::default()),
+            snapshots: Mutex::new(vec![WorkerSnapshot::default(); workers]),
+            in_flight: AtomicU64::new(0),
+            peak_depth: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            timed_out: AtomicU64::new(0),
+            live_workers: AtomicUsize::new(workers),
+            init_error: Mutex::new(None),
+            chaos_panic: AtomicBool::new(false),
+            chaos_hang_ms: AtomicU64::new(0),
+            max_queue_depth,
+            workers,
+        }
+    }
+
+    /// Admit or shed: the one decision point of the admission state
+    /// machine.  CAS loop so concurrent submitters can never push
+    /// `in_flight` past the bound.
+    fn try_admit(&self) -> bool {
+        loop {
+            let cur = self.in_flight.load(Ordering::Acquire);
+            if self.max_queue_depth > 0 && cur >= self.max_queue_depth as u64 {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            if self
+                .in_flight
+                .compare_exchange(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                self.peak_depth.fetch_max(cur + 1, Ordering::Relaxed);
+                return true;
+            }
+        }
+    }
+
+    /// One admitted request answered (successfully or not).
+    fn finish_request(&self) {
+        self.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Overwrite worker `id`'s session snapshot (called *before* the
+    /// batch's responses are sent, so a client that got its answer
+    /// always sees a stats view at least as fresh as that batch).
+    fn update_snapshot(&self, id: usize, session: &dyn Session, rebuilds: u64) {
+        if let Ok(mut snaps) = self.snapshots.lock() {
+            snaps[id] = WorkerSnapshot {
+                capacity: session.capacity_pressure().unwrap_or_default(),
+                reliability: session.reliability().unwrap_or_default(),
+                rebuilds,
+            };
+        }
+    }
+
+    fn record_init_error(&self, err: String) {
+        if let Ok(mut slot) = self.init_error.lock() {
+            slot.get_or_insert(err);
+        }
+    }
+
+    fn init_error_msg(&self) -> String {
+        self.init_error
+            .lock()
+            .ok()
+            .and_then(|slot| slot.clone())
+            .unwrap_or_else(|| "no live worker session".into())
+    }
+}
+
+/// Fail every request of a batch with the same error, releasing their
+/// admission slots.
+fn fail_batch(batch: impl IntoIterator<Item = Request>, err: ServiceError, shared: &ServiceShared) {
+    for req in batch {
+        let _ = req.resp.send(Err(err.clone()));
+        shared.finish_request();
+    }
 }
 
 /// Handle to a running service.
 pub struct InferenceService {
     tx: mpsc::Sender<Msg>,
-    worker: Option<JoinHandle<()>>,
-    /// Client-side timeout count (requests whose deadline elapsed);
-    /// merged into [`ServiceStats::reliability`] by
-    /// [`InferenceService::stats`].
-    timed_out: Arc<AtomicU64>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<ServiceShared>,
 }
 
 impl InferenceService {
-    /// Start the worker thread with automatic backend selection (PJRT
-    /// when compiled in and artifacts exist, else the reference backend).
+    /// Start a single-worker service with automatic backend selection
+    /// (PJRT when compiled in and artifacts exist, else the reference
+    /// backend).
     pub fn start(artifact_dir: String, policy: BatchPolicy) -> InferenceService {
         Self::start_with(BackendKind::Auto, artifact_dir, policy)
     }
 
-    /// Start the worker thread with an explicit backend choice.
+    /// Start a single-worker service with an explicit backend choice.
     pub fn start_with(
         kind: BackendKind,
         artifact_dir: String,
@@ -184,42 +378,97 @@ impl InferenceService {
         Self::start_spec(BackendSpec::new(kind), artifact_dir, policy)
     }
 
-    /// Start the worker thread with a full backend spec (kind + knobs
-    /// such as the reference backend's fabric choice).
+    /// Start a single-worker service with a full backend spec (kind +
+    /// knobs such as the reference backend's fabric choice).
     pub fn start_spec(
         spec: BackendSpec,
         artifact_dir: String,
         policy: BatchPolicy,
     ) -> InferenceService {
+        Self::start_cluster(
+            spec,
+            artifact_dir,
+            policy,
+            ServiceConfig {
+                workers: 1,
+                max_queue_depth: 0,
+            },
+        )
+    }
+
+    /// Start the full serving tier: a dispatcher plus
+    /// [`ServiceConfig::workers`] worker sessions (each preparing its
+    /// own session from `spec`), with admission control at
+    /// [`ServiceConfig::max_queue_depth`].
+    pub fn start_cluster(
+        spec: BackendSpec,
+        artifact_dir: String,
+        policy: BatchPolicy,
+        config: ServiceConfig,
+    ) -> InferenceService {
+        let nworkers = resolve_workers(config.workers);
+        let shared = Arc::new(ServiceShared::new(nworkers, config.max_queue_depth));
         let (tx, rx) = mpsc::channel::<Msg>();
-        let worker = thread::spawn(move || worker_loop(spec, artifact_dir, policy, rx));
+        let (batch_tx, batch_rx) = mpsc::channel::<Vec<Request>>();
+        let (recycle_tx, recycle_rx) = mpsc::channel::<Vec<Request>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let workers = (0..nworkers)
+            .map(|id| {
+                let spec = spec;
+                let dir = artifact_dir.clone();
+                let rx = batch_rx.clone();
+                let recycle = recycle_tx.clone();
+                let shared = shared.clone();
+                thread::spawn(move || worker_loop(id, spec, dir, rx, recycle, shared))
+            })
+            .collect();
+        drop(recycle_tx); // workers hold the only senders
+        let dispatcher = {
+            let shared = shared.clone();
+            thread::spawn(move || dispatcher_loop(rx, policy, batch_tx, recycle_rx, shared))
+        };
         InferenceService {
             tx,
-            worker: Some(worker),
-            timed_out: Arc::new(AtomicU64::new(0)),
+            dispatcher: Some(dispatcher),
+            workers,
+            shared,
         }
     }
 
-    /// Submit an image; returns a receiver for the result.
-    pub fn submit(&self, input: Vec<f32>) -> mpsc::Receiver<Result<InferenceResult, String>> {
+    /// Worker sessions this service was started with.
+    pub fn worker_count(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Submit an image; returns a receiver for the result.  Admission
+    /// control runs *here*, synchronously: a malformed input or a full
+    /// queue answers on the returned receiver immediately, without
+    /// touching the dispatcher.
+    pub fn submit(&self, input: Vec<f32>) -> mpsc::Receiver<Result<InferenceResult, ServiceError>> {
         let (rtx, rrx) = mpsc::channel();
         // reject malformed inputs here, before batching, so one bad
         // request can never fail the valid requests batched with it
         if input.len() != IMG_ELEMS {
-            let _ = rtx.send(Err(format!(
+            let _ = rtx.send(Err(ServiceError::Failed(format!(
                 "bad input size {} (want {IMG_ELEMS})",
                 input.len()
-            )));
+            ))));
+            return rrx;
+        }
+        if !self.shared.try_admit() {
+            let _ = rtx.send(Err(ServiceError::Overloaded));
             return rrx;
         }
         let req = Request {
             input,
             resp: rtx,
             submitted: Instant::now(),
-            retries: 0,
         };
-        // if the worker died the receiver will simply disconnect
-        let _ = self.tx.send(Msg::Infer(req));
+        // if the dispatcher died the receiver will simply disconnect;
+        // release the admission slot so the depth stays truthful
+        if self.tx.send(Msg::Infer(req)).is_err() {
+            self.shared.finish_request();
+        }
         rrx
     }
 
@@ -243,42 +492,76 @@ impl InferenceService {
     ) -> Result<InferenceResult, ServiceError> {
         match self.submit(input).recv_timeout(timeout) {
             Ok(Ok(r)) => Ok(r),
-            Ok(Err(e)) => Err(ServiceError::Failed(e)),
+            Ok(Err(e)) => Err(e),
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                self.timed_out.fetch_add(1, Ordering::Relaxed);
+                self.shared.timed_out.fetch_add(1, Ordering::Relaxed);
                 Err(ServiceError::Timeout)
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServiceError::Disconnected),
         }
     }
 
+    /// Read the aggregate service statistics, synchronously from the
+    /// shared state — works even while every worker is mid-batch (the
+    /// old message-round-trip design could not answer during a hang).
     pub fn stats(&self) -> Option<ServiceStats> {
-        let (stx, srx) = mpsc::channel();
-        self.tx.send(Msg::Stats(stx)).ok()?;
-        let mut s = srx.recv().ok()?;
-        s.reliability.timed_out_requests = self.timed_out.load(Ordering::Relaxed);
+        let core = self.shared.core.lock().ok()?;
+        let mut s = ServiceStats {
+            requests: core.requests,
+            batches: core.batches,
+            total_latency: core.total_latency,
+            max_latency: core.max_latency,
+            latency_hist: core.hist.clone(),
+            ..Default::default()
+        };
+        drop(core);
+        let mut rebuilds = 0;
+        if let Ok(snaps) = self.shared.snapshots.lock() {
+            for snap in snaps.iter() {
+                s.capacity.merge(&snap.capacity);
+                s.reliability.merge(&snap.reliability);
+                rebuilds += snap.rebuilds;
+            }
+        }
+        s.reliability.worker_rebuilds = rebuilds;
+        s.reliability.timed_out_requests = self.shared.timed_out.load(Ordering::Relaxed);
+        s.admission = AdmissionStats {
+            admitted: self.shared.admitted.load(Ordering::Relaxed),
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            max_queue_depth: self.shared.max_queue_depth as u64,
+            peak_queue_depth: self.shared.peak_depth.load(Ordering::Relaxed),
+            workers: self.shared.workers as u64,
+        };
         Some(s)
     }
 
-    /// Chaos hook (test-only): the next batch execution panics inside
-    /// the worker, exercising catch-unwind + bounded session rebuild.
+    /// Chaos hook (test-only): the next batch any worker picks up
+    /// panics, exercising catch-unwind + bounded session rebuild.
     #[doc(hidden)]
     pub fn debug_panic_next_batch(&self) {
-        let _ = self.tx.send(Msg::DebugPanicNextBatch);
+        self.shared.chaos_panic.store(true, Ordering::Release);
     }
 
-    /// Chaos hook (test-only): the next batch stalls this long before
-    /// executing, exercising the client-side timeout.
+    /// Chaos hook (test-only): the next batch any worker picks up
+    /// stalls this long before executing, exercising the client-side
+    /// timeout.
     #[doc(hidden)]
     pub fn debug_hang_next_batch(&self, delay: Duration) {
-        let _ = self.tx.send(Msg::DebugHangNextBatch(delay));
+        self.shared
+            .chaos_hang_ms
+            .store(delay.as_millis().max(1) as u64, Ordering::Release);
     }
 }
 
 impl Drop for InferenceService {
     fn drop(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        // the dispatcher's exit dropped the batch sender; workers drain
+        // what is queued and terminate
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -297,77 +580,25 @@ fn argmax(logits: &[f32]) -> usize {
         .unwrap_or(0)
 }
 
-fn worker_loop(
-    spec: BackendSpec,
-    artifact_dir: String,
-    policy: BatchPolicy,
+/// The ingest/batching half: owns the [`Batcher`], cuts batches, hands
+/// them to the worker pool.  On shutdown it flushes everything still
+/// queued before exiting (the drain contract — no request is dropped
+/// on the floor).
+fn dispatcher_loop(
     rx: mpsc::Receiver<Msg>,
+    policy: BatchPolicy,
+    batch_tx: mpsc::Sender<Vec<Request>>,
+    recycle_rx: mpsc::Receiver<Vec<Request>>,
+    shared: Arc<ServiceShared>,
 ) {
-    // drain helper: fail every request with an init error; exit on
-    // Shutdown (Drop joins this thread, so it must terminate)
-    let drain_with_error = |rx: mpsc::Receiver<Msg>, err: String| {
-        for msg in rx {
-            match msg {
-                Msg::Infer(req) => {
-                    let _ = req.resp.send(Err(err.clone()));
-                }
-                Msg::Stats(stx) => {
-                    let _ = stx.send(ServiceStats::default());
-                }
-                Msg::Shutdown => break,
-                Msg::DebugPanicNextBatch | Msg::DebugHangNextBatch(_) => {}
-            }
-        }
-    };
-    let backend = match spec.create(&artifact_dir) {
-        Ok(b) => b,
-        Err(e) => return drain_with_error(rx, format!("backend init failed: {e:#}")),
-    };
-    let backend_name = backend.name();
-    // prepare once: weights become resident for the worker's lifetime
-    let mut session = match backend.prepare() {
-        Ok(s) => s,
-        Err(e) => return drain_with_error(rx, format!("session prepare failed: {e:#}")),
-    };
-    drop(backend); // the session owns everything execution needs
-    // scrub the freshly resident weights before serving: any bit-cell
-    // fault the write path manifested is detected and repaired (or
-    // quarantined) now, not discovered as wrong logits later.  A clean
-    // fabric makes this a no-op, and sessions without a scrubbable
-    // fabric return None.
-    let _ = session.scrub();
-
-    // modelled hardware latency (once; amortized per batch below)
-    let sim_ms = simulate_network(
-        &zoo::mobilenet_v2(),
-        &ArchConfig::ddc_pim(),
-        &SimConfig::ddc_full(),
-    )
-    .latency_ms();
-
     let mut batcher: Batcher<Request> = Batcher::new(policy);
-    let mut stats = ServiceStats::default();
     let mut open = true;
-    // fail-soft state: sessions rebuilt after a caught panic, plus the
-    // one-shot chaos hooks the debug messages arm
-    let mut rebuilds: u64 = 0;
-    let mut chaos_panic = false;
-    let mut chaos_hang: Option<Duration> = None;
-    // persistent per-batch buffers: the cut sink, the packed input and
-    // the logits live for the worker's lifetime, so the steady-state
-    // path below allocates nothing per batch
-    let mut pending: Vec<Request> = Vec::new();
-    let mut input_buf: Vec<f32> = Vec::new();
-    let mut logits_buf: Vec<f32> = Vec::new();
-
     while open || !batcher.is_empty() {
         // ingest until a batch is due.  An idle queue blocks on the
         // channel outright (no wake-ups); a non-empty queue sleeps
         // *exactly* to the oldest request's deadline, so a lone
         // straggler flushes the moment its max_wait elapses — never a
-        // poll tick later (the fixed-tick loop this replaces stalled
-        // stragglers by up to a tick past the deadline, and burned a
-        // wake-up every tick while idle)
+        // poll tick later
         while open && !batcher.should_flush(Instant::now()) {
             let msg = match batcher.next_deadline() {
                 // empty queue: nothing can ever become due
@@ -378,15 +609,7 @@ fn worker_loop(
             };
             match msg {
                 Ok(Msg::Infer(r)) => batcher.push(r),
-                Ok(Msg::Stats(stx)) => {
-                    stats.capacity = session.capacity_pressure().unwrap_or_default();
-                    stats.reliability = session.reliability().unwrap_or_default();
-                    stats.reliability.worker_rebuilds = rebuilds;
-                    let _ = stx.send(stats.clone());
-                }
                 Ok(Msg::Shutdown) => open = false,
-                Ok(Msg::DebugPanicNextBatch) => chaos_panic = true,
-                Ok(Msg::DebugHangNextBatch(d)) => chaos_hang = Some(d),
                 // deadline hit: the loop condition cuts the batch now
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
@@ -395,24 +618,114 @@ fn worker_loop(
             while let Ok(msg) = rx.try_recv() {
                 match msg {
                     Msg::Infer(r) => batcher.push(r),
-                    Msg::Stats(stx) => {
-                        stats.capacity = session.capacity_pressure().unwrap_or_default();
-                        stats.reliability = session.reliability().unwrap_or_default();
-                        stats.reliability.worker_rebuilds = rebuilds;
-                        let _ = stx.send(stats.clone());
-                    }
                     Msg::Shutdown => open = false,
-                    Msg::DebugPanicNextBatch => chaos_panic = true,
-                    Msg::DebugHangNextBatch(d) => chaos_hang = Some(d),
                 }
             }
         }
         if batcher.is_empty() {
             continue;
         }
-        batcher.cut_into(&mut pending);
+        // reuse a carrier a worker sent back; allocate only when the
+        // pool is still warming up
+        let mut sink = recycle_rx.try_recv().unwrap_or_default();
+        sink.clear();
+        batcher.cut_into(&mut sink);
+        if let Err(mpsc::SendError(batch)) = batch_tx.send(sink) {
+            // every worker is gone (init failure on all of them): fail
+            // the batch with the recorded cause instead of a silent
+            // hang
+            fail_batch(
+                batch,
+                ServiceError::Failed(shared.init_error_msg()),
+                &shared,
+            );
+        }
+    }
+}
+
+/// One worker: builds its own backend + session, then drains batches
+/// from the shared channel until the dispatcher closes it.
+fn worker_loop(
+    id: usize,
+    spec: BackendSpec,
+    artifact_dir: String,
+    batch_rx: Arc<Mutex<mpsc::Receiver<Vec<Request>>>>,
+    recycle_tx: mpsc::Sender<Vec<Request>>,
+    shared: Arc<ServiceShared>,
+) {
+    // last worker out fails anything still queued (otherwise those
+    // clients would see a bare disconnect with no cause)
+    let exit = |shared: &ServiceShared, batch_rx: &Arc<Mutex<mpsc::Receiver<Vec<Request>>>>| {
+        if shared.live_workers.fetch_sub(1, Ordering::AcqRel) == 1 {
+            if let Ok(rx) = batch_rx.lock() {
+                while let Ok(batch) = rx.try_recv() {
+                    fail_batch(batch, ServiceError::Failed(shared.init_error_msg()), shared);
+                }
+            }
+        }
+    };
+    let backend = match spec.create(&artifact_dir) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("[ddc-reliability] worker {id}: backend init failed: {e:#}");
+            shared.record_init_error(format!("backend init failed: {e:#}"));
+            return exit(&shared, &batch_rx);
+        }
+    };
+    let backend_name = backend.name();
+    // prepare once: weights become resident for the worker's lifetime
+    let mut session = match backend.prepare() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("[ddc-reliability] worker {id}: session prepare failed: {e:#}");
+            shared.record_init_error(format!("session prepare failed: {e:#}"));
+            return exit(&shared, &batch_rx);
+        }
+    };
+    drop(backend); // the session owns everything execution needs
+    // scrub the freshly resident weights before serving: any bit-cell
+    // fault the write path manifested is detected and repaired (or
+    // quarantined) now, not discovered as wrong logits later.  A clean
+    // fabric makes this a no-op, and sessions without a scrubbable
+    // fabric return None.
+    let _ = session.scrub();
+    let mut rebuilds: u64 = 0;
+    shared.update_snapshot(id, &*session, rebuilds);
+
+    // modelled hardware latency (once per worker; amortized per batch)
+    let sim_ms = simulate_network(
+        &zoo::mobilenet_v2(),
+        &ArchConfig::ddc_pim(),
+        &SimConfig::ddc_full(),
+    )
+    .latency_ms();
+
+    // persistent per-batch buffers: the packed input and the logits
+    // live for the worker's lifetime, so the steady-state path below
+    // allocates nothing per batch inside the session
+    let mut input_buf: Vec<f32> = Vec::new();
+    let mut logits_buf: Vec<f32> = Vec::new();
+
+    loop {
+        // shared-consumer recv: hold the lock while blocked — peers
+        // queue on the mutex instead of the channel, which hands
+        // batches out one-per-worker either way
+        let batch = match batch_rx.lock() {
+            Ok(rx) => rx.recv(),
+            Err(_) => break, // poisoned: a peer died holding it
+        };
+        let mut pending = match batch {
+            Ok(b) => b,
+            Err(_) => break, // dispatcher gone and queue drained
+        };
         let bsize = pending.len();
-        stats.batches += 1;
+        if bsize == 0 {
+            let _ = recycle_tx.send(pending);
+            continue;
+        }
+        if let Ok(mut core) = shared.core.lock() {
+            core.batches += 1;
+        }
         // pack the cut directly into the persistent input buffer (each
         // byte written exactly once; capacity is retained across cuts)
         input_buf.clear();
@@ -428,70 +741,78 @@ fn worker_loop(
         logits_buf.resize(bsize * NUM_CLASSES, 0.0);
         // execute behind catch_unwind: a panicking session (or the
         // chaos hooks standing in for one) must never abort the worker
-        // — the batch is requeued once onto a rebuilt session instead
-        let panic_now = std::mem::take(&mut chaos_panic);
-        let hang = chaos_hang.take();
-        let exec = catch_unwind(AssertUnwindSafe(|| {
-            if let Some(d) = hang {
-                thread::sleep(d);
-            }
-            if panic_now {
-                panic!("chaos hook: debug_panic_next_batch");
-            }
-            session.infer_batch_into(&input_buf, bsize, &mut logits_buf)
-        }));
-        let exec = match exec {
-            Ok(r) => r,
-            Err(_) => {
-                eprintln!(
-                    "[ddc-reliability] batch execution panicked; rebuilding the session \
-                     ({} request(s) requeued)",
-                    bsize
-                );
-                match rebuild_session(&spec, &artifact_dir) {
-                    Some(s) => {
-                        session = s;
-                        // same post-prepare scrub as the first session
-                        let _ = session.scrub();
-                        rebuilds += 1;
-                        // bounded requeue: each request rides a rebuilt
-                        // batch at most once, keeping its original
-                        // arrival time so it flushes immediately
-                        for mut req in pending.drain(..) {
-                            if req.retries == 0 {
-                                req.retries = 1;
-                                let arrived = req.submitted;
-                                batcher.push_arrived(req, arrived);
-                            } else {
-                                let _ = req.resp.send(Err(
-                                    "batch execution panicked twice; giving up".into(),
-                                ));
-                            }
-                        }
-                    }
-                    None => {
-                        let msg = format!(
-                            "batch execution panicked and session rebuild failed \
-                             after {REBUILD_ATTEMPTS} attempts"
+        // — the batch is re-executed once on a rebuilt session instead
+        let mut attempts = 0u32;
+        let exec = loop {
+            let panic_now = shared.chaos_panic.swap(false, Ordering::AcqRel);
+            let hang_ms = shared.chaos_hang_ms.swap(0, Ordering::AcqRel);
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                if hang_ms > 0 {
+                    thread::sleep(Duration::from_millis(hang_ms));
+                }
+                if panic_now {
+                    panic!("chaos hook: debug_panic_next_batch");
+                }
+                session.infer_batch_into(&input_buf, bsize, &mut logits_buf)
+            }));
+            match res {
+                Ok(r) => break Some(r),
+                Err(_) => {
+                    attempts += 1;
+                    eprintln!(
+                        "[ddc-reliability] worker {id}: batch execution panicked; \
+                         rebuilding the session ({bsize} request(s) held for retry)"
+                    );
+                    if attempts > 1 {
+                        fail_batch(
+                            pending.drain(..),
+                            ServiceError::Failed(
+                                "batch execution panicked twice; giving up".into(),
+                            ),
+                            &shared,
                         );
-                        for req in pending.drain(..) {
-                            let _ = req.resp.send(Err(msg.clone()));
+                        break None;
+                    }
+                    match rebuild_session(&spec, &artifact_dir) {
+                        Some(s) => {
+                            session = s;
+                            // same post-prepare scrub as the first session
+                            let _ = session.scrub();
+                            rebuilds += 1;
+                            // loop: re-execute the held batch in place
+                        }
+                        None => {
+                            fail_batch(
+                                pending.drain(..),
+                                ServiceError::Failed(format!(
+                                    "batch execution panicked and session rebuild failed \
+                                     after {REBUILD_ATTEMPTS} attempts"
+                                )),
+                                &shared,
+                            );
+                            break None;
                         }
                     }
                 }
-                continue;
             }
         };
+        // snapshot *before* responding: a client holding its answer
+        // must observe stats at least as fresh as its own batch
+        shared.update_snapshot(id, &*session, rebuilds);
         match exec {
-            Ok(()) => {
+            Some(Ok(())) => {
+                let mut core = match shared.core.lock() {
+                    Ok(c) => c,
+                    Err(p) => p.into_inner(),
+                };
                 for (i, req) in pending.drain(..).enumerate() {
                     let mut logits = [0f32; NUM_CLASSES];
                     logits.copy_from_slice(&logits_buf[i * NUM_CLASSES..(i + 1) * NUM_CLASSES]);
                     let latency = req.submitted.elapsed();
-                    stats.requests += 1;
-                    stats.total_latency += latency;
-                    stats.max_latency = stats.max_latency.max(latency);
-                    stats.latency_hist.record(latency);
+                    core.requests += 1;
+                    core.total_latency += latency;
+                    core.max_latency = core.max_latency.max(latency);
+                    core.hist.record(latency);
                     let _ = req.resp.send(Ok(InferenceResult {
                         logits,
                         argmax: argmax(&logits),
@@ -500,19 +821,24 @@ fn worker_loop(
                         simulated_ms: sim_ms / bsize as f64,
                         backend: backend_name,
                     }));
+                    shared.finish_request();
                 }
             }
-            Err(e) => {
-                let msg = format!("batch execution failed: {e:#}");
-                for req in pending.drain(..) {
-                    let _ = req.resp.send(Err(msg.clone()));
-                }
+            Some(Err(e)) => {
+                fail_batch(
+                    pending.drain(..),
+                    ServiceError::Failed(format!("batch execution failed: {e:#}")),
+                    &shared,
+                );
             }
+            None => {} // panic path already answered every request
         }
+        let _ = recycle_tx.send(pending);
     }
+    exit(&shared, &batch_rx);
 }
 
-/// Rebuild the worker's session after a caught panic: fresh backend,
+/// Rebuild a worker's session after a caught panic: fresh backend,
 /// fresh prepare, bounded attempts with linear backoff.  `None` when
 /// every attempt fails (the pending batch is then failed, not retried
 /// forever).
@@ -547,7 +873,12 @@ mod tests {
     fn rejects_bad_input_size() {
         let svc = InferenceService::start("/nonexistent".into(), BatchPolicy::default());
         let res = svc.infer(vec![0.0; 3]);
-        assert!(res.is_err());
+        assert!(matches!(res, Err(ServiceError::Failed(_))));
+        // malformed inputs are rejected before admission: not shed,
+        // not admitted
+        let stats = svc.stats().expect("stats");
+        assert_eq!(stats.admission.admitted, 0);
+        assert_eq!(stats.admission.rejected, 0);
     }
 
     #[test]
@@ -583,6 +914,85 @@ mod tests {
         // at these layer sizes the i32 kernels cannot overflow, so the
         // bit-sliced macro path and the dense kernel agree exactly
         assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn multi_worker_cluster_serves_identical_logits() {
+        // N independent sessions must be indistinguishable from one:
+        // same seed, same deterministic plan, byte-identical logits
+        let single = InferenceService::start_with(
+            BackendKind::Reference,
+            "/nonexistent".into(),
+            BatchPolicy::default(),
+        );
+        let cluster = InferenceService::start_cluster(
+            BackendSpec::new(BackendKind::Reference),
+            "/nonexistent".into(),
+            BatchPolicy::default(),
+            ServiceConfig {
+                workers: 3,
+                max_queue_depth: 0,
+            },
+        );
+        assert_eq!(cluster.worker_count(), 3);
+        let img = vec![0.25f32; IMG_ELEMS];
+        let want = single.infer(img.clone()).expect("single").logits;
+        for _ in 0..6 {
+            let got = cluster.infer(img.clone()).expect("cluster");
+            assert_eq!(got.logits, want, "a worker session drifted");
+        }
+        let stats = cluster.stats().expect("stats");
+        assert_eq!(stats.requests, 6);
+        assert_eq!(stats.admission.admitted, 6);
+        assert_eq!(stats.admission.workers, 3);
+    }
+
+    #[test]
+    fn overload_is_shed_with_a_typed_rejection() {
+        // depth 1 + an hour-long batch window: the first request sits
+        // in the batcher, the second must bounce off admission
+        let svc = InferenceService::start_cluster(
+            BackendSpec::new(BackendKind::Reference),
+            "/nonexistent".into(),
+            BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_secs(3600),
+            },
+            ServiceConfig {
+                workers: 1,
+                max_queue_depth: 1,
+            },
+        );
+        let rx_a = svc.submit(vec![0.1; IMG_ELEMS]);
+        let shed = svc
+            .submit(vec![0.2; IMG_ELEMS])
+            .recv()
+            .expect("synchronous rejection");
+        assert!(matches!(shed, Err(ServiceError::Overloaded)));
+        let stats = svc.stats().expect("stats");
+        assert_eq!(stats.admission.admitted, 1);
+        assert_eq!(stats.admission.rejected, 1);
+        assert_eq!(stats.admission.peak_queue_depth, 1);
+        assert_eq!(stats.admission.max_queue_depth, 1);
+        assert!((stats.admission.shed_ratio() - 0.5).abs() < 1e-12);
+        // the admitted request still completes on shutdown drain, and
+        // its slot frees up
+        drop(svc);
+        let r = rx_a.recv().expect("drained").expect("served");
+        assert_eq!(r.logits.len(), NUM_CLASSES);
+    }
+
+    #[test]
+    fn percentiles_flow_through_stats() {
+        let svc = InferenceService::start("/nonexistent".into(), BatchPolicy::default());
+        for i in 0..8 {
+            svc.infer(vec![0.1 * i as f32; IMG_ELEMS]).expect("served");
+        }
+        let s = svc.stats().expect("stats");
+        assert_eq!(s.latency_hist.count(), 8);
+        assert!(s.p50() <= s.p95());
+        assert!(s.p95() <= s.p99());
+        assert!(s.p99() > Duration::ZERO);
     }
 
     #[test]
@@ -662,7 +1072,9 @@ mod tests {
         svc.infer(vec![0.1; IMG_ELEMS]).expect("warm-up");
         svc.debug_hang_next_batch(Duration::from_millis(400));
         let r = svc.infer_timeout(vec![0.2; IMG_ELEMS], Duration::from_millis(30));
-        assert_eq!(r, Err(ServiceError::Timeout));
+        assert!(matches!(r, Err(ServiceError::Timeout)));
+        // stats stay readable mid-hang: they come from shared state,
+        // not a worker round-trip
         let stats = svc.stats().expect("stats");
         assert_eq!(stats.reliability.timed_out_requests, 1);
         // the worker was stalled, not wedged: it serves again afterwards
@@ -679,8 +1091,8 @@ mod tests {
         let baseline = svc.infer(vec![0.2; IMG_ELEMS]).expect("baseline");
         svc.debug_panic_next_batch();
         // the batch bounces off the panicking execution, the worker
-        // rebuilds its session, and the same request is served by the
-        // retry — degraded (slower) but correct, never a hung recv
+        // rebuilds its session, and the same batch is re-executed in
+        // place — degraded (slower) but correct, never a hung recv
         let retried = svc.infer(vec![0.2; IMG_ELEMS]).expect("served after panic");
         assert_eq!(retried.logits, baseline.logits, "rebuilt session must agree");
         let stats = svc.stats().expect("stats");

@@ -19,12 +19,12 @@
 use std::collections::HashMap;
 
 use ddc_pim::config::{ArchConfig, SimConfig};
-use ddc_pim::coordinator::{BatchPolicy, InferenceService};
+use ddc_pim::coordinator::{BatchPolicy, InferenceService, ServiceConfig, ServiceError};
 use ddc_pim::model::zoo;
 use ddc_pim::report::{render_named, ReportCtx};
 use ddc_pim::runtime::{
-    artifacts, verify_kernel_oracles, Backend, BackendKind, BackendSpec, FabricChoice,
-    IMG_ELEMS, NUM_CLASSES,
+    artifacts, resolve_grid, verify_kernel_oracles, Backend, BackendKind, BackendSpec,
+    FabricChoice, GridShape, IMG_ELEMS, NUM_CLASSES,
 };
 use ddc_pim::sim::simulate_network;
 use ddc_pim::util::rng::Rng;
@@ -136,6 +136,16 @@ fn run(args: &[String]) -> i32 {
             }
         },
     };
+    let grid = match flags.get("grid") {
+        None => GridShape::AUTO, // resolve via DDC_GRID, then 1x1
+        Some(v) => match v.parse::<GridShape>() {
+            Ok(g) => g,
+            Err(e) => {
+                eprintln!("--grid: {e}");
+                return 2;
+            }
+        },
+    };
     let spec = BackendSpec {
         kind: backend_kind,
         fabric,
@@ -143,6 +153,7 @@ fn run(args: &[String]) -> i32 {
         stream_kb,
         fault_ber_ppm,
         fault_seed,
+        grid,
     };
     match pos.first().map(String::as_str) {
         Some("info") => cmd_info(),
@@ -155,11 +166,14 @@ fn run(args: &[String]) -> i32 {
                 "usage: ddc-pim <info|simulate|report|selfcheck|serve> [flags]\n\
                  \n  simulate --model <name> [--baseline] [--batch N] [--scope i]\
                  \n  report <fig1|fig2|fig12|fig13|fig14|table2|table3|table4|table5|all>\
-                 \n  serve [--requests N] [--batch N]\
+                 \n  serve [--requests N] [--batch N] [--workers N] [--queue-depth N]\
                  \n  flags: --artifacts <dir>  (default: artifacts)\
                  \n         --backend <auto|reference|pjrt>  (default: auto)\
                  \n         --fabric <dense|bitsliced>  (reference conv path; default: dense)\
                  \n         --threads <N>  (exec pool width; default: DDC_THREADS or 1)\
+                 \n         --grid <RxC>  (macro grid for sharded convs, e.g. 2x2; default: DDC_GRID or 1x1)\
+                 \n         --workers <N>  (serving worker sessions; default: DDC_WORKERS or 1)\
+                 \n         --queue-depth <N>  (admission bound, 0 = unbounded; default: 0)\
                  \n         --stream-kb <N>  (weight-streaming budget in KiB; default: 0 = resident)\
                  \n         --fault-ppm <N>  (injected bit-error rate, cells per million; default: 0 = pristine)\
                  \n         --fault-seed <N>  (fault pattern seed; default: 0xDDC7)\
@@ -434,7 +448,104 @@ fn cmd_selfcheck(artifact_dir: &str, spec: BackendSpec) -> i32 {
         });
     }
 
-    // 6. golden replay when the python AOT pass has produced artifacts
+    // 6. multi-macro grid parity: sharding every conv across a 2x2
+    //    macro grid must be byte-identical to the single-macro plan —
+    //    the shard planner's disjoint-output proof, checked end to end
+    //    (reference backend only; the grid shape is a reference knob)
+    if spec.kind != BackendKind::Pjrt && backend.name() == "reference" {
+        check(&mut failures, "macro-grid parity (2x2 vs single-macro)", {
+            (|| -> anyhow::Result<()> {
+                let mut rng = Rng::new(306);
+                let img: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+                let mut want = vec![0f32; NUM_CLASSES];
+                let mut got = vec![0f32; NUM_CLASSES];
+                let single = BackendSpec {
+                    fabric: FabricChoice::BitSliced,
+                    grid: GridShape::SINGLE,
+                    ..spec
+                }
+                .create(artifact_dir)?;
+                single.prepare()?.infer_batch_into(&img, 1, &mut want)?;
+                let gridded = BackendSpec {
+                    fabric: FabricChoice::BitSliced,
+                    grid: GridShape::new(2, 2),
+                    ..spec
+                }
+                .create(artifact_dir)?;
+                gridded.prepare()?.infer_batch_into(&img, 1, &mut got)?;
+                anyhow::ensure!(got == want, "2x2 grid logits diverged from single-macro");
+                Ok(())
+            })()
+        });
+    }
+
+    // 7. sharded serving tier: a deterministic overload must shed with
+    //    the typed rejection (depth 1 + an hour-long batch window: the
+    //    queued request blocks the only slot), and a 2-worker cluster
+    //    must serve a burst with ordered SLO percentiles
+    if spec.kind != BackendKind::Pjrt && backend.name() == "reference" {
+        check(&mut failures, "sharded serving (admission + percentiles)", {
+            (|| -> anyhow::Result<()> {
+                let svc = InferenceService::start_cluster(
+                    spec,
+                    artifact_dir.to_string(),
+                    BatchPolicy {
+                        max_batch: 64,
+                        max_wait: std::time::Duration::from_secs(3600),
+                    },
+                    ServiceConfig {
+                        workers: 1,
+                        max_queue_depth: 1,
+                    },
+                );
+                let queued = svc.submit(vec![0.1; IMG_ELEMS]);
+                let shed = svc.submit(vec![0.2; IMG_ELEMS]).recv()?;
+                anyhow::ensure!(
+                    matches!(shed, Err(ServiceError::Overloaded)),
+                    "expected a typed Overloaded rejection, got {shed:?}"
+                );
+                let s = svc.stats().unwrap_or_default();
+                anyhow::ensure!(
+                    s.admission.rejected == 1 && s.admission.admitted == 1,
+                    "admission accounting off: {:?}",
+                    s.admission
+                );
+                drop(svc); // shutdown drains the queued request
+                queued
+                    .recv()?
+                    .map_err(|e| anyhow::anyhow!("queued request not drained: {e}"))?;
+                let cluster = InferenceService::start_cluster(
+                    spec,
+                    artifact_dir.to_string(),
+                    BatchPolicy::default(),
+                    ServiceConfig {
+                        workers: 2,
+                        max_queue_depth: 0,
+                    },
+                );
+                let mut rng = Rng::new(307);
+                for _ in 0..8 {
+                    let img: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+                    cluster
+                        .infer(img)
+                        .map_err(|e| anyhow::anyhow!("cluster request failed: {e}"))?;
+                }
+                let s = cluster.stats().unwrap_or_default();
+                anyhow::ensure!(s.requests == 8, "served {} of 8", s.requests);
+                anyhow::ensure!(s.admission.workers == 2, "worker count not reported");
+                anyhow::ensure!(
+                    s.p50() <= s.p95() && s.p95() <= s.p99() && s.p99() > std::time::Duration::ZERO,
+                    "percentiles out of order: p50={:?} p95={:?} p99={:?}",
+                    s.p50(),
+                    s.p95(),
+                    s.p99()
+                );
+                Ok(())
+            })()
+        });
+    }
+
+    // 8. golden replay when the python AOT pass has produced artifacts
     //    (the integer kernels carry their shapes, so replay works on any
     //    backend; the model golden is PJRT-only).  Only a *missing*
     //    goldens.json skips; a present-but-unreadable one is a FAIL.
@@ -520,11 +631,44 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendS
         .and_then(|v| v.parse().ok())
         .unwrap_or(32);
     let max_batch: usize = flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let workers: usize = match flags.get("workers") {
+        None => 0, // resolve via DDC_WORKERS, then 1
+        Some(v) => match v.parse::<usize>() {
+            Ok(w) if w >= 1 => w,
+            _ => {
+                eprintln!("--workers needs an integer >= 1, got {v:?}");
+                return 2;
+            }
+        },
+    };
+    let queue_depth: usize = match flags.get("queue-depth") {
+        None => 0, // unbounded: never shed
+        Some(v) => match v.parse::<usize>() {
+            Ok(d) => d,
+            _ => {
+                eprintln!("--queue-depth needs an integer >= 0, got {v:?}");
+                return 2;
+            }
+        },
+    };
     let policy = BatchPolicy {
         max_batch,
         ..Default::default()
     };
-    let svc = InferenceService::start_spec(spec, artifact_dir.to_string(), policy);
+    let svc = InferenceService::start_cluster(
+        spec,
+        artifact_dir.to_string(),
+        policy,
+        ServiceConfig {
+            workers,
+            max_queue_depth: queue_depth,
+        },
+    );
+    println!(
+        "serving with {} worker(s), queue depth {}",
+        svc.worker_count(),
+        if queue_depth == 0 { "unbounded".to_string() } else { queue_depth.to_string() },
+    );
     let mut rng = Rng::new(7);
     let start = std::time::Instant::now();
     let rxs: Vec<_> = (0..n)
@@ -533,7 +677,8 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendS
             svc.submit(img)
         })
         .collect();
-    let mut ok = 0;
+    let mut ok = 0usize;
+    let mut shed = 0usize;
     for rx in rxs {
         // a real client-side deadline: a wedged worker surfaces as an
         // error line, never as a hung CLI
@@ -551,6 +696,9 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendS
                     );
                 }
             }
+            // under a bounded queue, shed load is an expected outcome
+            // of the burst, not a serving failure: count it and go on
+            Ok(Err(ServiceError::Overloaded)) => shed += 1,
             Ok(Err(e)) => {
                 eprintln!("request failed: {e}");
                 return 1;
@@ -564,14 +712,46 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendS
     let elapsed = start.elapsed().as_secs_f64();
     let stats = svc.stats().unwrap_or_default();
     println!(
-        "served {ok}/{n} requests in {:.2}s = {:.1} req/s | batches {} | mean latency {:.2}ms | p99 {:.2}ms | max {:.2}ms",
+        "served {ok}/{n} requests in {:.2}s = {:.1} req/s | batches {} | mean latency {:.2}ms | max {:.2}ms",
         elapsed,
         n as f64 / elapsed,
         stats.batches,
         stats.mean_latency().as_secs_f64() * 1e3,
-        stats.p99().as_secs_f64() * 1e3,
         stats.max_latency.as_secs_f64() * 1e3,
     );
+    println!(
+        "latency percentiles: p50 {:.2}ms | p95 {:.2}ms | p99 {:.2}ms",
+        stats.p50().as_secs_f64() * 1e3,
+        stats.p95().as_secs_f64() * 1e3,
+        stats.p99().as_secs_f64() * 1e3,
+    );
+    let a = stats.admission;
+    println!(
+        "admission: admitted {} | rejected {} | shed ratio {:.3} | peak depth {} | workers {}",
+        a.admitted,
+        a.rejected,
+        a.shed_ratio(),
+        a.peak_queue_depth,
+        a.workers,
+    );
+    // modelled hardware latency: the cycle simulator's single-macro
+    // number, and the Amdahl-style projection onto the active grid
+    // (conv cycles split across tiles; FC/post-process stay serial)
+    let grid = resolve_grid(spec.grid);
+    let run = simulate_network(
+        &zoo::mobilenet_v2(),
+        &ArchConfig::ddc_pim(),
+        &SimConfig::ddc_full(),
+    );
+    if grid.tiles() > 1 {
+        println!(
+            "modelled hw latency: {:.3}ms single-macro -> {:.3}ms on the {grid} grid",
+            run.latency_ms(),
+            run.grid_scaled_latency_ms(grid.tiles()),
+        );
+    } else {
+        println!("modelled hw latency: {:.3}ms (single macro)", run.latency_ms());
+    }
     let p = stats.capacity;
     if p.capacity_bytes > 0 {
         println!(

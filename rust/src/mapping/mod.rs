@@ -14,12 +14,20 @@
 //!   and [`exec::plan_reload_passes`] splits a layer stack into reload
 //!   passes that fit a budget (consumed by the streaming session in
 //!   `runtime/reference.rs`).
+//! * [`shard`] — grid shard planner: splits one conv layer across a
+//!   [`crate::arch::grid::MacroGrid`]'s tiles as independent
+//!   single-macro plans with provably disjoint output slices
+//!   (std/pw convs by output-channel range, dw convs by output
+//!   pixel-row band), byte-identical to the single-macro plan at every
+//!   grid shape and pool width.
 
 pub mod exec;
 pub mod im2col;
 pub mod plan;
+pub mod shard;
 
 pub use exec::{
     plan_reload_passes, stored_weight_bytes, ExecCtx, ExecPool, PlannedConv, PlannedDwConv,
 };
 pub use plan::{plan_layer, plan_network, LayerPlan, PlanKind};
+pub use shard::{ShardedConv, ShardedDwConv};

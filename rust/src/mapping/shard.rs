@@ -1,0 +1,503 @@
+//! Grid shard planner: split one conv layer across a
+//! [`MacroGrid`]'s tiles as *independent single-macro plans* with
+//! provably disjoint output slices.
+//!
+//! Two sharding axes, one per layer family:
+//!
+//! * **std/pw convs** ([`ShardedConv`]) split by *output channel
+//!   range*.  FCC double-computing interleaves each stored pair `p`'s
+//!   twins at output channels `2p` / `2p+1`, so the FCC planner
+//!   partitions *stored pairs* — a pair range `[p0, p1)` owns the
+//!   contiguous channel range `[2p0, 2p1)` and slices contiguous rows
+//!   of the comp bank (`[2p0, 2p1)`) plus `means[p0..p1]`.  Regular
+//!   mode partitions plain channels.  Every pixel of every shard sees
+//!   the identical im2col window and the identical stored weight
+//!   vector as the single-macro plan, and psum accumulation walks the
+//!   same `l`-tile order (tile count depends only on `L` and the
+//!   compartment width), so each output element is byte-identical by
+//!   construction.
+//! * **dw convs** ([`ShardedDwConv`]) split *spatially* by output
+//!   pixel-row bands.  SAME padding makes naive slabs wrong at interior
+//!   seams (a tile's own zero padding would land where the full conv
+//!   reads real halo rows), so each shard takes a stride-aligned input
+//!   slab that *includes* the halo, lets the single-macro plan compute
+//!   a few lead/tail rows redundantly, and keeps only the band whose
+//!   windows are provably identical to the full plan's: rows whose
+//!   windows either lie entirely inside the slab, or pad exactly where
+//!   the full input pads (slab start == row 0 / slab end == row `H`).
+//!
+//! Both execute across the caller's existing
+//! [`ExecPool`], so grid × thread-width composes: byte-identity holds
+//! at every `(grid shape, pool width)` pair (`tests/grid_semantics.rs`
+//! sweeps the matrix).
+
+use std::ops::Range;
+
+use crate::arch::fault::{FaultConfig, FaultTally, ScrubReport};
+use crate::arch::grid::MacroGrid;
+use crate::fcc::{FccWeights, FilterBank};
+
+use super::exec::{ExecPool, PlannedConv, PlannedDwConv};
+use super::im2col::out_dims;
+
+/// Derive a shard-private fault stream so sibling tiles (physically
+/// distinct macros) fault independently but deterministically.
+fn shard_fault(fault: Option<&FaultConfig>, shard: usize) -> Option<FaultConfig> {
+    fault.map(|cfg| FaultConfig {
+        seed: cfg.seed ^ (shard as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        ..*cfg
+    })
+}
+
+/// One std/pw shard: a single-macro plan owning output channels
+/// `[ch0, ch0 + plan.out_channels())`.
+struct StdShard {
+    plan: PlannedConv,
+    ch0: usize,
+}
+
+/// A std/pw-conv split across a macro grid by output-channel range.
+/// Build once with [`ShardedConv::std_fcc`] / [`ShardedConv::std_regular`],
+/// then call [`ShardedConv::execute_batch_par`] per batch — same
+/// plan/execute lifecycle as [`PlannedConv`] (weights written exactly
+/// once, at build).
+pub struct ShardedConv {
+    shards: Vec<StdShard>,
+    oh: usize,
+    ow: usize,
+    n: usize,
+}
+
+impl ShardedConv {
+    /// Shard an FCC double-computing std/pw conv across `grid`:
+    /// stored-pair ranges, each shard an independent
+    /// [`PlannedConv::std_fcc_with`] over its slice of the comp bank.
+    #[allow(clippy::too_many_arguments)]
+    pub fn std_fcc(
+        grid: &MacroGrid,
+        h: usize,
+        w: usize,
+        c: usize,
+        fcc: &FccWeights,
+        k: usize,
+        stride: usize,
+        faults: Option<&FaultConfig>,
+    ) -> ShardedConv {
+        let l = k * k * c;
+        assert_eq!(fcc.comp.l, l, "filter length mismatch");
+        let n = fcc.comp.n;
+        let pairs = n / 2;
+        let geom = grid.geometry();
+        let shards = grid
+            .partition(pairs)
+            .into_iter()
+            .enumerate()
+            .map(|(si, pr)| {
+                let sub = FccWeights {
+                    comp: FilterBank::new(
+                        fcc.comp.data[2 * pr.start * l..2 * pr.end * l].to_vec(),
+                        2 * pr.len(),
+                        l,
+                    ),
+                    means: fcc.means[pr.clone()].to_vec(),
+                };
+                StdShard {
+                    plan: PlannedConv::std_fcc_faulted(
+                        geom,
+                        h,
+                        w,
+                        c,
+                        &sub,
+                        k,
+                        stride,
+                        shard_fault(faults, si).as_ref(),
+                    ),
+                    ch0: 2 * pr.start,
+                }
+            })
+            .collect();
+        let (oh, ow) = out_dims(h, w, stride);
+        ShardedConv { shards, oh, ow, n }
+    }
+
+    /// Shard a regular-mode std/pw conv across `grid` by plain output
+    /// channel ranges.
+    #[allow(clippy::too_many_arguments)]
+    pub fn std_regular(
+        grid: &MacroGrid,
+        h: usize,
+        w: usize,
+        c: usize,
+        filters: &[i32], // [N, L]
+        n: usize,
+        k: usize,
+        stride: usize,
+        faults: Option<&FaultConfig>,
+    ) -> ShardedConv {
+        let l = k * k * c;
+        assert_eq!(filters.len(), n * l, "filter bank shape mismatch");
+        let geom = grid.geometry();
+        let shards = grid
+            .partition(n)
+            .into_iter()
+            .enumerate()
+            .map(|(si, cr)| StdShard {
+                plan: PlannedConv::std_regular_faulted(
+                    geom,
+                    h,
+                    w,
+                    c,
+                    &filters[cr.start * l..cr.end * l],
+                    cr.len(),
+                    k,
+                    stride,
+                    shard_fault(faults, si).as_ref(),
+                ),
+                ch0: cr.start,
+            })
+            .collect();
+        let (oh, ow) = out_dims(h, w, stride);
+        ShardedConv { shards, oh, ow, n }
+    }
+
+    /// Output spatial dims `(oh, ow)`.
+    pub fn out_dims(&self) -> (usize, usize) {
+        (self.oh, self.ow)
+    }
+
+    /// Output channel count (all shards together).
+    pub fn out_channels(&self) -> usize {
+        self.n
+    }
+
+    /// `execute` output length (`oh * ow * n`).
+    pub fn out_len(&self) -> usize {
+        self.oh * self.ow * self.n
+    }
+
+    /// Number of grid tiles holding a non-empty shard.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard output channel ranges, in tile order — the disjoint /
+    /// covering slices the grid tests pin.
+    pub fn channel_ranges(&self) -> Vec<Range<usize>> {
+        self.shards
+            .iter()
+            .map(|s| s.ch0..s.ch0 + s.plan.out_channels())
+            .collect()
+    }
+
+    /// Total SRAM weight writes across all shards (constant after
+    /// build — the residency invariant, per shard).
+    pub fn weight_writes(&self) -> u64 {
+        self.shards.iter().map(|s| s.plan.weight_writes()).sum()
+    }
+
+    /// Weight-reload passes across all shards at build time.
+    pub fn load_passes(&self) -> usize {
+        self.shards.iter().map(|s| s.plan.load_passes()).sum()
+    }
+
+    /// Bytes of stored INT8 weights resident across the whole grid.
+    pub fn weight_footprint_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.plan.weight_footprint_bytes()).sum()
+    }
+
+    /// Integrity-scrub every shard's macros, returning the merged
+    /// report (see [`PlannedConv::scrub`]).
+    pub fn scrub(&mut self) -> ScrubReport {
+        let mut report = ScrubReport::default();
+        for s in &mut self.shards {
+            report.merge(&s.plan.scrub());
+        }
+        report
+    }
+
+    /// Merged lifetime fault totals across every shard's macros.
+    pub fn fault_tally(&self) -> FaultTally {
+        let mut tally = FaultTally::default();
+        for s in &self.shards {
+            tally.merge(&s.plan.fault_tally());
+        }
+        tally
+    }
+
+    /// Batched parallel execute across the grid: every shard runs
+    /// [`PlannedConv::execute_batch_par`] on the shared pool into
+    /// `scratch` (a `[batch * P, shard_n]` staging buffer, grown once),
+    /// then scatters its contiguous channel slice into the caller's
+    /// `[batch * P, N]` output.  Shards run in tile order; because each
+    /// owns a disjoint channel range, the result is independent of that
+    /// order and byte-identical to the single-macro plan at every grid
+    /// shape and pool width.
+    pub fn execute_batch_par(
+        &self,
+        input: &[i32],
+        batch: usize,
+        pool: &mut ExecPool,
+        scratch: &mut Vec<i64>,
+        out: &mut [i64],
+    ) {
+        assert_eq!(out.len(), batch * self.out_len(), "output shape mismatch");
+        let rows = batch * self.oh * self.ow;
+        for shard in &self.shards {
+            let sn = shard.plan.out_channels();
+            scratch.resize(rows * sn, 0);
+            shard.plan.execute_batch_par(input, batch, pool, scratch);
+            for r in 0..rows {
+                out[r * self.n + shard.ch0..r * self.n + shard.ch0 + sn]
+                    .copy_from_slice(&scratch[r * sn..(r + 1) * sn]);
+            }
+        }
+    }
+
+    /// Single-input convenience twin of
+    /// [`ShardedConv::execute_batch_par`].
+    pub fn execute_par(
+        &self,
+        input: &[i32],
+        pool: &mut ExecPool,
+        scratch: &mut Vec<i64>,
+        out: &mut [i64],
+    ) {
+        self.execute_batch_par(input, 1, pool, scratch, out)
+    }
+}
+
+/// One dw shard: a single-macro plan over an input row slab, keeping
+/// output rows `[y0, y1)` (plan-local rows `[t_skip, t_skip + y1 - y0)`).
+struct DwShard {
+    plan: PlannedDwConv,
+    /// Output row band this shard owns in the full `[oh, ow, C]` output.
+    y0: usize,
+    y1: usize,
+    /// First input row of the slab (stride-aligned).
+    a: usize,
+    /// Input rows in the slab.
+    h_s: usize,
+    /// Leading plan-local output rows computed redundantly (halo
+    /// discard).
+    t_skip: usize,
+}
+
+/// A dw-conv split across a macro grid by output pixel-row bands.
+pub struct ShardedDwConv {
+    shards: Vec<DwShard>,
+    w: usize,
+    c: usize,
+    oh: usize,
+    ow: usize,
+}
+
+/// Slab math shared by both dw shard builders: for output rows
+/// `[y0, y1)` of a SAME-padded conv, the stride-aligned input slab and
+/// the lead rows to discard so every *kept* row's window is identical
+/// to the full plan's (interior seams read real halo rows from the
+/// slab; top/bottom padding only ever fires where the full plan also
+/// pads).
+fn dw_slab(h: usize, k: usize, stride: usize, y0: usize, y1: usize) -> (usize, usize, usize) {
+    let pad = (k - 1) / 2;
+    let lead = pad.div_ceil(stride);
+    let y0p = y0.saturating_sub(lead);
+    let t_skip = y0 - y0p;
+    let a = y0p * stride;
+    let end_s = (y1 - 1 - y0p) * stride + k - pad;
+    let h_s = end_s.min(h - a);
+    (a, h_s, t_skip)
+}
+
+impl ShardedDwConv {
+    /// Shard an FCC (+DBIS / reconfig) dw conv spatially across `grid`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fcc(
+        grid: &MacroGrid,
+        h: usize,
+        w: usize,
+        c: usize,
+        fcc: &FccWeights, // [C, K*K] comp filters, channel pairs
+        k: usize,
+        stride: usize,
+        reconfig: bool,
+    ) -> ShardedDwConv {
+        Self::build(grid, h, w, c, k, stride, |h_s| {
+            PlannedDwConv::fcc_with(grid.geometry(), h_s, w, c, fcc, k, stride, reconfig)
+        })
+    }
+
+    /// Shard a regular-mode dw conv spatially across `grid`.
+    pub fn regular(
+        grid: &MacroGrid,
+        h: usize,
+        w: usize,
+        c: usize,
+        filters: &[i32], // [C, K*K]
+        k: usize,
+        stride: usize,
+    ) -> ShardedDwConv {
+        Self::build(grid, h, w, c, k, stride, |h_s| {
+            PlannedDwConv::regular_with(grid.geometry(), h_s, w, c, filters, k, stride)
+        })
+    }
+
+    fn build(
+        grid: &MacroGrid,
+        h: usize,
+        w: usize,
+        c: usize,
+        k: usize,
+        stride: usize,
+        plan_slab: impl Fn(usize) -> PlannedDwConv,
+    ) -> ShardedDwConv {
+        let (oh, ow) = out_dims(h, w, stride);
+        let shards = grid
+            .partition(oh)
+            .into_iter()
+            .map(|band| {
+                let (a, h_s, t_skip) = dw_slab(h, k, stride, band.start, band.end);
+                DwShard {
+                    plan: plan_slab(h_s),
+                    y0: band.start,
+                    y1: band.end,
+                    a,
+                    h_s,
+                    t_skip,
+                }
+            })
+            .collect();
+        ShardedDwConv { shards, w, c, oh, ow }
+    }
+
+    /// Output spatial dims `(oh, ow)`.
+    pub fn out_dims(&self) -> (usize, usize) {
+        (self.oh, self.ow)
+    }
+
+    /// `execute` output length (`oh * ow * c`).
+    pub fn out_len(&self) -> usize {
+        self.oh * self.ow * self.c
+    }
+
+    /// Number of grid tiles holding a non-empty shard.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard output pixel-row bands, in tile order — disjoint and
+    /// covering `0..oh`.
+    pub fn row_ranges(&self) -> Vec<Range<usize>> {
+        self.shards.iter().map(|s| s.y0..s.y1).collect()
+    }
+
+    /// Total SRAM weight writes across all shards (constant after
+    /// build).
+    pub fn weight_writes(&self) -> u64 {
+        self.shards.iter().map(|s| s.plan.weight_writes()).sum()
+    }
+
+    /// Parallel execute across the grid: each shard runs its plan over
+    /// its (contiguous) input row slab on the shared pool, into
+    /// `scratch`, then copies its kept row band — a contiguous slice of
+    /// the row-major `[oh, ow, C]` output — into place.  Halo rows are
+    /// computed redundantly and discarded; kept rows are byte-identical
+    /// to the single-macro plan (see the module docs).
+    pub fn execute_par(
+        &self,
+        input: &[i32],
+        pool: &mut ExecPool,
+        scratch: &mut Vec<i64>,
+        out: &mut [i64],
+    ) {
+        assert_eq!(out.len(), self.out_len(), "output shape mismatch");
+        let row = self.ow * self.c; // one output pixel row, flattened
+        let irow = self.w * self.c; // one input row, flattened
+        for shard in &self.shards {
+            scratch.resize(shard.plan.out_len(), 0);
+            shard.plan.execute_par(
+                &input[shard.a * irow..(shard.a + shard.h_s) * irow],
+                pool,
+                scratch,
+            );
+            let keep = shard.y1 - shard.y0;
+            out[shard.y0 * row..shard.y1 * row]
+                .copy_from_slice(&scratch[shard.t_skip * row..(shard.t_skip + keep) * row]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::grid::{GridShape, MacroGrid};
+    use crate::arch::pim_core::MacroGeometry;
+    use crate::fcc::fcc_transform;
+    use crate::util::rng::Rng;
+
+    fn bank(rng: &mut Rng, n: usize, l: usize) -> FilterBank {
+        FilterBank::new((0..n * l).map(|_| rng.range_i64(-128, 128) as i32).collect(), n, l)
+    }
+
+    #[test]
+    fn dw_slab_math_stays_in_bounds() {
+        for h in 1..20 {
+            for k in [1usize, 3, 5] {
+                for stride in [1usize, 2] {
+                    let (oh, _) = out_dims(h, h, stride);
+                    for y0 in 0..oh {
+                        for y1 in y0 + 1..=oh {
+                            let (a, h_s, t_skip) = dw_slab(h, k, stride, y0, y1);
+                            assert!(a + h_s <= h, "slab [{a}, {}) exceeds h={h}", a + h_s);
+                            assert!(h_s >= 1);
+                            let (oh_s, _) = out_dims(h_s, 1, stride);
+                            assert!(
+                                oh_s >= t_skip + (y1 - y0),
+                                "slab rows {h_s} yield {oh_s} < skip {t_skip} + keep {}",
+                                y1 - y0
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fcc_shards_agree_with_single_macro() {
+        // direct planner-level parity (the full grid × fabric × mode
+        // matrix lives in tests/grid_semantics.rs)
+        let mut rng = Rng::new(0x51AD);
+        let (h, w, c, n, k) = (6usize, 5, 3, 8, 3);
+        let fcc = fcc_transform(&bank(&mut rng, n, k * k * c));
+        let input: Vec<i32> = (0..h * w * c).map(|_| rng.range_i64(-128, 128) as i32).collect();
+        let single = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+        let mut pool = ExecPool::new(1);
+        let mut want = vec![0i64; single.out_len()];
+        single.execute_par(&input, &mut pool, &mut want);
+        let grid = MacroGrid::new(GridShape::new(2, 2), MacroGeometry::paper());
+        let sharded = ShardedConv::std_fcc(&grid, h, w, c, &fcc, k, 1, None);
+        assert_eq!(sharded.shard_count(), 4);
+        let mut scratch = Vec::new();
+        let mut got = vec![0i64; sharded.out_len()];
+        sharded.execute_par(&input, &mut pool, &mut scratch, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dw_shards_agree_with_single_macro() {
+        let mut rng = Rng::new(0xD3);
+        let (h, w, c, k) = (9usize, 7, 4, 3);
+        let fcc = fcc_transform(&bank(&mut rng, c, k * k));
+        let input: Vec<i32> = (0..h * w * c).map(|_| rng.range_i64(-128, 128) as i32).collect();
+        let single = PlannedDwConv::fcc(h, w, c, &fcc, k, 1, true);
+        let mut pool = ExecPool::new(1);
+        let mut want = vec![0i64; single.out_len()];
+        single.execute_par(&input, &mut pool, &mut want);
+        let grid = MacroGrid::new(GridShape::new(1, 3), MacroGeometry::paper());
+        let sharded = ShardedDwConv::fcc(&grid, h, w, c, &fcc, k, 1, true);
+        let mut scratch = Vec::new();
+        let mut got = vec![0i64; sharded.out_len()];
+        sharded.execute_par(&input, &mut pool, &mut scratch, &mut got);
+        assert_eq!(got, want);
+    }
+}

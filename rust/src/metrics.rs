@@ -215,6 +215,53 @@ impl ReliabilityStats {
     }
 }
 
+/// Admission-control counters for the serving tier: how much load the
+/// bounded ingress queue admitted, shed, and peaked at.
+///
+/// Produced by the coordinator's dispatcher (shared across all worker
+/// sessions — the queue is one, however many workers drain it).
+/// All-zero (the [`Default`]) means "no request ever arrived".  The
+/// state machine is simple by design: a request is **admitted** when
+/// the in-flight depth (queued + executing) is below the bound, and
+/// **rejected** with the typed `ServiceError::Overloaded` otherwise —
+/// load is shed at the door, never by unbounded queue growth or a
+/// worker-side panic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Requests admitted past the queue-depth bound.
+    pub admitted: u64,
+    /// Requests rejected at the door (`ServiceError::Overloaded`).
+    pub rejected: u64,
+    /// Queue-depth bound in force (0 = unbounded; never shed).
+    pub max_queue_depth: u64,
+    /// Peak in-flight depth observed (queued + executing).
+    pub peak_queue_depth: u64,
+    /// Worker sessions draining the queue.
+    pub workers: u64,
+}
+
+impl AdmissionStats {
+    /// Fraction of arriving requests shed at the door (0 when nothing
+    /// ever arrived).
+    pub fn shed_ratio(&self) -> f64 {
+        let arrived = self.admitted + self.rejected;
+        if arrived == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / arrived as f64
+    }
+
+    /// Merge another dispatcher's counters into this one (sums for
+    /// event counts, max for peaks/bounds, sum for workers).
+    pub fn merge(&mut self, other: &AdmissionStats) {
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.max_queue_depth = self.max_queue_depth.max(other.max_queue_depth);
+        self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
+        self.workers += other.workers;
+    }
+}
+
 /// Throughput accumulator (ops over wall time).
 #[derive(Debug, Clone, Default)]
 pub struct Throughput {
@@ -301,6 +348,33 @@ mod tests {
         let p = CapacityPressure::default();
         assert_eq!(p.peak_occupancy(), 0.0);
         assert_eq!(p.overlap_ratio(), 1.0);
+    }
+
+    #[test]
+    fn admission_stats_shed_ratio_and_merge() {
+        let empty = AdmissionStats::default();
+        assert_eq!(empty.shed_ratio(), 0.0);
+        let mut a = AdmissionStats {
+            admitted: 6,
+            rejected: 2,
+            max_queue_depth: 8,
+            peak_queue_depth: 5,
+            workers: 2,
+        };
+        assert!((a.shed_ratio() - 0.25).abs() < 1e-12);
+        let b = AdmissionStats {
+            admitted: 4,
+            rejected: 0,
+            max_queue_depth: 4,
+            peak_queue_depth: 7,
+            workers: 1,
+        };
+        a.merge(&b);
+        assert_eq!(a.admitted, 10);
+        assert_eq!(a.rejected, 2);
+        assert_eq!(a.max_queue_depth, 8); // max, not sum
+        assert_eq!(a.peak_queue_depth, 7);
+        assert_eq!(a.workers, 3);
     }
 
     #[test]

@@ -228,6 +228,14 @@ pub struct BackendSpec {
     /// Seed for the injected fault pattern (only read when
     /// `fault_ber_ppm > 0`); same seed + same BER = same faults.
     pub fault_seed: u64,
+    /// Macro-grid shape for reference sessions on the bit-sliced
+    /// fabric: non-trivial shapes shard each conv layer across a
+    /// `rows × cols` grid of macros via the shard planner
+    /// (`crate::mapping::shard`), byte-identical to single-macro
+    /// execution at every shape.  [`GridShape::AUTO`] (the default)
+    /// resolves through the `DDC_GRID` environment variable and falls
+    /// back to `1x1`.  Ignored by the dense fabric and the PJRT path.
+    pub grid: crate::arch::grid::GridShape,
 }
 
 impl BackendSpec {
@@ -248,7 +256,8 @@ impl BackendSpec {
                     super::reference::DEFAULT_SEED,
                     self.fabric,
                 )
-                .with_threads(self.threads);
+                .with_threads(self.threads)
+                .with_grid(self.grid);
                 if self.stream_kb > 0 {
                     be = be.with_streaming(super::reference::StreamConfig::budget(
                         self.stream_kb * 1024,

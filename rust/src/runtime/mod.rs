@@ -50,5 +50,9 @@ pub use backend::{
 };
 pub use reference::{ReferenceBackend, ReferenceSession, StreamConfig};
 
+// the grid shape rides on BackendSpec; re-export it so spec builders
+// (service config, CLI, tests) don't need to reach into `arch`
+pub use crate::arch::grid::{resolve_grid, GridShape};
+
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, PjrtBackend, PjrtSession, Runtime};

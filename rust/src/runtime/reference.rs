@@ -62,10 +62,12 @@ use std::time::{Duration, Instant};
 use anyhow::{ensure, Result};
 
 use crate::arch::fault::{FaultConfig, FaultTally};
+use crate::arch::grid::{GridShape, MacroGrid};
 use crate::arch::mem::StagedBuffer;
 use crate::arch::pim_core::MacroGeometry;
 use crate::fcc::{fcc_transform, FccWeights, FilterBank};
 use crate::mapping::exec::{plan_reload_passes, stored_weight_bytes, ExecPool, PlannedConv};
+use crate::mapping::shard::ShardedConv;
 use crate::mapping::im2col::{im2col_into, out_dims};
 use crate::metrics::{CapacityPressure, ReliabilityStats};
 use crate::util::pool::{resolve_threads, SharedMut};
@@ -341,6 +343,9 @@ pub struct ReferenceBackend {
     threads: usize,
     /// Macro geometry bit-sliced sessions plan onto (default: paper).
     geometry: MacroGeometry,
+    /// Macro-grid shape bit-sliced sessions shard conv layers across
+    /// ([`GridShape::AUTO`] = resolve from `DDC_GRID`, then `1x1`).
+    grid: GridShape,
     /// Weight-streaming config for planned sessions (`None` = every
     /// conv layer stays resident for the session's lifetime).
     streaming: Option<StreamConfig>,
@@ -390,6 +395,7 @@ impl ReferenceBackend {
             fabric,
             threads: 0,
             geometry: MacroGeometry::paper(),
+            grid: GridShape::AUTO,
             streaming: None,
             fault: None,
         }
@@ -439,6 +445,21 @@ impl ReferenceBackend {
         self
     }
 
+    /// Shard bit-sliced conv layers across a `rows × cols` macro-grid
+    /// (the multi-macro scale-out view; see [`crate::arch::grid`]).
+    /// Every shape produces byte-identical logits — each tile plans an
+    /// independent shard with a provably disjoint output slice — so
+    /// this knob changes *where* work runs, never *what* it computes.
+    /// [`GridShape::AUTO`] resolves through `DDC_GRID`, then `1x1`.
+    /// No-op on the dense fabric; streamed (capacity-budgeted)
+    /// sessions keep their layers single-macro — the streaming pass
+    /// store is per-macro residency bookkeeping, and mixing the two
+    /// axes is future work tracked in the ROADMAP.
+    pub fn with_grid(mut self, grid: GridShape) -> ReferenceBackend {
+        self.grid = grid;
+        self
+    }
+
     /// Stream conv weights through a finite capacity budget instead of
     /// keeping the whole stack resident.  Logits are byte-identical to
     /// the resident path for every budget; only the reload schedule
@@ -478,6 +499,7 @@ impl ReferenceBackend {
             self.fabric,
             self.threads,
             self.geometry,
+            self.grid,
             self.streaming,
             self.fault,
         )
@@ -501,6 +523,12 @@ enum SessionLayer {
     /// FCC conv on the bit-sliced functional fabric: weights resident
     /// in the planned macro(s), written once at prepare time.
     ConvFabric { plan: PlannedConv, shift: u32 },
+    /// FCC conv sharded across a multi-tile macro-grid: one
+    /// independent single-macro plan per tile, each owning a disjoint
+    /// output-channel slice (see [`crate::mapping::shard`]).  Chosen
+    /// instead of [`SessionLayer::ConvFabric`] when the resolved grid
+    /// has more than one tile; byte-identical to it at every shape.
+    ConvFabricGrid { plan: ShardedConv, shift: u32 },
     /// FCC conv whose execution form lives in the streaming pass store
     /// (`slot` indexes [`StreamState`]'s spec list); weights are staged
     /// into the capacity budget on demand and may be evicted between
@@ -870,6 +898,10 @@ pub struct ReferenceSession {
     /// Fabric conv raw accumulators for the whole batch,
     /// `[batch * P, cout]`.
     out64: Vec<i64>,
+    /// Grid-shard staging: one shard's `[batch * P, shard_n]`
+    /// accumulators before the scatter into `out64` (grown once; empty
+    /// on 1x1 grids and the dense fabric).
+    shard64: Vec<i64>,
     /// Execution pool: shared staging + per-lane scratch, kept warm
     /// for the session's lifetime.  Bit-sliced convs shard pixel
     /// blocks across it; dense convs shard MVM row blocks.
@@ -879,14 +911,19 @@ pub struct ReferenceSession {
 }
 
 impl ReferenceSession {
+    #[allow(clippy::too_many_arguments)]
     fn plan(
         layers: &[RefLayer],
         fabric: FabricChoice,
         threads: usize,
         geometry: MacroGeometry,
+        grid: GridShape,
         streaming: Option<StreamConfig>,
         fault: Option<FaultConfig>,
     ) -> Result<ReferenceSession> {
+        // resolve AUTO (DDC_GRID env, then 1x1) exactly once so every
+        // conv layer plans against the same concrete shape
+        let grid = MacroGrid::new(grid, geometry);
         let mut planned = Vec::with_capacity(layers.len());
         let mut specs: Vec<ConvSpec> = Vec::new();
         // walk the activation dims so fabric plans know their geometry
@@ -937,6 +974,24 @@ impl ReferenceSession {
                                 means: fcc.means.clone(),
                                 shift: *shift,
                             },
+                            // a multi-tile grid shards the layer; 1x1
+                            // keeps the exact single-macro plan (the
+                            // degenerate grid is not a 1-shard wrapper)
+                            FabricChoice::BitSliced if grid.tiles() > 1 => {
+                                SessionLayer::ConvFabricGrid {
+                                    plan: ShardedConv::std_fcc(
+                                        &grid,
+                                        h,
+                                        w,
+                                        *cin,
+                                        fcc,
+                                        *k,
+                                        *stride,
+                                        lf.as_ref(),
+                                    ),
+                                    shift: *shift,
+                                }
+                            }
                             FabricChoice::BitSliced => SessionLayer::ConvFabric {
                                 plan: PlannedConv::std_fcc_faulted(
                                     geometry,
@@ -995,6 +1050,7 @@ impl ReferenceSession {
             raw: Vec::new(),
             psum: Vec::new(),
             out64: Vec::new(),
+            shard64: Vec::new(),
             pool: ExecPool::new(width),
             stream: streaming.map(|cfg| StreamState::new(specs, cfg)),
         })
@@ -1016,6 +1072,28 @@ impl ReferenceSession {
             .iter()
             .map(|l| match l {
                 SessionLayer::ConvFabric { plan, .. } => plan.weight_writes(),
+                SessionLayer::ConvFabricGrid { plan, .. } => plan.weight_writes(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Number of conv layers planned as multi-tile grid shards (0 on
+    /// `1x1` grids, the dense fabric, and streamed sessions — those
+    /// keep single-macro plans).
+    pub fn grid_layers(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l, SessionLayer::ConvFabricGrid { .. }))
+            .count()
+    }
+
+    /// Total shard count across all grid-planned conv layers.
+    pub fn grid_shards(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                SessionLayer::ConvFabricGrid { plan, .. } => plan.shard_count(),
                 _ => 0,
             })
             .sum()
@@ -1043,8 +1121,10 @@ impl ReferenceSession {
     pub fn reliability_stats(&self) -> ReliabilityStats {
         let mut t = FaultTally::default();
         for l in &self.layers {
-            if let SessionLayer::ConvFabric { plan, .. } = l {
-                t.merge(&plan.fault_tally());
+            match l {
+                SessionLayer::ConvFabric { plan, .. } => t.merge(&plan.fault_tally()),
+                SessionLayer::ConvFabricGrid { plan, .. } => t.merge(&plan.fault_tally()),
+                _ => {}
             }
         }
         let mut stats = ReliabilityStats::default();
@@ -1072,8 +1152,14 @@ impl ReferenceSession {
     /// [`ReliabilityStats`].  A clean fabric makes this a no-op.
     pub fn scrub_fabric(&mut self) -> ReliabilityStats {
         for l in &mut self.layers {
-            if let SessionLayer::ConvFabric { plan, .. } = l {
-                let _ = plan.scrub();
+            match l {
+                SessionLayer::ConvFabric { plan, .. } => {
+                    let _ = plan.scrub();
+                }
+                SessionLayer::ConvFabricGrid { plan, .. } => {
+                    let _ = plan.scrub();
+                }
+                _ => {}
             }
         }
         if let Some(st) = &mut self.stream {
@@ -1205,6 +1291,41 @@ fn run_fabric_conv(
     *c = cout;
 }
 
+/// Execute one grid-sharded fabric conv over the batch: every tile's
+/// shard runs on the shared pool and scatters its disjoint channel
+/// slice into `out64` (see [`ShardedConv::execute_batch_par`]), then
+/// the same requant/ReLU + ping-pong as [`run_fabric_conv`] — so a
+/// grid layer differs from a single-macro layer only in where the raw
+/// accumulators come from, never in their values.
+#[allow(clippy::too_many_arguments)]
+fn run_fabric_conv_grid(
+    plan: &ShardedConv,
+    shift: u32,
+    batch: usize,
+    h: &mut usize,
+    w: &mut usize,
+    c: &mut usize,
+    act: &mut Vec<i32>,
+    act_next: &mut Vec<i32>,
+    out64: &mut Vec<i64>,
+    shard64: &mut Vec<i64>,
+    pool: &mut ExecPool,
+) {
+    let (oh, ow) = plan.out_dims();
+    let pixels = oh * ow;
+    let cout = plan.out_channels();
+    act_next.resize(batch * pixels * cout, 0);
+    out64.resize(batch * pixels * cout, 0); // every channel is scattered into
+    plan.execute_batch_par(&act[..batch * *h * *w * *c], batch, pool, shard64, out64);
+    for (dst, &v) in act_next.iter_mut().zip(out64.iter()) {
+        *dst = requant_relu(v, shift);
+    }
+    std::mem::swap(act, act_next);
+    *h = oh;
+    *w = ow;
+    *c = cout;
+}
+
 impl Session for ReferenceSession {
     fn name(&self) -> &'static str {
         "reference"
@@ -1247,6 +1368,7 @@ impl Session for ReferenceSession {
             raw,
             psum,
             out64,
+            shard64,
             pool,
             stream,
         } = self;
@@ -1299,6 +1421,19 @@ impl Session for ReferenceSession {
                     act,
                     act_next,
                     out64,
+                    pool,
+                ),
+                SessionLayer::ConvFabricGrid { plan, shift } => run_fabric_conv_grid(
+                    plan,
+                    *shift,
+                    batch,
+                    &mut h,
+                    &mut w,
+                    &mut c,
+                    act,
+                    act_next,
+                    out64,
+                    shard64,
                     pool,
                 ),
                 SessionLayer::ConvStreamed { slot } => {
@@ -1606,6 +1741,47 @@ mod tests {
             assert_eq!(out, want, "fabric logits drifted at {threads} threads");
             want = out;
         }
+    }
+
+    #[test]
+    fn grid_fabric_sessions_are_bit_identical() {
+        // a multi-tile macro-grid must never change logits: every tile
+        // owns a disjoint output-channel slice of each conv layer
+        let mut rng = Rng::new(41);
+        let batch = 2;
+        let x: Vec<f32> = (0..batch * IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+        let want = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+            .with_grid(GridShape::SINGLE)
+            .infer_batch(&x, batch)
+            .unwrap();
+        for (rows, cols) in [(1usize, 2usize), (2, 2), (2, 4)] {
+            let be = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+                .with_grid(GridShape::new(rows, cols))
+                .with_threads(2);
+            let session = be.plan().unwrap();
+            assert_eq!(session.grid_layers(), 2, "both convs must shard");
+            assert!(session.grid_shards() > 2);
+            assert!(session.fabric_weight_writes() > 0);
+            let mut s = session;
+            let mut out = vec![0f32; batch * NUM_CLASSES];
+            s.infer_batch_into(&x, batch, &mut out).unwrap();
+            assert_eq!(out, want, "grid logits drifted at {rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn single_tile_grid_keeps_single_macro_plans() {
+        let s = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+            .with_grid(GridShape::SINGLE)
+            .plan()
+            .unwrap();
+        assert_eq!(s.grid_layers(), 0, "1x1 is the degenerate single-macro path");
+        // the dense fabric ignores the grid entirely
+        let s = ReferenceBackend::seeded(DEFAULT_SEED)
+            .with_grid(GridShape::new(2, 2))
+            .plan()
+            .unwrap();
+        assert_eq!(s.grid_layers(), 0);
     }
 
     #[test]

@@ -96,6 +96,25 @@ impl RunStats {
         dw as f64 / self.total_cycles.max(1) as f64
     }
 
+    /// Modelled latency when the conv layers are sharded across a
+    /// `tiles`-tile macro-grid (see [`crate::arch::grid::MacroGrid`]):
+    /// conv-layer cycles scale by `1/tiles` (each tile executes a
+    /// balanced disjoint shard of the output volume concurrently),
+    /// while FC and post-processing stay single-macro — an Amdahl-style
+    /// first-order model, deliberately ignoring halo recompute and
+    /// mesh traffic.  `tiles <= 1` returns [`RunStats::latency_ms`].
+    pub fn grid_scaled_latency_ms(&self, tiles: usize) -> f64 {
+        if tiles <= 1 {
+            return self.latency_ms();
+        }
+        let conv = self.cycles_where(|l| {
+            !matches!(l.kind, PlanKind::Fc | PlanKind::PostProcess)
+        });
+        let serial = self.total_cycles - conv;
+        let scaled = serial + conv.div_ceil(tiles as u64);
+        scaled as f64 / (self.freq_mhz * 1e3)
+    }
+
     /// MVM-only latency (paper Fig. 12(a) reports 18.02 of 20.97 ms).
     pub fn mvm_cycles(&self) -> u64 {
         self.layers.iter().map(|l| l.compute_cycles).sum()
@@ -222,6 +241,21 @@ mod tests {
         // reloads = passes beyond the first residency: (1-1) + (3-1)
         assert_eq!(s.total_weight_reloads(), 2);
         assert!((s.peak_weight_occupancy() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid_scaling_divides_conv_cycles_only() {
+        let mut s = stats(400, 0);
+        s.layers = vec![layer(0, 1, 0.5), layer(0, 1, 0.5)]; // 200 conv cycles
+        let mut fc = layer(0, 1, 0.1);
+        fc.kind = PlanKind::Fc;
+        fc.cycles = 200;
+        s.layers.push(fc);
+        // 1 tile: unchanged; 4 tiles: 200 serial + 200/4 conv = 250
+        assert!((s.grid_scaled_latency_ms(1) - s.latency_ms()).abs() < 1e-12);
+        let scaled = s.grid_scaled_latency_ms(4);
+        assert!((scaled - 250.0 / (333.0 * 1e3)).abs() < 1e-12);
+        assert!(scaled < s.latency_ms());
     }
 
     #[test]

@@ -48,24 +48,33 @@ use std::thread::JoinHandle;
 /// geometry this repo simulates).
 pub const MAX_THREADS: usize = 64;
 
-/// Resolve a requested pool width: explicit `requested >= 1` wins,
+/// Resolve a requested pool width.  Precedence (same contract as
+/// `DDC_GRID` / `DDC_WORKERS`): an explicit `requested >= 1` wins,
 /// `0` means "unset" and falls back to the `DDC_THREADS` environment
-/// variable, then to 1 (the serial path).  The result is clamped to
+/// variable, then to 1 (the serial path).  An unparseable
+/// `DDC_THREADS` is *warned about* on stderr and treated as unset —
+/// never silently ignored.  The result is clamped to
 /// `1..=`[`MAX_THREADS`].
 pub fn resolve_threads(requested: usize) -> usize {
     let n = if requested > 0 {
         requested
     } else {
-        std::env::var("DDC_THREADS")
-            .ok()
-            .and_then(|v| parse_threads_var(&v))
-            .unwrap_or(1)
+        match std::env::var("DDC_THREADS") {
+            Ok(raw) => parse_threads_var(&raw).unwrap_or_else(|| {
+                eprintln!(
+                    "[ddc-config] ignoring DDC_THREADS={raw:?}: want a positive integer; using 1"
+                );
+                1
+            }),
+            Err(_) => 1,
+        }
     };
     n.clamp(1, MAX_THREADS)
 }
 
 /// Parse a `DDC_THREADS` value: a positive integer (clamping happens in
-/// [`resolve_threads`]); anything else is ignored.
+/// [`resolve_threads`]); anything else yields `None` so the caller can
+/// warn.
 fn parse_threads_var(v: &str) -> Option<usize> {
     match v.trim().parse::<usize>() {
         Ok(n) if n >= 1 => Some(n),

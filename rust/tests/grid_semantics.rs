@@ -1,0 +1,232 @@
+//! Integration: multi-macro grid sharding semantics.
+//!
+//! The contract under test (DESIGN.md §Multi-macro scale-out): a
+//! sharded conv on *any* grid shape is **byte-identical** to the
+//! single-macro plan — pointwise/standard convs shard by output-channel
+//! (FCC pair) range, depthwise convs shard by output-row band with
+//! redundant halo compute — and the shard slices are provably disjoint
+//! and covering.  Everything here runs on the hermetic seeded fabric;
+//! no artifacts, no environment knobs (grid shapes are explicit, so the
+//! parallel test harness never races on `DDC_GRID`).
+
+use ddc_pim::arch::grid::{GridShape, MacroGrid};
+use ddc_pim::arch::pim_core::MacroGeometry;
+use ddc_pim::fcc::{fcc_transform, FilterBank};
+use ddc_pim::mapping::exec::{ExecPool, PlannedConv, PlannedDwConv};
+use ddc_pim::mapping::{ShardedConv, ShardedDwConv};
+use ddc_pim::runtime::{BackendKind, BackendSpec, FabricChoice, IMG_ELEMS, NUM_CLASSES};
+use ddc_pim::util::rng::Rng;
+
+/// Every grid shape the acceptance criterion pins, including the
+/// degenerate single tile and a tile count exceeding the FCC pair
+/// count (empty shards must be dropped, not executed).
+const SHAPES: [(usize, usize); 4] = [(1, 1), (1, 2), (2, 2), (2, 4)];
+
+fn grid(rows: usize, cols: usize) -> MacroGrid {
+    MacroGrid::new(GridShape::new(rows, cols), MacroGeometry::paper())
+}
+
+fn filters(rng: &mut Rng, n: usize, l: usize) -> Vec<i32> {
+    (0..n * l).map(|_| rng.int8() as i32).collect()
+}
+
+#[test]
+fn std_shard_channel_ranges_are_disjoint_and_covering() {
+    let mut rng = Rng::new(21);
+    let (h, w, c, k, n) = (6, 6, 8, 3, 8);
+    let bank = FilterBank::new(filters(&mut rng, n, k * k * c), n, k * k * c);
+    let fcc = fcc_transform(&bank);
+    for (r, cl) in SHAPES {
+        let plan = ShardedConv::std_fcc(&grid(r, cl), h, w, c, &fcc, k, 1, None);
+        let ranges = plan.channel_ranges();
+        assert_eq!(ranges.len(), plan.shard_count());
+        assert!(!ranges.is_empty(), "{r}x{cl}: no shards");
+        // tile order, contiguous, non-empty: strictly ascending ranges
+        // that tile 0..out_channels exactly — disjoint AND covering
+        let mut next = 0;
+        for range in &ranges {
+            assert_eq!(range.start, next, "{r}x{cl}: gap or overlap at {range:?}");
+            assert!(range.end > range.start, "{r}x{cl}: empty shard kept");
+            // FCC pair sharding: every boundary is a stored-pair edge
+            assert_eq!(range.start % 2, 0, "{r}x{cl}: shard splits a pair");
+            next = range.end;
+        }
+        assert_eq!(next, plan.out_channels(), "{r}x{cl}: channels uncovered");
+        // 2x4 = 8 tiles but only 4 stored pairs: empties were dropped
+        assert!(plan.shard_count() <= n / 2);
+    }
+}
+
+#[test]
+fn dw_shard_row_ranges_are_disjoint_and_covering() {
+    let mut rng = Rng::new(22);
+    let (h, w, c, k) = (9, 9, 6, 3);
+    let bank = FilterBank::new(filters(&mut rng, c, k * k), c, k * k);
+    let fcc = fcc_transform(&bank);
+    for (r, cl) in SHAPES {
+        let plan = ShardedDwConv::fcc(&grid(r, cl), h, w, c, &fcc, k, 1, true);
+        let (oh, _) = plan.out_dims();
+        let ranges = plan.row_ranges();
+        assert_eq!(ranges.len(), plan.shard_count());
+        let mut next = 0;
+        for range in &ranges {
+            assert_eq!(range.start, next, "{r}x{cl}: gap or overlap at {range:?}");
+            assert!(range.end > range.start, "{r}x{cl}: empty row band kept");
+            next = range.end;
+        }
+        assert_eq!(next, oh, "{r}x{cl}: output rows uncovered");
+    }
+}
+
+#[test]
+fn std_fcc_grid_matches_single_macro_at_every_shape_and_pool_width() {
+    let mut rng = Rng::new(23);
+    let (h, w, c, k, n, batch) = (6, 6, 8, 3, 8, 2);
+    let bank = FilterBank::new(filters(&mut rng, n, k * k * c), n, k * k * c);
+    let fcc = fcc_transform(&bank);
+    let input: Vec<i32> = (0..batch * h * w * c).map(|_| rng.int8() as i32).collect();
+    // the ground truth: the ordinary single-macro plan
+    let single = PlannedConv::std_fcc(h, w, c, &fcc, k, 1);
+    let mut pool = ExecPool::new(1);
+    let mut want = vec![0i64; batch * single.out_len()];
+    single.execute_batch_par(&input, batch, &mut pool, &mut want);
+    for (r, cl) in SHAPES {
+        let plan = ShardedConv::std_fcc(&grid(r, cl), h, w, c, &fcc, k, 1, None);
+        assert_eq!(plan.out_len(), single.out_len());
+        for threads in [1usize, 4] {
+            let mut pool = ExecPool::new(threads);
+            let mut scratch = Vec::new();
+            let mut got = vec![0i64; batch * plan.out_len()];
+            plan.execute_batch_par(&input, batch, &mut pool, &mut scratch, &mut got);
+            assert_eq!(got, want, "{r}x{cl} grid diverged at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn std_regular_grid_matches_single_macro_including_stride_2() {
+    let mut rng = Rng::new(24);
+    let (h, w, c, k, n, stride, batch) = (7, 7, 4, 3, 6, 2, 2);
+    let weights = filters(&mut rng, n, k * k * c);
+    let input: Vec<i32> = (0..batch * h * w * c).map(|_| rng.int8() as i32).collect();
+    let single = PlannedConv::std_regular(h, w, c, &weights, n, k, stride);
+    let mut pool = ExecPool::new(1);
+    let mut want = vec![0i64; batch * single.out_len()];
+    single.execute_batch_par(&input, batch, &mut pool, &mut want);
+    for (r, cl) in SHAPES {
+        let plan = ShardedConv::std_regular(&grid(r, cl), h, w, c, &weights, n, k, stride, None);
+        for threads in [1usize, 4] {
+            let mut pool = ExecPool::new(threads);
+            let mut scratch = Vec::new();
+            let mut got = vec![0i64; batch * plan.out_len()];
+            plan.execute_batch_par(&input, batch, &mut pool, &mut scratch, &mut got);
+            assert_eq!(got, want, "{r}x{cl} regular grid diverged at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn dw_fcc_grid_matches_single_macro_at_every_shape_and_pool_width() {
+    let mut rng = Rng::new(25);
+    let (h, w, c, k) = (9, 9, 6, 3);
+    let bank = FilterBank::new(filters(&mut rng, c, k * k), c, k * k);
+    let fcc = fcc_transform(&bank);
+    let input: Vec<i32> = (0..h * w * c).map(|_| rng.int8() as i32).collect();
+    let single = PlannedDwConv::fcc(h, w, c, &fcc, k, 1, true);
+    let mut pool = ExecPool::new(1);
+    let mut want = vec![0i64; single.out_len()];
+    single.execute_par(&input, &mut pool, &mut want);
+    for (r, cl) in SHAPES {
+        // spatial halo sharding: seam rows must agree exactly with the
+        // unsharded SAME-padded window math
+        let plan = ShardedDwConv::fcc(&grid(r, cl), h, w, c, &fcc, k, 1, true);
+        for threads in [1usize, 4] {
+            let mut pool = ExecPool::new(threads);
+            let mut scratch = Vec::new();
+            let mut got = vec![0i64; plan.out_len()];
+            plan.execute_par(&input, &mut pool, &mut scratch, &mut got);
+            assert_eq!(got, want, "{r}x{cl} dw grid diverged at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn dw_regular_grid_matches_single_macro_at_stride_2() {
+    let mut rng = Rng::new(26);
+    let (h, w, c, k, stride) = (10, 8, 5, 3, 2);
+    let weights = filters(&mut rng, c, k * k);
+    let input: Vec<i32> = (0..h * w * c).map(|_| rng.int8() as i32).collect();
+    let single = PlannedDwConv::regular(h, w, c, &weights, k, stride);
+    let mut pool = ExecPool::new(1);
+    let mut want = vec![0i64; single.out_len()];
+    single.execute_par(&input, &mut pool, &mut want);
+    for (r, cl) in SHAPES {
+        let plan = ShardedDwConv::regular(&grid(r, cl), h, w, c, &weights, k, stride);
+        for threads in [1usize, 4] {
+            let mut pool = ExecPool::new(threads);
+            let mut scratch = Vec::new();
+            let mut got = vec![0i64; plan.out_len()];
+            plan.execute_par(&input, &mut pool, &mut scratch, &mut got);
+            assert_eq!(got, want, "{r}x{cl} dw-regular grid diverged at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn faulted_grid_stays_byte_identical_after_scrub_repair() {
+    // shard-salted fault patterns differ per tile, but the scrub's
+    // detect+repair must restore every shard to the pristine logits —
+    // the same end state the single-macro faulted plan reaches
+    use ddc_pim::arch::fault::FaultConfig;
+    let mut rng = Rng::new(27);
+    let (h, w, c, k, n) = (6, 6, 8, 3, 8);
+    let bank = FilterBank::new(filters(&mut rng, n, k * k * c), n, k * k * c);
+    let fcc = fcc_transform(&bank);
+    let input: Vec<i32> = (0..h * w * c).map(|_| rng.int8() as i32).collect();
+    let pristine = ShardedConv::std_fcc(&grid(2, 2), h, w, c, &fcc, k, 1, None);
+    let mut pool = ExecPool::new(2);
+    let mut scratch = Vec::new();
+    let mut want = vec![0i64; pristine.out_len()];
+    pristine.execute_par(&input, &mut pool, &mut scratch, &mut want);
+    let faults = FaultConfig::new(0xDDC7, 0.002);
+    let mut faulted = ShardedConv::std_fcc(&grid(2, 2), h, w, c, &fcc, k, 1, Some(&faults));
+    let tally = faulted.fault_tally();
+    assert!(tally.injected_bits > 0, "BER 2000 ppm manifested no faults");
+    let report = faulted.scrub();
+    assert!(report.checked_words > 0);
+    let mut got = vec![0i64; faulted.out_len()];
+    faulted.execute_par(&input, &mut pool, &mut scratch, &mut got);
+    assert_eq!(got, want, "scrubbed 2x2 grid diverged from pristine");
+}
+
+#[test]
+fn session_logits_are_grid_invariant() {
+    // end to end through the reference runtime: bit-sliced sessions on
+    // 1x1, 1x2 and 2x2 grids and the dense kernel all agree exactly
+    let mut rng = Rng::new(28);
+    let img: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+    let infer = |spec: BackendSpec| -> Vec<f32> {
+        let mut out = vec![0f32; NUM_CLASSES];
+        spec.create("/nonexistent")
+            .expect("backend")
+            .prepare()
+            .expect("session")
+            .infer_batch_into(&img, 1, &mut out)
+            .expect("inference");
+        out
+    };
+    let dense = infer(BackendSpec {
+        kind: BackendKind::Reference,
+        ..Default::default()
+    });
+    for (r, cl) in [(1, 1), (1, 2), (2, 2)] {
+        let got = infer(BackendSpec {
+            kind: BackendKind::Reference,
+            fabric: FabricChoice::BitSliced,
+            threads: 2,
+            grid: GridShape::new(r, cl),
+            ..Default::default()
+        });
+        assert_eq!(got, dense, "{r}x{cl} session logits diverged");
+    }
+}

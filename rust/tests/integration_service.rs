@@ -7,7 +7,10 @@
 //! real xla crate + `make artifacts`, the same tests cover the PJRT
 //! path through backend auto-selection.)
 
-use ddc_pim::coordinator::{BatchPolicy, InferenceService, IMG_ELEMS, NUM_CLASSES};
+use ddc_pim::coordinator::{
+    BatchPolicy, InferenceService, ServiceConfig, ServiceError, IMG_ELEMS, NUM_CLASSES,
+};
+use ddc_pim::runtime::{BackendKind, BackendSpec};
 use ddc_pim::util::rng::Rng;
 use std::time::Duration;
 
@@ -65,7 +68,87 @@ fn batched_requests_all_answered() {
     let stats = svc.stats().expect("stats");
     assert_eq!(stats.requests, 24);
     assert!(stats.batches <= 24);
-    assert!(stats.p50() <= stats.p99());
+    assert!(stats.p50() <= stats.p95());
+    assert!(stats.p95() <= stats.p99());
+    // an unbounded service admits everything and sheds nothing
+    assert_eq!(stats.admission.admitted, 24);
+    assert_eq!(stats.admission.rejected, 0);
+    assert!(stats.admission.peak_queue_depth >= 1);
+}
+
+#[test]
+fn worker_pool_drains_a_burst_with_correct_logits() {
+    // the same request set through 1 worker and through 3: every
+    // response byte-identical regardless of which session served it
+    let single = service();
+    let cluster = InferenceService::start_cluster(
+        BackendSpec::new(BackendKind::Auto),
+        artifact_dir(),
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        ServiceConfig {
+            workers: 3,
+            max_queue_depth: 0,
+        },
+    );
+    assert_eq!(cluster.worker_count(), 3);
+    let mut rng = Rng::new(10);
+    let imgs: Vec<Vec<f32>> = (0..12).map(|_| image(&mut rng)).collect();
+    let want: Vec<_> = imgs
+        .iter()
+        .map(|img| single.infer(img.clone()).expect("single").logits)
+        .collect();
+    let rxs: Vec<_> = imgs
+        .iter()
+        .map(|img| cluster.submit(img.clone()))
+        .collect();
+    for (rx, want) in rxs.into_iter().zip(&want) {
+        let got = rx.recv().expect("channel").expect("cluster inference");
+        assert_eq!(&got.logits, want, "a worker session drifted");
+    }
+    let stats = cluster.stats().expect("stats");
+    assert_eq!(stats.requests, 12);
+    assert_eq!(stats.admission.admitted, 12);
+    assert_eq!(stats.admission.workers, 3);
+}
+
+#[test]
+fn bounded_queue_sheds_excess_load_with_typed_rejections() {
+    // an hour-long batch window wedges admitted requests in the
+    // batcher, so the shed point is exact: depth 2 admits two, the
+    // third bounces synchronously
+    let svc = InferenceService::start_cluster(
+        BackendSpec::new(BackendKind::Auto),
+        artifact_dir(),
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_secs(3600),
+        },
+        ServiceConfig {
+            workers: 1,
+            max_queue_depth: 2,
+        },
+    );
+    let mut rng = Rng::new(11);
+    let a = svc.submit(image(&mut rng));
+    let b = svc.submit(image(&mut rng));
+    let shed = svc.submit(image(&mut rng)).recv().expect("channel");
+    assert!(
+        matches!(shed, Err(ServiceError::Overloaded)),
+        "expected a typed Overloaded rejection, got {shed:?}"
+    );
+    let stats = svc.stats().expect("stats");
+    assert_eq!(stats.admission.admitted, 2);
+    assert_eq!(stats.admission.rejected, 1);
+    assert_eq!(stats.admission.max_queue_depth, 2);
+    assert_eq!(stats.admission.peak_queue_depth, 2);
+    // shutdown drains the admitted requests — shed load never costs
+    // the queued requests their answers
+    drop(svc);
+    assert!(a.recv().expect("channel").is_ok(), "queued request dropped");
+    assert!(b.recv().expect("channel").is_ok(), "queued request dropped");
 }
 
 #[test]
