@@ -1,4 +1,4 @@
-.PHONY: artifacts accuracy goldens test test-rust test-python bench bench-smoke bench-diff
+.PHONY: artifacts accuracy goldens test test-rust test-python bench bench-smoke bench-diff lint
 
 # AOT-lower the L2 model + L1 kernels to HLO text + goldens (needs jax)
 artifacts:
@@ -14,6 +14,13 @@ goldens:
 
 test-rust:
 	cargo build --release && cargo test -q
+
+# repo-invariant static analysis + seeded interleaving check of the
+# steal/admission protocols.  Exit codes (docs/linting.md): 0 clean,
+# 1 findings or shuttle violations, 2 usage/manifest error.
+lint:
+	cargo run --release --bin ddc-lint
+	cargo run --release --bin ddc-lint -- --self-check
 
 test-python:
 	python3 -m pytest python/tests -q

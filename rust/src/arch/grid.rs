@@ -98,16 +98,9 @@ pub fn resolve_grid(requested: GridShape) -> GridShape {
     if !requested.is_auto() {
         return requested;
     }
-    match std::env::var("DDC_GRID") {
-        Ok(raw) => match raw.parse::<GridShape>() {
-            Ok(g) => g,
-            Err(e) => {
-                eprintln!("[ddc-config] ignoring DDC_GRID={raw:?}: {e}; using 1x1");
-                GridShape::SINGLE
-            }
-        },
-        Err(_) => GridShape::SINGLE,
-    }
+    crate::util::env::resolve_env_knob("DDC_GRID", GridShape::SINGLE, "1x1", |raw| {
+        raw.parse::<GridShape>()
+    })
 }
 
 /// The planner-facing grid: shape + per-macro geometry + the balanced

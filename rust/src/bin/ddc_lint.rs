@@ -1,0 +1,176 @@
+//! `ddc-lint` — repo-invariant static analysis + interleaving checks.
+//!
+//! ```text
+//! ddc-lint                         # lint rust/src + 1000-seed shuttle
+//! ddc-lint --no-shuttle            # static rules only
+//! ddc-lint --shuttle 5000          # more schedules
+//! ddc-lint --file F.rs --as a/b.rs # lint one file under a pretend path
+//! ddc-lint --self-check            # fixtures must each trip their rule
+//! ```
+//!
+//! Exit codes (the `bench-diff` convention): **0** clean, **1**
+//! findings or invariant violations, **2** usage/environment error.
+//! See `docs/linting.md`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use ddc_pim::util::lint::{self, manifest, shuttle, Config};
+
+/// Seeds explored per protocol when `--shuttle` is not given; the
+/// acceptance floor is 1000 per protocol.
+const DEFAULT_SEEDS: u64 = 1000;
+
+struct Args {
+    src: PathBuf,
+    manifest: PathBuf,
+    shuttle_seeds: Option<u64>,
+    self_check: bool,
+    file: Option<PathBuf>,
+    file_as: Option<String>,
+}
+
+fn usage() -> &'static str {
+    "usage: ddc-lint [--src DIR] [--manifest FILE] [--shuttle N | --no-shuttle] \
+     [--file F --as REL] [--self-check]"
+}
+
+fn parse_args() -> Result<Args, String> {
+    let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut args = Args {
+        src: manifest_dir.join("src"),
+        manifest: manifest_dir.join("../lint-hotpaths.toml"),
+        shuttle_seeds: Some(DEFAULT_SEEDS),
+        self_check: false,
+        file: None,
+        file_as: None,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut take = |name: &str| {
+            it.next().ok_or_else(|| format!("{name} needs a value\n{}", usage()))
+        };
+        match a.as_str() {
+            "--src" => args.src = PathBuf::from(take("--src")?),
+            "--manifest" => args.manifest = PathBuf::from(take("--manifest")?),
+            "--shuttle" => {
+                let v = take("--shuttle")?;
+                args.shuttle_seeds = Some(
+                    v.parse()
+                        .map_err(|_| format!("--shuttle wants a number, got {v:?}"))?,
+                );
+            }
+            "--no-shuttle" => args.shuttle_seeds = None,
+            "--self-check" => args.self_check = true,
+            "--file" => args.file = Some(PathBuf::from(take("--file")?)),
+            "--as" => args.file_as = Some(take("--as")?),
+            "--help" | "-h" => return Err(usage().to_string()),
+            other => return Err(format!("unknown flag {other:?}\n{}", usage())),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::from(2);
+        }
+    };
+    let manifest_text = match std::fs::read_to_string(&args.manifest) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("ddc-lint: cannot read manifest {}: {e}", args.manifest.display());
+            return ExitCode::from(2);
+        }
+    };
+    let man = match manifest::parse(&manifest_text) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("ddc-lint: bad manifest {}: {e}", args.manifest.display());
+            return ExitCode::from(2);
+        }
+    };
+    let cfg = Config::from_manifest(&man);
+
+    if args.self_check {
+        let fixtures = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures");
+        return match lint::self_check(&fixtures, &cfg) {
+            Ok(()) => {
+                println!(
+                    "ddc-lint self-check: {} fixtures each tripped exactly their rule",
+                    lint::FIXTURE_EXPECTATIONS.len()
+                );
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("ddc-lint self-check FAILED: {e}");
+                ExitCode::from(1)
+            }
+        };
+    }
+
+    if let Some(file) = &args.file {
+        let rel = match &args.file_as {
+            Some(r) => r.clone(),
+            None => file.to_string_lossy().into_owned(),
+        };
+        let src = match std::fs::read_to_string(file) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("ddc-lint: cannot read {}: {e}", file.display());
+                return ExitCode::from(2);
+            }
+        };
+        let findings = lint::lint_source(&rel, &src, &cfg);
+        for f in &findings {
+            println!("{f}");
+        }
+        return if findings.is_empty() {
+            println!("ddc-lint: {} clean", rel);
+            ExitCode::SUCCESS
+        } else {
+            eprintln!("ddc-lint: {} findings", findings.len());
+            ExitCode::from(1)
+        };
+    }
+
+    // full run: static pass over the tree, then the shuttle models
+    let findings = lint::lint_tree(&args.src, &cfg);
+    for f in &findings {
+        println!("{f}");
+    }
+    let mut failed = !findings.is_empty();
+    if failed {
+        eprintln!("ddc-lint: {} findings in {}", findings.len(), args.src.display());
+    } else {
+        println!("ddc-lint: static pass clean ({})", args.src.display());
+    }
+
+    if let Some(seeds) = args.shuttle_seeds {
+        let steal = shuttle::check_steal_protocol(seeds, 4, 24);
+        let gate = shuttle::check_admission_gate(seeds, 6, 2);
+        for v in steal.violations.iter() {
+            println!("shuttle[steal]: {v}");
+        }
+        for v in gate.violations.iter() {
+            println!("shuttle[admission]: {v}");
+        }
+        println!(
+            "ddc-lint shuttle: steal {} schedules / {} steps, admission {} schedules / {} steps",
+            steal.schedules, steal.steps, gate.schedules, gate.steps
+        );
+        if !steal.ok() || !gate.ok() {
+            eprintln!("ddc-lint: interleaving invariant violations");
+            failed = true;
+        }
+    }
+
+    if failed {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}

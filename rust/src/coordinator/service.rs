@@ -78,19 +78,7 @@ pub fn resolve_workers(requested: usize) -> usize {
     let n = if requested > 0 {
         requested
     } else {
-        match std::env::var("DDC_WORKERS") {
-            Ok(raw) => match raw.trim().parse::<usize>() {
-                Ok(n) if n >= 1 => n,
-                _ => {
-                    eprintln!(
-                        "[ddc-config] ignoring DDC_WORKERS={raw:?}: want a positive integer; \
-                         using 1"
-                    );
-                    1
-                }
-            },
-            Err(_) => 1,
-        }
+        crate::util::env::resolve_env_knob("DDC_WORKERS", 1, "1", crate::util::env::parse_positive)
     };
     n.clamp(1, MAX_WORKERS)
 }
@@ -751,6 +739,8 @@ fn worker_loop(
                     thread::sleep(Duration::from_millis(hang_ms));
                 }
                 if panic_now {
+                    // ddc-lint: allow(no_panic) — deliberate chaos hook: the panic is
+                    // the fault being injected, and it unwinds into this catch_unwind.
                     panic!("chaos hook: debug_panic_next_batch");
                 }
                 session.infer_batch_into(&input_buf, bsize, &mut logits_buf)

@@ -59,7 +59,7 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::arch::fault::{FaultConfig, FaultTally};
 use crate::arch::grid::{GridShape, MacroGrid};
@@ -1437,9 +1437,9 @@ impl Session for ReferenceSession {
                     pool,
                 ),
                 SessionLayer::ConvStreamed { slot } => {
-                    let st = stream
-                        .as_mut()
-                        .expect("streamed layer planned without stream state");
+                    let Some(st) = stream.as_mut() else {
+                        bail!("streamed layer planned without stream state");
+                    };
                     // staging the slot's pass may wait on the
                     // prefetcher (the exposed stall the pressure
                     // counters record) or build synchronously

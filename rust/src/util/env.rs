@@ -1,0 +1,134 @@
+//! Shared environment-knob resolution: the one warn-on-garbage contract
+//! behind `DDC_THREADS`, `DDC_WORKERS` and `DDC_GRID`.
+//!
+//! Every runtime knob follows the same precedence: an explicit request
+//! wins, an *unset* request falls back to an environment variable, and
+//! an unparseable variable is **warned about on stderr and treated as
+//! unset** — a typo must never be silently absorbed into a surprising
+//! configuration.  Before this module the contract existed as three
+//! hand-copies (`resolve_threads` / `resolve_workers` / `resolve_grid`);
+//! now each resolver delegates here, so the warning text and the
+//! fallback semantics can only drift together, visibly, in one place.
+
+/// Resolve one environment knob: read `var`, parse it with `parse`, and
+/// return the parsed value — or `default` (warning on stderr) when the
+/// variable is set but unparseable, or `default` (silently) when it is
+/// unset.  `default_desc` is the human-readable form of `default` used
+/// in the warning (`"1"`, `"1x1"`, ...).
+pub fn resolve_env_knob<T, F>(var: &str, default: T, default_desc: &str, parse: F) -> T
+where
+    F: Fn(&str) -> Result<T, String>,
+{
+    let raw = std::env::var(var).ok();
+    let (value, warning) = knob_from_raw(var, raw.as_deref(), default, default_desc, parse);
+    if let Some(msg) = warning {
+        eprintln!("{msg}");
+    }
+    value
+}
+
+/// The pure core of [`resolve_env_knob`]: same contract, but the raw
+/// variable value is injected and the warning is *returned* instead of
+/// printed — so unit tests can pin the exact warning text without
+/// mutating the live process environment (racy under the parallel test
+/// harness).
+pub fn knob_from_raw<T, F>(
+    var: &str,
+    raw: Option<&str>,
+    default: T,
+    default_desc: &str,
+    parse: F,
+) -> (T, Option<String>)
+where
+    F: Fn(&str) -> Result<T, String>,
+{
+    match raw {
+        None => (default, None),
+        Some(raw) => match parse(raw) {
+            Ok(v) => (v, None),
+            Err(e) => (
+                default,
+                Some(format!(
+                    "[ddc-config] ignoring {var}={raw:?}: {e}; using {default_desc}"
+                )),
+            ),
+        },
+    }
+}
+
+/// Parse a positive integer knob value (`DDC_THREADS` / `DDC_WORKERS`).
+/// Zero and garbage are both errors: `0` has no meaning as an explicit
+/// width, and accepting it would silently disable the knob's consumer.
+pub fn parse_positive(v: &str) -> Result<usize, String> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err("want a positive integer".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_variable_is_a_silent_default() {
+        let (v, warn) = knob_from_raw("DDC_THREADS", None, 1usize, "1", parse_positive);
+        assert_eq!(v, 1);
+        assert!(warn.is_none());
+    }
+
+    #[test]
+    fn parseable_value_wins_without_warning() {
+        let (v, warn) = knob_from_raw("DDC_THREADS", Some("4"), 1usize, "1", parse_positive);
+        assert_eq!(v, 4);
+        assert!(warn.is_none());
+        // whitespace is the shell's problem, not the user's
+        let (v, _) = knob_from_raw("DDC_WORKERS", Some(" 2 "), 1usize, "1", parse_positive);
+        assert_eq!(v, 2);
+    }
+
+    #[test]
+    fn garbage_warns_with_the_exact_contract_text() {
+        let (v, warn) = knob_from_raw("DDC_THREADS", Some("lots"), 1usize, "1", parse_positive);
+        assert_eq!(v, 1);
+        assert_eq!(
+            warn.as_deref(),
+            Some("[ddc-config] ignoring DDC_THREADS=\"lots\": want a positive integer; using 1")
+        );
+    }
+
+    #[test]
+    fn zero_is_garbage_not_a_width() {
+        let (v, warn) = knob_from_raw("DDC_WORKERS", Some("0"), 1usize, "1", parse_positive);
+        assert_eq!(v, 1);
+        assert_eq!(
+            warn.as_deref(),
+            Some("[ddc-config] ignoring DDC_WORKERS=\"0\": want a positive integer; using 1")
+        );
+    }
+
+    #[test]
+    fn parser_errors_flow_into_the_warning() {
+        // a custom parser's message (e.g. GridShape's "bad grid shape
+        // ...") lands verbatim between the prefix and the default
+        let parse = |s: &str| -> Result<usize, String> {
+            s.parse().map_err(|_| format!("bad value {s:?} (want RxC)"))
+        };
+        let (v, warn) = knob_from_raw("DDC_GRID", Some("bogus"), 7usize, "1x1", parse);
+        assert_eq!(v, 7);
+        assert_eq!(
+            warn.as_deref(),
+            Some("[ddc-config] ignoring DDC_GRID=\"bogus\": bad value \"bogus\" (want RxC); using 1x1")
+        );
+    }
+
+    #[test]
+    fn parse_positive_contract() {
+        assert_eq!(parse_positive("4"), Ok(4));
+        assert_eq!(parse_positive(" 2 "), Ok(2));
+        assert!(parse_positive("0").is_err());
+        assert!(parse_positive("-3").is_err());
+        assert!(parse_positive("lots").is_err());
+        assert!(parse_positive("").is_err());
+    }
+}

@@ -1,0 +1,336 @@
+//! Minimal Rust tokenizer for `ddc-lint`.
+//!
+//! This is *not* a parser: it produces a flat token stream good enough
+//! to ask lexical questions ("is there an ident `unwrap` followed by
+//! `(`?", "what comment precedes this `unsafe`?") without ever
+//! misreading a string literal or a comment as code.  The hard parts it
+//! gets right, because the rules depend on them:
+//!
+//! - line/block comments (nested `/* /* */ */`), captured with their
+//!   text so rules can look for `SAFETY:` and waiver markers;
+//! - string/char literals, including raw strings `r#"..."#`, byte
+//!   strings, and the `'a'`-vs-`'a` char/lifetime ambiguity;
+//! - line numbers on every token, for findings.
+//!
+//! Everything else — numbers, idents, punctuation — is deliberately
+//! coarse.  A token stream this shape is exactly what the existing
+//! hand-audits grep for, made precise.
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub line: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`unsafe`, `fn`, `unwrap`, ...).
+    Ident(String),
+    /// Integer or float literal (value kept as written).
+    Number(String),
+    /// String / char / byte-string literal (contents dropped).
+    Literal,
+    /// Lifetime (`'a`) — distinct from a char literal.
+    Lifetime,
+    /// Single punctuation byte: `{ } ( ) [ ] ; : , . # ! & * = < > ...`
+    Punct(char),
+    /// A comment, with its trimmed text (both `//` and `/* */`).
+    Comment(String),
+}
+
+impl TokenKind {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(self, TokenKind::Ident(i) if i == s)
+    }
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(self, TokenKind::Punct(p) if *p == c)
+    }
+}
+
+/// Tokenize `src`.  Unterminated constructs (string, block comment) eat
+/// to EOF rather than erroring: the lint runs on code rustc already
+/// accepted, so graceful degradation beats a second error channel.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_ascii_whitespace() => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                let start = i + 2;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                let text = src[start..i].trim().to_string();
+                toks.push(Token { kind: TokenKind::Comment(text), line });
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                let start_line = line;
+                let start = i + 2;
+                i += 2;
+                let mut depth = 1usize;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                let end = if i >= 2 { i - 2 } else { i };
+                let text = src[start..end.max(start)].trim().to_string();
+                toks.push(Token { kind: TokenKind::Comment(text), line: start_line });
+            }
+            b'"' => {
+                i = skip_string(b, i, &mut line);
+                toks.push(Token { kind: TokenKind::Literal, line });
+            }
+            b'r' | b'b' if starts_raw_or_byte_string(b, i) => {
+                let start_line = line;
+                i = skip_raw_or_byte_string(b, i, &mut line);
+                toks.push(Token { kind: TokenKind::Literal, line: start_line });
+            }
+            b'\'' => {
+                // char literal vs lifetime: a lifetime is ' + ident NOT
+                // followed by a closing quote ('a, 'static); a char
+                // literal always closes ('a', '\n', '\'')
+                if is_char_literal(b, i) {
+                    i = skip_char_literal(b, i);
+                    toks.push(Token { kind: TokenKind::Literal, line });
+                } else {
+                    i += 1;
+                    while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                        i += 1;
+                    }
+                    toks.push(Token { kind: TokenKind::Lifetime, line });
+                }
+            }
+            c if c == b'_' || c.is_ascii_alphabetic() => {
+                let start = i;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                toks.push(Token {
+                    kind: TokenKind::Ident(src[start..i].to_string()),
+                    line,
+                });
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                // coarse: digits, underscores, hex/bin letters, one
+                // dot, exponent — anything ident-ish glued to a digit
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric() || b[i] == b'_' || b[i] == b'.')
+                {
+                    // `0..n` range: stop before the second dot
+                    if b[i] == b'.' && i + 1 < b.len() && b[i + 1] == b'.' {
+                        break;
+                    }
+                    i += 1;
+                }
+                toks.push(Token {
+                    kind: TokenKind::Number(src[start..i].to_string()),
+                    line,
+                });
+            }
+            c => {
+                toks.push(Token { kind: TokenKind::Punct(c as char), line });
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+/// Skip a `"..."` string starting at `b[i] == '"'`; returns the index
+/// past the closing quote and bumps `line` across embedded newlines.
+fn skip_string(b: &[u8], mut i: usize, line: &mut usize) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Does `b[i..]` start a raw string (`r"`, `r#"`), byte string (`b"`),
+/// or raw byte string (`br"`, `br#"`)?  `b[i]` is `r` or `b`.
+fn starts_raw_or_byte_string(b: &[u8], i: usize) -> bool {
+    let rest = &b[i..];
+    let after_b = if rest[0] == b'b' { &rest[1..] } else { rest };
+    if rest[0] == b'b' && after_b.first() == Some(&b'"') {
+        return true; // b"..."
+    }
+    let after_r = if after_b.first() == Some(&b'r') { &after_b[1..] } else { return false };
+    let mut j = 0;
+    while after_r.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    after_r.get(j) == Some(&b'"')
+}
+
+/// Skip the raw/byte string whose start `starts_raw_or_byte_string`
+/// confirmed; returns the index past its end.
+fn skip_raw_or_byte_string(b: &[u8], mut i: usize, line: &mut usize) -> usize {
+    if b[i] == b'b' {
+        i += 1;
+    }
+    if i < b.len() && b[i] == b'"' {
+        return skip_string(b, i, line); // b"..." — escapes apply
+    }
+    i += 1; // the 'r'
+    let mut hashes = 0usize;
+    while i < b.len() && b[i] == b'#' {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // opening quote
+    while i < b.len() {
+        if b[i] == b'\n' {
+            *line += 1;
+            i += 1;
+        } else if b[i] == b'"' {
+            // close only when the quote is followed by the full hash run
+            let mut k = 0;
+            while k < hashes && i + 1 + k < b.len() && b[i + 1 + k] == b'#' {
+                k += 1;
+            }
+            if k == hashes {
+                return i + 1 + hashes;
+            }
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Is `b[i] == '\''` the start of a char literal (vs a lifetime)?
+fn is_char_literal(b: &[u8], i: usize) -> bool {
+    match b.get(i + 1) {
+        Some(b'\\') => true,                   // '\n', '\''
+        Some(&c) if c == b'\'' => false,       // '' — not valid, treat as lifetime-ish
+        Some(&c) if c == b'_' || c.is_ascii_alphanumeric() => {
+            // 'a' is a char only if the next byte closes it; 'static
+            // runs on as an ident
+            b.get(i + 2) == Some(&b'\'')
+        }
+        Some(_) => true, // '(' etc. — punctuation chars close immediately
+        None => false,
+    }
+}
+
+/// Skip a char literal starting at `'`; returns the index past the
+/// closing quote.
+fn skip_char_literal(b: &[u8], mut i: usize) -> usize {
+    i += 1;
+    if i < b.len() && b[i] == b'\\' {
+        i += 2;
+    } else {
+        i += 1;
+    }
+    while i < b.len() && b[i] != b'\'' {
+        i += 1; // unicode escapes '\u{1F600}'
+    }
+    i + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokenKind::Ident(i) => Some(i),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_not_code() {
+        let src = r##"
+            // let x = foo.unwrap();
+            /* also not.unwrap() here /* nested */ still comment */
+            let s = "not.unwrap() either";
+            let r = r#"raw "quoted" not.unwrap()"#;
+            real.call();
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()));
+        assert!(ids.contains(&"real".to_string()));
+        assert!(ids.contains(&"call".to_string()));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = tokenize("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes = toks.iter().filter(|t| t.kind == TokenKind::Lifetime).count();
+        let chars = toks.iter().filter(|t| t.kind == TokenKind::Literal).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_constructs() {
+        let src = "a\n/* two\nlines */\nb";
+        let toks = tokenize(src);
+        assert_eq!(toks[0].line, 1); // a
+        assert_eq!(toks[1].line, 2); // comment starts line 2
+        assert_eq!(toks[2].line, 4); // b after the 2-line comment
+    }
+
+    #[test]
+    fn comment_text_is_captured_for_safety_scan() {
+        let toks = tokenize("// SAFETY: disjoint lanes\nunsafe { x() }");
+        match &toks[0].kind {
+            TokenKind::Comment(t) => assert!(t.starts_with("SAFETY:")),
+            other => panic!("expected comment, got {other:?}"),
+        }
+        assert!(toks[1].kind.is_ident("unsafe"));
+    }
+
+    #[test]
+    fn numbers_and_ranges() {
+        let toks = tokenize("for i in 0..10 { a[3] = 1.5e3; }");
+        let nums: Vec<_> = toks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TokenKind::Number(n) => Some(n.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec!["0", "10", "3", "1.5e3"]);
+    }
+
+    #[test]
+    fn byte_strings_skip_clean() {
+        let ids = idents(r#"let b = b"bytes.unwrap()"; after();"#);
+        assert!(!ids.contains(&"unwrap".to_string()));
+        assert!(ids.contains(&"after".to_string()));
+    }
+}

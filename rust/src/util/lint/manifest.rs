@@ -1,0 +1,197 @@
+//! Parser for `lint-hotpaths.toml` — the checked-in manifest naming
+//! which functions the manifest-scoped rules apply to.
+//!
+//! The workspace is offline (no `toml` crate), so this is a parser for
+//! exactly the subset the manifest uses and nothing more:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! "key" = ["a", "b"]
+//! "other" = [
+//!     "multi",
+//!     "line",
+//! ]
+//! ```
+//!
+//! Sections understood by the lint: `[no_alloc]` and `[no_panic]`
+//! (file path → list of function-name entries, `"*"` meaning the whole
+//! file) and `[atomics]` (`"file::fn"` → list of allowed
+//! `Ordering::*` variants).  Unknown sections are an error — a typoed
+//! section silently enforcing nothing is exactly the failure mode this
+//! tool exists to kill.
+
+use std::collections::BTreeMap;
+
+/// Parsed manifest: section name → (key → values), insertion-ordered
+/// by key via BTreeMap for deterministic reporting.
+#[derive(Debug, Default, Clone)]
+pub struct Manifest {
+    pub sections: BTreeMap<String, BTreeMap<String, Vec<String>>>,
+}
+
+impl Manifest {
+    /// Look up a section, empty map if absent.
+    pub fn section(&self, name: &str) -> BTreeMap<String, Vec<String>> {
+        self.sections.get(name).cloned().unwrap_or_default()
+    }
+}
+
+/// Known section names; anything else is a parse error.
+const KNOWN_SECTIONS: &[&str] = &["no_alloc", "no_panic", "atomics"];
+
+/// Parse manifest text.  Errors carry the 1-based line number.
+pub fn parse(text: &str) -> Result<Manifest, String> {
+    let mut m = Manifest::default();
+    let mut current: Option<String> = None;
+    let mut lines = text.lines().enumerate().peekable();
+    while let Some((idx, raw)) = lines.next() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {lineno}: unterminated section header"))?
+                .trim()
+                .to_string();
+            if !KNOWN_SECTIONS.contains(&name.as_str()) {
+                return Err(format!(
+                    "line {lineno}: unknown section [{name}] (known: {})",
+                    KNOWN_SECTIONS.join(", ")
+                ));
+            }
+            m.sections.entry(name.clone()).or_default();
+            current = Some(name);
+            continue;
+        }
+        let section = current
+            .clone()
+            .ok_or_else(|| format!("line {lineno}: entry before any [section] header"))?;
+        let (key_part, val_part) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {lineno}: expected `\"key\" = [...]`"))?;
+        let key = unquote(key_part.trim())
+            .ok_or_else(|| format!("line {lineno}: key must be a quoted string"))?;
+        // gather the value, consuming continuation lines until the
+        // bracket closes
+        let mut val = val_part.trim().to_string();
+        while !val.ends_with(']') {
+            let (cidx, craw) = lines
+                .next()
+                .ok_or_else(|| format!("line {lineno}: unterminated array for {key:?}"))?;
+            let cont = strip_comment(craw).trim().to_string();
+            if cont.is_empty() {
+                continue;
+            }
+            let _ = cidx;
+            val.push(' ');
+            val.push_str(&cont);
+        }
+        let inner = val
+            .strip_prefix('[')
+            .and_then(|v| v.strip_suffix(']'))
+            .ok_or_else(|| format!("line {lineno}: value must be an array"))?;
+        let mut items = Vec::new();
+        for piece in inner.split(',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue; // trailing comma
+            }
+            let item = unquote(piece)
+                .ok_or_else(|| format!("line {lineno}: array item {piece:?} must be quoted"))?;
+            items.push(item);
+        }
+        let sec = m.sections.entry(section).or_default();
+        if sec.insert(key.clone(), items).is_some() {
+            return Err(format!("line {lineno}: duplicate key {key:?}"));
+        }
+    }
+    Ok(m)
+}
+
+/// Strip a `#` comment, respecting quotes (a `#` inside `"..."` is
+/// content, not a comment).
+fn strip_comment(line: &str) -> &str {
+    let b = line.as_bytes();
+    let mut in_str = false;
+    for (i, &c) in b.iter().enumerate() {
+        match c {
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// `"abc"` → `abc`; anything unquoted → None.
+fn unquote(s: &str) -> Option<String> {
+    s.strip_prefix('"')?.strip_suffix('"').map(str::to_string)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_manifest_shape() {
+        let m = parse(
+            r#"
+# hot paths
+[no_alloc]
+"mapping/exec.rs" = ["execute", "execute_par"]
+"arch/pim_macro.rs" = [
+    "mvm_row_into",   # comment after item
+    "pack_input_planes",
+]
+
+[no_panic]
+"coordinator/service.rs" = ["*"]
+
+[atomics]
+"util/pool.rs::pop" = ["Acquire", "AcqRel"]
+"#,
+        )
+        .expect("parse");
+        assert_eq!(
+            m.section("no_alloc")["mapping/exec.rs"],
+            vec!["execute", "execute_par"]
+        );
+        assert_eq!(
+            m.section("no_alloc")["arch/pim_macro.rs"],
+            vec!["mvm_row_into", "pack_input_planes"]
+        );
+        assert_eq!(m.section("no_panic")["coordinator/service.rs"], vec!["*"]);
+        assert_eq!(
+            m.section("atomics")["util/pool.rs::pop"],
+            vec!["Acquire", "AcqRel"]
+        );
+    }
+
+    #[test]
+    fn unknown_section_is_an_error() {
+        let err = parse("[no_allocs]\n").unwrap_err();
+        assert!(err.contains("unknown section"), "{err}");
+    }
+
+    #[test]
+    fn entry_before_section_is_an_error() {
+        let err = parse("\"a\" = [\"b\"]\n").unwrap_err();
+        assert!(err.contains("before any"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_key_is_an_error() {
+        let err = parse("[no_panic]\n\"a.rs\" = [\"*\"]\n\"a.rs\" = [\"f\"]\n").unwrap_err();
+        assert!(err.contains("duplicate key"), "{err}");
+    }
+
+    #[test]
+    fn unquoted_items_are_an_error() {
+        let err = parse("[no_panic]\n\"a.rs\" = [f]\n").unwrap_err();
+        assert!(err.contains("must be quoted"), "{err}");
+    }
+}

@@ -1,0 +1,149 @@
+//! `ddc-lint`: the repo-invariant static analysis pass.
+//!
+//! Eight PRs of "verified by review + mechanical greps" turned into a
+//! checked-in tool: a hand-rolled lexer ([`lexer`]), a TOML-subset
+//! manifest reader ([`manifest`]) for `lint-hotpaths.toml`, the five
+//! invariant rules ([`rules`]), and a deterministic-interleaving
+//! checker ([`shuttle`]) that model-checks the two lock-free protocols
+//! the static rules can't see into.  The `ddc-lint` binary
+//! (`src/bin/ddc_lint.rs`) drives all of it in CI; DESIGN.md §11 and
+//! `docs/linting.md` are the operator story.
+
+pub mod lexer;
+pub mod manifest;
+pub mod rules;
+pub mod shuttle;
+
+pub use rules::{lint_source, Finding};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Effective lint configuration: the built-in allowlists plus the three
+/// manifest tables.  File names are relative to `rust/src` with `/`
+/// separators (`"util/pool.rs"`).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    /// Files allowed to call the cell/plane mutators (the arch write
+    /// path that keeps FCC coherence, sparsity summaries and the fault
+    /// ledger in sync).
+    pub write_path_allow: Vec<String>,
+    /// Files allowed to contain `unsafe` at all.
+    pub unsafe_allow: Vec<String>,
+    /// `[no_alloc]`: file → hot function names (zero-alloc contract).
+    pub no_alloc: BTreeMap<String, Vec<String>>,
+    /// `[no_panic]`: file → function names (`"*"` = whole file).
+    pub no_panic: BTreeMap<String, Vec<String>>,
+    /// `[atomics]`: `"file::fn"` → allowed `Ordering` variants.
+    pub atomics: BTreeMap<String, Vec<String>>,
+    /// Files whose `Ordering::*` uses are audited against `atomics`.
+    pub atomics_files: Vec<String>,
+}
+
+impl Config {
+    /// The repo's fixed allowlists married to a parsed manifest.  The
+    /// allowlists are code, not manifest entries, on purpose: widening
+    /// *where unsafe may live* or *what may write cells* should be a
+    /// reviewed source change, not a config tweak.
+    pub fn from_manifest(man: &manifest::Manifest) -> Config {
+        Config {
+            write_path_allow: vec![
+                "arch/sram.rs".into(),
+                "arch/pim_core.rs".into(),
+                "arch/compartment.rs".into(),
+                "arch/dbmu.rs".into(),
+            ],
+            unsafe_allow: vec![
+                "util/pool.rs".into(),
+                "mapping/exec.rs".into(),
+                "runtime/reference.rs".into(),
+            ],
+            no_alloc: man.section("no_alloc"),
+            no_panic: man.section("no_panic"),
+            atomics: man.section("atomics"),
+            atomics_files: vec![
+                "util/pool.rs".into(),
+                "coordinator/service.rs".into(),
+                "metrics.rs".into(),
+            ],
+        }
+    }
+}
+
+/// Lint every `.rs` file under `src_root` (recursively, deterministic
+/// order).  Returns all findings; I/O problems are findings too (rule
+/// `io`), so a vanished file can't silently pass.
+pub fn lint_tree(src_root: &Path, cfg: &Config) -> Vec<Finding> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files);
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        match std::fs::read_to_string(&path) {
+            Ok(src) => findings.extend(lint_source(&rel, &src, cfg)),
+            Err(e) => findings.push(Finding {
+                file: rel,
+                line: 0,
+                rule: "io",
+                message: format!("unreadable: {e}"),
+            }),
+        }
+    }
+    findings
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// The violation fixtures: file stem → (rel-name the file is linted
+/// *as*, rule it must trigger).  Fixtures pose as in-scope files so
+/// each exercises exactly one rule against the real repo config.
+pub const FIXTURE_EXPECTATIONS: &[(&str, &str, &str)] = &[
+    ("write_path", "mapping/rogue.rs", "write_path"),
+    ("unsafe_module", "model/rogue.rs", "unsafe_module"),
+    ("unsafe_no_safety", "mapping/exec.rs", "unsafe_safety"),
+    ("no_panic", "coordinator/service.rs", "no_panic"),
+    ("hot_alloc", "mapping/exec.rs", "hot_alloc"),
+    ("atomics", "util/pool.rs", "atomics"),
+    ("waiver", "coordinator/service.rs", "waiver"),
+];
+
+/// Self-check: every fixture under `fixtures_dir` must produce at
+/// least one finding, and *only* findings of its expected rule.  This
+/// is the lint linting itself — a rule that stops firing turns the
+/// suite red, not silent.
+pub fn self_check(fixtures_dir: &Path, cfg: &Config) -> Result<(), String> {
+    for (stem, rel_as, rule) in FIXTURE_EXPECTATIONS {
+        let path = fixtures_dir.join(format!("{stem}.rs"));
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("fixture {}: {e}", path.display()))?;
+        let findings = lint_source(rel_as, &src, cfg);
+        if findings.is_empty() {
+            return Err(format!(
+                "fixture {stem}.rs: expected a `{rule}` finding, got none — rule is dead"
+            ));
+        }
+        if let Some(f) = findings.iter().find(|f| f.rule != *rule) {
+            return Err(format!(
+                "fixture {stem}.rs: expected only `{rule}` findings, got: {f}"
+            ));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,752 @@
+//! The five `ddc-lint` rules, evaluated over one file's token stream.
+//!
+//! | rule            | invariant                                              |
+//! |-----------------|--------------------------------------------------------|
+//! | `write_path`    | cell/plane mutators called only in the arch write path |
+//! | `unsafe_module` | `unsafe` only in allowlisted modules                   |
+//! | `unsafe_safety` | every `unsafe` carries a nearby `// SAFETY:` comment   |
+//! | `no_panic`      | no unwrap/expect/panic!/literal-index in serving scope |
+//! | `hot_alloc`     | no allocating calls in manifest-named hot functions    |
+//! | `atomics`       | every `Ordering::*` matches the documented protocol    |
+//! | `waiver`        | a waiver comment must state a reason                   |
+//!
+//! Scope control: `#[cfg(test)]` / `#[test]` items are skipped
+//! entirely, and any finding can be waived with
+//! `// ddc-lint: allow(<rule>) — <reason>` on the same line or within
+//! the three lines above.  A waiver with no reason is itself flagged —
+//! unexplained suppressions rot.
+
+use super::lexer::{tokenize, Token, TokenKind};
+use super::Config;
+
+/// One lint finding.  `rule` is the machine name from the table above.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Cell/plane mutators that must stay on the single write path: calls
+/// to these outside [`Config::write_path_allow`] break FCC complement
+/// coherence, the sparsity summaries, or the fault intent ledger.
+const WRITE_PATH_MUTATORS: &[&str] = &["write_weight8", "write_row"];
+
+/// Allocating calls banned inside manifest-named hot functions.
+const HOT_ALLOC_METHODS: &[&str] = &["push", "to_vec", "clone", "collect"];
+
+/// Macros that abort the serving path.
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Lint one file's source text.  `rel` is the path relative to
+/// `rust/src` with `/` separators (`"util/pool.rs"`): every allowlist
+/// and manifest key is expressed in that namespace.
+pub fn lint_source(rel: &str, src: &str, cfg: &Config) -> Vec<Finding> {
+    let toks = tokenize(src);
+    let ctx = FileContext::build(&toks);
+    let waivers = collect_waivers(&toks);
+    let mut findings = Vec::new();
+
+    // waiver hygiene first: a reasonless waiver is a finding even if
+    // it never matches anything
+    for w in &waivers {
+        if !w.has_reason {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: w.line,
+                rule: "waiver",
+                message: format!(
+                    "waiver for `{}` has no reason — write `ddc-lint: allow({}) — <why>`",
+                    w.rule, w.rule
+                ),
+            });
+        }
+    }
+
+    rule_write_path(rel, &toks, &ctx, cfg, &mut findings);
+    rule_unsafe(rel, &toks, &ctx, cfg, &mut findings);
+    rule_no_panic(rel, &toks, &ctx, cfg, &mut findings);
+    rule_hot_alloc(rel, &toks, &ctx, cfg, &mut findings);
+    rule_atomics(rel, &toks, &ctx, cfg, &mut findings);
+
+    // apply waivers: a finding is dropped when a matching-rule waiver
+    // (with a reason) sits on its line or within the 3 lines above
+    findings.retain(|f| {
+        f.rule == "waiver"
+            || !waivers.iter().any(|w| {
+                w.has_reason && w.rule == f.rule && w.line <= f.line && f.line - w.line <= 3
+            })
+    });
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Per-token context computed in one pass: is the token inside a
+/// `#[cfg(test)]`/`#[test]` item, and which named `fn` encloses it.
+struct FileContext {
+    in_test: Vec<bool>,
+    enclosing_fn: Vec<Option<String>>,
+}
+
+impl FileContext {
+    fn build(toks: &[Token]) -> Self {
+        let n = toks.len();
+        let mut in_test = vec![false; n];
+        let mut enclosing_fn: Vec<Option<String>> = vec![None; n];
+
+        // pass 1: mark test items.  On `#[cfg(test)]` or `#[test]`,
+        // mark every token through the end of the annotated item (the
+        // matching close brace, or a `;` before any brace opens).
+        let mut i = 0;
+        while i < n {
+            if let Some(attr_end) = test_attr_end(toks, i) {
+                let mut j = attr_end;
+                let mut depth = 0usize;
+                let mut entered = false;
+                while j < n {
+                    match &toks[j].kind {
+                        TokenKind::Punct('{') => {
+                            depth += 1;
+                            entered = true;
+                        }
+                        TokenKind::Punct('}') => {
+                            depth = depth.saturating_sub(1);
+                            if entered && depth == 0 {
+                                break;
+                            }
+                        }
+                        TokenKind::Punct(';') if !entered => break,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                for k in i..=j.min(n - 1) {
+                    in_test[k] = true;
+                }
+                i = j + 1;
+            } else {
+                i += 1;
+            }
+        }
+
+        // pass 2: enclosing fn names.  `fn name` arms a pending frame
+        // that opens at the next `{` (skipping the signature) and
+        // closes at its matching `}`.  Closures don't rebind the frame;
+        // nested fns nest on the stack.
+        let mut stack: Vec<(usize, Option<String>)> = Vec::new(); // (depth at entry, name)
+        let mut depth = 0usize;
+        let mut pending: Option<String> = None;
+        // paren/bracket nesting inside a signature, so the `;` in a
+        // `[u8; 4]` parameter type doesn't read as "no body"
+        let mut sig_depth = 0usize;
+        for (idx, t) in toks.iter().enumerate() {
+            enclosing_fn[idx] = stack.last().and_then(|(_, name)| name.clone());
+            match &t.kind {
+                TokenKind::Ident(kw) if kw == "fn" => {
+                    if let Some(TokenKind::Ident(name)) = toks.get(idx + 1).map(|t| &t.kind) {
+                        pending = Some(name.clone());
+                        sig_depth = 0;
+                        enclosing_fn[idx] = Some(name.clone());
+                    }
+                }
+                TokenKind::Punct('(') | TokenKind::Punct('[') if pending.is_some() => {
+                    sig_depth += 1;
+                }
+                TokenKind::Punct(')') | TokenKind::Punct(']') if pending.is_some() => {
+                    sig_depth = sig_depth.saturating_sub(1);
+                }
+                TokenKind::Punct('{') => {
+                    depth += 1;
+                    if let Some(name) = pending.take() {
+                        stack.push((depth, Some(name.clone())));
+                        enclosing_fn[idx] = Some(name);
+                    }
+                }
+                TokenKind::Punct('}') => {
+                    if let Some((d, _)) = stack.last() {
+                        if *d == depth {
+                            stack.pop();
+                        }
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                TokenKind::Punct(';') if sig_depth == 0 => {
+                    // trait method / extern decl with no body
+                    pending = None;
+                }
+                _ => {}
+            }
+        }
+        FileContext { in_test, enclosing_fn }
+    }
+}
+
+/// If `toks[i]` starts `#[cfg(test)]` or `#[test]`, return the index
+/// one past the closing `]`.
+fn test_attr_end(toks: &[Token], i: usize) -> Option<usize> {
+    if !toks.get(i)?.kind.is_punct('#') || !toks.get(i + 1)?.kind.is_punct('[') {
+        return None;
+    }
+    match &toks.get(i + 2)?.kind {
+        TokenKind::Ident(a) if a == "test" && toks.get(i + 3)?.kind.is_punct(']') => Some(i + 4),
+        TokenKind::Ident(a) if a == "cfg" => {
+            // #[cfg(test)] exactly — #[cfg(feature = ...)] etc. pass
+            if toks.get(i + 3)?.kind.is_punct('(')
+                && toks.get(i + 4)?.kind.is_ident("test")
+                && toks.get(i + 5)?.kind.is_punct(')')
+                && toks.get(i + 6)?.kind.is_punct(']')
+            {
+                Some(i + 7)
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+struct Waiver {
+    line: usize,
+    rule: String,
+    has_reason: bool,
+}
+
+fn collect_waivers(toks: &[Token]) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for t in toks {
+        if let TokenKind::Comment(text) = &t.kind {
+            if let Some(rest) = text.split("ddc-lint: allow(").nth(1) {
+                if let Some((rule, tail)) = rest.split_once(')') {
+                    let reason = tail
+                        .trim_start_matches(|c: char| c == ' ' || c == '—' || c == '-' || c == ':');
+                    out.push(Waiver {
+                        line: t.line,
+                        rule: rule.trim().to_string(),
+                        has_reason: !reason.trim().is_empty(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// R1: cell/plane mutators only on the arch write path.
+fn rule_write_path(
+    rel: &str,
+    toks: &[Token],
+    ctx: &FileContext,
+    cfg: &Config,
+    findings: &mut Vec<Finding>,
+) {
+    if cfg.write_path_allow.iter().any(|f| f == rel) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if ctx.in_test[i] {
+            continue;
+        }
+        let TokenKind::Ident(name) = &t.kind else { continue };
+        let is_call = toks.get(i + 1).is_some_and(|n| n.kind.is_punct('('));
+        if !is_call {
+            continue;
+        }
+        if WRITE_PATH_MUTATORS.contains(&name.as_str()) {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "write_path",
+                message: format!(
+                    "`{name}` mutates cell state; only the arch write path \
+                     ({}) may call it — route through `PimCore::write_weight`",
+                    cfg.write_path_allow.join(", ")
+                ),
+            });
+        }
+        // `<planes-ish receiver>.record(...)` — WeightPlanes::record
+        // bypasses the coherence + ledger bookkeeping.  The receiver
+        // heuristic keeps `LatencyHistogram::record` et al. clean.
+        if name == "record"
+            && i >= 2
+            && toks[i - 1].kind.is_punct('.')
+            && matches!(&toks[i - 2].kind, TokenKind::Ident(r) if r.ends_with("planes"))
+        {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "write_path",
+                message: "`planes.record` bypasses the single write path; \
+                          route through `PimCore::write_weight`"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// R2: `unsafe` hygiene — allowlisted modules only, each site
+/// documented by a `SAFETY:` comment in the contiguous comment block
+/// directly above it (or on the same line).
+fn rule_unsafe(
+    rel: &str,
+    toks: &[Token],
+    ctx: &FileContext,
+    cfg: &Config,
+    findings: &mut Vec<Finding>,
+) {
+    let allowed_here = cfg.unsafe_allow.iter().any(|f| f == rel);
+    // every comment line, marked for SAFETY: an `unsafe` is documented
+    // when the contiguous comment block ending on the line above it
+    // (or a same-line comment) mentions SAFETY anywhere in the block
+    let comment_lines: Vec<(usize, bool)> = toks
+        .iter()
+        .filter_map(|t| match &t.kind {
+            TokenKind::Comment(c) => Some((t.line, c.contains("SAFETY"))),
+            _ => None,
+        })
+        .collect();
+    let documented = |line: usize| -> bool {
+        if comment_lines.iter().any(|&(l, s)| s && l == line) {
+            return true;
+        }
+        // last comment above the site; rustfmt may wrap the statement,
+        // so the block may end up to 2 lines above the `unsafe` token
+        let Some(&(end, _)) = comment_lines.iter().rev().find(|&&(l, _)| l < line) else {
+            return false;
+        };
+        if line - end > 2 {
+            return false;
+        }
+        let mut expect = end;
+        for &(l, safety) in comment_lines.iter().rev() {
+            if l > expect {
+                continue;
+            }
+            if l == expect && l > 0 {
+                if safety {
+                    return true;
+                }
+                expect = l - 1;
+            } else {
+                break;
+            }
+        }
+        false
+    };
+    for (i, t) in toks.iter().enumerate() {
+        if ctx.in_test[i] || !t.kind.is_ident("unsafe") {
+            continue;
+        }
+        // `unsafe fn(` — a function *pointer type* has no body to
+        // document; the SAFETY burden sits on its callers
+        if toks.get(i + 1).is_some_and(|n| n.kind.is_ident("fn"))
+            && toks.get(i + 2).is_some_and(|n| n.kind.is_punct('('))
+        {
+            continue;
+        }
+        if !allowed_here {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "unsafe_module",
+                message: format!(
+                    "`unsafe` outside the allowlisted modules ({})",
+                    cfg.unsafe_allow.join(", ")
+                ),
+            });
+        }
+        if !documented(t.line) {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "unsafe_safety",
+                message: "`unsafe` without a `// SAFETY:` comment naming the \
+                          disjointness or lifetime argument"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Does `scope` (a manifest file entry) cover function `fname`?
+fn in_scope(entries: &[String], fname: Option<&str>) -> bool {
+    entries.iter().any(|e| e == "*")
+        || fname.is_some_and(|f| entries.iter().any(|e| e == f))
+}
+
+/// R3: no-panic serving paths.
+fn rule_no_panic(
+    rel: &str,
+    toks: &[Token],
+    ctx: &FileContext,
+    cfg: &Config,
+    findings: &mut Vec<Finding>,
+) {
+    let Some(entries) = cfg.no_panic.get(rel) else { return };
+    for (i, t) in toks.iter().enumerate() {
+        if ctx.in_test[i] || !in_scope(entries, ctx.enclosing_fn[i].as_deref()) {
+            continue;
+        }
+        match &t.kind {
+            TokenKind::Ident(name) if name == "unwrap" || name == "expect" => {
+                let is_method = i >= 1
+                    && toks[i - 1].kind.is_punct('.')
+                    && toks.get(i + 1).is_some_and(|n| n.kind.is_punct('('));
+                if is_method {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: t.line,
+                        rule: "no_panic",
+                        message: format!(
+                            "`.{name}()` can abort the serving path; propagate a typed error"
+                        ),
+                    });
+                }
+            }
+            TokenKind::Ident(name) if PANIC_MACROS.contains(&name.as_str()) => {
+                if toks.get(i + 1).is_some_and(|n| n.kind.is_punct('!')) {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: t.line,
+                        rule: "no_panic",
+                        message: format!("`{name}!` aborts the serving path"),
+                    });
+                }
+            }
+            TokenKind::Punct('[') => {
+                // literal index `expr[3]`: previous token ends an
+                // expression, bracket holds exactly one integer
+                let prev_is_expr = i >= 1
+                    && matches!(
+                        &toks[i - 1].kind,
+                        TokenKind::Ident(_) | TokenKind::Punct(')') | TokenKind::Punct(']')
+                    );
+                let lit = match (toks.get(i + 1), toks.get(i + 2)) {
+                    (Some(n), Some(c)) if c.kind.is_punct(']') => match &n.kind {
+                        TokenKind::Number(v) if !v.contains('.') => Some(v.clone()),
+                        _ => None,
+                    },
+                    _ => None,
+                };
+                if prev_is_expr {
+                    if let Some(v) = lit {
+                        findings.push(Finding {
+                            file: rel.to_string(),
+                            line: t.line,
+                            rule: "no_panic",
+                            message: format!(
+                                "literal index `[{v}]` can panic; use `.get({v})` or a \
+                                 destructuring match"
+                            ),
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// R4: allocation-free hot paths.
+fn rule_hot_alloc(
+    rel: &str,
+    toks: &[Token],
+    ctx: &FileContext,
+    cfg: &Config,
+    findings: &mut Vec<Finding>,
+) {
+    let Some(entries) = cfg.no_alloc.get(rel) else { return };
+    let mut flag = |line: usize, what: &str, findings: &mut Vec<Finding>| {
+        findings.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: "hot_alloc",
+            message: format!(
+                "`{what}` allocates inside a hot function named in lint-hotpaths.toml \
+                 (steady-state must be zero-alloc)"
+            ),
+        });
+    };
+    for (i, t) in toks.iter().enumerate() {
+        if ctx.in_test[i] || !in_scope(entries, ctx.enclosing_fn[i].as_deref()) {
+            continue;
+        }
+        let TokenKind::Ident(name) = &t.kind else { continue };
+        let next_is = |c: char| toks.get(i + 1).is_some_and(|n| n.kind.is_punct(c));
+        match name.as_str() {
+            "Vec" if next_is(':')
+                && toks.get(i + 2).is_some_and(|n| n.kind.is_punct(':'))
+                && toks.get(i + 3).is_some_and(|n| n.kind.is_ident("new")) =>
+            {
+                flag(t.line, "Vec::new", findings);
+            }
+            "vec" if next_is('!') => flag(t.line, "vec!", findings),
+            "format" if next_is('!') => flag(t.line, "format!", findings),
+            m if HOT_ALLOC_METHODS.contains(&m)
+                && i >= 1
+                && toks[i - 1].kind.is_punct('.')
+                // plain call or turbofish `collect::<...>`
+                && (next_is('(') || (m == "collect" && next_is(':'))) =>
+            {
+                flag(t.line, &format!(".{m}()"), findings);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// R5: every `Ordering::X` in an audited file must appear in the
+/// protocol table entry for its enclosing function.
+fn rule_atomics(
+    rel: &str,
+    toks: &[Token],
+    ctx: &FileContext,
+    cfg: &Config,
+    findings: &mut Vec<Finding>,
+) {
+    if !cfg.atomics_files.iter().any(|f| f == rel) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if ctx.in_test[i] || !t.kind.is_ident("Ordering") {
+            continue;
+        }
+        // `Ordering :: Variant` — a bare `Ordering` in a use statement
+        // or type position doesn't name a variant and isn't audited
+        let variant = match (toks.get(i + 1), toks.get(i + 2), toks.get(i + 3)) {
+            (Some(a), Some(b), Some(c)) if a.kind.is_punct(':') && b.kind.is_punct(':') => {
+                match &c.kind {
+                    TokenKind::Ident(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+            _ => None,
+        };
+        let Some(variant) = variant else { continue };
+        let fname = ctx.enclosing_fn[i].clone().unwrap_or_else(|| "<module>".into());
+        let key = format!("{rel}::{fname}");
+        match cfg.atomics.get(&key) {
+            None => findings.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "atomics",
+                message: format!(
+                    "`Ordering::{variant}` in `{fname}` has no protocol entry \
+                     (`\"{key}\"`) in lint-hotpaths.toml [atomics]"
+                ),
+            }),
+            Some(allowed) if !allowed.iter().any(|a| a == &variant) => {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: t.line,
+                    rule: "atomics",
+                    message: format!(
+                        "`Ordering::{variant}` in `{fname}` not in its documented \
+                         protocol ({})",
+                        allowed.join(", ")
+                    ),
+                })
+            }
+            Some(_) => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::lint::Config;
+    use std::collections::BTreeMap;
+
+    fn base_cfg() -> Config {
+        Config {
+            write_path_allow: vec!["arch/sram.rs".into(), "arch/pim_core.rs".into()],
+            unsafe_allow: vec!["util/pool.rs".into()],
+            no_alloc: BTreeMap::new(),
+            no_panic: BTreeMap::new(),
+            atomics: BTreeMap::new(),
+            atomics_files: vec!["util/pool.rs".into()],
+        }
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn write_path_flags_stray_mutators_and_allows_the_arch() {
+        let src = "fn sneak(core: &mut PimCore) { core.compartments[c].write_weight8(r, s, w); }";
+        let f = lint_source("mapping/exec2.rs", src, &base_cfg());
+        assert_eq!(rules_of(&f), vec!["write_path"]);
+        // same text inside the allowlisted file: clean
+        assert!(lint_source("arch/pim_core.rs", src, &base_cfg()).is_empty());
+        // planes receiver heuristic
+        let src2 = "fn sneak(&mut self) { self.planes.record(row, slot, w); }";
+        assert_eq!(rules_of(&lint_source("x.rs", src2, &base_cfg())), vec!["write_path"]);
+        // histogram .record is NOT a plane write
+        let src3 = "fn ok(&mut self) { self.latency_hist.record(ms); }";
+        assert!(lint_source("x.rs", src3, &base_cfg()).is_empty());
+    }
+
+    #[test]
+    fn unsafe_rules_fire_separately() {
+        let documented = "// SAFETY: lanes are disjoint\nunsafe { ptr.write(1) }";
+        let undocumented = "fn f() { unsafe { ptr.write(1) } }";
+        // allowlisted + documented: clean
+        assert!(lint_source("util/pool.rs", documented, &base_cfg()).is_empty());
+        // allowlisted + undocumented: safety only
+        assert_eq!(
+            rules_of(&lint_source("util/pool.rs", undocumented, &base_cfg())),
+            vec!["unsafe_safety"]
+        );
+        // non-allowlisted + documented: module only
+        assert_eq!(
+            rules_of(&lint_source("model/zoo.rs", documented, &base_cfg())),
+            vec!["unsafe_module"]
+        );
+        // fn-pointer type needs no SAFETY
+        let fnptr = "struct J { call: unsafe fn(*const (), usize) }";
+        assert!(lint_source("util/pool.rs", fnptr, &base_cfg()).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n fn f() { x.unwrap(); unsafe { y() } }\n}";
+        let mut cfg = base_cfg();
+        cfg.no_panic.insert("a.rs".into(), vec!["*".into()]);
+        assert!(lint_source("a.rs", src, &cfg).is_empty());
+    }
+
+    #[test]
+    fn no_panic_scoping_and_idents() {
+        let mut cfg = base_cfg();
+        cfg.no_panic
+            .insert("svc.rs".into(), vec!["serve".into()]);
+        let src = "\
+fn serve(x: Option<u32>, v: &[u8]) -> u32 {
+    let a = x.unwrap();
+    let b = x.expect(\"msg\");
+    let c = v[0];
+    let d = x.unwrap_or_default();
+    panic!(\"boom\");
+}
+fn helper(x: Option<u32>) -> u32 { x.unwrap() }
+";
+        let f = lint_source("svc.rs", src, &cfg);
+        // unwrap + expect + v[0] + panic! — helper() out of scope,
+        // unwrap_or_default not a banned ident
+        assert_eq!(rules_of(&f), vec!["no_panic"; 4]);
+        assert!(f.iter().any(|x| x.message.contains("literal index")));
+    }
+
+    #[test]
+    fn literal_index_ignores_array_types_and_ranges() {
+        let mut cfg = base_cfg();
+        cfg.no_panic.insert("svc.rs".into(), vec!["*".into()]);
+        let src = "\
+fn f(v: &[u8]) -> ([f32; 4], u8) {
+    let arr = [0f32; 4];
+    let s = &v[1..];
+    (arr, s.iter().sum())
+}
+";
+        assert!(lint_source("svc.rs", src, &cfg).is_empty());
+    }
+
+    #[test]
+    fn hot_alloc_scoped_to_manifest_fns() {
+        let mut cfg = base_cfg();
+        cfg.no_alloc
+            .insert("exec.rs".into(), vec!["execute".into()]);
+        let src = "\
+fn execute(&self, out: &mut [i32]) {
+    let v = Vec::new();
+    let w = vec![0u8; 4];
+    self.scratch.push(1);
+    let c = self.weights.clone();
+    let t = out.to_vec();
+    let s: Vec<u32> = it.collect::<Vec<_>>();
+    let msg = format!(\"x\");
+    out.fill(0); // allowed
+}
+fn plan(&self) -> Vec<u8> { vec![0] }
+";
+        let f = lint_source("exec.rs", src, &cfg);
+        assert_eq!(rules_of(&f), vec!["hot_alloc"; 7]);
+    }
+
+    #[test]
+    fn atomics_audit_checks_the_protocol_table() {
+        let mut cfg = base_cfg();
+        cfg.atomics.insert(
+            "util/pool.rs::pop".into(),
+            vec!["Acquire".into(), "AcqRel".into()],
+        );
+        let ok = "fn pop(r: &AtomicU64) { r.load(Ordering::Acquire); }";
+        assert!(lint_source("util/pool.rs", ok, &cfg).is_empty());
+        let relaxed = "fn pop(r: &AtomicU64) { r.load(Ordering::Relaxed); }";
+        assert_eq!(rules_of(&lint_source("util/pool.rs", relaxed, &cfg)), vec!["atomics"]);
+        let unknown_fn = "fn flush(r: &AtomicU64) { r.load(Ordering::Acquire); }";
+        assert_eq!(
+            rules_of(&lint_source("util/pool.rs", unknown_fn, &cfg)),
+            vec!["atomics"]
+        );
+        // bare `Ordering` in a use statement is not a variant use
+        let use_stmt = "use std::sync::atomic::{AtomicU64, Ordering};";
+        assert!(lint_source("util/pool.rs", use_stmt, &cfg).is_empty());
+        // unaudited files are not scanned
+        assert!(lint_source("model/zoo.rs", relaxed, &cfg).is_empty());
+    }
+
+    #[test]
+    fn waivers_suppress_with_reason_and_flag_without() {
+        let mut cfg = base_cfg();
+        cfg.no_panic.insert("svc.rs".into(), vec!["*".into()]);
+        let with_reason = "\
+fn f() {
+    // ddc-lint: allow(no_panic) — chaos hook panics by design
+    panic!(\"boom\");
+}
+";
+        assert!(lint_source("svc.rs", with_reason, &cfg).is_empty());
+        let without = "\
+fn f() {
+    // ddc-lint: allow(no_panic)
+    panic!(\"boom\");
+}
+";
+        let f = lint_source("svc.rs", without, &cfg);
+        // the waiver is flagged AND does not suppress
+        assert_eq!(rules_of(&f), vec!["waiver", "no_panic"]);
+        // a waiver for a different rule does not suppress
+        let wrong_rule = "\
+fn f() {
+    // ddc-lint: allow(hot_alloc) — wrong rule
+    panic!(\"boom\");
+}
+";
+        assert_eq!(rules_of(&lint_source("svc.rs", wrong_rule, &cfg)), vec!["no_panic"]);
+    }
+
+    #[test]
+    fn enclosing_fn_survives_closures_and_nesting() {
+        let mut cfg = base_cfg();
+        cfg.no_alloc.insert("x.rs".into(), vec!["outer".into()]);
+        let src = "\
+fn outer(&self) {
+    let f = |x: u32| { self.buf.push(x) };
+    f(1);
+}
+fn other(&self) { self.buf.push(2); }
+";
+        let f = lint_source("x.rs", src, &cfg);
+        assert_eq!(rules_of(&f), vec!["hot_alloc"]);
+        assert_eq!(f[0].line, 2);
+    }
+}

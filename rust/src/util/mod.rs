@@ -6,7 +6,9 @@
 //! library, per the reproduction ground rules.
 
 pub mod benchkit;
+pub mod env;
 pub mod json;
+pub mod lint;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -59,27 +59,9 @@ pub fn resolve_threads(requested: usize) -> usize {
     let n = if requested > 0 {
         requested
     } else {
-        match std::env::var("DDC_THREADS") {
-            Ok(raw) => parse_threads_var(&raw).unwrap_or_else(|| {
-                eprintln!(
-                    "[ddc-config] ignoring DDC_THREADS={raw:?}: want a positive integer; using 1"
-                );
-                1
-            }),
-            Err(_) => 1,
-        }
+        crate::util::env::resolve_env_knob("DDC_THREADS", 1, "1", crate::util::env::parse_positive)
     };
     n.clamp(1, MAX_THREADS)
-}
-
-/// Parse a `DDC_THREADS` value: a positive integer (clamping happens in
-/// [`resolve_threads`]); anything else yields `None` so the caller can
-/// warn.
-fn parse_threads_var(v: &str) -> Option<usize> {
-    match v.trim().parse::<usize>() {
-        Ok(n) if n >= 1 => Some(n),
-        _ => None,
-    }
 }
 
 /// A raw `*mut T` asserting that cross-thread access is externally
@@ -99,7 +81,14 @@ impl<T> Clone for SharedMut<T> {
 
 impl<T> Copy for SharedMut<T> {}
 
+// SAFETY: `SharedMut` is only constructed over allocations that outlive
+// the pool job (the caller blocks in `run` until every lane returns),
+// and every lane dereferences a disjoint index set — disjointness is
+// the caller's stated contract (see the struct docs), so no two
+// threads ever alias the same element.
 unsafe impl<T: Send> Send for SharedMut<T> {}
+// SAFETY: same argument as `Send` — shared access is index-disjoint and
+// the barrier in `run` sequences all writes before any caller read.
 unsafe impl<T: Send> Sync for SharedMut<T> {}
 
 /// Type-erased job: closure data pointer + monomorphized trampoline.
@@ -113,6 +102,9 @@ struct Job {
 // owning thread, so the closure it points at is alive and `Sync`.
 unsafe impl Send for Job {}
 
+// SAFETY contract: `data` must point at a live `F`; upheld because the
+// only caller chain is `run` → worker loop, and `run` blocks until all
+// lanes drain the job, keeping the stack-borrowed closure alive.
 unsafe fn trampoline<F: Fn(usize, usize) + Sync>(data: *const (), lane: usize, unit: usize) {
     (*(data as *const F))(lane, unit)
 }
@@ -411,11 +403,21 @@ mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
 
+    /// Miri interprets every step ~1000x slower; the schedules a small
+    /// run explores are the same shape, so trim counts, not coverage.
+    const fn trim(full: usize, miri: usize) -> usize {
+        if cfg!(miri) {
+            miri
+        } else {
+            full
+        }
+    }
+
     #[test]
     fn every_unit_runs_exactly_once() {
         for width in [1usize, 2, 3, 8] {
             let mut pool = WorkPool::new(width);
-            let units = 257; // odd + > width so the split is uneven
+            let units = trim(257, 33); // odd + > width so the split is uneven
             let hits: Vec<AtomicUsize> = (0..units).map(|_| AtomicUsize::new(0)).collect();
             pool.run(units, &|_, u| {
                 hits[u].fetch_add(1, Ordering::Relaxed);
@@ -459,10 +461,10 @@ mod tests {
         // front-loaded cost: lane 0's initial range is far more
         // expensive, so the other lanes must steal to finish
         let mut pool = WorkPool::new(4);
-        let units = 64;
+        let units = trim(64, 16);
         let hits: Vec<AtomicUsize> = (0..units).map(|_| AtomicUsize::new(0)).collect();
         pool.run(units, &|_, u| {
-            let spins: u64 = if u < 8 { 20_000 } else { 10 };
+            let spins: u64 = if u < 8 { trim(20_000, 200) as u64 } else { 10 };
             let mut acc = 0u64;
             for i in 0..spins {
                 acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
@@ -478,7 +480,7 @@ mod tests {
     #[test]
     fn disjoint_writes_through_shared_mut() {
         let mut pool = WorkPool::new(4);
-        let mut out = vec![0u64; 1000];
+        let mut out = vec![0u64; trim(1000, 64)];
         let base = SharedMut(out.as_mut_ptr());
         pool.run(out.len(), &|_, u| {
             // SAFETY: unit indices are unique, so writes are disjoint
@@ -497,7 +499,7 @@ mod tests {
         let mut pool = WorkPool::new(4);
         for _ in 0..2 {
             let result = panic::catch_unwind(AssertUnwindSafe(|| {
-                pool.run(64, &|_, u| {
+                pool.run(trim(64, 16), &|_, u| {
                     if u == 13 {
                         panic!("boom");
                     }
@@ -506,10 +508,11 @@ mod tests {
             assert!(result.is_err(), "panic in a job unit must propagate");
             // the same pool still runs clean jobs to completion
             let count = AtomicUsize::new(0);
-            pool.run(100, &|_, _| {
+            let n = trim(100, 20);
+            pool.run(n, &|_, _| {
                 count.fetch_add(1, Ordering::Relaxed);
             });
-            assert_eq!(count.load(Ordering::Relaxed), 100, "pool poisoned after panic");
+            assert_eq!(count.load(Ordering::Relaxed), n, "pool poisoned after panic");
         }
     }
 
@@ -534,9 +537,9 @@ mod tests {
         assert_eq!(resolve_threads(10_000), MAX_THREADS);
         // the env fallback parser (resolve_threads(0) itself would read
         // the live environment — racy under the parallel test harness)
-        assert_eq!(parse_threads_var("4"), Some(4));
-        assert_eq!(parse_threads_var(" 2 "), Some(2));
-        assert_eq!(parse_threads_var("0"), None);
-        assert_eq!(parse_threads_var("lots"), None);
+        assert_eq!(crate::util::env::parse_positive("4"), Ok(4));
+        assert_eq!(crate::util::env::parse_positive(" 2 "), Ok(2));
+        assert!(crate::util::env::parse_positive("0").is_err());
+        assert!(crate::util::env::parse_positive("lots").is_err());
     }
 }

@@ -1,0 +1,116 @@
+//! Tier-1 gate for `ddc-lint` itself: the real tree must lint clean,
+//! every fixture must trip exactly its rule, and the interleaving
+//! checker must clear ≥1000 seeded schedules of both protocols while
+//! still catching the planted-bug variants.
+
+use std::path::PathBuf;
+
+use ddc_pim::util::lint::{self, manifest, shuttle, Config};
+
+fn repo_config() -> Config {
+    let manifest_path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../lint-hotpaths.toml");
+    let text = std::fs::read_to_string(&manifest_path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", manifest_path.display()));
+    let man = manifest::parse(&text).expect("lint-hotpaths.toml parses");
+    Config::from_manifest(&man)
+}
+
+#[test]
+fn repo_tree_lints_clean() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = lint::lint_tree(&src, &repo_config());
+    assert!(
+        findings.is_empty(),
+        "ddc-lint findings in the tree:\n{}",
+        findings
+            .iter()
+            .map(|f| format!("  {f}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn manifest_names_real_functions() {
+    // a typoed manifest entry would silently scope a rule to nothing;
+    // require every named hot/no-panic function to exist in its file
+    let src_root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let cfg = repo_config();
+    for (section, table) in [("no_alloc", &cfg.no_alloc), ("no_panic", &cfg.no_panic)] {
+        for (file, fns) in table {
+            let text = std::fs::read_to_string(src_root.join(file))
+                .unwrap_or_else(|e| panic!("[{section}] names missing file {file}: {e}"));
+            for f in fns {
+                if f == "*" {
+                    continue;
+                }
+                assert!(
+                    text.contains(&format!("fn {f}")),
+                    "[{section}] {file}: no `fn {f}` in that file — stale manifest entry"
+                );
+            }
+        }
+    }
+    for key in cfg.atomics.keys() {
+        let (file, f) = key.split_once("::").expect("atomics key is file::fn");
+        let text = std::fs::read_to_string(src_root.join(file))
+            .unwrap_or_else(|e| panic!("[atomics] names missing file {file}: {e}"));
+        assert!(
+            text.contains(&format!("fn {f}")),
+            "[atomics] {key}: no `fn {f}` in {file} — stale manifest entry"
+        );
+    }
+}
+
+#[test]
+fn fixtures_each_trip_exactly_their_rule() {
+    let fixtures = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures");
+    lint::self_check(&fixtures, &repo_config()).expect("fixture self-check");
+}
+
+#[test]
+fn fixture_expectations_cover_every_fixture_file() {
+    // a fixture added without an expectation entry would never run
+    let fixtures = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures");
+    let mut on_disk: Vec<String> = std::fs::read_dir(&fixtures)
+        .expect("fixtures dir")
+        .flatten()
+        .filter_map(|e| {
+            let p = e.path();
+            (p.extension()? == "rs").then(|| p.file_stem().unwrap().to_string_lossy().into_owned())
+        })
+        .collect();
+    on_disk.sort();
+    let mut expected: Vec<String> = lint::FIXTURE_EXPECTATIONS
+        .iter()
+        .map(|(stem, _, _)| stem.to_string())
+        .collect();
+    expected.sort();
+    assert_eq!(on_disk, expected);
+}
+
+// trimmed under Miri: interpreted steps are ~1000x slower and the
+// schedules are identical either way
+const SHUTTLE_SEEDS: u64 = if cfg!(miri) { 32 } else { 1000 };
+
+#[test]
+fn shuttle_clears_both_protocols() {
+    let steal = shuttle::check_steal_protocol(SHUTTLE_SEEDS, 4, 24);
+    assert_eq!(steal.schedules, SHUTTLE_SEEDS);
+    assert!(steal.ok(), "steal protocol violations: {:?}", steal.violations);
+    let gate = shuttle::check_admission_gate(SHUTTLE_SEEDS, 6, 2);
+    assert_eq!(gate.schedules, SHUTTLE_SEEDS);
+    assert!(gate.ok(), "admission gate violations: {:?}", gate.violations);
+}
+
+#[test]
+fn shuttle_catches_planted_bugs() {
+    assert!(
+        !shuttle::check_steal_protocol_buggy(SHUTTLE_SEEDS, 4, 12).ok(),
+        "planted pop lost-update not found — the checker has no teeth"
+    );
+    assert!(
+        !shuttle::check_admission_gate_buggy(SHUTTLE_SEEDS, 6, 2).ok(),
+        "planted admission blind-store not found — the checker has no teeth"
+    );
+}

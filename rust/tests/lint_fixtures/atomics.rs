@@ -1,0 +1,8 @@
+//! ddc-lint fixture: violates `atomics` and nothing else.
+//! Linted as `util/pool.rs`: the `[atomics]` protocol table says `pop`
+//! uses Acquire/AcqRel, so the Relaxed load below is off-protocol.
+//! Never compiled.
+
+fn pop(range: &AtomicU64) -> u64 {
+    range.load(Ordering::Relaxed)
+}

@@ -1,0 +1,10 @@
+//! ddc-lint fixture: violates `hot_alloc` and nothing else.
+//! Linted as `mapping/exec.rs`, whose `[no_alloc]` manifest entry
+//! names `execute` — so the allocation below is in scope.  Never
+//! compiled.
+
+pub fn execute(out: &mut [i32]) {
+    // steady-state execute must reuse pre-sized buffers
+    let scratch: Vec<i32> = Vec::new();
+    let _ = (out, scratch);
+}

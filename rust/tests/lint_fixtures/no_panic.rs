@@ -1,0 +1,8 @@
+//! ddc-lint fixture: violates `no_panic` and nothing else.
+//! Linted as `coordinator/service.rs` (whole file in the `[no_panic]`
+//! manifest scope).  Never compiled.
+
+pub fn shed_or_crash(slot: Option<u32>) -> u32 {
+    // a serving path must degrade via typed errors, not abort
+    slot.unwrap()
+}

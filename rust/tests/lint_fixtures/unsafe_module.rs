@@ -1,0 +1,10 @@
+//! ddc-lint fixture: violates `unsafe_module` and nothing else.
+//! Linted as `model/rogue.rs` — a module with no business holding
+//! `unsafe` (the SAFETY comment is present so only the module rule
+//! fires).  Never compiled.
+
+pub fn peek(p: *const u32) -> u32 {
+    // SAFETY: caller guarantees p is valid (but this module may not
+    // contain unsafe at all, documented or not)
+    unsafe { *p }
+}

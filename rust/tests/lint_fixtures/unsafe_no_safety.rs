@@ -1,0 +1,9 @@
+//! ddc-lint fixture: violates `unsafe_safety` and nothing else.
+//! Linted as `mapping/exec.rs` (an allowlisted unsafe module), so the
+//! only finding is the missing SAFETY comment.  Never compiled.
+
+pub fn undocumented(p: *mut u32) {
+    unsafe {
+        *p = 7;
+    }
+}

@@ -1,0 +1,9 @@
+//! ddc-lint fixture: violates `waiver` and nothing else.
+//! Linted as `coordinator/service.rs`.  A reasonless waiver is itself
+//! a finding AND suppresses nothing — but here it waives a line with
+//! no violation, so only the `waiver` finding fires.  Never compiled.
+
+pub fn quiet() -> u32 {
+    // ddc-lint: allow(no_panic)
+    41 + 1
+}

@@ -1,0 +1,10 @@
+//! ddc-lint fixture: violates `write_path` and nothing else.
+//! Linted as `mapping/rogue.rs` (not on the arch write path) by the
+//! self-check and `tests/lint_clean.rs`.  Never compiled — `tests/`
+//! subdirectories are not cargo test targets.
+
+pub fn sneak_a_weight(cmp: &mut Compartment) {
+    // bypasses PimCore::write_weight: no complement coherence, no
+    // sparsity summary update, no fault-intent ledger entry
+    cmp.write_weight8(0, 3, 0x5a);
+}
