@@ -299,6 +299,39 @@ fn main() {
         "of the 9300 B budget",
     );
 
+    // serving-time scrub (PR 10): the same resident deep session with
+    // the incremental scrub scheduler at full coverage — every stored
+    // stripe re-verified at every batch boundary, the worst case a
+    // server would configure.  The overhead ratio is the pure cost of
+    // continuous verification on a clean fabric (no upsets, so no
+    // repair work is mixed into the number).
+    let mut scrubbed = ReferenceBackend::seeded_deep(DEFAULT_SEED, FabricChoice::BitSliced, 2)
+        .with_scrub_stripes(usize::MAX)
+        .plan()
+        .expect("scrubbed plan");
+    let scr = s.bench("session.scrubbed.full.deep4.b4", 1, 10, || {
+        scrubbed
+            .infer_batch_into(&simgs, sbatch, &mut slogits)
+            .expect("scrubbed infer");
+        std::hint::black_box(slogits[0]);
+    });
+    s.report(
+        "session.scrubbed.full.overhead_vs_resident",
+        scr.mean_ns / res.mean_ns,
+        "x (full-coverage boundary scrub, clean fabric)",
+    );
+    let (scrub_checked, scrub_space) = scrubbed.scrub_progress();
+    s.report(
+        "session.scrubbed.full.stripes_per_boundary",
+        scrub_space as f64,
+        "stripes (resident scrub space)",
+    );
+    s.report(
+        "session.scrubbed.full.stripes_checked",
+        scrub_checked as f64,
+        "stripe verifications (run total)",
+    );
+
     // integrity scrub (PR 7): a seeded-faulted core at macro-like
     // geometry (32 compartments x 64 rows, BER 1e-3), weights written
     // into 48 rows with 16 left as repair spares.  The *cold* scrub —
@@ -349,12 +382,13 @@ fn main() {
     let burst_imgs: Vec<Vec<f32>> = (0..burst)
         .map(|_| (0..IMG_ELEMS).map(|_| burst_rng.normal() as f32).collect())
         .collect();
-    let serve_burst = |workers: usize| -> (f64, ServiceStats) {
+    let serve_burst = |workers: usize, scrub_stripes: u32| -> (f64, ServiceStats) {
         let svc = InferenceService::start_cluster(
             BackendSpec {
                 kind: BackendKind::Reference,
                 fabric: FabricChoice::BitSliced,
                 threads: 2,
+                scrub_stripes,
                 ..Default::default()
             },
             "/nonexistent".into(),
@@ -375,8 +409,8 @@ fn main() {
         let elapsed_ns = t0.elapsed().as_nanos() as f64;
         (elapsed_ns, svc.stats().expect("stats"))
     };
-    let (w1_ns, _) = serve_burst(1);
-    let (w2_ns, w2_stats) = serve_burst(2);
+    let (w1_ns, _) = serve_burst(1, 0);
+    let (w2_ns, w2_stats) = serve_burst(2, 0);
     s.report("service.burst24.w1", w1_ns, "ns (1 worker, batch<=4)");
     s.report("service.burst24.w2", w2_ns, "ns (2 workers, batch<=4)");
     s.report("service.burst24.w2_speedup_vs_w1", w1_ns / w2_ns, "x");
@@ -394,6 +428,26 @@ fn main() {
         "service.burst24.w2.p99",
         w2_stats.p99().as_nanos() as f64,
         "ns",
+    );
+
+    // the same 2-worker burst with full-coverage serving-time scrub on
+    // every worker — `serving.scrubbed` vs the scrub-off burst above is
+    // what the reliability runtime costs a clean serving tier
+    let (w2s_ns, w2s_stats) = serve_burst(2, u32::MAX);
+    s.report(
+        "serving.scrubbed.burst24.w2",
+        w2s_ns,
+        "ns (2 workers, full boundary scrub)",
+    );
+    s.report(
+        "serving.scrubbed.overhead_vs_scrub_off",
+        w2s_ns / w2_ns,
+        "x",
+    );
+    s.report(
+        "serving.scrubbed.stripes_checked",
+        w2s_stats.reliability.scrub_stripes_checked as f64,
+        "stripe verifications (burst total, both workers)",
     );
 
     s.finish();

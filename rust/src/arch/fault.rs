@@ -104,6 +104,32 @@ impl FaultConfig {
     }
 }
 
+/// Knobs for the deterministic retention-upset process: a seed and a
+/// per-cell per-batch upset probability in `[0, 1]`.  Upsets are
+/// scheduled against the core's **virtual batch clock** — every tick
+/// draws from an RNG keyed on `(seed, tick)` alone, never wall time —
+/// so a chaos soak replays bit for bit under any scheduling.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UpsetConfig {
+    pub seed: u64,
+    pub per_batch_ber: f64,
+}
+
+impl UpsetConfig {
+    pub fn new(seed: u64, per_batch_ber: f64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&per_batch_ber),
+            "upset BER {per_batch_ber} outside [0, 1]"
+        );
+        UpsetConfig { seed, per_batch_ber }
+    }
+
+    /// Integer-friendly constructor mirroring [`FaultConfig::from_ppm`].
+    pub fn from_ppm(seed: u64, ppm: u32) -> Self {
+        Self::new(seed, ppm as f64 / 1e6)
+    }
+}
+
 /// A set of cell faults to install into one core.  Either enumerated
 /// explicitly ([`FaultPlan::from_faults`], tests) or sampled uniformly
 /// over every cell of a geometry at the configured BER
@@ -194,6 +220,14 @@ pub struct FaultTally {
     pub quarantined_rows: u64,
     /// Quarantined rows zeroed for lack of clean spares.
     pub zeroed_rows: u64,
+    /// Retention-upset bit flips landed on live rows by the virtual
+    /// batch-clock process (disjoint from `injected_bits`, which counts
+    /// write-time corruption).
+    pub upset_bits: u64,
+    /// Stored bits the scrub found diverged from intent on quarantined
+    /// rows, counted before repair.  With a full-coverage scrub every
+    /// batch, this reconciles exactly against `upset_bits`.
+    pub corrupt_bits: u64,
 }
 
 impl FaultTally {
@@ -203,6 +237,8 @@ impl FaultTally {
         self.repaired_rows += other.repaired_rows;
         self.quarantined_rows += other.quarantined_rows;
         self.zeroed_rows += other.zeroed_rows;
+        self.upset_bits += other.upset_bits;
+        self.corrupt_bits += other.corrupt_bits;
     }
 }
 
@@ -225,6 +261,9 @@ pub struct ScrubReport {
     /// (double it for logical filters: every stored weight carries its
     /// complementary twin).
     pub zeroed_weights: u64,
+    /// Stored bits that diverged from intent on the quarantined rows,
+    /// counted by a full-row damage scan before any repair ran.
+    pub corrupt_bits: u64,
 }
 
 impl ScrubReport {
@@ -241,6 +280,7 @@ impl ScrubReport {
         self.dead_spares += other.dead_spares;
         self.zeroed_rows += other.zeroed_rows;
         self.zeroed_weights += other.zeroed_weights;
+        self.corrupt_bits += other.corrupt_bits;
     }
 }
 
@@ -278,6 +318,11 @@ pub struct FaultState {
     row_used: Vec<bool>,
     /// Spare rows that failed repair verification.
     row_dead: Vec<bool>,
+    /// Armed retention-upset process (None = no runtime upsets).
+    upsets: Option<UpsetConfig>,
+    /// Virtual batch clock the upset process is scheduled against —
+    /// advanced once per batch boundary, never by wall time.
+    batch_clock: u64,
     tally: FaultTally,
 }
 
@@ -306,8 +351,45 @@ impl FaultState {
             row_map: (0..rows as u32).collect(),
             row_used: vec![false; rows],
             row_dead: vec![false; rows],
+            upsets: None,
+            batch_clock: 0,
             tally: FaultTally::default(),
         }
+    }
+
+    /// Arm the retention-upset process.  Ticks before arming never
+    /// happened: the batch clock starts (or restarts) at zero so a
+    /// given `(seed, per_batch_ber)` always replays the same schedule.
+    pub fn arm_upsets(&mut self, cfg: UpsetConfig) {
+        self.upsets = Some(cfg);
+        self.batch_clock = 0;
+    }
+
+    /// The armed upset process, if any.
+    pub fn upsets(&self) -> Option<UpsetConfig> {
+        self.upsets
+    }
+
+    /// Advance the virtual batch clock and return the tick that just
+    /// elapsed (the value to key this boundary's upset draw on).
+    pub fn next_upset_tick(&mut self) -> u64 {
+        let t = self.batch_clock;
+        self.batch_clock += 1;
+        t
+    }
+
+    /// Whether a *physical* row holds live data.  The upset process
+    /// only flips live rows: an upset on never-written, orphaned, or
+    /// dead-spare surface is invisible to every read path and would
+    /// break the injected-vs-detected reconciliation if booked.
+    #[inline]
+    pub fn row_live(&self, phys_row: usize) -> bool {
+        self.row_used[phys_row]
+    }
+
+    /// Book retention-upset flips landed by the batch-clock process.
+    pub fn book_upsets(&mut self, bits: u64) {
+        self.tally.upset_bits += bits;
     }
 
     #[inline]
@@ -389,6 +471,13 @@ impl FaultState {
         self.row_dead[row] = true;
     }
 
+    /// Retire an orphaned physical row after its logical row re-homed:
+    /// it holds no live data (the upset process skips it), and a later
+    /// repair may reclaim it as a spare — verification gates reuse.
+    pub fn retire_row(&mut self, phys_row: usize) {
+        self.row_used[phys_row] = false;
+    }
+
     /// Re-home a logical row onto a verified spare.
     pub fn map_row(&mut self, logical: usize, phys: usize) {
         self.row_map[logical] = phys as u32;
@@ -416,6 +505,7 @@ impl FaultState {
         self.tally.repaired_rows += report.repaired_rows;
         self.tally.quarantined_rows += report.quarantined_rows;
         self.tally.zeroed_rows += report.zeroed_rows;
+        self.tally.corrupt_bits += report.corrupt_bits;
     }
 
     /// Lifetime injection/detection/repair totals.
@@ -500,6 +590,25 @@ mod tests {
         let mut c = a;
         c.swap(0, 7);
         assert_ne!(plane_checksum(&a), plane_checksum(&c));
+    }
+
+    #[test]
+    fn upset_process_arms_and_ticks_deterministically() {
+        let mut fs = FaultState::new(1, 4, 1, &FaultPlan::empty());
+        assert!(fs.upsets().is_none());
+        fs.arm_upsets(UpsetConfig::from_ppm(7, 500));
+        assert_eq!(fs.upsets().map(|u| u.seed), Some(7));
+        assert_eq!(fs.next_upset_tick(), 0);
+        assert_eq!(fs.next_upset_tick(), 1);
+        // re-arming restarts the virtual clock: same config → same schedule
+        fs.arm_upsets(UpsetConfig::new(7, 0.0005));
+        assert_eq!(fs.next_upset_tick(), 0);
+        // only written rows are live upset targets
+        fs.corrupt(0, 2, 0, 1);
+        assert!(fs.row_live(2));
+        assert!(!fs.row_live(0));
+        fs.book_upsets(3);
+        assert_eq!(fs.tally().upset_bits, 3);
     }
 
     #[test]

@@ -27,8 +27,9 @@
 pub use super::sram::WeightPlanes;
 
 use super::compartment::{Compartment, CompartmentOut};
-use super::fault::{plane_checksum, FaultPlan, FaultState, FaultTally, ScrubReport};
+use super::fault::{plane_checksum, FaultPlan, FaultState, FaultTally, ScrubReport, UpsetConfig};
 use super::lpu::Mode;
+use crate::util::rng::Rng;
 
 /// Weight precision of a row slot (8 columns per INT8 weight).
 pub const WEIGHT_BITS: usize = 8;
@@ -205,75 +206,208 @@ impl PimCore {
     /// fault plan is installed.  Scrub writes are maintenance, not
     /// weight loads: `weight_writes` is unchanged.
     pub fn scrub(&mut self) -> ScrubReport {
+        self.scrub_window(0, self.stripe_count())
+    }
+
+    /// Number of `(row, slot, word)` checksum stripes in this core —
+    /// the unit the incremental scrub scheduler budgets over.  Stripe
+    /// `s` decodes as `row = s / (slots*nwords)`,
+    /// `slot = (s % (slots*nwords)) / nwords`, `word = s % nwords`.
+    pub fn stripe_count(&self) -> usize {
+        self.rows * self.slots() * self.planes.nwords()
+    }
+
+    /// Incremental integrity scrub over the stripe window
+    /// `[start, start+len)` (clamped to [`Self::stripe_count`]).  The
+    /// first corrupt stripe of a row triggers a full-row damage scan
+    /// (booking every divergent stripe and the pre-repair corrupt-bit
+    /// blast radius) and repairs the row immediately, so later stripes
+    /// of the same row verify clean — a full pass in any window
+    /// partition books exactly what one monolithic [`Self::scrub`]
+    /// does.  No-op returning an empty report when no fault plan is
+    /// installed.
+    pub fn scrub_window(&mut self, start: usize, len: usize) -> ScrubReport {
         let mut report = ScrubReport::default();
         let Some(mut fs) = self.faults.take() else {
             return report;
         };
-        let slots = self.slots();
         let nwords = self.planes.nwords();
-        for row in 0..self.rows {
+        let per_row = self.slots() * nwords;
+        let total = self.rows * per_row;
+        let end = (start.saturating_add(len)).min(total);
+        for s in start.min(total)..end {
+            let row = s / per_row;
+            let slot = (s % per_row) / nwords;
+            let wi = s % nwords;
+            report.checked_words += 1;
             let phys = fs.physical(row);
-            let mut bad = 0u64;
-            for slot in 0..slots {
-                for wi in 0..nwords {
-                    report.checked_words += 1;
-                    let stored = plane_checksum(self.planes.word_planes(phys, slot, wi).0);
-                    if stored != fs.golden_checksum(row, slot, wi) {
-                        bad += 1;
-                    }
-                }
-            }
-            if bad == 0 {
-                continue;
-            }
-            report.detected_words += bad;
-            report.quarantined_rows += 1;
-            let mut repaired = false;
-            while let Some(spare) = fs.claim_spare() {
-                // replay the row's intent through the (faulted) write
-                // path at the spare's physical location
-                for cmp in 0..self.compartments.len() {
-                    for slot in 0..slots {
-                        let w = fs.intent(cmp, row, slot);
-                        let fw = fs.corrupt(cmp, spare, slot, w);
-                        self.compartments[cmp].write_weight8(spare, slot, fw);
-                        self.planes.record(cmp, spare, slot, fw);
-                    }
-                }
-                let clean = (0..slots).all(|slot| {
-                    (0..nwords).all(|wi| {
-                        plane_checksum(self.planes.word_planes(spare, slot, wi).0)
-                            == fs.golden_checksum(row, slot, wi)
-                    })
-                });
-                if clean {
-                    fs.map_row(row, spare);
-                    report.repaired_rows += 1;
-                    repaired = true;
-                    break;
-                }
-                // the spare carries stuck-ats of its own: retire it
-                fs.mark_dead(spare);
-                report.dead_spares += 1;
-            }
-            if !repaired {
-                // graceful degradation: the periphery masks the row out
-                // — model both intent and storage as all-zero, and
-                // report the blast radius instead of serving corrupt
-                // data
-                report.zeroed_weights += fs.zero_intent_row(row);
-                for cmp in 0..self.compartments.len() {
-                    for slot in 0..slots {
-                        self.compartments[cmp].write_weight8(phys, slot, 0);
-                        self.planes.record(cmp, phys, slot, 0);
-                    }
-                }
-                report.zeroed_rows += 1;
+            let stored = plane_checksum(self.planes.word_planes(phys, slot, wi).0);
+            if stored != fs.golden_checksum(row, slot, wi) {
+                self.quarantine_and_repair(&mut fs, row, &mut report);
             }
         }
         fs.book_scrub(&report);
         self.faults = Some(fs);
         report
+    }
+
+    /// Damage-scan, quarantine, and repair one corrupt logical row.
+    /// Repair is in-place first: replaying the row's intent through the
+    /// still-faulted write path at its *current* home clears pure
+    /// retention upsets without consuming a spare; only a home that
+    /// fails post-replay verification (persistent stuck-ats) falls to
+    /// the spare re-home / zeroize pipeline.
+    fn quarantine_and_repair(
+        &mut self,
+        fs: &mut FaultState,
+        row: usize,
+        report: &mut ScrubReport,
+    ) {
+        let slots = self.slots();
+        let nwords = self.planes.nwords();
+        let phys = fs.physical(row);
+        // pre-repair damage scan: every divergent stripe of the row,
+        // and the stored-vs-intent bit blast radius the upset tally
+        // reconciles against
+        for slot in 0..slots {
+            for wi in 0..nwords {
+                let stored = plane_checksum(self.planes.word_planes(phys, slot, wi).0);
+                if stored != fs.golden_checksum(row, slot, wi) {
+                    report.detected_words += 1;
+                }
+            }
+        }
+        for cmp in 0..self.compartments.len() {
+            for slot in 0..slots {
+                let stored = self.compartments[cmp].read_weight8(phys, slot) as u8;
+                let meant = fs.intent(cmp, row, slot) as u8;
+                report.corrupt_bits += (stored ^ meant).count_ones() as u64;
+            }
+        }
+        report.quarantined_rows += 1;
+        // in-place replay through the (still faulted) write path
+        for cmp in 0..self.compartments.len() {
+            for slot in 0..slots {
+                let w = fs.intent(cmp, row, slot);
+                let fw = fs.corrupt(cmp, phys, slot, w);
+                self.compartments[cmp].write_weight8(phys, slot, fw);
+                self.planes.record(cmp, phys, slot, fw);
+            }
+        }
+        if self.row_matches_intent(fs, row, phys) {
+            report.repaired_rows += 1;
+            return;
+        }
+        let mut repaired = false;
+        while let Some(spare) = fs.claim_spare() {
+            // replay the row's intent through the (faulted) write
+            // path at the spare's physical location
+            for cmp in 0..self.compartments.len() {
+                for slot in 0..slots {
+                    let w = fs.intent(cmp, row, slot);
+                    let fw = fs.corrupt(cmp, spare, slot, w);
+                    self.compartments[cmp].write_weight8(spare, slot, fw);
+                    self.planes.record(cmp, spare, slot, fw);
+                }
+            }
+            if self.row_matches_intent(fs, row, spare) {
+                fs.map_row(row, spare);
+                fs.retire_row(phys);
+                report.repaired_rows += 1;
+                repaired = true;
+                break;
+            }
+            // the spare carries stuck-ats of its own: retire it
+            fs.mark_dead(spare);
+            report.dead_spares += 1;
+        }
+        if !repaired {
+            // graceful degradation: the periphery masks the row out
+            // — model both intent and storage as all-zero, and
+            // report the blast radius instead of serving corrupt
+            // data
+            report.zeroed_weights += fs.zero_intent_row(row);
+            for cmp in 0..self.compartments.len() {
+                for slot in 0..slots {
+                    self.compartments[cmp].write_weight8(phys, slot, 0);
+                    self.planes.record(cmp, phys, slot, 0);
+                }
+            }
+            report.zeroed_rows += 1;
+        }
+    }
+
+    /// Whether the stored planes at physical row `phys` match logical
+    /// row `row`'s intent checksums stripe for stripe.
+    fn row_matches_intent(&self, fs: &FaultState, row: usize, phys: usize) -> bool {
+        let nwords = self.planes.nwords();
+        (0..self.slots()).all(|slot| {
+            (0..nwords).all(|wi| {
+                plane_checksum(self.planes.word_planes(phys, slot, wi).0)
+                    == fs.golden_checksum(row, slot, wi)
+            })
+        })
+    }
+
+    /// Arm the deterministic retention-upset process.  Requires an
+    /// installed fault plan: upsets reconcile against the intent
+    /// ledger, which only exists once [`Self::install_fault_plan`] ran
+    /// (a zero-BER plan is the upsets-only configuration).
+    pub fn arm_upsets(&mut self, cfg: UpsetConfig) {
+        match &mut self.faults {
+            Some(fs) => fs.arm_upsets(cfg),
+            None => panic!(
+                "upsets require an installed fault plan (the intent ledger is the golden reference)"
+            ),
+        }
+    }
+
+    /// Advance the virtual batch clock one tick and land this tick's
+    /// retention upsets on the stored planes: per live `(cmp, row,
+    /// slot)` byte one seeded draw decides whether a single bit flips
+    /// (both storage views stay coherent; the intent ledger is
+    /// untouched — it is the golden reference the scrub repairs
+    /// toward).  Returns the number of bits flipped.  Deterministic in
+    /// `(seed, tick)` alone; a no-op when no upset process is armed.
+    /// Upset writes are maintenance, not weight loads: `weight_writes`
+    /// is unchanged.
+    pub fn tick_upsets(&mut self) -> u64 {
+        let Some(mut fs) = self.faults.take() else {
+            return 0;
+        };
+        let mut flipped = 0u64;
+        if let Some(cfg) = fs.upsets() {
+            let tick = fs.next_upset_tick();
+            if cfg.per_batch_ber > 0.0 {
+                let mut rng = Rng::new(cfg.seed ^ tick.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let slots = self.slots();
+                // one draw per byte (≤1 flip per cell per tick), scaled
+                // so the per-bit rate matches the configured BER
+                let p_byte = (cfg.per_batch_ber * WEIGHT_BITS as f64).min(1.0);
+                for row in 0..self.rows {
+                    let phys = fs.physical(row);
+                    if !fs.row_live(phys) {
+                        continue;
+                    }
+                    for cmp in 0..self.compartments.len() {
+                        for slot in 0..slots {
+                            if rng.f64() >= p_byte {
+                                continue;
+                            }
+                            let kw = rng.below(WEIGHT_BITS as u64) as usize;
+                            let cur = self.compartments[cmp].read_weight8(phys, slot) as u8;
+                            let upset = (cur ^ (1u8 << kw)) as i8 as i32;
+                            self.compartments[cmp].write_weight8(phys, slot, upset);
+                            self.planes.record(cmp, phys, slot, upset);
+                            flipped += 1;
+                        }
+                    }
+                }
+            }
+            fs.book_upsets(flipped);
+        }
+        self.faults = Some(fs);
+        flipped
     }
 
     /// Total normal-SRAM weight writes since construction.  The planned
@@ -559,6 +693,107 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn runtime_upsets_replay_and_scrub_reconciles() {
+        use crate::arch::fault::{FaultConfig, FaultPlan, UpsetConfig};
+        let geom = MacroGeometry {
+            compartments: 8,
+            rows: 8,
+            dbmus: 16,
+        };
+        let build = || {
+            let mut core = PimCore::with_geometry(geom);
+            // zero-BER plan = upsets-only configuration: intent ledger
+            // exists, no write-time corruption
+            core.install_fault_plan(&FaultPlan::seeded(geom, &FaultConfig::new(3, 0.0), 0));
+            for row in 0..6 {
+                for cmp in 0..8 {
+                    for slot in 0..2 {
+                        core.write_weight(cmp, row, slot, (cmp * 16 + row * 2 + slot) as i32 - 64);
+                    }
+                }
+            }
+            core.arm_upsets(UpsetConfig::from_ppm(0xC0DE, 20_000));
+            core
+        };
+        let mut a = build();
+        let mut b = build();
+        let writes = a.weight_writes();
+        let (mut landed, mut found) = (0u64, 0u64);
+        for _ in 0..5 {
+            let fa = a.tick_upsets();
+            assert_eq!(fa, b.tick_upsets(), "virtual batch clock must replay");
+            landed += fa;
+            // scrub every boundary: one tick outstanding, ≤1 flip per
+            // cell → no double-flip cancellation, exact reconciliation
+            let report = a.scrub();
+            let rb = b.scrub();
+            assert_eq!(report, rb);
+            found += report.corrupt_bits;
+            assert_eq!(report.repaired_rows, report.quarantined_rows);
+            assert_eq!(report.zeroed_rows, 0);
+        }
+        assert!(landed > 0, "upset process never fired");
+        assert_eq!(found, landed, "every landed upset bit must be found");
+        let t = a.fault_tally();
+        assert_eq!(t.upset_bits, landed);
+        assert_eq!(t.corrupt_bits, landed);
+        assert_eq!(t.injected_bits, 0, "in-place replay re-corrupts nothing at zero BER");
+        // repaired state matches intent everywhere; maintenance did not
+        // count as weight loads
+        assert!(a.scrub().is_clean());
+        for row in 0..6 {
+            for cmp in 0..8 {
+                for slot in 0..2 {
+                    assert_eq!(
+                        a.read_weight(cmp, row, slot),
+                        (cmp * 16 + row * 2 + slot) as i32 - 64
+                    );
+                }
+            }
+        }
+        assert_eq!(a.weight_writes(), writes);
+    }
+
+    #[test]
+    fn windowed_scrub_covers_like_a_full_pass() {
+        use crate::arch::fault::{Fault, FaultKind, FaultPlan};
+        let mut core = PimCore::new(4, 8, 16);
+        core.install_fault_plan(&FaultPlan::from_faults(vec![Fault {
+            cmp: 1,
+            row: 2,
+            slot: 1,
+            kw: 3,
+            kind: FaultKind::Transient,
+        }]));
+        for row in 0..4 {
+            for cmp in 0..4 {
+                for slot in 0..2 {
+                    core.write_weight(cmp, row, slot, 5);
+                }
+            }
+        }
+        let total = core.stripe_count();
+        assert_eq!(total, 8 * 2); // rows × slots × 1 plane word
+        // scrub in 3-stripe windows: the union of ⌈total/K⌉ windows
+        // books exactly what one monolithic pass does
+        let mut merged = ScrubReport::default();
+        let mut start = 0;
+        while start < total {
+            merged.merge(&core.scrub_window(start, 3));
+            start += 3;
+        }
+        assert_eq!(merged.checked_words, total as u64);
+        assert_eq!(merged.detected_words, 1);
+        assert_eq!(merged.quarantined_rows, 1);
+        assert_eq!(merged.repaired_rows, 1);
+        assert_eq!(merged.corrupt_bits, 1);
+        // a consumed transient repairs in place: no spare consumed
+        assert_eq!(core.physical_row(2), 2);
+        assert_eq!(core.read_weight(1, 2, 1), 5);
+        assert!(core.scrub().is_clean());
     }
 
     #[test]

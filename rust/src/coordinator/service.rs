@@ -46,7 +46,9 @@ use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
 use crate::config::{ArchConfig, SimConfig};
-use crate::metrics::{AdmissionStats, CapacityPressure, LatencyHistogram, ReliabilityStats};
+use crate::metrics::{
+    AdmissionStats, CapacityPressure, HealthStats, LatencyHistogram, ReliabilityStats, WorkerHealth,
+};
 use crate::model::zoo;
 use crate::runtime::{BackendKind, BackendSpec, Session, IMG_ELEMS, NUM_CLASSES};
 use crate::sim::simulate_network;
@@ -61,6 +63,41 @@ pub const DEFAULT_INFER_TIMEOUT: Duration = Duration::from_secs(30);
 /// How often a panicked worker retries rebuilding its session before
 /// giving up on the pending batch.
 const REBUILD_ATTEMPTS: u32 = 3;
+
+/// Repaired-row churn in one batch window at or above which a worker is
+/// assessed [`WorkerHealth::Degraded`]: still serving (every batch it
+/// answers is scrub-verified), but running hot enough on repairs that
+/// the operator should look at it.  A clean window recovers it.
+const DEGRADE_REPAIR_CHURN: u64 = 1;
+
+/// Session rebuilds since the last clean rejoin at which a worker is
+/// assessed [`WorkerHealth::Quarantined`]: it parks (stops pulling
+/// batches), runs full scrub cycles until one comes back clean, and
+/// only then rejoins the pool.
+const QUARANTINE_REBUILDS: u64 = 2;
+
+/// Pure health assessment from one batch window's reliability deltas.
+/// Zeroed rows (spares exhausted: data was irrecoverably masked out) or
+/// repeated rebuilds quarantine outright; repair churn degrades; a
+/// quiet window recovers a degraded worker.  `Quarantined` is sticky —
+/// only the parked clean-scrub rejoin path (which resets the rebuild
+/// baseline) leaves it.
+fn assess_health(
+    prev: WorkerHealth,
+    repaired_delta: u64,
+    zeroed_delta: u64,
+    rebuilds_since_rejoin: u64,
+) -> WorkerHealth {
+    if zeroed_delta > 0 || rebuilds_since_rejoin >= QUARANTINE_REBUILDS {
+        WorkerHealth::Quarantined
+    } else if prev == WorkerHealth::Quarantined {
+        WorkerHealth::Quarantined
+    } else if repaired_delta >= DEGRADE_REPAIR_CHURN {
+        WorkerHealth::Degraded
+    } else {
+        WorkerHealth::Healthy
+    }
+}
 
 /// Hard ceiling on worker sessions: each worker owns a full resident
 /// session (weights + buffers + exec pool), so the useful count is
@@ -137,6 +174,11 @@ struct Request {
     input: Vec<f32>,
     resp: mpsc::Sender<Result<InferenceResult, ServiceError>>,
     submitted: Instant,
+    /// Client-side deadline, propagated so the dispatcher can drop an
+    /// already-expired request at batch-cut time instead of spending a
+    /// worker slot computing an answer nobody is waiting for.  `None`
+    /// (bare [`InferenceService::submit`]) never expires.
+    deadline: Option<Instant>,
 }
 
 /// The answer a client gets back.
@@ -177,8 +219,13 @@ pub struct ServiceStats {
     /// gone wrong ([`ReliabilityStats::is_quiet`]).
     pub reliability: ReliabilityStats,
     /// Admission-control counters: admitted/shed requests, the depth
-    /// bound in force, the peak in-flight depth, worker count.
+    /// bound in force, the peak in-flight depth, worker count, and
+    /// deadline-expired drops at batch cut.
     pub admission: AdmissionStats,
+    /// Worker-health census (how many workers are currently
+    /// healthy/degraded/quarantined) plus lifetime quarantine and
+    /// rejoin event counts.
+    pub health: HealthStats,
 }
 
 impl ServiceStats {
@@ -229,6 +276,7 @@ struct WorkerSnapshot {
     capacity: CapacityPressure,
     reliability: ReliabilityStats,
     rebuilds: u64,
+    health: WorkerHealth,
 }
 
 /// State shared between the client handle, the dispatcher and every
@@ -244,6 +292,17 @@ struct ServiceShared {
     rejected: AtomicU64,
     /// Client-side timeout count (requests whose deadline elapsed).
     timed_out: AtomicU64,
+    /// Requests dropped at batch-cut time because their propagated
+    /// deadline had already expired.
+    shed_expired: AtomicU64,
+    /// Workers currently parked in quarantine (not pulling batches).
+    /// Admission sheds `Overloaded` only when this covers the whole
+    /// pool — a single healthy worker keeps the service accepting.
+    quarantined_now: AtomicUsize,
+    /// Lifetime Healthy/Degraded -> Quarantined transitions.
+    quarantine_events: AtomicU64,
+    /// Lifetime Quarantined -> Healthy rejoins (clean scrub cycle).
+    rejoin_events: AtomicU64,
     /// Workers whose session is (or is still becoming) live.
     live_workers: AtomicUsize,
     /// First worker-init failure, for failing queued batches usefully
@@ -268,6 +327,10 @@ impl ServiceShared {
             admitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             timed_out: AtomicU64::new(0),
+            shed_expired: AtomicU64::new(0),
+            quarantined_now: AtomicUsize::new(0),
+            quarantine_events: AtomicU64::new(0),
+            rejoin_events: AtomicU64::new(0),
             live_workers: AtomicUsize::new(workers),
             init_error: Mutex::new(None),
             chaos_panic: AtomicBool::new(false),
@@ -307,12 +370,19 @@ impl ServiceShared {
     /// Overwrite worker `id`'s session snapshot (called *before* the
     /// batch's responses are sent, so a client that got its answer
     /// always sees a stats view at least as fresh as that batch).
-    fn update_snapshot(&self, id: usize, session: &dyn Session, rebuilds: u64) {
+    fn update_snapshot(
+        &self,
+        id: usize,
+        session: &dyn Session,
+        rebuilds: u64,
+        health: WorkerHealth,
+    ) {
         if let Ok(mut snaps) = self.snapshots.lock() {
             snaps[id] = WorkerSnapshot {
                 capacity: session.capacity_pressure().unwrap_or_default(),
                 reliability: session.reliability().unwrap_or_default(),
                 rebuilds,
+                health,
             };
         }
     }
@@ -433,6 +503,20 @@ impl InferenceService {
     /// queue answers on the returned receiver immediately, without
     /// touching the dispatcher.
     pub fn submit(&self, input: Vec<f32>) -> mpsc::Receiver<Result<InferenceResult, ServiceError>> {
+        self.submit_with_deadline(input, None)
+    }
+
+    /// [`Self::submit`] with a propagated client deadline: a request
+    /// whose deadline has already expired when its batch is cut is
+    /// dropped by the dispatcher (booked as
+    /// [`AdmissionStats::shed_expired`], answered [`ServiceError::Timeout`])
+    /// instead of wasting a worker slot on an answer nobody is waiting
+    /// for.  [`Self::infer_timeout`] routes through here.
+    pub fn submit_with_deadline(
+        &self,
+        input: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> mpsc::Receiver<Result<InferenceResult, ServiceError>> {
         let (rtx, rrx) = mpsc::channel();
         // reject malformed inputs here, before batching, so one bad
         // request can never fail the valid requests batched with it
@@ -443,6 +527,16 @@ impl InferenceService {
             ))));
             return rrx;
         }
+        // health steering at the door: with every worker parked in
+        // quarantine there is nobody to serve — shed instead of letting
+        // the queue grow against a fully parked pool.  Any healthy (or
+        // merely degraded) worker keeps the service accepting; batches
+        // steer to it naturally because parked workers don't pull.
+        if self.shared.quarantined_now.load(Ordering::Acquire) >= self.shared.workers {
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = rtx.send(Err(ServiceError::Overloaded));
+            return rrx;
+        }
         if !self.shared.try_admit() {
             let _ = rtx.send(Err(ServiceError::Overloaded));
             return rrx;
@@ -451,6 +545,7 @@ impl InferenceService {
             input,
             resp: rtx,
             submitted: Instant::now(),
+            deadline,
         };
         // if the dispatcher died the receiver will simply disconnect;
         // release the admission slot so the depth stays truthful
@@ -478,7 +573,11 @@ impl InferenceService {
         input: Vec<f32>,
         timeout: Duration,
     ) -> Result<InferenceResult, ServiceError> {
-        match self.submit(input).recv_timeout(timeout) {
+        let deadline = Instant::now().checked_add(timeout);
+        match self
+            .submit_with_deadline(input, deadline)
+            .recv_timeout(timeout)
+        {
             Ok(Ok(r)) => Ok(r),
             Ok(Err(e)) => Err(e),
             Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -508,17 +607,21 @@ impl InferenceService {
             for snap in snaps.iter() {
                 s.capacity.merge(&snap.capacity);
                 s.reliability.merge(&snap.reliability);
+                s.health.count(snap.health);
                 rebuilds += snap.rebuilds;
             }
         }
         s.reliability.worker_rebuilds = rebuilds;
         s.reliability.timed_out_requests = self.shared.timed_out.load(Ordering::Relaxed);
+        s.health.quarantine_events = self.shared.quarantine_events.load(Ordering::Relaxed);
+        s.health.rejoin_events = self.shared.rejoin_events.load(Ordering::Relaxed);
         s.admission = AdmissionStats {
             admitted: self.shared.admitted.load(Ordering::Relaxed),
             rejected: self.shared.rejected.load(Ordering::Relaxed),
             max_queue_depth: self.shared.max_queue_depth as u64,
             peak_queue_depth: self.shared.peak_depth.load(Ordering::Relaxed),
             workers: self.shared.workers as u64,
+            shed_expired: self.shared.shed_expired.load(Ordering::Relaxed),
         };
         Some(s)
     }
@@ -618,6 +721,23 @@ fn dispatcher_loop(
         let mut sink = recycle_rx.try_recv().unwrap_or_default();
         sink.clear();
         batcher.cut_into(&mut sink);
+        // deadline propagation: a request whose client deadline already
+        // expired while it sat in the batcher is answered (Timeout) and
+        // dropped *here*, so the worker never spends a slot computing
+        // logits nobody will read.  swap_remove is fine: requests in a
+        // batch are independent rows, order carries no meaning.
+        let now = Instant::now();
+        let mut i = 0;
+        while i < sink.len() {
+            if sink[i].deadline.is_some_and(|d| d <= now) {
+                let req = sink.swap_remove(i);
+                shared.shed_expired.fetch_add(1, Ordering::Relaxed);
+                let _ = req.resp.send(Err(ServiceError::Timeout));
+                shared.finish_request();
+            } else {
+                i += 1;
+            }
+        }
         if let Err(mpsc::SendError(batch)) = batch_tx.send(sink) {
             // every worker is gone (init failure on all of them): fail
             // the batch with the recorded cause instead of a silent
@@ -678,7 +798,13 @@ fn worker_loop(
     // fabric return None.
     let _ = session.scrub();
     let mut rebuilds: u64 = 0;
-    shared.update_snapshot(id, &*session, rebuilds);
+    let mut health = WorkerHealth::Healthy;
+    // health baselines: deltas are measured per batch window against
+    // the post-prepare-scrub state, and the rebuild count against the
+    // last clean rejoin (so one quarantine doesn't re-trip forever)
+    let mut prev_rel = session.reliability().unwrap_or_default();
+    let mut rebuild_baseline: u64 = 0;
+    shared.update_snapshot(id, &*session, rebuilds, health);
 
     // modelled hardware latency (once per worker; amortized per batch)
     let sim_ms = simulate_network(
@@ -786,9 +912,55 @@ fn worker_loop(
                 }
             }
         };
+        // assess health from this batch window's reliability deltas:
+        // repair churn degrades, zeroed rows (spares exhausted) or
+        // repeated rebuilds quarantine
+        let rel = session.reliability().unwrap_or_default();
+        let repaired_delta = rel.faults_repaired.saturating_sub(prev_rel.faults_repaired);
+        let zeroed_delta = rel.zeroed_rows.saturating_sub(prev_rel.zeroed_rows);
+        prev_rel = rel;
+        let next = assess_health(
+            health,
+            repaired_delta,
+            zeroed_delta,
+            rebuilds.saturating_sub(rebuild_baseline),
+        );
+        if next == WorkerHealth::Quarantined && health != WorkerHealth::Quarantined {
+            shared.quarantined_now.fetch_add(1, Ordering::AcqRel);
+            shared.quarantine_events.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "[ddc-reliability] worker {id}: quarantined \
+                 (zeroed_delta={zeroed_delta}, rebuilds={rebuilds}); parking for a clean scrub"
+            );
+        }
+        health = next;
+        if health == WorkerHealth::Quarantined {
+            // park: full scrub cycles until one comes back clean, then
+            // rejoin.  Upsets advance on the virtual batch clock, so a
+            // parked session accrues no new damage and this terminates:
+            // one pass repairs (or zeroizes), the next verifies clean.
+            // Peers keep pulling batches off the shared channel in the
+            // meantime — steering needs no dispatcher routing.
+            loop {
+                let before = session.reliability().unwrap_or_default();
+                let after = match session.scrub() {
+                    Some(r) => r,
+                    None => before, // nothing scrubbable = vacuously clean
+                };
+                if after.faults_detected == before.faults_detected {
+                    break;
+                }
+            }
+            prev_rel = session.reliability().unwrap_or_default();
+            rebuild_baseline = rebuilds;
+            health = WorkerHealth::Healthy;
+            shared.quarantined_now.fetch_sub(1, Ordering::AcqRel);
+            shared.rejoin_events.fetch_add(1, Ordering::Relaxed);
+            eprintln!("[ddc-reliability] worker {id}: rejoined after a clean scrub cycle");
+        }
         // snapshot *before* responding: a client holding its answer
         // must observe stats at least as fresh as its own batch
-        shared.update_snapshot(id, &*session, rebuilds);
+        shared.update_snapshot(id, &*session, rebuilds, health);
         match exec {
             Some(Ok(())) => {
                 let mut core = match shared.core.lock() {
@@ -1115,6 +1287,80 @@ mod tests {
         let clean = InferenceService::start("/nonexistent".into(), BatchPolicy::default());
         clean.infer(vec![0.3; IMG_ELEMS]).expect("clean");
         assert!(clean.stats().expect("stats").reliability.is_quiet());
+    }
+
+    #[test]
+    fn assess_health_covers_the_documented_transitions() {
+        use WorkerHealth::*;
+        // quiet window: healthy stays healthy, degraded recovers
+        assert_eq!(assess_health(Healthy, 0, 0, 0), Healthy);
+        assert_eq!(assess_health(Degraded, 0, 0, 0), Healthy);
+        // repair churn degrades (and keeps a degraded worker degraded)
+        assert_eq!(assess_health(Healthy, DEGRADE_REPAIR_CHURN, 0, 0), Degraded);
+        assert_eq!(assess_health(Degraded, 3, 0, 0), Degraded);
+        // zeroed rows (spares exhausted) quarantine from any state
+        assert_eq!(assess_health(Healthy, 0, 1, 0), Quarantined);
+        assert_eq!(assess_health(Degraded, 2, 1, 1), Quarantined);
+        // the rebuild threshold quarantines
+        assert_eq!(assess_health(Healthy, 0, 0, QUARANTINE_REBUILDS), Quarantined);
+        // quarantine is sticky: only the rejoin path (which resets the
+        // rebuild baseline) leaves it
+        assert_eq!(assess_health(Quarantined, 0, 0, 0), Quarantined);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_at_batch_cut() {
+        let svc = InferenceService::start_cluster(
+            BackendSpec::new(BackendKind::Reference),
+            "/nonexistent".into(),
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(200),
+            },
+            ServiceConfig {
+                workers: 1,
+                max_queue_depth: 0,
+            },
+        );
+        // a deadline already in the past when the batch cuts: the
+        // dispatcher drops it (Timeout) without spending a worker slot,
+        // and the co-batched live request is served normally
+        let dead = svc.submit_with_deadline(vec![0.1; IMG_ELEMS], Some(Instant::now()));
+        let live = svc.submit(vec![0.2; IMG_ELEMS]);
+        let served = live.recv().expect("live response").expect("served");
+        assert_eq!(served.logits.len(), NUM_CLASSES);
+        let shed = dead.recv().expect("dead response");
+        assert!(matches!(shed, Err(ServiceError::Timeout)), "got {shed:?}");
+        let stats = svc.stats().expect("stats");
+        assert_eq!(stats.admission.shed_expired, 1);
+        assert_eq!(stats.admission.admitted, 2);
+        assert_eq!(stats.requests, 1, "the expired request must never execute");
+        // the admission slot was released: nothing left in flight
+        assert_eq!(svc.shared.in_flight.load(Ordering::Acquire), 0);
+    }
+
+    #[test]
+    fn repeated_panics_quarantine_then_rejoin_after_a_clean_scrub() {
+        let svc = InferenceService::start_with(
+            BackendKind::Reference,
+            "/nonexistent".into(),
+            BatchPolicy::default(),
+        );
+        let baseline = svc.infer(vec![0.2; IMG_ELEMS]).expect("warm-up");
+        for _ in 0..QUARANTINE_REBUILDS {
+            svc.debug_panic_next_batch();
+            let r = svc.infer(vec![0.2; IMG_ELEMS]).expect("served through panic");
+            assert_eq!(r.logits, baseline.logits, "rebuilt session drifted");
+        }
+        // the second rebuild crossed the threshold: the worker
+        // quarantined, parked for a clean scrub cycle, and rejoined
+        let s = svc.stats().expect("stats");
+        assert_eq!(s.reliability.worker_rebuilds, QUARANTINE_REBUILDS);
+        assert_eq!(s.health.quarantine_events, 1);
+        assert_eq!(s.health.rejoin_events, 1);
+        assert_eq!(s.health.healthy, 1, "worker must end healthy: {:?}", s.health);
+        assert_eq!(s.health.quarantined, 0);
+        assert!(svc.infer(vec![0.4; IMG_ELEMS]).is_ok(), "service stays up");
     }
 
     #[test]

@@ -136,6 +136,36 @@ fn run(args: &[String]) -> i32 {
             }
         },
     };
+    // runtime upsets + serving-time scrub: same precedence as the
+    // fault knobs (CLI flag, then the env knob CI uses, then off)
+    let upset_ppm = match flags
+        .get("upset-ppm")
+        .cloned()
+        .or_else(|| std::env::var("DDC_UPSET_PPM").ok())
+    {
+        None => 0,
+        Some(v) => match v.parse::<u32>() {
+            Ok(n) if n <= 1_000_000 => n,
+            _ => {
+                eprintln!("--upset-ppm needs an integer in 0..=1000000 (ppm/batch), got {v:?}");
+                return 2;
+            }
+        },
+    };
+    let scrub_stripes = match flags
+        .get("scrub-stripes")
+        .cloned()
+        .or_else(|| std::env::var("DDC_SCRUB_STRIPES").ok())
+    {
+        None => 0,
+        Some(v) => match v.parse::<u32>() {
+            Ok(n) => n,
+            _ => {
+                eprintln!("--scrub-stripes needs an integer >= 0 (stripes/batch), got {v:?}");
+                return 2;
+            }
+        },
+    };
     let grid = match flags.get("grid") {
         None => GridShape::AUTO, // resolve via DDC_GRID, then 1x1
         Some(v) => match v.parse::<GridShape>() {
@@ -153,19 +183,22 @@ fn run(args: &[String]) -> i32 {
         stream_kb,
         fault_ber_ppm,
         fault_seed,
+        upset_ppm,
+        scrub_stripes,
         grid,
     };
     match pos.first().map(String::as_str) {
         Some("info") => cmd_info(),
         Some("simulate") => cmd_simulate(&flags),
         Some("report") => cmd_report(pos.get(1).map(String::as_str), &artifact_dir),
-        Some("selfcheck") => cmd_selfcheck(&artifact_dir, spec),
+        Some("selfcheck") => cmd_selfcheck(&flags, &artifact_dir, spec),
         Some("serve") => cmd_serve(&flags, &artifact_dir, spec),
         _ => {
             eprintln!(
                 "usage: ddc-pim <info|simulate|report|selfcheck|serve> [flags]\n\
                  \n  simulate --model <name> [--baseline] [--batch N] [--scope i]\
                  \n  report <fig1|fig2|fig12|fig13|fig14|table2|table3|table4|table5|all>\
+                 \n  selfcheck [--chaos]  (--chaos adds the upset/panic/hang soak step)\
                  \n  serve [--requests N] [--batch N] [--workers N] [--queue-depth N]\
                  \n  flags: --artifacts <dir>  (default: artifacts)\
                  \n         --backend <auto|reference|pjrt>  (default: auto)\
@@ -177,6 +210,8 @@ fn run(args: &[String]) -> i32 {
                  \n         --stream-kb <N>  (weight-streaming budget in KiB; default: 0 = resident)\
                  \n         --fault-ppm <N>  (injected bit-error rate, cells per million; default: 0 = pristine)\
                  \n         --fault-seed <N>  (fault pattern seed; default: 0xDDC7)\
+                 \n         --upset-ppm <N>  (runtime per-batch upset rate, bits per million; default: DDC_UPSET_PPM or 0)\
+                 \n         --scrub-stripes <N>  (incremental scrub budget per batch, 0 = off; default: DDC_SCRUB_STRIPES or 0)\
                  \n  models: {}",
                 zoo::ALL_MODELS.join(", ")
             );
@@ -309,7 +344,7 @@ fn check(failures: &mut u32, name: &str, result: anyhow::Result<()>) {
     }
 }
 
-fn cmd_selfcheck(artifact_dir: &str, spec: BackendSpec) -> i32 {
+fn cmd_selfcheck(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendSpec) -> i32 {
     println!("selfcheck: artifact dir = {artifact_dir}");
     let mut backend = match spec.create(artifact_dir) {
         Ok(b) => b,
@@ -545,7 +580,108 @@ fn cmd_selfcheck(artifact_dir: &str, spec: BackendSpec) -> i32 {
         });
     }
 
-    // 8. golden replay when the python AOT pass has produced artifacts
+    // 8. chaos soak (opt-in via --chaos): a seeded schedule of runtime
+    //    upsets, worker panics and hangs against a 2-worker cluster
+    //    with the incremental scrub at full coverage.  Every answer
+    //    must be byte-identical to the fault-free oracle, the upset
+    //    ledger must reconcile exactly, and the cluster must end with
+    //    every worker healthy (quarantines resolved by clean rejoins).
+    if flags.contains_key("chaos")
+        && spec.kind != BackendKind::Pjrt
+        && backend.name() == "reference"
+    {
+        check(&mut failures, "chaos soak (upsets + panics + hangs)", {
+            (|| -> anyhow::Result<()> {
+                let rounds = 30usize;
+                let mut rng = Rng::new(309);
+                let imgs: Vec<Vec<f32>> = (0..4)
+                    .map(|_| (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect())
+                    .collect();
+                // fault-free oracle logits for every probe image
+                let clean = BackendSpec {
+                    fabric: FabricChoice::BitSliced,
+                    fault_ber_ppm: 0,
+                    upset_ppm: 0,
+                    scrub_stripes: 0,
+                    ..spec
+                }
+                .create(artifact_dir)?;
+                let mut s = clean.prepare()?;
+                let mut want = vec![vec![0f32; NUM_CLASSES]; imgs.len()];
+                for (img, w) in imgs.iter().zip(want.iter_mut()) {
+                    s.infer_batch_into(img, 1, w)?;
+                }
+                let svc = InferenceService::start_cluster(
+                    BackendSpec {
+                        fabric: FabricChoice::BitSliced,
+                        // write-time BER has its own step (5); here the
+                        // runtime upset process is the only damage
+                        // source, so the ledger reconciles exactly
+                        fault_ber_ppm: 0,
+                        upset_ppm: if spec.upset_ppm > 0 { spec.upset_ppm } else { 20_000 },
+                        scrub_stripes: u32::MAX, // full coverage every boundary
+                        ..spec
+                    },
+                    artifact_dir.to_string(),
+                    BatchPolicy::default(),
+                    ServiceConfig {
+                        workers: 2,
+                        max_queue_depth: 0,
+                    },
+                );
+                for round in 0..rounds {
+                    match round % 10 {
+                        // >= 3 panics over 2 workers: some worker takes
+                        // two rebuilds and must quarantine + rejoin
+                        3 => svc.debug_panic_next_batch(),
+                        7 => svc.debug_hang_next_batch(std::time::Duration::from_millis(5)),
+                        _ => {}
+                    }
+                    let img = &imgs[round % imgs.len()];
+                    let r = svc
+                        .infer(img.clone())
+                        .map_err(|e| anyhow::anyhow!("round {round} failed: {e}"))?;
+                    anyhow::ensure!(
+                        r.logits[..] == want[round % imgs.len()][..],
+                        "round {round}: served logits diverged from the fault-free oracle"
+                    );
+                }
+                let st = svc.stats().unwrap_or_default();
+                let r = st.reliability;
+                anyhow::ensure!(r.upset_bits > 0, "no runtime upsets landed over {rounds} rounds");
+                anyhow::ensure!(
+                    r.upset_bits == r.corrupt_bits_found,
+                    "upset ledger did not reconcile: landed {} found {}",
+                    r.upset_bits,
+                    r.corrupt_bits_found
+                );
+                anyhow::ensure!(
+                    st.health.quarantine_events >= 1
+                        && st.health.quarantine_events == st.health.rejoin_events,
+                    "quarantine/rejoin mismatch: {:?}",
+                    st.health
+                );
+                anyhow::ensure!(
+                    st.health.healthy + st.health.degraded == st.admission.workers,
+                    "cluster did not end serving-capable: {:?}",
+                    st.health
+                );
+                println!(
+                    "  chaos ({rounds} rounds): upsets={} found={} repaired_rows={} \
+                     rebuilds={} quarantines={} rejoins={}",
+                    r.upset_bits,
+                    r.corrupt_bits_found,
+                    r.faults_repaired,
+                    r.worker_rebuilds,
+                    st.health.quarantine_events,
+                    st.health.rejoin_events,
+                );
+                Ok(())
+            })()
+        });
+    }
+
+    // 9. golden replay when the python AOT pass has produced artifacts
     //    (the integer kernels carry their shapes, so replay works on any
     //    backend; the model golden is PJRT-only).  Only a *missing*
     //    goldens.json skips; a present-but-unreadable one is a FAIL.
@@ -727,12 +863,18 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendS
     );
     let a = stats.admission;
     println!(
-        "admission: admitted {} | rejected {} | shed ratio {:.3} | peak depth {} | workers {}",
+        "admission: admitted {} | rejected {} | shed ratio {:.3} | peak depth {} | workers {} | shed expired {}",
         a.admitted,
         a.rejected,
         a.shed_ratio(),
         a.peak_queue_depth,
         a.workers,
+        a.shed_expired,
+    );
+    let h = stats.health;
+    println!(
+        "health: healthy {} | degraded {} | quarantined {} | quarantine events {} | rejoins {}",
+        h.healthy, h.degraded, h.quarantined, h.quarantine_events, h.rejoin_events,
     );
     // modelled hardware latency: the cycle simulator's single-macro
     // number, and the Amdahl-style projection onto the active grid
@@ -768,7 +910,8 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendS
     if !r.is_quiet() {
         println!(
             "reliability: faults injected {} | detected {} | repaired {} | quarantined rows {} | \
-             zeroed rows {} | stager fallbacks {} | worker rebuilds {} | timeouts {}",
+             zeroed rows {} | stager fallbacks {} | worker rebuilds {} | timeouts {} | \
+             upset bits {} | corrupt found {}",
             r.faults_injected,
             r.faults_detected,
             r.faults_repaired,
@@ -777,6 +920,18 @@ fn cmd_serve(flags: &HashMap<String, String>, artifact_dir: &str, spec: BackendS
             r.stager_fallbacks,
             r.worker_rebuilds,
             r.timed_out_requests,
+            r.upset_bits,
+            r.corrupt_bits_found,
+        );
+    }
+    if r.scrub_stripe_total > 0 {
+        // coverage = full sweeps of the resident stripe space completed
+        // by the incremental scheduler across all workers
+        println!(
+            "scrub: stripes checked {} / space {} | coverage x{:.1}",
+            r.scrub_stripes_checked,
+            r.scrub_stripe_total,
+            r.scrub_stripes_checked as f64 / r.scrub_stripe_total as f64,
         );
     }
     0

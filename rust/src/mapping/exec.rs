@@ -44,7 +44,7 @@
 //! thin wrappers — plan, execute once, return — so callers migrate
 //! without semantic drift.
 
-use crate::arch::fault::{FaultConfig, FaultPlan, FaultTally, ScrubReport};
+use crate::arch::fault::{FaultConfig, FaultPlan, FaultTally, ScrubReport, UpsetConfig};
 use crate::arch::lpu::Mode;
 use crate::arch::merge::aru_recover;
 use crate::arch::pim_core::MacroGeometry;
@@ -496,6 +496,47 @@ impl PlannedConv {
             tally.merge(&p.mac.core.fault_tally());
         }
         tally
+    }
+
+    /// Arm the retention-upset process on every pass macro, with the
+    /// seed salted per pass so sibling macros draw decorrelated upset
+    /// streams (same constant the seeded fault plans salt with).
+    pub fn arm_upsets(&mut self, cfg: UpsetConfig) {
+        for (pi, p) in self.passes.iter_mut().enumerate() {
+            let seed = cfg.seed ^ (pi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            p.mac.core.arm_upsets(UpsetConfig::new(seed, cfg.per_batch_ber));
+        }
+    }
+
+    /// Advance every pass macro's virtual batch clock one tick; returns
+    /// the total upset bits landed.
+    pub fn tick_upsets(&mut self) -> u64 {
+        self.passes.iter_mut().map(|p| p.mac.core.tick_upsets()).sum()
+    }
+
+    /// Scrub stripes across all pass macros (the concatenated stripe
+    /// space the incremental scheduler budgets over).
+    pub fn stripe_count(&self) -> usize {
+        self.passes.iter().map(|p| p.mac.core.stripe_count()).sum()
+    }
+
+    /// Incrementally scrub the stripe window `[start, start+len)` of
+    /// the concatenated per-pass stripe space (see
+    /// [`crate::arch::pim_core::PimCore::scrub_window`]).
+    pub fn scrub_window(&mut self, start: usize, len: usize) -> ScrubReport {
+        let mut report = ScrubReport::default();
+        let mut base = 0usize;
+        let end = start.saturating_add(len);
+        for p in &mut self.passes {
+            let n = p.mac.core.stripe_count();
+            let lo = start.max(base).min(base + n);
+            let hi = end.min(base + n);
+            if hi > lo {
+                report.merge(&p.mac.core.scrub_window(lo - base, hi - lo));
+            }
+            base += n;
+        }
+        report
     }
 
     /// Bytes of stored INT8 weights this plan keeps resident: the FCC

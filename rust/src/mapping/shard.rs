@@ -33,7 +33,7 @@
 
 use std::ops::Range;
 
-use crate::arch::fault::{FaultConfig, FaultTally, ScrubReport};
+use crate::arch::fault::{FaultConfig, FaultTally, ScrubReport, UpsetConfig};
 use crate::arch::grid::MacroGrid;
 use crate::fcc::{FccWeights, FilterBank};
 
@@ -222,6 +222,45 @@ impl ShardedConv {
             tally.merge(&s.plan.fault_tally());
         }
         tally
+    }
+
+    /// Arm the retention-upset process on every shard, with the seed
+    /// salted per shard (same constant [`shard_fault`] decorrelates
+    /// seeded fault plans with).
+    pub fn arm_upsets(&mut self, cfg: UpsetConfig) {
+        for (si, s) in self.shards.iter_mut().enumerate() {
+            let seed = cfg.seed ^ ((si as u64) + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            s.plan.arm_upsets(UpsetConfig::new(seed, cfg.per_batch_ber));
+        }
+    }
+
+    /// Advance every shard's virtual batch clock one tick; returns the
+    /// total upset bits landed across the grid.
+    pub fn tick_upsets(&mut self) -> u64 {
+        self.shards.iter_mut().map(|s| s.plan.tick_upsets()).sum()
+    }
+
+    /// Scrub stripes across all shards (concatenated stripe space).
+    pub fn stripe_count(&self) -> usize {
+        self.shards.iter().map(|s| s.plan.stripe_count()).sum()
+    }
+
+    /// Incrementally scrub the stripe window `[start, start+len)` of
+    /// the concatenated per-shard stripe space.
+    pub fn scrub_window(&mut self, start: usize, len: usize) -> ScrubReport {
+        let mut report = ScrubReport::default();
+        let mut base = 0usize;
+        let end = start.saturating_add(len);
+        for s in &mut self.shards {
+            let n = s.plan.stripe_count();
+            let lo = start.max(base).min(base + n);
+            let hi = end.min(base + n);
+            if hi > lo {
+                report.merge(&s.plan.scrub_window(lo - base, hi - lo));
+            }
+            base += n;
+        }
+        report
     }
 
     /// Batched parallel execute across the grid: every shard runs

@@ -184,6 +184,20 @@ pub struct ReliabilityStats {
     /// Client `infer` calls that hit their timeout instead of an
     /// answer.
     pub timed_out_requests: u64,
+    /// Retention-upset bit flips landed on resident weights by the
+    /// virtual-batch-clock process (runtime corruption, disjoint from
+    /// write-time `faults_injected`).
+    pub upset_bits: u64,
+    /// Corrupt stored bits the scrub found on quarantined rows
+    /// (pre-repair).  With a full-coverage scrub budget this reconciles
+    /// exactly against `upset_bits` on an upsets-only configuration.
+    pub corrupt_bits_found: u64,
+    /// Checksum stripes verified by the incremental serving-time scrub
+    /// scheduler (0 when the scheduler is off).
+    pub scrub_stripes_checked: u64,
+    /// Size of the stripe space the scheduler walks (resident plans;
+    /// summed across workers on a merged view).
+    pub scrub_stripe_total: u64,
 }
 
 impl ReliabilityStats {
@@ -212,6 +226,67 @@ impl ReliabilityStats {
         self.stager_fallbacks += other.stager_fallbacks;
         self.worker_rebuilds += other.worker_rebuilds;
         self.timed_out_requests += other.timed_out_requests;
+        self.upset_bits += other.upset_bits;
+        self.corrupt_bits_found += other.corrupt_bits_found;
+        self.scrub_stripes_checked += other.scrub_stripes_checked;
+        self.scrub_stripe_total += other.scrub_stripe_total;
+    }
+}
+
+/// Health of one serving worker, as assessed at batch boundaries from
+/// its reliability deltas.  The machine degrades monotonically within a
+/// batch window and recovers only through the documented rejoin path
+/// (one clean full scrub cycle while parked).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum WorkerHealth {
+    /// Serving normally.
+    #[default]
+    Healthy,
+    /// Repair churn above threshold: still serving (every batch is
+    /// scrub-verified), but flagged for the operator.
+    Degraded,
+    /// Spares exhausted (a row was zeroed) or repeated session
+    /// rebuilds: parked, steered around, running a full scrub; rejoins
+    /// after one clean cycle.
+    Quarantined,
+}
+
+/// Aggregated worker-health counters for a serving cluster: the current
+/// state census plus lifetime quarantine/rejoin event counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealthStats {
+    /// Workers currently healthy.
+    pub healthy: u64,
+    /// Workers currently degraded (serving, above repair-churn
+    /// threshold).
+    pub degraded: u64,
+    /// Workers currently quarantined (parked, scrubbing).
+    pub quarantined: u64,
+    /// Healthy/Degraded → Quarantined transitions over the service
+    /// lifetime.
+    pub quarantine_events: u64,
+    /// Quarantined → Healthy rejoins (one clean full scrub cycle).
+    pub rejoin_events: u64,
+}
+
+impl HealthStats {
+    /// Fold one worker's current state into the census.
+    pub fn count(&mut self, health: WorkerHealth) {
+        match health {
+            WorkerHealth::Healthy => self.healthy += 1,
+            WorkerHealth::Degraded => self.degraded += 1,
+            WorkerHealth::Quarantined => self.quarantined += 1,
+        }
+    }
+
+    /// Merge another cluster's counters into this one (plain sums: the
+    /// census counts disjoint workers, the events are monotone).
+    pub fn merge(&mut self, other: &HealthStats) {
+        self.healthy += other.healthy;
+        self.degraded += other.degraded;
+        self.quarantined += other.quarantined;
+        self.quarantine_events += other.quarantine_events;
+        self.rejoin_events += other.rejoin_events;
     }
 }
 
@@ -238,6 +313,10 @@ pub struct AdmissionStats {
     pub peak_queue_depth: u64,
     /// Worker sessions draining the queue.
     pub workers: u64,
+    /// Admitted requests dropped at batch-cut time because their client
+    /// deadline had already expired (deadline propagation: the worker
+    /// never wastes a slot computing an answer nobody is waiting for).
+    pub shed_expired: u64,
 }
 
 impl AdmissionStats {
@@ -259,6 +338,7 @@ impl AdmissionStats {
         self.max_queue_depth = self.max_queue_depth.max(other.max_queue_depth);
         self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
         self.workers += other.workers;
+        self.shed_expired += other.shed_expired;
     }
 }
 
@@ -360,6 +440,7 @@ mod tests {
             max_queue_depth: 8,
             peak_queue_depth: 5,
             workers: 2,
+            shed_expired: 1,
         };
         assert!((a.shed_ratio() - 0.25).abs() < 1e-12);
         let b = AdmissionStats {
@@ -368,6 +449,7 @@ mod tests {
             max_queue_depth: 4,
             peak_queue_depth: 7,
             workers: 1,
+            shed_expired: 2,
         };
         a.merge(&b);
         assert_eq!(a.admitted, 10);
@@ -375,6 +457,50 @@ mod tests {
         assert_eq!(a.max_queue_depth, 8); // max, not sum
         assert_eq!(a.peak_queue_depth, 7);
         assert_eq!(a.workers, 3);
+        assert_eq!(a.shed_expired, 3);
+    }
+
+    #[test]
+    fn health_stats_census_and_merge() {
+        let mut h = HealthStats::default();
+        h.count(WorkerHealth::Healthy);
+        h.count(WorkerHealth::Healthy);
+        h.count(WorkerHealth::Degraded);
+        h.count(WorkerHealth::Quarantined);
+        assert_eq!((h.healthy, h.degraded, h.quarantined), (2, 1, 1));
+        let other = HealthStats {
+            healthy: 1,
+            degraded: 0,
+            quarantined: 2,
+            quarantine_events: 3,
+            rejoin_events: 1,
+        };
+        h.quarantine_events = 1;
+        h.merge(&other);
+        assert_eq!((h.healthy, h.degraded, h.quarantined), (3, 1, 3));
+        assert_eq!(h.quarantine_events, 4);
+        assert_eq!(h.rejoin_events, 1);
+        assert_eq!(WorkerHealth::default(), WorkerHealth::Healthy);
+    }
+
+    #[test]
+    fn reliability_scrub_fields_merge_and_quietness() {
+        let mut a = ReliabilityStats::default();
+        assert!(a.is_quiet());
+        let b = ReliabilityStats {
+            upset_bits: 5,
+            corrupt_bits_found: 5,
+            scrub_stripes_checked: 40,
+            scrub_stripe_total: 16,
+            ..ReliabilityStats::default()
+        };
+        assert!(!b.is_quiet()); // runtime upsets are reliability activity
+        a.merge(&b);
+        a.merge(&b);
+        assert_eq!(a.upset_bits, 10);
+        assert_eq!(a.corrupt_bits_found, 10);
+        assert_eq!(a.scrub_stripes_checked, 80);
+        assert_eq!(a.scrub_stripe_total, 32);
     }
 
     #[test]

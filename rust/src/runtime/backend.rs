@@ -227,7 +227,23 @@ pub struct BackendSpec {
     pub fault_ber_ppm: u32,
     /// Seed for the injected fault pattern (only read when
     /// `fault_ber_ppm > 0`); same seed + same BER = same faults.
+    /// Also seeds the runtime-upset process and its zero-BER golden
+    /// intent ledger when `upset_ppm > 0` with no write-time faults.
     pub fault_seed: u64,
+    /// Seeded **runtime** retention-upset process for reference
+    /// sessions on the bit-sliced fabric, as a per-batch bit-error rate
+    /// in parts per million (`0` = no upsets).  Unlike
+    /// `fault_ber_ppm` (write-time corruption), upsets flip stored Q
+    /// bits *between batches* against a virtual batch clock, so the
+    /// same spec replays the same damage schedule.  Converted through
+    /// `crate::arch::fault::UpsetConfig::from_ppm`.
+    pub upset_ppm: u32,
+    /// Incremental serving-time scrub budget: checksum stripes verified
+    /// per batch boundary (`0` = scheduler off).  Any positive budget
+    /// walks the full resident stripe space round-robin, reaching full
+    /// coverage every `ceil(total / budget)` batches; progress surfaces
+    /// through [`Session::reliability`].
+    pub scrub_stripes: u32,
     /// Macro-grid shape for reference sessions on the bit-sliced
     /// fabric: non-trivial shapes shard each conv layer across a
     /// `rows × cols` grid of macros via the shard planner
@@ -268,6 +284,15 @@ impl BackendSpec {
                         self.fault_seed,
                         self.fault_ber_ppm,
                     ));
+                }
+                if self.upset_ppm > 0 {
+                    be = be.with_upsets(crate::arch::fault::UpsetConfig::from_ppm(
+                        self.fault_seed,
+                        self.upset_ppm,
+                    ));
+                }
+                if self.scrub_stripes > 0 {
+                    be = be.with_scrub_stripes(self.scrub_stripes as usize);
                 }
                 Ok(Box::new(be))
             }

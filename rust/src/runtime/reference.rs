@@ -61,7 +61,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
-use crate::arch::fault::{FaultConfig, FaultTally};
+use crate::arch::fault::{FaultConfig, FaultTally, UpsetConfig};
 use crate::arch::grid::{GridShape, MacroGrid};
 use crate::arch::mem::StagedBuffer;
 use crate::arch::pim_core::MacroGeometry;
@@ -352,6 +352,13 @@ pub struct ReferenceBackend {
     /// Bit-cell fault injection for planned bit-sliced sessions
     /// (`None` = the untouched zero-fault fabric, byte for byte).
     fault: Option<FaultConfig>,
+    /// Retention-upset process for planned bit-sliced sessions: seeded
+    /// bit flips land on *resident* weights between batches, against a
+    /// virtual batch clock (`None` = no runtime upsets).
+    upsets: Option<UpsetConfig>,
+    /// Incremental serving-time scrub budget: checksum stripes verified
+    /// per batch boundary (0 = scrub only at prepare/rebuild time).
+    scrub_stripes: usize,
 }
 
 impl ReferenceBackend {
@@ -398,6 +405,8 @@ impl ReferenceBackend {
             grid: GridShape::AUTO,
             streaming: None,
             fault: None,
+            upsets: None,
+            scrub_stripes: 0,
         }
     }
 
@@ -482,6 +491,29 @@ impl ReferenceBackend {
         self
     }
 
+    /// Arm the deterministic retention-upset process on planned
+    /// bit-sliced sessions: seeded `(cmp, row, slot, bit)` flips land on
+    /// the *stored* weight planes between batches, scheduled against a
+    /// virtual batch clock (replayable; no wall time).  Each conv
+    /// layer's macros draw a decorrelated, layer-keyed stream.  The
+    /// intent ledger is untouched — it stays the golden reference the
+    /// scrub repairs toward.  No-op on the dense fabric.
+    pub fn with_upsets(mut self, cfg: UpsetConfig) -> ReferenceBackend {
+        self.upsets = Some(cfg);
+        self
+    }
+
+    /// Budget the incremental serving-time scrub: verify `stripes`
+    /// `(row, slot, word)` checksum stripes per batch boundary, walking
+    /// the resident stripe space round-robin so every stripe is visited
+    /// within `⌈total/stripes⌉` batches.  Streamed sessions scrub the
+    /// resident pass only.  0 disables the scheduler (scrub still runs
+    /// at prepare/rebuild time).
+    pub fn with_scrub_stripes(mut self, stripes: usize) -> ReferenceBackend {
+        self.scrub_stripes = stripes;
+        self
+    }
+
     pub fn seed(&self) -> u64 {
         self.seed
     }
@@ -502,6 +534,8 @@ impl ReferenceBackend {
             self.grid,
             self.streaming,
             self.fault,
+            self.upsets,
+            self.scrub_stripes,
         )
     }
 }
@@ -557,6 +591,11 @@ struct ConvSpec {
     /// Per-layer fault stream (already layer-salted), carried so a
     /// streamed rebuild is identically faulted to the first build.
     fault: Option<FaultConfig>,
+    /// Per-layer upset stream (already layer-salted), re-armed every
+    /// time this layer's pass becomes resident.  A restage resets the
+    /// layer's virtual batch clock — upsets only age weights while they
+    /// are resident.
+    upsets: Option<UpsetConfig>,
 }
 
 /// Derive a layer-private fault stream from the session-level config so
@@ -566,6 +605,16 @@ fn layer_fault(fault: Option<FaultConfig>, layer: usize) -> Option<FaultConfig> 
     fault.map(|cfg| FaultConfig {
         seed: cfg.seed ^ (layer as u64 + 1).wrapping_mul(0xA24B_AED4_963E_E407),
         ber: cfg.ber,
+    })
+}
+
+/// Layer-keyed upset stream derivation (same constant as
+/// [`layer_fault`], so sibling conv layers flip independently but
+/// deterministically).
+fn layer_upsets(upsets: Option<UpsetConfig>, layer: usize) -> Option<UpsetConfig> {
+    upsets.map(|cfg| UpsetConfig {
+        seed: cfg.seed ^ (layer as u64 + 1).wrapping_mul(0xA24B_AED4_963E_E407),
+        per_batch_ber: cfg.per_batch_ber,
     })
 }
 
@@ -823,7 +872,7 @@ impl StreamState {
             self.fallbacks += 1;
             self.stager = None; // Drop joins whatever is left of it
         }
-        let (built, busy, waited) = match handoff {
+        let (mut built, busy, waited) = match handoff {
             Some(h) => h,
             None => {
                 let t0 = Instant::now();
@@ -852,6 +901,15 @@ impl StreamState {
             self.pressure.reloads += 1;
         }
         self.seen[pass] = true;
+        // a freshly staged pass starts its upset clock at zero: flips
+        // only age weights while they are resident
+        for (i, b) in built.iter_mut().enumerate() {
+            if let BuiltConv::Fabric { plan, .. } = b {
+                if let Some(u) = self.specs[self.passes[pass].start + i].upsets {
+                    plan.arm_upsets(u);
+                }
+            }
+        }
         // the evicted pass's macros are dropped with it: preserve their
         // fault history first
         for b in &self.resident {
@@ -908,6 +966,22 @@ pub struct ReferenceSession {
     pool: ExecPool,
     /// Streaming pass store (`None` = all conv layers resident).
     stream: Option<StreamState>,
+    /// Whether the retention-upset process is armed (ticked once per
+    /// batch boundary against the virtual batch clock).
+    upsets_armed: bool,
+    /// Incremental scrub budget: stripes verified per batch boundary
+    /// (0 = no serving-time scrub).
+    scrub_budget: usize,
+    /// Next stripe in the concatenated resident stripe space.
+    scrub_cursor: usize,
+    /// Stripes verified by the incremental scheduler since planning.
+    scrub_checked: u64,
+    /// Size of the stripe space the cursor is walking (refreshed each
+    /// boundary; streamed sessions count the resident pass only).
+    scrub_total: usize,
+    /// Streamed pass the cursor was walking (a pass change restarts
+    /// the cursor — the new pass is freshly staged anyway).
+    scrub_pass: Option<usize>,
 }
 
 impl ReferenceSession {
@@ -920,10 +994,23 @@ impl ReferenceSession {
         grid: GridShape,
         streaming: Option<StreamConfig>,
         fault: Option<FaultConfig>,
+        upsets: Option<UpsetConfig>,
+        scrub_stripes: usize,
     ) -> Result<ReferenceSession> {
         // resolve AUTO (DDC_GRID env, then 1x1) exactly once so every
         // conv layer plans against the same concrete shape
         let grid = MacroGrid::new(grid, geometry);
+        // upsets and the serving-time scrub reconcile against the intent
+        // ledger, which only exists with a fault plan installed: an
+        // upsets/scrub-only config installs a zero-BER plan (byte
+        // identical storage — the empty-plan property the arch tests pin)
+        let fault = match fault {
+            Some(cfg) => Some(cfg),
+            None if upsets.is_some() || scrub_stripes > 0 => {
+                Some(FaultConfig::new(upsets.map(|u| u.seed).unwrap_or(0), 0.0))
+            }
+            None => None,
+        };
         let mut planned = Vec::with_capacity(layers.len());
         let mut specs: Vec<ConvSpec> = Vec::new();
         // walk the activation dims so fabric plans know their geometry
@@ -942,6 +1029,7 @@ impl ReferenceSession {
                 } => {
                     ensure!(c == *cin, "layer stack dim mismatch: {} != {}", c, cin);
                     let lf = layer_fault(fault, conv_idx);
+                    let lu = layer_upsets(upsets, conv_idx);
                     conv_idx += 1;
                     if streaming.is_some() {
                         // defer the build: the spec is the DRAM-side
@@ -961,6 +1049,7 @@ impl ReferenceSession {
                             shift: *shift,
                             fabric,
                             fault: lf,
+                            upsets: lu,
                         });
                         planned.push(SessionLayer::ConvStreamed { slot });
                     } else {
@@ -1006,6 +1095,15 @@ impl ReferenceSession {
                                 shift: *shift,
                             },
                         });
+                        if let Some(u) = lu {
+                            match planned.last_mut() {
+                                Some(SessionLayer::ConvFabric { plan, .. }) => plan.arm_upsets(u),
+                                Some(SessionLayer::ConvFabricGrid { plan, .. }) => {
+                                    plan.arm_upsets(u)
+                                }
+                                _ => {}
+                            }
+                        }
                     }
                     let (oh, ow) = out_dims(h, w, *stride);
                     h = oh;
@@ -1053,6 +1151,12 @@ impl ReferenceSession {
             shard64: Vec::new(),
             pool: ExecPool::new(width),
             stream: streaming.map(|cfg| StreamState::new(specs, cfg)),
+            upsets_armed: upsets.is_some(),
+            scrub_budget: scrub_stripes,
+            scrub_cursor: 0,
+            scrub_checked: 0,
+            scrub_total: 0,
+            scrub_pass: None,
         })
     }
 
@@ -1142,6 +1246,12 @@ impl ReferenceSession {
         stats.faults_repaired = t.repaired_rows;
         stats.quarantined_rows = t.quarantined_rows;
         stats.zeroed_rows = t.zeroed_rows;
+        stats.upset_bits = t.upset_bits;
+        stats.corrupt_bits_found = t.corrupt_bits;
+        if self.scrub_budget > 0 {
+            stats.scrub_stripes_checked = self.scrub_checked;
+            stats.scrub_stripe_total = self.scrub_total as u64;
+        }
         stats
     }
 
@@ -1170,6 +1280,138 @@ impl ReferenceSession {
             }
         }
         self.reliability_stats()
+    }
+
+    /// Stripes in the stripe space the incremental scheduler walks:
+    /// resident fabric layers, plus the resident streamed pass.
+    pub fn scrub_space(&self) -> usize {
+        let mut total = 0usize;
+        for l in &self.layers {
+            match l {
+                SessionLayer::ConvFabric { plan, .. } => total += plan.stripe_count(),
+                SessionLayer::ConvFabricGrid { plan, .. } => total += plan.stripe_count(),
+                _ => {}
+            }
+        }
+        if let Some(st) = &self.stream {
+            for b in &st.resident {
+                if let BuiltConv::Fabric { plan, .. } = b {
+                    total += plan.stripe_count();
+                }
+            }
+        }
+        total
+    }
+
+    /// Incremental-scrub progress: `(stripes verified since planning,
+    /// stripe-space size)`.  `(0, 0)` when the scheduler is off or the
+    /// session has not served a batch yet.
+    pub fn scrub_progress(&self) -> (u64, usize) {
+        (self.scrub_checked, self.scrub_total)
+    }
+
+    /// Scrub the window `[start, start+len)` of the concatenated
+    /// resident stripe space (layer order, then the resident streamed
+    /// pass).  Reports book into each core's lifetime tally, which
+    /// [`Self::reliability_stats`] reads back.
+    fn scrub_window_resident(&mut self, start: usize, len: usize) {
+        let end = start.saturating_add(len);
+        let mut base = 0usize;
+        for l in &mut self.layers {
+            match l {
+                SessionLayer::ConvFabric { plan, .. } => {
+                    let n = plan.stripe_count();
+                    let lo = start.max(base).min(base + n);
+                    let hi = end.min(base + n);
+                    if hi > lo {
+                        let _ = plan.scrub_window(lo - base, hi - lo);
+                    }
+                    base += n;
+                }
+                SessionLayer::ConvFabricGrid { plan, .. } => {
+                    let n = plan.stripe_count();
+                    let lo = start.max(base).min(base + n);
+                    let hi = end.min(base + n);
+                    if hi > lo {
+                        let _ = plan.scrub_window(lo - base, hi - lo);
+                    }
+                    base += n;
+                }
+                _ => {}
+            }
+        }
+        if let Some(st) = &mut self.stream {
+            for b in &mut st.resident {
+                if let BuiltConv::Fabric { plan, .. } = b {
+                    let n = plan.stripe_count();
+                    let lo = start.max(base).min(base + n);
+                    let hi = end.min(base + n);
+                    if hi > lo {
+                        let _ = plan.scrub_window(lo - base, hi - lo);
+                    }
+                    base += n;
+                }
+            }
+        }
+    }
+
+    /// Batch-boundary maintenance, run before each batch computes:
+    /// (1) advance every resident macro's virtual batch clock one tick,
+    /// landing this boundary's retention upsets; (2) verify the next
+    /// `scrub_budget` checksum stripes round-robin, repairing what they
+    /// catch.  Order is tick → scrub → compute, so a full-coverage
+    /// budget guarantees no corrupt stored bit survives into the MVMs.
+    fn boundary_maintenance(&mut self) {
+        if self.upsets_armed {
+            for l in &mut self.layers {
+                match l {
+                    SessionLayer::ConvFabric { plan, .. } => {
+                        let _ = plan.tick_upsets();
+                    }
+                    SessionLayer::ConvFabricGrid { plan, .. } => {
+                        let _ = plan.tick_upsets();
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(st) = &mut self.stream {
+                for b in &mut st.resident {
+                    if let BuiltConv::Fabric { plan, .. } = b {
+                        let _ = plan.tick_upsets();
+                    }
+                }
+            }
+        }
+        if self.scrub_budget == 0 {
+            return;
+        }
+        // streamed sessions scrub the resident pass only; a pass change
+        // restarts the cursor (the incoming pass was freshly staged)
+        if let Some(st) = &self.stream {
+            if self.scrub_pass != st.resident_pass {
+                self.scrub_pass = st.resident_pass;
+                self.scrub_cursor = 0;
+            }
+        }
+        let total = self.scrub_space();
+        self.scrub_total = total;
+        if total == 0 {
+            return;
+        }
+        if self.scrub_cursor >= total {
+            self.scrub_cursor = 0;
+        }
+        // at most one full sweep per boundary; the cursor wraps so
+        // every stripe is visited within ⌈total/budget⌉ batches
+        let mut remaining = self.scrub_budget.min(total);
+        while remaining > 0 {
+            let start = self.scrub_cursor;
+            let len = remaining.min(total - start);
+            self.scrub_window_resident(start, len);
+            self.scrub_cursor = (start + len) % total;
+            self.scrub_checked += len as u64;
+            remaining -= len;
+        }
     }
 
     /// Chaos hook: kill the prefetch stager thread mid-session so tests
@@ -1359,6 +1601,11 @@ impl Session for ReferenceSession {
         if batch == 0 {
             return Ok(());
         }
+        // batch-boundary reliability maintenance: land this tick's
+        // retention upsets, then verify the budgeted stripe window —
+        // before any weight is read, so a full-coverage budget never
+        // lets a corrupt bit reach the MVMs
+        self.boundary_maintenance();
         // split the borrow so layer refs and buffers coexist
         let Self {
             layers,

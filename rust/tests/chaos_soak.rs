@@ -1,0 +1,249 @@
+//! Integration: the chaos soak harness (PR 10 tentpole).
+//!
+//! A seeded schedule of runtime retention upsets, worker panics,
+//! client-visible hangs and prefetch-stager kills, run for >= 200
+//! batches — long enough for every repair path to fire many times —
+//! with three hard acceptance gates:
+//!
+//! * **No corrupt logits, ever.**  Every answer served during the soak
+//!   must be byte-identical to the fault-free oracle.  Upsets land
+//!   between batches (tick → scrub → compute), so a full-coverage
+//!   scrub budget means no corrupt stored bit can reach an MVM.
+//! * **Availability.**  The serving tier must answer at least 90% of
+//!   requests during the soak (in practice: all of them — panics are
+//!   absorbed by catch-unwind + rebuild, hangs are far below the
+//!   client deadline).
+//! * **Counters reconcile.**  Every upset bit the process landed is
+//!   found by a scrub (`upset_bits == corrupt_bits_found`); worker
+//!   quarantines are matched one-for-one by clean-scrub rejoins and
+//!   the cluster ends serving-capable.
+
+use std::time::Duration;
+
+use ddc_pim::arch::fault::UpsetConfig;
+use ddc_pim::coordinator::{BatchPolicy, InferenceService, ServiceConfig};
+use ddc_pim::runtime::reference::{ReferenceBackend, StreamConfig, DEFAULT_SEED};
+use ddc_pim::runtime::{
+    BackendKind, BackendSpec, FabricChoice, Session, IMG_ELEMS, NUM_CLASSES,
+};
+use ddc_pim::util::rng::Rng;
+
+const SOAK_BATCHES: usize = 220;
+
+fn probe_images(seed: u64, n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..IMG_ELEMS).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+/// Fault-free oracle logits for each probe image, from a pristine
+/// bit-sliced session.
+fn oracle_logits(imgs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let be = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced);
+    let mut s = be.plan().expect("oracle plan");
+    imgs.iter()
+        .map(|img| {
+            let mut out = vec![0f32; NUM_CLASSES];
+            s.infer_batch_into(img, 1, &mut out).expect("oracle infer");
+            out
+        })
+        .collect()
+}
+
+#[test]
+fn session_soak_under_continuous_upsets_never_serves_corruption() {
+    // 220 batches of continuous upsets against a resident session with
+    // the scrub at full coverage: byte-identity every batch, and exact
+    // ledger reconciliation at the end (one tick outstanding per
+    // boundary means no flip can cancel before its scrub sees it)
+    let imgs = probe_images(0xC4_0501, 4);
+    let want = oracle_logits(&imgs);
+    let mut s = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+        .with_upsets(UpsetConfig::from_ppm(0xC4A05, 10_000))
+        .with_scrub_stripes(usize::MAX)
+        .plan()
+        .expect("soak plan");
+    let mut got = vec![0f32; NUM_CLASSES];
+    for round in 0..SOAK_BATCHES {
+        let k = round % imgs.len();
+        s.infer_batch_into(&imgs[k], 1, &mut got).expect("soak infer");
+        assert_eq!(got, want[k], "round {round}: corrupt logits served");
+    }
+    let r = s.reliability_stats();
+    assert!(r.upset_bits > 0, "no upsets landed over {SOAK_BATCHES} batches");
+    assert_eq!(
+        r.upset_bits, r.corrupt_bits_found,
+        "upset ledger did not reconcile: {r:?}"
+    );
+    assert_eq!(r.faults_injected, 0, "upsets-only soak has no write-time faults");
+    assert_eq!(
+        r.faults_repaired + r.zeroed_rows,
+        r.quarantined_rows,
+        "quarantine bookkeeping split drifted: {r:?}"
+    );
+    let (checked, total) = s.scrub_progress();
+    assert_eq!(checked, (SOAK_BATCHES * total) as u64, "full coverage every boundary");
+}
+
+#[test]
+fn streamed_session_soak_with_stager_kills_stays_byte_identical() {
+    // the streamed variant: upsets age the resident pass only, and the
+    // prefetch stager is killed mid-soak (degrading to synchronous
+    // staging).  Byte-identity and reconciliation must both survive.
+    let imgs = probe_images(0xC4_0502, 3);
+    let be = ReferenceBackend::seeded_deep(DEFAULT_SEED, FabricChoice::BitSliced, 2);
+    let mut o = be.plan().expect("oracle plan");
+    let want: Vec<Vec<f32>> = imgs
+        .iter()
+        .map(|img| {
+            let mut out = vec![0f32; NUM_CLASSES];
+            o.infer_batch_into(img, 1, &mut out).expect("oracle infer");
+            out
+        })
+        .collect();
+    let mut s = ReferenceBackend::seeded_deep(DEFAULT_SEED, FabricChoice::BitSliced, 2)
+        .with_streaming(StreamConfig::budget(9300))
+        .with_upsets(UpsetConfig::from_ppm(0xC4A06, 10_000))
+        .with_scrub_stripes(usize::MAX)
+        .plan()
+        .expect("streamed soak plan");
+    assert_eq!(s.streaming_passes(), Some(2));
+    let mut got = vec![0f32; NUM_CLASSES];
+    let mut kills = 0;
+    for round in 0..SOAK_BATCHES {
+        if round == 70 && s.debug_kill_stager() {
+            kills += 1;
+        }
+        let k = round % imgs.len();
+        s.infer_batch_into(&imgs[k], 1, &mut got).expect("streamed soak infer");
+        assert_eq!(got, want[k], "round {round}: corrupt streamed logits served");
+    }
+    assert_eq!(kills, 1, "the mid-soak stager kill must have found a live stager");
+    let r = s.reliability_stats();
+    assert!(r.upset_bits > 0, "no upsets landed on the resident pass");
+    assert_eq!(
+        r.upset_bits, r.corrupt_bits_found,
+        "streamed upset ledger did not reconcile: {r:?}"
+    );
+    assert!(r.stager_fallbacks >= 1, "stager death must book a fallback");
+}
+
+#[test]
+fn service_soak_with_panics_hangs_and_upsets_meets_the_availability_gate() {
+    // the full serving-tier soak: 2 workers on the upset-ridden
+    // bit-sliced fabric with full scrub coverage, a panic injected
+    // roughly every 40 rounds (6 total — by pigeonhole some worker
+    // takes two rebuilds and must quarantine + rejoin) and a short
+    // hang roughly every 50.  Gates: byte-identity on every answer,
+    // >= 90% availability, reconciled counters, cluster ends
+    // serving-capable with quarantines matched by rejoins.
+    let imgs = probe_images(0xC4_0503, 4);
+    let want = oracle_logits(&imgs);
+    let svc = InferenceService::start_cluster(
+        BackendSpec {
+            kind: BackendKind::Reference,
+            fabric: FabricChoice::BitSliced,
+            upset_ppm: 10_000,
+            scrub_stripes: u32::MAX,
+            ..Default::default()
+        },
+        "/nonexistent".into(),
+        BatchPolicy::default(),
+        ServiceConfig {
+            workers: 2,
+            max_queue_depth: 0,
+        },
+    );
+    let mut served = 0usize;
+    for round in 0..SOAK_BATCHES {
+        if round % 40 == 3 {
+            svc.debug_panic_next_batch();
+        }
+        if round % 50 == 17 {
+            svc.debug_hang_next_batch(Duration::from_millis(3));
+        }
+        let k = round % imgs.len();
+        match svc.infer(imgs[k].clone()) {
+            Ok(r) => {
+                assert_eq!(
+                    r.logits[..],
+                    want[k][..],
+                    "round {round}: the service answered with corrupt logits"
+                );
+                served += 1;
+            }
+            // a fully parked pool sheds at the door; that costs
+            // availability but must never corrupt an answer
+            Err(e) => eprintln!("soak round {round} unanswered: {e}"),
+        }
+    }
+    let availability = served as f64 / SOAK_BATCHES as f64;
+    assert!(
+        availability >= 0.9,
+        "availability {availability:.3} below the 90% soak gate"
+    );
+    let s = svc.stats().expect("stats");
+    let r = s.reliability;
+    assert!(r.upset_bits > 0, "no upsets landed during the service soak");
+    assert_eq!(
+        r.upset_bits, r.corrupt_bits_found,
+        "service upset ledger did not reconcile: {r:?}"
+    );
+    assert!(r.worker_rebuilds >= 2, "panics must have forced rebuilds");
+    assert!(
+        s.health.quarantine_events >= 1,
+        "6 panics over 2 workers must quarantine someone: {:?}",
+        s.health
+    );
+    assert_eq!(
+        s.health.quarantine_events, s.health.rejoin_events,
+        "every quarantine must resolve in a clean rejoin: {:?}",
+        s.health
+    );
+    assert_eq!(
+        s.health.healthy + s.health.degraded,
+        s.admission.workers,
+        "cluster did not end serving-capable: {:?}",
+        s.health
+    );
+    assert_eq!(s.admission.shed_expired, 0, "nothing used deadlines short enough to expire");
+}
+
+#[test]
+fn zero_upset_service_with_scrub_enabled_is_byte_identical_and_repair_free() {
+    // the control arm: scrub on, nothing to find.  Served logits match
+    // the oracle byte for byte and not a single repair is booked —
+    // pure verification must be invisible.
+    let imgs = probe_images(0xC4_0504, 2);
+    let want = oracle_logits(&imgs);
+    let svc = InferenceService::start_cluster(
+        BackendSpec {
+            kind: BackendKind::Reference,
+            fabric: FabricChoice::BitSliced,
+            scrub_stripes: 64,
+            ..Default::default()
+        },
+        "/nonexistent".into(),
+        BatchPolicy::default(),
+        ServiceConfig {
+            workers: 2,
+            max_queue_depth: 0,
+        },
+    );
+    for round in 0..8 {
+        let k = round % imgs.len();
+        let r = svc.infer(imgs[k].clone()).expect("scrubbed service serves");
+        assert_eq!(r.logits[..], want[k][..], "round {round}: clean scrub changed logits");
+    }
+    let s = svc.stats().expect("stats");
+    assert_eq!(s.reliability.upset_bits, 0);
+    assert_eq!(s.reliability.faults_repaired, 0, "clean fabric booked repairs");
+    assert_eq!(s.reliability.quarantined_rows, 0);
+    assert!(
+        s.reliability.scrub_stripes_checked > 0,
+        "the scheduler never walked its budget"
+    );
+    assert_eq!(s.health.healthy, 2, "clean cluster must stay healthy: {:?}", s.health);
+    assert_eq!(s.health.quarantine_events, 0);
+}

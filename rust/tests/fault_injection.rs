@@ -18,7 +18,7 @@
 //!   stager mid-run degrades to synchronous staging with byte-identical
 //!   logits and a booked fallback, never a panic or a hung recv.
 
-use ddc_pim::arch::fault::{FaultConfig, FaultPlan};
+use ddc_pim::arch::fault::{FaultConfig, FaultPlan, UpsetConfig};
 use ddc_pim::arch::pim_core::{MacroGeometry, PimCore};
 use ddc_pim::runtime::reference::{ReferenceBackend, StreamConfig, DEFAULT_SEED};
 use ddc_pim::runtime::{FabricChoice, Session, IMG_ELEMS, NUM_CLASSES};
@@ -252,4 +252,115 @@ fn killed_stager_falls_back_to_synchronous_staging_byte_identically() {
     );
     // killing an already-dead stager is a no-op
     assert!(!s.debug_kill_stager());
+}
+
+#[test]
+fn runtime_upsets_with_full_scrub_serve_the_fault_free_logits() {
+    // runtime retention upsets land between batches; with the
+    // incremental scrub at full coverage (tick → scrub → compute) no
+    // corrupt stored bit can reach an MVM, so every batch is
+    // byte-identical to the fault-free oracle — and the upset ledger
+    // reconciles exactly: every landed bit was found by a scrub
+    let x = batch_input(0xFA_0757, 1);
+    let mut oracle = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+        .plan()
+        .expect("oracle plan");
+    let mut want = vec![0f32; NUM_CLASSES];
+    oracle.infer_batch_into(&x, 1, &mut want).expect("oracle infer");
+
+    let mut s = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+        .with_upsets(UpsetConfig::from_ppm(0xC0DE, 20_000))
+        .with_scrub_stripes(usize::MAX) // full coverage every boundary
+        .plan()
+        .expect("upset plan");
+    let mut got = vec![0f32; NUM_CLASSES];
+    for round in 0..8 {
+        s.infer_batch_into(&x, 1, &mut got).expect("upset infer");
+        assert_eq!(got, want, "round {round}: upsets leaked into served logits");
+    }
+    let r = s.reliability_stats();
+    assert!(r.upset_bits > 0, "20000 ppm/batch over 8 batches landed nothing");
+    assert_eq!(
+        r.upset_bits, r.corrupt_bits_found,
+        "full-coverage scrub must reconcile the upset ledger exactly"
+    );
+    assert_eq!(r.faults_injected, 0, "upsets-only config has no write-time faults");
+    assert!(r.faults_repaired > 0, "found corruption was never repaired");
+    let (checked, total) = s.scrub_progress();
+    assert!(total > 0, "no stripe space despite armed scrub");
+    assert_eq!(checked, 8 * total as u64, "full budget must sweep the space each batch");
+}
+
+#[test]
+fn zero_upset_scrub_is_byte_identical_and_books_no_repairs() {
+    // scrub enabled, nothing to find: pure verification overhead must
+    // not perturb logits or book a single reliability event beyond the
+    // checked-stripe progress counters
+    let x = batch_input(0xFA_00AB, 2);
+    let mut plain = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+        .plan()
+        .expect("plain plan");
+    let mut want = vec![0f32; 2 * NUM_CLASSES];
+    plain.infer_batch_into(&x, 2, &mut want).expect("plain infer");
+
+    let mut s = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+        .with_scrub_stripes(64)
+        .plan()
+        .expect("scrubbed plan");
+    let mut got = vec![0f32; 2 * NUM_CLASSES];
+    for _ in 0..4 {
+        s.infer_batch_into(&x, 2, &mut got).expect("scrubbed infer");
+        assert_eq!(got, want, "a clean scrub changed served logits");
+    }
+    let r = s.reliability_stats();
+    assert_eq!(r.upset_bits, 0);
+    assert_eq!(r.corrupt_bits_found, 0);
+    assert_eq!(r.faults_detected, 0, "clean fabric produced detections");
+    assert_eq!(r.faults_repaired, 0, "clean fabric booked repairs");
+    assert_eq!(r.quarantined_rows, 0);
+    // the scheduler walked its budget every boundary regardless
+    let (checked, total) = s.scrub_progress();
+    assert!(total > 0);
+    assert_eq!(checked, 4 * 64.min(total) as u64);
+}
+
+#[test]
+fn partial_scrub_budget_converges_and_never_overcounts() {
+    // a budget far below the stripe space: coverage takes
+    // ceil(total/budget) batches per sweep.  Multi-tick accumulation
+    // can cancel bit flips pairwise before a scrub visits the stripe,
+    // so found <= landed; a final full scrub leaves the fabric clean.
+    let x = batch_input(0xFA_9C4B, 1);
+    let budget = 7usize;
+    let mut s = ReferenceBackend::seeded_with(DEFAULT_SEED, FabricChoice::BitSliced)
+        .with_upsets(UpsetConfig::from_ppm(0x5EED, 5_000))
+        .with_scrub_stripes(budget)
+        .plan()
+        .expect("plan");
+    let mut got = vec![0f32; NUM_CLASSES];
+    let batches = 12usize;
+    for _ in 0..batches {
+        s.infer_batch_into(&x, 1, &mut got).expect("infer");
+    }
+    let (checked, total) = s.scrub_progress();
+    assert!(total > budget, "test needs a budget below the stripe space");
+    assert_eq!(checked, (batches * budget) as u64, "budget accounting drifted");
+    let r = s.reliability_stats();
+    assert!(
+        r.corrupt_bits_found <= r.upset_bits,
+        "scrub found more corruption than the upset process landed: {r:?}"
+    );
+    // one full sweep repairs whatever is still pending; the next finds
+    // nothing new (idempotence over the repaired state)
+    let after_full = s.scrub_fabric();
+    let again = s.scrub_fabric();
+    assert_eq!(
+        after_full.faults_detected, again.faults_detected,
+        "second full scrub found new damage on a just-scrubbed fabric"
+    );
+    assert_eq!(
+        again.faults_repaired + again.zeroed_rows,
+        again.quarantined_rows,
+        "quarantine bookkeeping split drifted: {again:?}"
+    );
 }

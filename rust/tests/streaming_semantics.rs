@@ -16,6 +16,7 @@
 //! 16384 / 9300 / 2400 B (the 2400 B budget makes each 4608 B layer an
 //! over-budget overflow pass of its own).
 
+use ddc_pim::arch::fault::UpsetConfig;
 use ddc_pim::runtime::{
     reference::{ReferenceBackend, StreamConfig, DEFAULT_SEED},
     FabricChoice, Session, IMG_ELEMS, NUM_CLASSES,
@@ -146,4 +147,50 @@ fn streamed_session_stays_deterministic_across_interleaved_inputs() {
     s.infer_batch_into(&a, 1, &mut la2).expect("a#2");
     assert_eq!(la1, la2, "reload passes leaked state between calls");
     assert_ne!(la1, lb, "logits insensitive to input");
+}
+
+#[test]
+fn streamed_upsets_with_full_scrub_match_the_fault_free_resident_oracle() {
+    // runtime upsets age only the *resident* pass (weights off-SRAM
+    // cannot decay; a restaged pass arrives fresh with a reset batch
+    // clock), and the serving-time scrub walks exactly the resident
+    // stripe space.  At full scrub coverage every boundary, a streamed
+    // session under continuous upsets — even with its prefetch stager
+    // killed mid-soak — must stay byte-identical to the fault-free
+    // fully-resident session, and every landed bit must be found.
+    let batch = 2;
+    let x = batch_input(0x57E4_06, batch);
+    let want = resident_logits(FabricChoice::BitSliced, &x, batch);
+    let be = ReferenceBackend::seeded_deep(DEFAULT_SEED, FabricChoice::BitSliced, EXTRA_CONVS)
+        .with_streaming(StreamConfig::budget(9300))
+        .with_upsets(UpsetConfig::from_ppm(0xBEEF, 20_000))
+        .with_scrub_stripes(usize::MAX);
+    let mut s = be.plan().expect("streamed upset plan");
+    assert_eq!(s.streaming_passes(), Some(2));
+    let mut out = vec![0f32; batch * NUM_CLASSES];
+    for round in 0..5 {
+        if round == 2 {
+            assert!(s.debug_kill_stager(), "expected a live stager to kill");
+        }
+        s.infer_batch_into(&x, batch, &mut out).expect("streamed upset infer");
+        assert_eq!(
+            out, want,
+            "round {round}: streamed upsets leaked into served logits"
+        );
+    }
+    let r = s.reliability_stats();
+    assert!(r.upset_bits > 0, "no upsets landed on the resident pass");
+    assert_eq!(
+        r.upset_bits, r.corrupt_bits_found,
+        "streamed upset ledger did not reconcile: {r:?}"
+    );
+    assert!(r.stager_fallbacks >= 1, "stager kill must book a fallback");
+    // a second full scrub over the just-scrubbed state is idempotent
+    let first = s.scrub_fabric();
+    let second = s.scrub_fabric();
+    assert_eq!(
+        first.faults_detected, second.faults_detected,
+        "second full scrub found new damage with no tick in between"
+    );
+    assert_eq!(first.upset_bits, second.upset_bits, "scrub_fabric must not tick the clock");
 }
